@@ -1,0 +1,191 @@
+//! End-to-end driver: the full three-layer stack on a real small workload.
+//!
+//! 1. **L3** generates a scaled friendster graph, moves it into FAM through
+//!    the SODA runtime (DPU-opt backend, static vertex caching) and runs
+//!    the Ligra-style PageRank, reporting the paper's headline metrics
+//!    (runtime vs the SSD baseline, network traffic, DPU hit rates).
+//! 2. **L2/L1** — the same PageRank math runs through the AOT-compiled
+//!    Pallas blocked-ELL SpMV artifact on the PJRT CPU client, with heavy
+//!    rows spilled to the host (exact hybrid), proving the artifacts the
+//!    build produced actually compute the right numbers from Rust.
+//! 3. The two rank vectors are cross-validated.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example xla_pagerank
+//! ```
+
+use soda::coordinator::config::{BackendKind, CachingMode};
+use soda::graph::apps::pagerank::{pagerank, pagerank_ref};
+use soda::graph::apps::App;
+use soda::runtime::{cpu_client, to_ell, Manifest, PagerankEngine};
+use soda::workload::{ExperimentSpec, Workbench};
+
+const ITERS: u32 = 20;
+
+fn main() -> anyhow::Result<()> {
+    // ---- Layer 3: SODA + Ligra on the simulated cluster ----------------
+    let scale = 0.00006; // ~4000 vertices: matches the 4096x16 artifact
+    let mut wb = Workbench::new(scale);
+    let csr = wb.graph("friendster").clone();
+    println!(
+        "graph: friendster @ {scale} — |V| = {}, |E| = {}",
+        csr.n(),
+        csr.m()
+    );
+
+    let ssd = wb.run(&ExperimentSpec {
+        app: App::PageRank,
+        graph: "friendster",
+        backend: BackendKind::Ssd,
+        caching: CachingMode::None,
+    });
+    let soda_run = wb.run(&ExperimentSpec {
+        app: App::PageRank,
+        graph: "friendster",
+        backend: BackendKind::DPU_OPT,
+        caching: CachingMode::Static,
+    });
+    println!("\n== L3: SODA vs node-local SSD (virtual time) ==");
+    println!("  ssd      : {:.3} ms", ssd.elapsed_secs() * 1e3);
+    println!(
+        "  soda     : {:.3} ms  → speedup {:.2}x",
+        soda_run.elapsed_secs() * 1e3,
+        ssd.elapsed_ns as f64 / soda_run.elapsed_ns as f64
+    );
+    println!(
+        "  (at this micro scale the whole graph fits the SSD page cache, so the\n            SSD baseline is near in-memory; run `soda figures fig6 --scale 0.001`\n            for the paper-scale comparison where SODA wins up to ~3x)"
+    );
+    println!(
+        "  traffic  : {:.2} MB ({:.1}% background), dpu static serves: {}",
+        soda_run.network_bytes() as f64 / 1e6,
+        soda_run.network.background_fraction() * 100.0,
+        soda_run.dpu.static_serves,
+    );
+
+    // ---- Layers 2+1: the AOT Pallas/JAX artifact through PJRT ----------
+    println!("\n== L1/L2: AOT PageRank superstep on PJRT ==");
+    let manifest = Manifest::load("artifacts")
+        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
+    let spec = manifest
+        .best_for(csr.n(), 16)
+        .ok_or_else(|| anyhow::anyhow!("no artifact ≥ {} rows; add a variant", csr.n()))?;
+    let client = cpu_client()?;
+    let engine = PagerankEngine::load(&client, &manifest.dir, spec)?;
+    println!(
+        "  artifact: {} (n={}, k={}) on {}",
+        spec.file,
+        spec.n,
+        spec.k,
+        client.platform_name()
+    );
+
+    // Pad the graph into the artifact's fixed ELL shape, spilling heavy rows.
+    let n_pad = engine.n;
+    let neighbors: Vec<Vec<u32>> = (0..csr.n() as u32).map(|v| csr.neighbors(v).to_vec()).collect();
+    let (cols, spill_lists) = to_ell(&neighbors, n_pad, engine.k);
+    let spilled_edges: usize = spill_lists.iter().map(|s| s.len()).sum();
+    println!(
+        "  ELL: {} rows x {} slots, {} edges spilled to host ({:.1}%)",
+        n_pad,
+        engine.k,
+        spilled_edges,
+        100.0 * spilled_edges as f64 / csr.m() as f64
+    );
+
+    let mut inv_deg = vec![0.0f32; n_pad];
+    for v in 0..csr.n() {
+        inv_deg[v] = 1.0 / csr.degree(v as u32).max(1) as f32;
+    }
+    let mut ranks = vec![0.0f32; n_pad];
+    for r in ranks.iter_mut().take(csr.n()) {
+        *r = 1.0 / csr.n() as f32;
+    }
+    let mut spill = vec![0.0f32; n_pad];
+    let t_wall = std::time::Instant::now();
+    let mut last_delta = 0.0;
+    for _ in 0..ITERS {
+        // Host computes the spilled contributions (hybrid ELL+spill = exact).
+        let contrib: Vec<f32> = ranks.iter().zip(&inv_deg).map(|(r, d)| r * d).collect();
+        for (v, tail) in spill_lists.iter().enumerate() {
+            spill[v] = tail.iter().map(|&u| contrib[u as usize]).sum();
+        }
+        let (next, delta) = engine.step(&ranks, &inv_deg, &cols, &spill)?;
+        ranks = next;
+        last_delta = delta;
+    }
+    println!(
+        "  {} iterations in {:.1} ms wallclock, final L1 delta = {:.3e}",
+        ITERS,
+        t_wall.elapsed().as_secs_f64() * 1e3,
+        last_delta
+    );
+
+    // ---- Cross-validation: L1/L2 vs L3 vs reference ---------------------
+    // Padded rows have no edges and deg clamp 1 — compare real vertices.
+    // The artifact's base term uses n_pad, so rescale to compare shapes.
+    let reference = pagerank_ref(&csr, ITERS);
+    let top_ref = argmax(&reference[..csr.n()]);
+    let top_xla = argmax(&ranks[..csr.n()].iter().map(|&x| x as f64).collect::<Vec<_>>());
+    println!("\n== cross-validation ==");
+    println!("  top-ranked vertex: reference = {top_ref}, xla = {top_xla}");
+    anyhow::ensure!(top_ref == top_xla, "rank orderings disagree");
+    let corr = rank_correlation(&reference[..csr.n()], &ranks[..csr.n()]);
+    println!("  rank correlation (ref vs xla): {corr:.6}");
+    anyhow::ensure!(corr > 0.999, "correlation too low: {corr}");
+
+    // And the FAM run (same algorithm through the paging stack).
+    let (mut runner, g) = {
+        // quick FAM re-run for rank comparison
+        let mut wb2 = Workbench::new(scale);
+        let _ = wb2.graph("friendster");
+        let cluster = soda::coordinator::cluster::Cluster::build(Workbench::scaled_cluster_config());
+        let svc = soda::coordinator::service::SodaService::attach(
+            &cluster,
+            soda::coordinator::config::SodaConfig::default()
+                .with_backend(BackendKind::MemServer),
+        );
+        let agent = svc.client_for_footprint("p0", csr.vertex_bytes() + csr.edge_bytes());
+        let mut r = soda::graph::runner::GraphRunner::new(agent, 8, 0);
+        let (g, t) = soda::graph::fam_graph::FamGraph::build(
+            &mut r.agent,
+            0,
+            &csr,
+            soda::graph::fam_graph::BuildMode::FileBacked,
+        );
+        r.set_clock(t);
+        (r, g)
+    };
+    let fam = pagerank(&mut runner, &g, ITERS);
+    let max_err = reference
+        .iter()
+        .zip(&fam.ranks)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("  max |ref - fam| = {max_err:.3e}");
+    anyhow::ensure!(max_err < 1e-12, "FAM run diverged from reference");
+    println!("\nall three layers agree — end-to-end stack verified ✓");
+    Ok(())
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Pearson correlation between two rank vectors.
+fn rank_correlation(a: &[f64], b: &[f32]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let (mut cov, mut va, mut vb) = (0.0, 0.0, 0.0);
+    for (x, y) in a.iter().zip(b) {
+        let (dx, dy) = (x - ma, *y as f64 - mb);
+        cov += dx * dy;
+        va += dx * dx;
+        vb += dy * dy;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}

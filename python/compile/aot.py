@@ -1,0 +1,92 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust runtime.
+
+HLO text — not ``.serialize()`` protos — is the interchange format: jax
+≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``
+so the Rust side unwraps one tuple.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Emits:  pagerank_step_{N}x{K}.hlo.txt per variant + manifest.json.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import example_args, pagerank_step
+
+# (N, K, tile_rows) variants compiled by default: a test-sized module and
+# the example-sized module used by examples/xla_pagerank.rs.
+DEFAULT_VARIANTS = [
+    (1024, 8, 256),
+    (4096, 16, 512),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(n: int, k: int, tile_rows: int) -> str:
+    fn = lambda r, d, c, s: pagerank_step(r, d, c, s, tile_rows=tile_rows)
+    lowered = jax.jit(fn).lower(*example_args(n, k))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--variant",
+        action="append",
+        default=None,
+        metavar="NxK[xTILE]",
+        help="extra variant, e.g. 8192x32x512 (repeatable)",
+    )
+    args = ap.parse_args()
+
+    variants = list(DEFAULT_VARIANTS)
+    for spec in args.variant or []:
+        parts = [int(x) for x in spec.lower().split("x")]
+        if len(parts) == 2:
+            parts.append(min(512, parts[0]))
+        n, k, tile = parts
+        variants.append((n, k, tile))
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+    for n, k, tile in variants:
+        if n % tile != 0:
+            raise SystemExit(f"N={n} not divisible by tile_rows={tile}")
+        name = f"pagerank_step_{n}x{k}.hlo.txt"
+        path = os.path.join(args.out, name)
+        text = lower_variant(n, k, tile)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            {
+                "file": name,
+                "n": n,
+                "k": k,
+                "tile_rows": tile,
+                "inputs": ["ranks f32[n]", "inv_deg f32[n]", "cols i32[n,k]", "spill_sums f32[n]"],
+                "outputs": ["new_ranks f32[n]", "l1_delta f32[]"],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

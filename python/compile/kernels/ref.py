@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the Layer-1 kernels.
+
+This is the CORE correctness signal: the Pallas kernel and the full L2
+PageRank superstep are asserted allclose against these references by the
+pytest suite (including hypothesis sweeps over shapes and values).
+"""
+
+import jax.numpy as jnp
+
+DAMPING = 0.85
+
+
+def ell_spmv_ref(contrib, cols):
+    """sums[i] = sum over valid slots k of contrib[cols[i, k]]."""
+    mask = cols >= 0
+    safe = jnp.where(mask, cols, 0)
+    gathered = contrib[safe]
+    return jnp.where(mask, gathered, 0.0).sum(axis=1)
+
+
+def pagerank_step_ref(ranks, inv_deg, cols, spill_sums, damping=DAMPING):
+    """One PageRank iteration over an ELL adjacency (+ host spill sums).
+
+    ranks:     f32[N] current ranks
+    inv_deg:   f32[N] 1/out-degree (0 for isolated vertices)
+    cols:      i32[N, K] in-neighbor ids, -1 padded
+    spill_sums:f32[N] contributions of neighbors beyond slot K
+               (computed host-side for heavy rows; zeros otherwise)
+
+    Returns (new_ranks f32[N], l1_delta f32[]).
+    """
+    n = ranks.shape[0]
+    contrib = ranks * inv_deg
+    sums = ell_spmv_ref(contrib, cols) + spill_sums
+    new_ranks = (1.0 - damping) / n + damping * sums
+    delta = jnp.abs(new_ranks - ranks).sum()
+    return new_ranks, delta

@@ -1,0 +1,53 @@
+"""Layer 2 — the JAX compute graph: one PageRank superstep.
+
+Calls the Layer-1 Pallas kernel (`kernels.spmv.ell_spmv`) for the
+gather-accumulate hot spot and keeps the cheap elementwise tail (rank
+update, L1 convergence delta) in plain jnp so XLA fuses it into the same
+module. Lowered once by `aot.py`; never imported at runtime — the Rust
+coordinator executes the AOT artifact through PJRT.
+
+The `spill_sums` input makes the fixed-width ELL format exact on power-law
+graphs: rows wider than K spill their remaining neighbors to the host
+(which sums them with the same contrib values) and the artifact adds them
+back in. Zero spill ⇒ pure-kernel path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.spmv import DEFAULT_TILE_ROWS, ell_spmv
+
+DAMPING = 0.85
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows", "damping"))
+def pagerank_step(
+    ranks,
+    inv_deg,
+    cols,
+    spill_sums,
+    *,
+    tile_rows=DEFAULT_TILE_ROWS,
+    damping=DAMPING,
+):
+    """One PageRank iteration. Shapes: ranks/inv_deg/spill_sums f32[N],
+    cols i32[N, K]. Returns (new_ranks f32[N], l1_delta f32[])."""
+    n = ranks.shape[0]
+    contrib = ranks * inv_deg
+    sums = ell_spmv(contrib, cols, tile_rows=tile_rows) + spill_sums
+    new_ranks = (1.0 - damping) / n + damping * sums
+    delta = jnp.abs(new_ranks - ranks).sum()
+    return new_ranks, delta
+
+
+def example_args(n, k):
+    """ShapeDtypeStructs for AOT lowering at a given (N, K)."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n,), f32),      # ranks
+        jax.ShapeDtypeStruct((n,), f32),      # inv_deg
+        jax.ShapeDtypeStruct((n, k), jnp.int32),  # cols
+        jax.ShapeDtypeStruct((n,), f32),      # spill_sums
+    )

@@ -1,0 +1,124 @@
+"""L1 correctness: Pallas ELL-SpMV kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and values; fixed cases pin the paper-relevant
+configurations (power-law-ish rows, empty rows, full rows).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ell_spmv_ref
+from compile.kernels.spmv import ell_spmv, vmem_bytes
+
+
+def random_ell(rng, n, rows, k, fill):
+    """Random ELL column matrix with `fill` fraction of valid slots."""
+    cols = rng.integers(0, n, size=(rows, k), dtype=np.int32)
+    mask = rng.random((rows, k)) < fill
+    return np.where(mask, cols, -1).astype(np.int32)
+
+
+def assert_kernel_matches_ref(contrib, cols, tile_rows):
+    got = ell_spmv(jnp.asarray(contrib), jnp.asarray(cols), tile_rows=tile_rows)
+    want = ell_spmv_ref(jnp.asarray(contrib), jnp.asarray(cols))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_basic_small():
+    contrib = np.array([1.0, 2.0, 4.0, 8.0], dtype=np.float32)
+    cols = np.array([[1, 2], [0, -1], [-1, -1], [3, 3]], dtype=np.int32)
+    got = ell_spmv(jnp.asarray(contrib), jnp.asarray(cols), tile_rows=2)
+    np.testing.assert_allclose(np.asarray(got), [6.0, 1.0, 0.0, 16.0])
+
+
+def test_all_padding_rows_are_zero():
+    contrib = np.ones(8, dtype=np.float32)
+    cols = np.full((4, 3), -1, dtype=np.int32)
+    got = ell_spmv(jnp.asarray(contrib), jnp.asarray(cols), tile_rows=4)
+    assert np.all(np.asarray(got) == 0.0)
+
+
+def test_full_rows_sum_everything():
+    n, k = 16, 16
+    contrib = np.arange(n, dtype=np.float32)
+    cols = np.tile(np.arange(k, dtype=np.int32), (n, 1))
+    got = ell_spmv(jnp.asarray(contrib), jnp.asarray(cols), tile_rows=8)
+    np.testing.assert_allclose(np.asarray(got), np.full(n, contrib.sum()))
+
+
+def test_rows_must_divide_tile():
+    with pytest.raises(ValueError):
+        ell_spmv(jnp.ones(4), jnp.zeros((6, 2), jnp.int32), tile_rows=4)
+
+
+@pytest.mark.parametrize("rows,k,tile", [(8, 1, 4), (32, 7, 8), (64, 16, 64), (128, 3, 16)])
+def test_shapes_grid(rows, k, tile):
+    rng = np.random.default_rng(rows * 31 + k)
+    n = 64
+    contrib = rng.standard_normal(n).astype(np.float32)
+    cols = random_ell(rng, n, rows, k, 0.6)
+    assert_kernel_matches_ref(contrib, cols, tile)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows_pow=st.integers(2, 6),
+    k=st.integers(1, 12),
+    fill=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(rows_pow, k, fill, seed):
+    rows = 1 << rows_pow
+    tile = max(1, rows // 4)
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 200))
+    contrib = rng.standard_normal(n).astype(np.float32)
+    cols = random_ell(rng, n, rows, k, fill)
+    assert_kernel_matches_ref(contrib, cols, tile)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_power_law_rows(seed):
+    """Degree-skewed rows: a few near-full, most near-empty (graph shape)."""
+    rng = np.random.default_rng(seed)
+    n, rows, k = 128, 64, 16
+    contrib = rng.standard_normal(n).astype(np.float32)
+    fills = rng.pareto(1.5, size=rows).clip(0, 1)
+    cols = rng.integers(0, n, size=(rows, k), dtype=np.int32)
+    mask = rng.random((rows, k)) < fills[:, None]
+    cols = np.where(mask, cols, -1).astype(np.int32)
+    assert_kernel_matches_ref(contrib, cols, 16)
+
+
+def test_dtype_bfloat16_matches_loosely():
+    rng = np.random.default_rng(0)
+    n, rows, k = 64, 32, 8
+    contrib = rng.standard_normal(n).astype(np.float32)
+    cols = random_ell(rng, n, rows, k, 0.5)
+    got = ell_spmv(jnp.asarray(contrib, jnp.bfloat16), jnp.asarray(cols), tile_rows=8)
+    want = ell_spmv_ref(jnp.asarray(contrib), jnp.asarray(cols))
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_vmem_estimate_within_budget():
+    # Default config must sit far below a TPU core's ~16 MiB VMEM.
+    assert vmem_bytes(16384, 512, 16) < 4 * 1024 * 1024
+
+
+def test_kernel_is_jittable_and_stable():
+    rng = np.random.default_rng(3)
+    contrib = rng.standard_normal(32).astype(np.float32)
+    cols = random_ell(rng, 32, 16, 4, 0.7)
+    a = ell_spmv(jnp.asarray(contrib), jnp.asarray(cols), tile_rows=4)
+    b = ell_spmv(jnp.asarray(contrib), jnp.asarray(cols), tile_rows=4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _ = jax.jit(lambda c, x: ell_spmv(c, x, tile_rows=4))(
+        jnp.asarray(contrib), jnp.asarray(cols)
+    )

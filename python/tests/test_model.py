@@ -1,0 +1,106 @@
+"""L2 correctness: the PageRank superstep graph vs the oracle, plus
+fixed-point sanity on real (small) graph structures."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import pagerank_step_ref
+from compile.model import example_args, pagerank_step
+
+
+def graph_to_ell(neighbors, n, k):
+    """Split adjacency into ELL (first k) + spill lists (rest)."""
+    cols = np.full((n, k), -1, dtype=np.int32)
+    spill = [[] for _ in range(n)]
+    for v, nbrs in enumerate(neighbors):
+        head, tail = nbrs[:k], nbrs[k:]
+        cols[v, : len(head)] = head
+        spill[v] = tail
+    return cols, spill
+
+
+def run_step(ranks, inv_deg, cols, spill_sums, tile):
+    got = pagerank_step(
+        jnp.asarray(ranks), jnp.asarray(inv_deg), jnp.asarray(cols),
+        jnp.asarray(spill_sums), tile_rows=tile,
+    )
+    want = pagerank_step_ref(
+        jnp.asarray(ranks), jnp.asarray(inv_deg), jnp.asarray(cols),
+        jnp.asarray(spill_sums),
+    )
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]), rtol=1e-6)
+    np.testing.assert_allclose(float(got[1]), float(want[1]), rtol=1e-5, atol=1e-7)
+    return np.asarray(got[0])
+
+
+def test_step_matches_ref_random():
+    rng = np.random.default_rng(1)
+    n, k = 64, 8
+    ranks = rng.random(n).astype(np.float32)
+    ranks /= ranks.sum()
+    deg = rng.integers(1, 20, n)
+    inv_deg = (1.0 / deg).astype(np.float32)
+    cols = rng.integers(0, n, size=(n, k), dtype=np.int32)
+    cols[rng.random((n, k)) < 0.3] = -1
+    spill = rng.random(n).astype(np.float32) * 0.01
+    run_step(ranks, inv_deg, cols, spill, 16)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_pow=st.integers(3, 7), k=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_step_hypothesis(n_pow, k, seed):
+    n = 1 << n_pow
+    rng = np.random.default_rng(seed)
+    ranks = rng.random(n).astype(np.float32)
+    inv_deg = rng.random(n).astype(np.float32)
+    cols = rng.integers(-1, n, size=(n, k), dtype=np.int32)
+    spill = np.zeros(n, dtype=np.float32)
+    run_step(ranks, inv_deg, cols, spill, max(1, n // 4))
+
+
+def test_star_graph_fixpoint_shape():
+    """Star: center rank must dominate after a few steps (undirected)."""
+    n, k = 8, 8
+    neighbors = [[i for i in range(1, n)]] + [[0]] * (n - 1)
+    cols, spill_lists = graph_to_ell(neighbors, n, k)
+    assert all(len(s) == 0 for s in spill_lists)
+    deg = np.array([len(x) for x in neighbors], dtype=np.float32)
+    inv_deg = 1.0 / deg
+    ranks = np.full(n, 1.0 / n, dtype=np.float32)
+    for _ in range(10):
+        ranks = run_step(ranks, inv_deg, cols, np.zeros(n, np.float32), 4)
+    assert ranks[0] > ranks[1] * 2
+    np.testing.assert_allclose(ranks.sum(), 1.0, rtol=1e-4)
+
+
+def test_spill_path_is_exact():
+    """Rows wider than K: ELL + host spill must equal the full sum."""
+    n, k = 16, 2
+    rng = np.random.default_rng(2)
+    neighbors = [list(rng.integers(0, n, rng.integers(0, 6))) for _ in range(n)]
+    cols, spill_lists = graph_to_ell(neighbors, n, k)
+    ranks = rng.random(n).astype(np.float32)
+    deg = np.array([max(1, len(x)) for x in neighbors], dtype=np.float32)
+    inv_deg = (1.0 / deg).astype(np.float32)
+    contrib = ranks * inv_deg
+    spill_sums = np.array(
+        [sum(contrib[u] for u in tail) for tail in spill_lists], dtype=np.float32
+    )
+    got = pagerank_step(
+        jnp.asarray(ranks), jnp.asarray(inv_deg), jnp.asarray(cols),
+        jnp.asarray(spill_sums), tile_rows=4,
+    )
+    # Dense reference over the full adjacency (no ELL, no spill).
+    full = np.zeros(n, dtype=np.float64)
+    for v, nbrs in enumerate(neighbors):
+        full[v] = sum(contrib[u] for u in nbrs)
+    want = (1.0 - 0.85) / n + 0.85 * full
+    np.testing.assert_allclose(np.asarray(got[0]), want.astype(np.float32), rtol=1e-5)
+
+
+def test_example_args_shapes():
+    args = example_args(1024, 8)
+    assert args[0].shape == (1024,)
+    assert args[2].shape == (1024, 8)
+    assert str(args[2].dtype) == "int32"

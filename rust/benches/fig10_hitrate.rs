@@ -1,0 +1,23 @@
+//! Bench: Fig 10 — the dynamic cache under real application streams.
+use soda::coordinator::config::{BackendKind, CachingMode};
+use soda::graph::App;
+use soda::util::bench::Bench;
+use soda::workload::{ExperimentSpec, Workbench};
+
+fn main() {
+    let mut b = Bench::quick();
+    b.section("fig10: dynamic-cache hit rates (scale 2e-4)");
+    for app in [App::PageRank, App::Bfs] {
+        b.bench(format!("{}/friendster/dynamic", app.name()), || {
+            let mut wb = Workbench::new(0.0002);
+            wb.threads = 24;
+            let m = wb.run(&ExperimentSpec {
+                app,
+                graph: "friendster",
+                backend: BackendKind::DPU_FULL,
+                caching: CachingMode::Dynamic,
+            });
+            (m.dpu_hit_rate * 1e6) as u64
+        });
+    }
+}

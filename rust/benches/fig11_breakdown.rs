@@ -1,0 +1,28 @@
+//! Bench: Fig 11 — per-optimization ablation runs.
+use soda::coordinator::config::{BackendKind, CachingMode};
+use soda::dpu::DpuOpts;
+use soda::graph::App;
+use soda::util::bench::Bench;
+use soda::workload::{ExperimentSpec, Workbench};
+
+fn main() {
+    let mut b = Bench::quick();
+    b.section("fig11: optimization ablations (scale 2e-4)");
+    let configs: [(&str, BackendKind, CachingMode); 3] = [
+        ("base", BackendKind::DPU_BASE, CachingMode::None),
+        (
+            "aggregation",
+            BackendKind::Dpu(DpuOpts { aggregation: true, async_forward: false, dynamic_cache: false }),
+            CachingMode::None,
+        ),
+        ("static", BackendKind::DPU_BASE, CachingMode::Static),
+    ];
+    for (label, backend, caching) in configs {
+        b.bench(format!("bc/friendster/{label}"), || {
+            let mut wb = Workbench::new(0.0002);
+            wb.threads = 24;
+            wb.run(&ExperimentSpec { app: App::Bc, graph: "friendster", backend, caching })
+                .elapsed_ns
+        });
+    }
+}

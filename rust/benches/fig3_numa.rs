@@ -1,0 +1,29 @@
+//! Bench: Fig 3 — NUMA model evaluation cost + the figure's data itself.
+use soda::fabric::numa::{IntraOp, NumaModel};
+use soda::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+    b.section("fig3: NUMA bandwidth model (hot-path cost of the timing model)");
+    let m = NumaModel::default();
+    b.bench("bandwidth_gbps(64K)", || {
+        let mut acc = 0.0;
+        for op in IntraOp::ALL {
+            for n in 0..4 {
+                acc += m.bandwidth_gbps(op, n, 64 << 10);
+            }
+        }
+        black_box(acc)
+    });
+    b.bench("latency_ns(all ops/nodes)", || {
+        let mut acc = 0;
+        for op in IntraOp::ALL {
+            for n in 0..4 {
+                acc += m.latency_ns(op, n);
+            }
+        }
+        black_box(acc)
+    });
+    b.section("fig3 regeneration (virtual-time figure)");
+    b.bench("figures::fig3()", || soda::figures::fig3().lines.len());
+}

@@ -1,0 +1,21 @@
+//! Bench: Fig 4 — message-size sweep through the intra-node model.
+use soda::fabric::numa::{IntraOp, NumaModel};
+use soda::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+    b.section("fig4: bandwidth-vs-size interpolation");
+    let m = NumaModel::default();
+    for op in [IntraOp::DpuToHostSend, IntraOp::DmaWrite] {
+        b.bench(format!("sweep 256B..8M {}", op.label()), || {
+            let mut acc = 0.0;
+            let mut s = 256u64;
+            while s <= 8 << 20 {
+                acc += m.bandwidth_gbps(op, 2, s);
+                s <<= 1;
+            }
+            black_box(acc)
+        });
+    }
+    b.bench("figures::fig4()", || soda::figures::fig4().lines.len());
+}

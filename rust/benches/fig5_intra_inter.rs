@@ -1,0 +1,27 @@
+//! Bench: Fig 5 — intra vs inter transfers through the full link model.
+use soda::fabric::{Fabric, FabricConfig};
+use soda::fabric::numa::IntraOp;
+use soda::sim::link::TrafficClass;
+use soda::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+    b.section("fig5: link reservations (the simulator's innermost hot path)");
+    b.bench("net_read 64K", || {
+        let mut f = Fabric::new(FabricConfig::default());
+        let mut t = 0;
+        for _ in 0..64 {
+            t = f.net_read(t, 64 << 10, 2, TrafficClass::OnDemand);
+        }
+        black_box(t)
+    });
+    b.bench("intra DPU->host SEND 64K", || {
+        let mut f = Fabric::new(FabricConfig::default());
+        let mut t = 0;
+        for _ in 0..64 {
+            t = f.intra(t, IntraOp::DpuToHostSend, 2, 64 << 10, TrafficClass::OnDemand);
+        }
+        black_box(t)
+    });
+    b.bench("figures::fig5()", || soda::figures::fig5().lines.len());
+}

@@ -1,0 +1,23 @@
+//! Bench: Fig 6 — SSD vs MemServer end-to-end app runs (scaled down).
+use soda::coordinator::config::{BackendKind, CachingMode};
+use soda::graph::App;
+use soda::util::bench::Bench;
+use soda::workload::{ExperimentSpec, Workbench};
+
+fn main() {
+    let mut b = Bench::quick();
+    b.section("fig6: end-to-end app on each baseline (scale 2e-4)");
+    for backend in [BackendKind::Ssd, BackendKind::MemServer] {
+        b.bench(format!("bfs/friendster/{}", backend.label()), || {
+            let mut wb = Workbench::new(0.0002);
+            wb.threads = 24;
+            wb.run(&ExperimentSpec {
+                app: App::Bfs,
+                graph: "friendster",
+                backend,
+                caching: CachingMode::None,
+            })
+            .elapsed_ns
+        });
+    }
+}

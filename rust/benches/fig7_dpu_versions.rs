@@ -1,0 +1,27 @@
+//! Bench: Fig 7 — the three network-attached versions end to end.
+use soda::coordinator::config::{BackendKind, CachingMode};
+use soda::graph::App;
+use soda::util::bench::Bench;
+use soda::workload::{ExperimentSpec, Workbench};
+
+fn main() {
+    let mut b = Bench::quick();
+    b.section("fig7: MemServer / DPU-base / DPU-opt (scale 2e-4)");
+    for (backend, caching) in [
+        (BackendKind::MemServer, CachingMode::None),
+        (BackendKind::DPU_BASE, CachingMode::None),
+        (BackendKind::DPU_OPT, CachingMode::Static),
+    ] {
+        b.bench(format!("components/friendster/{}", backend.label()), || {
+            let mut wb = Workbench::new(0.0002);
+            wb.threads = 24;
+            wb.run(&ExperimentSpec {
+                app: App::Components,
+                graph: "friendster",
+                backend,
+                caching,
+            })
+            .elapsed_ns
+        });
+    }
+}

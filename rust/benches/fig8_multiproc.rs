@@ -1,0 +1,22 @@
+//! Bench: Fig 8 — co-running foreground app + background BFS.
+use soda::coordinator::config::{BackendKind, CachingMode};
+use soda::graph::App;
+use soda::util::bench::Bench;
+use soda::workload::{ExperimentSpec, Workbench};
+
+fn main() {
+    let mut b = Bench::quick();
+    b.section("fig8: multi-process co-run (scale 2e-4)");
+    b.bench("pagerank+bgbfs soda", || {
+        let mut wb = Workbench::new(0.0002);
+        wb.threads = 24;
+        wb.run_with_background_bfs(&ExperimentSpec {
+            app: App::PageRank,
+            graph: "friendster",
+            backend: BackendKind::DPU_OPT,
+            caching: CachingMode::Static,
+        })
+        .0
+        .elapsed_ns
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench: Fig 9 — traffic accounting under the three caching modes.
+use soda::coordinator::config::{BackendKind, CachingMode};
+use soda::graph::App;
+use soda::util::bench::Bench;
+use soda::workload::{ExperimentSpec, Workbench};
+
+fn main() {
+    let mut b = Bench::quick();
+    b.section("fig9: caching-mode traffic (scale 2e-4)");
+    for (label, backend, caching) in [
+        ("server-only", BackendKind::MemServer, CachingMode::None),
+        ("static", BackendKind::DPU_OPT, CachingMode::Static),
+        ("dynamic", BackendKind::DPU_FULL, CachingMode::Dynamic),
+    ] {
+        b.bench(format!("radii/friendster/{label}"), || {
+            let mut wb = Workbench::new(0.0002);
+            wb.threads = 24;
+            wb.run(&ExperimentSpec {
+                app: App::Radii,
+                graph: "friendster",
+                backend,
+                caching,
+            })
+            .network_bytes()
+        });
+    }
+}

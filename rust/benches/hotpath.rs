@@ -1,0 +1,110 @@
+//! §Perf: the simulator's own hot paths — the targets of the performance
+//! pass recorded in EXPERIMENTS.md §Perf. These are *wallclock* benches of
+//! the L3 machinery (figures come from virtual time and are unaffected).
+use soda::dpu::{CacheTable, EntryKey};
+use soda::host::buffer::{PageBuffer, PageKey};
+use soda::sim::engine::EventQueue;
+use soda::sim::link::{Link, TrafficClass};
+use soda::sim::rng::Rng;
+use soda::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+    b.section("hot paths (per-op cost; §Perf targets)");
+
+    // 1. Page-buffer fault path: access-miss + evict + insert.
+    b.bench("buffer miss+evict+insert", || {
+        let mut buf = PageBuffer::new(256 * 4096, 4096, 1.0);
+        let mut x = 0u64;
+        for p in 0..2048u64 {
+            if buf.access(PageKey::new(1, p), false).is_none() {
+                while buf.is_full() {
+                    let ev = buf.evict_lru().unwrap();
+                    buf.recycle(ev.data);
+                }
+                buf.insert_with(PageKey::new(1, p), false, |_| {});
+                x += 1;
+            }
+        }
+        black_box(x)
+    });
+
+    // 2. Buffer hit path (hash probe only under FaultFifo).
+    b.bench("buffer hit (resident)", || {
+        let mut buf = PageBuffer::new(256 * 4096, 4096, 1.0);
+        for p in 0..256u64 {
+            buf.insert_with(PageKey::new(1, p), false, |_| {});
+        }
+        let mut acc = 0usize;
+        for i in 0..4096u64 {
+            if buf.access(PageKey::new(1, i % 256), false).is_some() {
+                acc += 1;
+            }
+        }
+        black_box(acc)
+    });
+
+    // 3. Dynamic cache lookup + insert + random eviction.
+    b.bench("cache_table lookup+insert", || {
+        let mut t = CacheTable::new(64 * 4096, 4096, 1024);
+        let mut rng = Rng::new(3);
+        let mut hits = 0usize;
+        for e in 0..512u64 {
+            if t.lookup_page(0, PageKey::new(1, e * 4)).is_some() {
+                hits += 1;
+            }
+            t.insert(EntryKey { region: 1, entry: e }, vec![0; 4096], 0, &mut rng);
+        }
+        black_box(hits)
+    });
+
+    // 4. Event-queue churn (the thread-merge engine).
+    b.bench("event queue push/pop x1024", || {
+        let mut q = EventQueue::new();
+        let mut rng = Rng::new(9);
+        let mut acc = 0u64;
+        for i in 0..1024u64 {
+            q.push(rng.below(1 << 40) + acc, i);
+            if i % 2 == 0 {
+                if let Some((t, _)) = q.pop() {
+                    acc = t;
+                }
+            }
+        }
+        while let Some((t, _)) = q.pop() {
+            acc = t;
+        }
+        black_box(acc)
+    });
+
+    // 5. Link reservation (called once per simulated transfer).
+    b.bench("link transfer", || {
+        let mut l = Link::new("l", 12.5, 2_000, 100);
+        let mut t = 0;
+        for _ in 0..1024 {
+            t = l.transfer(t, 4096, TrafficClass::OnDemand);
+        }
+        black_box(t)
+    });
+
+    // 6. End-to-end simulated fault throughput (the §Perf headline).
+    b.section("end-to-end simulated fault path");
+    b.bench("memserver fault (full path)", || {
+        use soda::backend::MemServerStore;
+        use soda::coordinator::cluster::Cluster;
+        use soda::coordinator::config::ClusterConfig;
+        use soda::host::{HostAgent, Placement};
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let chunk = cluster.config().chunk_bytes;
+        let mut a = HostAgent::new(
+            "b", Box::new(MemServerStore::new(cluster.clone())),
+            64 * chunk, chunk, 1.0, 8, 8, 2, soda::host::HostTiming::default(),
+        );
+        let (h, t0) = a.alloc(0, "x", 512 * chunk, Some(vec![1; (512 * chunk) as usize]), Placement::Default);
+        let mut t = t0;
+        for p in 0..512u64 {
+            t = a.touch_page(t, (p % 8) as usize, PageKey::new(h.region, p), false);
+        }
+        black_box(t)
+    });
+}

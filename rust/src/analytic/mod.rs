@@ -1,0 +1,156 @@
+//! Analytical caching model (§III-A, Eqs. 1–3).
+//!
+//! The paper derives when dynamic caching pays off. Fetching a chunk of
+//! `s` bytes directly from the memory node takes `T = s / B_net` (Eq. 1);
+//! with dynamic caching the expected time is
+//! `E[T_d] = s / B_intra + (1 − h) · s / B_net` (Eq. 2), where `h` is the
+//! DPU-cache hit rate. Caching wins iff `h > B_net / B_intra` (Eq. 3):
+//! with R = 1:2 you need h > 50 %, with R = 1:3 only h > 33 %.
+//!
+//! [`CachingAdvisor`] applies the model to a fabric configuration and to
+//! observed hit rates — the mechanism behind "caching on DPU can be
+//! disabled when it is not beneficial to the workload".
+
+use crate::fabric::FabricConfig;
+
+/// Eq. 1: time (seconds) to fetch `s` bytes at `b_net` GB/s.
+pub fn fetch_time_baseline(s: u64, b_net: f64) -> f64 {
+    assert!(b_net > 0.0);
+    s as f64 / (b_net * 1e9)
+}
+
+/// Eq. 2: expected time with dynamic caching at hit rate `h`.
+pub fn fetch_time_dynamic(s: u64, b_net: f64, b_intra: f64, h: f64) -> f64 {
+    assert!(b_intra > 0.0 && (0.0..=1.0).contains(&h));
+    s as f64 / (b_intra * 1e9) + (1.0 - h) * s as f64 / (b_net * 1e9)
+}
+
+/// Eq. 3: the hit rate above which dynamic caching is beneficial,
+/// `h* = R = B_net / B_intra`.
+pub fn required_hit_rate(b_net: f64, b_intra: f64) -> f64 {
+    assert!(b_net > 0.0 && b_intra > 0.0);
+    b_net / b_intra
+}
+
+/// Expected speedup `E[T / T_d]` of dynamic caching at hit rate `h`.
+pub fn expected_speedup(b_net: f64, b_intra: f64, h: f64) -> f64 {
+    let r = required_hit_rate(b_net, b_intra);
+    1.0 / (r + (1.0 - h))
+}
+
+/// Strategy recommendation produced by the advisor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Advice {
+    /// Expected benefit: keep/enable dynamic caching.
+    EnableDynamic,
+    /// Below the threshold: disable dynamic caching (serve from memnode).
+    DisableDynamic,
+}
+
+/// Applies Eq. 3 to a platform and observed hit rates.
+#[derive(Clone, Debug)]
+pub struct CachingAdvisor {
+    pub b_net_gbps: f64,
+    pub b_intra_gbps: f64,
+    /// Safety margin on the threshold (lookup overhead is not free).
+    pub margin: f64,
+}
+
+impl CachingAdvisor {
+    pub fn new(b_net_gbps: f64, b_intra_gbps: f64) -> Self {
+        CachingAdvisor {
+            b_net_gbps,
+            b_intra_gbps,
+            margin: 0.0,
+        }
+    }
+
+    /// Build from a fabric configuration (uses the DPU→host SEND path that
+    /// delivers cached chunks).
+    pub fn from_fabric(cfg: &FabricConfig) -> Self {
+        let b_intra = crate::fabric::numa::NumaModel::peak_gbps(
+            crate::fabric::numa::IntraOp::DpuToHostSend,
+        )
+        .min(cfg.pcie_gbps);
+        CachingAdvisor::new(cfg.net_gbps, b_intra)
+    }
+
+    /// The platform's hit-rate threshold `h*`.
+    pub fn threshold(&self) -> f64 {
+        (required_hit_rate(self.b_net_gbps, self.b_intra_gbps) + self.margin).min(1.0)
+    }
+
+    /// Advice given an observed (or predicted) hit rate.
+    pub fn advise(&self, hit_rate: f64) -> Advice {
+        if hit_rate > self.threshold() {
+            Advice::EnableDynamic
+        } else {
+            Advice::DisableDynamic
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_baseline_time() {
+        // 64 KB at 12.5 GB/s ≈ 5.24 µs.
+        let t = fetch_time_baseline(65536, 12.5);
+        assert!((t - 5.24288e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq3_paper_examples() {
+        // "For a R of 1:2, we need a hit rate above 50% and for a R of 1:3,
+        //  we only need a hit rate above 33%."
+        assert!((required_hit_rate(6.0, 12.0) - 0.5).abs() < 1e-12);
+        assert!((required_hit_rate(4.0, 12.0) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq2_limits() {
+        // h = 1: only the intra hop remains.
+        let t = fetch_time_dynamic(65536, 6.0, 12.0, 1.0);
+        assert!((t - fetch_time_baseline(65536, 12.0)).abs() < 1e-12);
+        // h = 0: strictly worse than baseline (extra intra hop).
+        let t0 = fetch_time_dynamic(65536, 6.0, 12.0, 0.0);
+        assert!(t0 > fetch_time_baseline(65536, 6.0));
+    }
+
+    #[test]
+    fn speedup_crosses_one_at_threshold() {
+        let (bn, bi) = (6.0, 12.0);
+        let h_star = required_hit_rate(bn, bi);
+        assert!((expected_speedup(bn, bi, h_star) - 1.0).abs() < 1e-12);
+        assert!(expected_speedup(bn, bi, h_star + 0.1) > 1.0);
+        assert!(expected_speedup(bn, bi, h_star - 0.1) < 1.0);
+    }
+
+    #[test]
+    fn advisor_matches_testbed_characterization() {
+        // §IV-C: "the dynamic caching needs to have at least 50% cache hit
+        // rate to avoid performance loss" on the testbed.
+        let adv = CachingAdvisor::from_fabric(&FabricConfig::default());
+        let thr = adv.threshold();
+        assert!((0.40..=0.55).contains(&thr), "threshold {thr}");
+        assert_eq!(adv.advise(0.93), Advice::EnableDynamic); // PageRank
+        assert_eq!(adv.advise(0.30), Advice::DisableDynamic);
+    }
+
+    #[test]
+    fn fig10_hit_rates_vs_advice() {
+        // Fig 10 observed hit rates: PR 93 %, BC 61 % (friendster);
+        // BFS 56 % (moliere). Only rates above ~50 % should stay enabled.
+        let adv = CachingAdvisor::new(6.3, 14.3);
+        for (h, expect) in [
+            (0.93, Advice::EnableDynamic),
+            (0.61, Advice::EnableDynamic),
+            (0.56, Advice::EnableDynamic),
+            (0.40, Advice::DisableDynamic),
+        ] {
+            assert_eq!(adv.advise(h), expect, "h = {h}");
+        }
+    }
+}

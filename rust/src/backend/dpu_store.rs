@@ -1,0 +1,259 @@
+//! DPU-offloaded backend — SODA proper (§III).
+//!
+//! Every on-demand fetch is a two-sided request to the DPU agent, which
+//! looks up its caches and forwards misses to the memory node; write-backs
+//! are handed off to the DPU and the host returns immediately. Static
+//! regions are read with the one-sided protocol straight from DPU DRAM.
+//!
+//! One `DpuStore` per process, all sharing the cluster's single DPU agent —
+//! "a DPU agent may handle multiple host agents on a compute node" — which
+//! is what the multi-process experiments (§VI-B) exercise.
+
+use super::{FetchSource, RemoteStore};
+use crate::coordinator::cluster::Cluster;
+use crate::dpu::Source;
+use crate::fabric::protocol::RPC_BYTES;
+use crate::fabric::verbs;
+use crate::host::buffer::PageKey;
+use crate::memnode::RegionId;
+use crate::sim::link::TrafficClass;
+use crate::sim::Ns;
+
+/// SODA's DPU-routed remote store.
+#[derive(Clone, Debug)]
+pub struct DpuStore {
+    cluster: Cluster,
+    chunk_bytes: u64,
+}
+
+impl DpuStore {
+    pub fn new(cluster: Cluster) -> Self {
+        let chunk_bytes = cluster.config().chunk_bytes;
+        DpuStore { cluster, chunk_bytes }
+    }
+}
+
+impl RemoteStore for DpuStore {
+    fn name(&self) -> &'static str {
+        "dpu"
+    }
+
+    fn alloc(&mut self, now: Ns, bytes: u64, init: Option<Vec<u8>>) -> (RegionId, Ns) {
+        self.cluster.with(|inner| {
+            let t_rpc = inner.fabric.net_rpc(
+                now,
+                RPC_BYTES,
+                inner.memnode.cfg.rpc_service_ns,
+                RPC_BYTES,
+                TrafficClass::Control,
+            );
+            // Regions are chunk-aligned so every page fetch is full-sized.
+            let padded = bytes.div_ceil(self.chunk_bytes) * self.chunk_bytes;
+            let (region, t_reserved) = match init {
+                Some(mut data) => {
+                    data.resize(padded as usize, 0);
+                    inner.memnode.reserve_file(t_rpc, data)
+                }
+                None => inner.memnode.reserve(t_rpc, padded),
+            }
+            .expect("memory node capacity");
+            // The DPU agent mirrors the region metadata so it can compose
+            // memory-node operations without asking the host.
+            inner.dpu.register_region(region, padded);
+            (region, t_reserved)
+        })
+    }
+
+    fn free(&mut self, now: Ns, region: RegionId) -> Ns {
+        self.cluster.with(|inner| {
+            inner.dpu.unregister_region(region);
+            let t_rpc = inner.fabric.net_rpc(
+                now,
+                RPC_BYTES,
+                inner.memnode.cfg.rpc_service_ns,
+                RPC_BYTES,
+                TrafficClass::Control,
+            );
+            inner.memnode.free(t_rpc, region).expect("region exists")
+        })
+    }
+
+    fn fetch(
+        &mut self,
+        now: Ns,
+        key: PageKey,
+        numa_node: usize,
+        out: &mut [u8],
+    ) -> (Ns, FetchSource) {
+        self.cluster.with(|inner| {
+            // Static-cached region: host metadata routes a one-sided read
+            // directly against DPU DRAM (no request message, no DPU core).
+            if inner.dpu.is_static(key.region) {
+                let off = key.byte_offset(self.chunk_bytes);
+                let done = inner
+                    .dpu
+                    .static_read(&mut inner.fabric, now, key.region, off, numa_node, out)
+                    .expect("static region pinned");
+                return (done, FetchSource::DpuStatic);
+            }
+            // Two-sided protocol: request lands in the DPU's shared RQ.
+            let arrive = verbs::two_sided_request(&mut inner.fabric, now, numa_node);
+            let outcome = inner.dpu.handle_read(
+                &mut inner.fabric,
+                &inner.memnode.store,
+                arrive,
+                key,
+                numa_node,
+                out,
+            );
+            let source = match outcome.source {
+                Source::DpuCache => FetchSource::DpuCache,
+                Source::StaticCache => FetchSource::DpuStatic,
+                Source::MemNode => FetchSource::MemNode,
+            };
+            (outcome.host_done, source)
+        })
+    }
+
+    fn writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Ns {
+        self.cluster.with(|inner| {
+            // Host pushes header + data over PCIe and returns immediately;
+            // the DPU forwards to the memory node off the host's critical
+            // path (§III).
+            let arrive =
+                verbs::two_sided_write_request(&mut inner.fabric, now, 2, data.len() as u64);
+            let _durable =
+                inner
+                    .dpu
+                    .handle_write(&mut inner.fabric, &mut inner.memnode.store, arrive, key, data);
+            arrive
+        })
+    }
+
+    fn pin_static(&mut self, now: Ns, region: RegionId) -> Option<Ns> {
+        self.cluster.with(|inner| {
+            inner
+                .dpu
+                .pin_static(&mut inner.fabric, &inner.memnode.store, now, region)
+                .ok()
+        })
+    }
+
+    fn is_static(&self, region: RegionId) -> bool {
+        self.cluster.with(|inner| inner.dpu.is_static(region))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::ClusterConfig;
+    use crate::dpu::DpuOpts;
+
+    fn cluster_with(opts: DpuOpts) -> Cluster {
+        let mut cfg = ClusterConfig::tiny();
+        cfg.dpu.opts = opts;
+        Cluster::build(cfg)
+    }
+
+    #[test]
+    fn fetch_routes_through_dpu() {
+        let cluster = cluster_with(DpuOpts::BASE);
+        let mut s = DpuStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let (region, t0) = s.alloc(0, 4 * chunk, Some(vec![8u8; (4 * chunk) as usize]));
+        let mut out = vec![0u8; chunk as usize];
+        let (done, src) = s.fetch(t0, PageKey::new(region, 3), 2, &mut out);
+        assert_eq!(src, FetchSource::MemNode);
+        assert!(out.iter().all(|&b| b == 8));
+        assert!(done > t0);
+        assert_eq!(cluster.dpu_stats().reads, 1);
+        // PCIe carried request + response.
+        let st = cluster.network_stats();
+        assert!(st.pcie_h2d.control_bytes > 0);
+        assert!(st.pcie_d2h.on_demand_bytes >= chunk);
+    }
+
+    #[test]
+    fn writeback_releases_host_before_durability() {
+        let cluster = cluster_with(DpuOpts::BASE);
+        let mut s = DpuStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let (region, _) = s.alloc(0, 2 * chunk, None);
+        let data = vec![0x5A; chunk as usize];
+        let released = s.writeback(0, PageKey::new(region, 0), &data);
+        // Host release = PCIe hand-off only, far below a network round trip.
+        let net_rtt = 2 * cluster.config().fabric.net_latency_ns;
+        let pcie_ser = crate::sim::ser_ns(chunk, 12.6);
+        assert!(
+            released < net_rtt + 4 * pcie_ser,
+            "host must be released at PCIe hand-off ({released})"
+        );
+        // ...but the data did reach the memory node's store.
+        let mut out = vec![0u8; chunk as usize];
+        let (_, src) = s.fetch(released + 10_000_000, PageKey::new(region, 0), 2, &mut out);
+        assert_eq!(src, FetchSource::MemNode);
+        assert!(out.iter().all(|&b| b == 0x5A));
+    }
+
+    #[test]
+    fn static_pin_then_fetch_serves_from_dpu() {
+        let cluster = cluster_with(DpuOpts::OPT);
+        let mut s = DpuStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let (region, t0) = s.alloc(0, 4 * chunk, Some(vec![4u8; (4 * chunk) as usize]));
+        let t_pin = s.pin_static(t0, region).expect("fits in static cache");
+        assert!(t_pin > t0);
+        assert!(s.is_static(region));
+        cluster.reset_stats();
+        let mut out = vec![0u8; chunk as usize];
+        let (_, src) = s.fetch(t_pin, PageKey::new(region, 1), 2, &mut out);
+        assert_eq!(src, FetchSource::DpuStatic);
+        assert!(out.iter().all(|&b| b == 4));
+        // Zero network traffic for the serve.
+        assert_eq!(cluster.network_stats().network_bytes(), 0);
+    }
+
+    #[test]
+    fn dynamic_cache_hits_reduce_on_demand_traffic() {
+        let cluster = cluster_with(DpuOpts::FULL);
+        let mut s = DpuStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let pages = 16u64;
+        let (region, t0) = s.alloc(0, pages * chunk, Some(vec![1u8; (pages * chunk) as usize]));
+        let mut out = vec![0u8; chunk as usize];
+        // Sequential scan with gaps lets prefetched entries become ready.
+        let mut t = t0;
+        for p in 0..pages {
+            let (done, _) = s.fetch(t + 5_000_000, PageKey::new(region, p), 2, &mut out);
+            t = done;
+        }
+        assert!(
+            cluster.dpu_hit_rate() > 0.4,
+            "sequential scan should hit prefetched entries (rate {})",
+            cluster.dpu_hit_rate()
+        );
+        let st = cluster.network_stats();
+        assert!(st.background_bytes() > 0);
+        assert!(
+            st.on_demand_bytes() < pages * chunk,
+            "some pages must be served from DPU cache"
+        );
+    }
+
+    #[test]
+    fn shared_dpu_across_two_processes() {
+        let cluster = cluster_with(DpuOpts::FULL);
+        let mut p0 = DpuStore::new(cluster.clone());
+        let mut p1 = DpuStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let (region, t0) = p0.alloc(0, 8 * chunk, Some(vec![2u8; (8 * chunk) as usize]));
+        let mut out = vec![0u8; chunk as usize];
+        // Process 0 warms the shared cache...
+        let (t1, _) = p0.fetch(t0, PageKey::new(region, 0), 2, &mut out);
+        // ...process 1 (same dataset, read-only) can hit it.
+        let (_, src) = p1.fetch(t1 + 50_000_000, PageKey::new(region, 1), 2, &mut out);
+        assert_eq!(src, FetchSource::DpuCache, "cache is shared across processes");
+        assert_eq!(cluster.dpu_stats().reads, 2);
+    }
+}

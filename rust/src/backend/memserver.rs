@@ -1,0 +1,167 @@
+//! MemServer backend — direct host ↔ memory-node access, no DPU (§VI-A).
+//!
+//! "The first version is the baseline memory server storing the data on the
+//! memory node, which is accessed directly from the host." The host issues
+//! one-sided RDMA READ/WRITE against the memory node's registered regions;
+//! the off-path SoC is bypassed entirely. All memory-management work (and
+//! the synchronous eviction path) burns host CPU — the cost SODA exists to
+//! offload.
+
+use super::{FetchSource, RemoteStore};
+use crate::coordinator::cluster::Cluster;
+use crate::fabric::protocol::RPC_BYTES;
+use crate::host::buffer::PageKey;
+use crate::memnode::RegionId;
+use crate::sim::link::TrafficClass;
+use crate::sim::Ns;
+
+/// Direct one-sided memory-server store.
+#[derive(Clone, Debug)]
+pub struct MemServerStore {
+    cluster: Cluster,
+    chunk_bytes: u64,
+}
+
+impl MemServerStore {
+    pub fn new(cluster: Cluster) -> Self {
+        let chunk_bytes = cluster.config().chunk_bytes;
+        MemServerStore { cluster, chunk_bytes }
+    }
+}
+
+impl RemoteStore for MemServerStore {
+    fn name(&self) -> &'static str {
+        "memserver"
+    }
+
+    fn alloc(&mut self, now: Ns, bytes: u64, init: Option<Vec<u8>>) -> (RegionId, Ns) {
+        self.cluster.with(|inner| {
+            // Control-plane RPC to the memory agent.
+            let t_rpc = inner
+                .fabric
+                .net_rpc(now, RPC_BYTES, inner.memnode.cfg.rpc_service_ns, RPC_BYTES, TrafficClass::Control);
+            // Regions are chunk-aligned so every page fetch is full-sized.
+            let padded = bytes.div_ceil(self.chunk_bytes) * self.chunk_bytes;
+            let (region, t_reserved) = match init {
+                Some(mut data) => {
+                    data.resize(padded as usize, 0);
+                    inner.memnode.reserve_file(t_rpc, data)
+                }
+                None => inner.memnode.reserve(t_rpc, padded),
+            }
+            .expect("memory node capacity");
+            (region, t_reserved)
+        })
+    }
+
+    fn free(&mut self, now: Ns, region: RegionId) -> Ns {
+        self.cluster.with(|inner| {
+            let t_rpc = inner
+                .fabric
+                .net_rpc(now, RPC_BYTES, inner.memnode.cfg.rpc_service_ns, RPC_BYTES, TrafficClass::Control);
+            inner.memnode.free(t_rpc, region).expect("region exists")
+        })
+    }
+
+    fn fetch(
+        &mut self,
+        now: Ns,
+        key: PageKey,
+        numa_node: usize,
+        out: &mut [u8],
+    ) -> (Ns, FetchSource) {
+        let off = key.byte_offset(self.chunk_bytes);
+        let done = self.cluster.with(|inner| {
+            inner
+                .memnode
+                .store
+                .read(key.region, off, out)
+                .expect("page within region");
+            // One-sided READ: memory node CPU is not involved.
+            inner
+                .fabric
+                .net_read(now, out.len() as u64, numa_node, TrafficClass::OnDemand)
+        });
+        (done, FetchSource::MemNode)
+    }
+
+    fn writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Ns {
+        let off = key.byte_offset(self.chunk_bytes);
+        // Synchronous until the data reaches the memory node (§III).
+        self.cluster.with(|inner| {
+            inner
+                .memnode
+                .store
+                .write(key.region, off, data)
+                .expect("page within region");
+            inner
+                .fabric
+                .net_write(now, data.len() as u64, 2, TrafficClass::Writeback)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::ClusterConfig;
+
+    #[test]
+    fn fetch_charges_network_and_returns_data() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let mut s = MemServerStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let (region, t0) = s.alloc(0, 4 * chunk, Some(vec![3u8; (4 * chunk) as usize]));
+        assert!(t0 > 0, "alloc RPC costs time");
+        let mut out = vec![0u8; chunk as usize];
+        let (done, src) = s.fetch(t0, PageKey::new(region, 1), 2, &mut out);
+        assert_eq!(src, FetchSource::MemNode);
+        assert!(out.iter().all(|&b| b == 3));
+        assert!(done > t0);
+        let stats = cluster.network_stats();
+        assert_eq!(stats.on_demand_bytes(), chunk);
+    }
+
+    #[test]
+    fn numa_aware_fetch_is_faster() {
+        let c1 = Cluster::build(ClusterConfig::tiny());
+        let c2 = Cluster::build(ClusterConfig::tiny());
+        let mut near = MemServerStore::new(c1);
+        let mut far = MemServerStore::new(c2);
+        let chunk = near.chunk_bytes;
+        let (r1, _) = near.alloc(0, chunk, None);
+        let (r2, _) = far.alloc(0, chunk, None);
+        let mut out = vec![0u8; chunk as usize];
+        let (t_near, _) = near.fetch(1_000_000, PageKey::new(r1, 0), 2, &mut out);
+        let (t_far, _) = far.fetch(1_000_000, PageKey::new(r2, 0), 0, &mut out);
+        assert!(t_far > t_near, "NUMA node 0 buffer must be slower");
+    }
+
+    #[test]
+    fn writeback_blocks_until_durable() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let mut s = MemServerStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let (region, _) = s.alloc(0, chunk, None);
+        let data = vec![0xAB; chunk as usize];
+        let released = s.writeback(0, PageKey::new(region, 0), &data);
+        // Release includes serialization + round-trip ACK.
+        assert!(released > crate::sim::ser_ns(chunk, cluster.config().fabric.net_gbps));
+        let mut out = vec![0u8; chunk as usize];
+        s.fetch(released, PageKey::new(region, 0), 2, &mut out);
+        assert!(out.iter().all(|&b| b == 0xAB));
+    }
+
+    #[test]
+    fn alloc_with_file_preloads() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let mut s = MemServerStore::new(cluster);
+        let chunk = s.chunk_bytes;
+        let mut file = vec![0u8; (2 * chunk) as usize];
+        file[chunk as usize] = 77;
+        let (region, t) = s.alloc(0, 2 * chunk, Some(file));
+        let mut out = vec![0u8; chunk as usize];
+        s.fetch(t, PageKey::new(region, 1), 2, &mut out);
+        assert_eq!(out[0], 77);
+    }
+}

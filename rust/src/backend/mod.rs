@@ -1,0 +1,69 @@
+//! Paging backends — the four system configurations of the evaluation.
+//!
+//! Every Fig 6/7 scenario is the same host agent in front of a different
+//! [`RemoteStore`]:
+//!
+//! * [`SsdStore`]      — node-local NVMe SSD (the CORAL-style baseline);
+//! * [`MemServerStore`]— network-attached memory accessed directly from the
+//!                       host with one-sided RDMA (no DPU involvement);
+//! * [`DpuStore`]      — SODA: requests routed through the DPU agent, with
+//!                       the optimization set selected by [`DpuOpts`]
+//!                       (base / opt / full, plus static-cache pinning).
+//!
+//! The store returns virtual completion times; the host agent composes them
+//! with buffer management into the fault path.
+
+pub mod dpu_store;
+pub mod memserver;
+pub mod ssd_store;
+
+pub use dpu_store::DpuStore;
+pub use memserver::MemServerStore;
+pub use ssd_store::SsdStore;
+
+use crate::host::buffer::PageKey;
+use crate::memnode::RegionId;
+use crate::sim::Ns;
+
+/// Where a fetched page was served from (metrics / figure accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FetchSource {
+    Ssd,
+    MemNode,
+    DpuCache,
+    DpuStatic,
+}
+
+/// The remote side of the paging path.
+pub trait RemoteStore {
+    /// Human-readable backend name (figure labels).
+    fn name(&self) -> &'static str;
+
+    /// Reserve a region of `bytes`, optionally pre-loaded with `init` data
+    /// (the file-backed `SODA_alloc` mode). Returns `(region, completion)`.
+    fn alloc(&mut self, now: Ns, bytes: u64, init: Option<Vec<u8>>) -> (RegionId, Ns);
+
+    /// Release a region.
+    fn free(&mut self, now: Ns, region: RegionId) -> Ns;
+
+    /// Fetch the page into `out` (len = chunk size), host buffer on NUMA
+    /// node `numa_node`. Returns `(data-available time, source)`.
+    fn fetch(&mut self, now: Ns, key: PageKey, numa_node: usize, out: &mut [u8])
+        -> (Ns, FetchSource);
+
+    /// Write back a dirty page. Returns the time the *host* is released
+    /// (offloaded stores release at hand-off; direct stores block until the
+    /// data is durable — §III's synchronous-eviction contrast).
+    fn writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Ns;
+
+    /// Ask to pin a region in the DPU static cache; `None` if this backend
+    /// has no DPU. Returns load completion time on success.
+    fn pin_static(&mut self, _now: Ns, _region: RegionId) -> Option<Ns> {
+        None
+    }
+
+    /// Is the region served by the DPU static cache?
+    fn is_static(&self, _region: RegionId) -> bool {
+        false
+    }
+}

@@ -1,0 +1,116 @@
+//! Cluster assembly — the simulated compute node + memory node pair.
+//!
+//! A [`Cluster`] owns the shared hardware state behind `Rc<RefCell<…>>`:
+//! the fabric links, the memory node, the DPU agent and the local SSD.
+//! Multiple host agents (processes) attach to the *same* cluster, which is
+//! how the paper's multi-process DPU sharing (§VI-B) arises naturally: they
+//! contend on the same links, the same DPU cores, and share the same DPU
+//! caches.
+
+use super::config::ClusterConfig;
+use crate::dpu::DpuAgent;
+use crate::fabric::Fabric;
+use crate::memnode::MemoryNode;
+use crate::ssd::SsdDevice;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Shared mutable hardware state.
+#[derive(Debug)]
+pub struct ClusterInner {
+    pub fabric: Fabric,
+    pub memnode: MemoryNode,
+    pub dpu: DpuAgent,
+    pub ssd: SsdDevice,
+}
+
+/// Handle to the simulated cluster (cheaply cloneable).
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    inner: Rc<RefCell<ClusterInner>>,
+    cfg: ClusterConfig,
+}
+
+impl Cluster {
+    pub fn build(cfg: ClusterConfig) -> Self {
+        let cfg = cfg.normalized();
+        let inner = ClusterInner {
+            fabric: Fabric::new(cfg.fabric.clone()),
+            memnode: MemoryNode::new(cfg.memnode.clone()),
+            dpu: DpuAgent::new(cfg.dpu.clone()),
+            ssd: SsdDevice::new(cfg.ssd.clone()),
+        };
+        Cluster {
+            inner: Rc::new(RefCell::new(inner)),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Run `f` with exclusive access to the hardware state.
+    pub fn with<R>(&self, f: impl FnOnce(&mut ClusterInner) -> R) -> R {
+        f(&mut self.inner.borrow_mut())
+    }
+
+    /// Network traffic snapshot (the memory-server port counters).
+    pub fn network_stats(&self) -> crate::fabric::stats::NetworkStats {
+        self.inner.borrow().fabric.network_stats()
+    }
+
+    /// Reset all traffic counters (between experiment phases).
+    pub fn reset_stats(&self) {
+        self.inner.borrow_mut().fabric.reset_stats();
+    }
+
+    /// DPU statistics snapshot.
+    pub fn dpu_stats(&self) -> crate::dpu::DpuStats {
+        self.inner.borrow().dpu.stats()
+    }
+
+    /// Dynamic-cache hit rate (Fig 10).
+    pub fn dpu_hit_rate(&self) -> f64 {
+        self.inner.borrow().dpu.dynamic_hit_rate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_share() {
+        let c = Cluster::build(ClusterConfig::tiny());
+        let c2 = c.clone();
+        c.with(|inner| {
+            inner.memnode.reserve(0, 4096).unwrap();
+        });
+        // The clone observes the same state.
+        c2.with(|inner| {
+            assert_eq!(inner.memnode.store.region_count(), 1);
+        });
+    }
+
+    #[test]
+    fn stats_snapshot_and_reset() {
+        let c = Cluster::build(ClusterConfig::tiny());
+        c.with(|inner| {
+            inner
+                .fabric
+                .net_read(0, 4096, 2, crate::sim::link::TrafficClass::OnDemand);
+        });
+        assert!(c.network_stats().network_bytes() > 0);
+        c.reset_stats();
+        assert_eq!(c.network_stats().network_bytes(), 0);
+    }
+
+    #[test]
+    fn config_is_normalized() {
+        let mut cfg = ClusterConfig::tiny();
+        cfg.dpu.chunk_bytes = 123; // wrong on purpose
+        let c = Cluster::build(cfg);
+        assert_eq!(c.config().dpu.chunk_bytes, c.config().chunk_bytes);
+    }
+}

@@ -1,0 +1,282 @@
+//! Configuration system for SODA-RS.
+//!
+//! [`ClusterConfig`] describes the simulated hardware (testbed defaults,
+//! §IV–§V); [`SodaConfig`] describes the runtime's tunables — the knobs the
+//! paper explicitly exposes to applications (chunk size, buffer size,
+//! caching strategy, NUMA placement, thread count). Both serialize to JSON
+//! so experiments are reproducible from a config file via the `soda` CLI.
+
+use crate::dpu::{DpuConfig, DpuOpts};
+use crate::fabric::FabricConfig;
+use crate::host::agent::HostTiming;
+use crate::memnode::MemNodeConfig;
+use crate::ssd::SsdConfig;
+
+/// Simulated hardware description. Memory budgets default to a 1/64 scale
+/// of the testbed (256 GB memory node, 16 GB host cgroup, 16 GB DPU with
+/// 1 GB cache budget) to keep simulated workloads laptop-sized while
+/// preserving every capacity *ratio* the paper's behaviour depends on.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub fabric: FabricConfig,
+    pub memnode: MemNodeConfig,
+    pub ssd: SsdConfig,
+    pub dpu: DpuConfig,
+    /// Host DRAM available to the application (the paper's 16 GB cgroup).
+    pub host_mem_bytes: u64,
+    /// Page / data-chunk size (testbed: 64 KB).
+    pub chunk_bytes: u64,
+    /// Deterministic seed for all stochastic components.
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        let chunk_bytes = 64 << 10;
+        ClusterConfig {
+            fabric: FabricConfig::default(),
+            memnode: MemNodeConfig {
+                capacity_bytes: 4 << 30, // 256 GB / 64
+                ..Default::default()
+            },
+            ssd: SsdConfig::default(),
+            dpu: DpuConfig {
+                chunk_bytes,
+                dynamic_cache_bytes: 16 << 20, // 1 GB / 64
+                cache_entry_bytes: 1 << 20,    // paper keeps 1 MB entries
+                static_cache_bytes: 16 << 20,
+                ..Default::default()
+            },
+            host_mem_bytes: 256 << 20, // 16 GB / 64
+            chunk_bytes,
+            seed: 0x50DA_2024,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// A small config for tests: 4 KB pages, tiny budgets, fast to run.
+    pub fn tiny() -> Self {
+        let chunk_bytes = 4 << 10;
+        ClusterConfig {
+            memnode: MemNodeConfig {
+                capacity_bytes: 64 << 20,
+                ..Default::default()
+            },
+            ssd: SsdConfig {
+                capacity_bytes: 64 << 20,
+                ..Default::default()
+            },
+            dpu: DpuConfig {
+                chunk_bytes,
+                cache_entry_bytes: 64 << 10,
+                dynamic_cache_bytes: 2 << 20,
+                static_cache_bytes: 4 << 20,
+                ..Default::default()
+            },
+            host_mem_bytes: 8 << 20,
+            chunk_bytes,
+            ..Default::default()
+        }
+    }
+
+    /// Propagate the shared chunk size into sub-configs (call after edits).
+    pub fn normalized(mut self) -> Self {
+        self.dpu.chunk_bytes = self.chunk_bytes;
+        assert!(
+            self.dpu.cache_entry_bytes >= self.chunk_bytes
+                && self.dpu.cache_entry_bytes % self.chunk_bytes == 0,
+            "cache entry size must be a multiple of the chunk size"
+        );
+        self
+    }
+}
+
+/// Which paging backend a run uses — the Fig 6/7 x-axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Node-local NVMe SSD.
+    Ssd,
+    /// Direct one-sided access to the memory node (no DPU).
+    MemServer,
+    /// SODA via the DPU with explicit optimization flags.
+    Dpu(DpuOpts),
+}
+
+impl BackendKind {
+    pub const SSD: BackendKind = BackendKind::Ssd;
+    pub const MEM_SERVER: BackendKind = BackendKind::MemServer;
+    pub const DPU_BASE: BackendKind = BackendKind::Dpu(DpuOpts::BASE);
+    pub const DPU_OPT: BackendKind = BackendKind::Dpu(DpuOpts::OPT);
+    pub const DPU_FULL: BackendKind = BackendKind::Dpu(DpuOpts::FULL);
+
+    pub fn label(&self) -> String {
+        match self {
+            BackendKind::Ssd => "ssd".into(),
+            BackendKind::MemServer => "memserver".into(),
+            BackendKind::Dpu(o) => {
+                if *o == DpuOpts::BASE {
+                    "dpu-base".into()
+                } else if *o == DpuOpts::OPT {
+                    "dpu-opt".into()
+                } else if *o == DpuOpts::FULL {
+                    "dpu-full".into()
+                } else {
+                    format!(
+                        "dpu[agg={},async={},dyn={}]",
+                        o.aggregation as u8, o.async_forward as u8, o.dynamic_cache as u8
+                    )
+                }
+            }
+        }
+    }
+}
+
+/// Caching strategy selection for a run (§III-A / §V: static caching for
+/// vertex data *or* dynamic caching on edge data).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CachingMode {
+    None,
+    /// Pin `Placement::Static` objects in the DPU static cache.
+    Static,
+    /// Dynamic caching + prefetching on default-placement objects.
+    Dynamic,
+}
+
+/// Runtime tunables — the application-visible SODA knobs.
+#[derive(Clone, Debug)]
+pub struct SodaConfig {
+    pub backend: BackendKind,
+    pub caching: CachingMode,
+    /// Host page-buffer size as a fraction of the FAM footprint (§V: 1/3).
+    pub buffer_fraction: f64,
+    /// Proactive-eviction load-factor threshold.
+    pub evict_threshold: f64,
+    /// Modeled application threads (§V: 24 OpenMP threads).
+    pub threads: usize,
+    /// NUMA-aware communication-buffer placement (§III).
+    pub numa_aware: bool,
+    /// Independent QPs for the data plane (§IV-B: multiple QPs avoid
+    /// locking).
+    pub qp_count: usize,
+    pub host_timing: HostTiming,
+    /// Page-buffer eviction policy (FaultFifo = what uffd can implement;
+    /// AccessLru = idealized, for ablation).
+    pub evict_policy: crate::host::buffer::EvictPolicy,
+}
+
+impl Default for SodaConfig {
+    fn default() -> Self {
+        SodaConfig {
+            backend: BackendKind::DPU_FULL,
+            caching: CachingMode::Dynamic,
+            buffer_fraction: 1.0 / 3.0,
+            evict_threshold: 0.92,
+            threads: 24,
+            numa_aware: true,
+            qp_count: 24,
+            host_timing: HostTiming::default(),
+            evict_policy: crate::host::buffer::EvictPolicy::FaultFifo,
+        }
+    }
+}
+
+impl SodaConfig {
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        // Non-DPU backends cannot cache on the DPU.
+        if !matches!(backend, BackendKind::Dpu(_)) {
+            self.caching = CachingMode::None;
+        }
+        self
+    }
+
+    pub fn with_caching(mut self, caching: CachingMode) -> Self {
+        self.caching = caching;
+        self
+    }
+
+    /// Resolve the effective DPU options: dynamic caching is an opt flag on
+    /// the DPU agent, driven by the caching mode.
+    pub fn dpu_opts(&self) -> Option<DpuOpts> {
+        match self.backend {
+            BackendKind::Dpu(mut o) => {
+                o.dynamic_cache = o.dynamic_cache && self.caching == CachingMode::Dynamic;
+                Some(o)
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_preserve_paper_ratios() {
+        let c = ClusterConfig::default();
+        // DPU cache : memnode = 1 GB : 256 GB at full scale = 1/256.
+        assert_eq!(c.memnode.capacity_bytes / c.dpu.dynamic_cache_bytes, 256);
+        // host : memnode = 16 : 256.
+        assert_eq!(c.memnode.capacity_bytes / c.host_mem_bytes, 16);
+        // entry:page ratio = 1 MB : 64 KB = 16.
+        assert_eq!(c.dpu.cache_entry_bytes / c.chunk_bytes, 16);
+    }
+
+    #[test]
+    fn normalization_syncs_chunk_size() {
+        let mut c = ClusterConfig::default();
+        c.chunk_bytes = 16 << 10;
+        let c = c.normalized();
+        assert_eq!(c.dpu.chunk_bytes, 16 << 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn normalization_rejects_misaligned_entry() {
+        let mut c = ClusterConfig::default();
+        c.chunk_bytes = 48 << 10;
+        let _ = c.normalized();
+    }
+
+    #[test]
+    fn backend_labels() {
+        assert_eq!(BackendKind::SSD.label(), "ssd");
+        assert_eq!(BackendKind::DPU_BASE.label(), "dpu-base");
+        assert_eq!(BackendKind::DPU_OPT.label(), "dpu-opt");
+        assert_eq!(BackendKind::DPU_FULL.label(), "dpu-full");
+        let custom = BackendKind::Dpu(DpuOpts {
+            aggregation: true,
+            async_forward: false,
+            dynamic_cache: false,
+        });
+        assert_eq!(custom.label(), "dpu[agg=1,async=0,dyn=0]");
+    }
+
+    #[test]
+    fn non_dpu_backend_disables_caching() {
+        let s = SodaConfig::default().with_backend(BackendKind::MemServer);
+        assert_eq!(s.caching, CachingMode::None);
+        assert!(s.dpu_opts().is_none());
+    }
+
+    #[test]
+    fn dynamic_caching_gates_dpu_flag() {
+        let s = SodaConfig::default()
+            .with_backend(BackendKind::DPU_FULL)
+            .with_caching(CachingMode::Static);
+        let o = s.dpu_opts().unwrap();
+        assert!(!o.dynamic_cache, "static mode must not enable the dynamic table");
+        let s2 = s.with_caching(CachingMode::Dynamic);
+        assert!(s2.dpu_opts().unwrap().dynamic_cache);
+    }
+
+    #[test]
+    fn tiny_config_is_consistent() {
+        let c = ClusterConfig::tiny().normalized();
+        assert_eq!(c.dpu.chunk_bytes, c.chunk_bytes);
+        assert!(c.dpu.cache_entry_bytes % c.chunk_bytes == 0);
+        assert!(c.host_mem_bytes < c.memnode.capacity_bytes);
+    }
+}

@@ -1,0 +1,179 @@
+//! Run metrics — everything a figure needs, in one serializable snapshot.
+
+use crate::dpu::DpuStats;
+use crate::fabric::stats::NetworkStats;
+use crate::host::agent::HostStats;
+use crate::host::buffer::BufferStats;
+use crate::sim::{ns_to_secs, Ns};
+
+/// Metrics of one application run on one backend configuration.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// e.g. "pagerank/friendster/dpu-opt".
+    pub label: String,
+    /// End-to-end virtual runtime of the application phase.
+    pub elapsed_ns: Ns,
+    pub host: HostStats,
+    pub buffer: BufferStats,
+    pub network: NetworkStats,
+    pub dpu: DpuStats,
+    /// Dynamic DPU-cache hit rate over the run (Fig 10).
+    pub dpu_hit_rate: f64,
+    /// Mean task-batch factor (aggregation effectiveness).
+    pub mean_batch_factor: f64,
+}
+
+impl RunMetrics {
+    pub fn elapsed_secs(&self) -> f64 {
+        ns_to_secs(self.elapsed_ns)
+    }
+
+    /// Network data-plane bytes (the `port_xmit_data` delta).
+    pub fn network_bytes(&self) -> u64 {
+        self.network.network_bytes()
+    }
+
+    /// Speedup of this run relative to `baseline` (runtime ratio).
+    pub fn speedup_over(&self, baseline: &RunMetrics) -> f64 {
+        baseline.elapsed_ns as f64 / self.elapsed_ns.max(1) as f64
+    }
+
+    /// Traffic change vs `baseline`: negative = reduction (Fig 8/9).
+    pub fn traffic_delta_over(&self, baseline: &RunMetrics) -> f64 {
+        let b = baseline.network_bytes().max(1) as f64;
+        (self.network_bytes() as f64 - b) / b
+    }
+
+    pub fn summary_row(&self) -> String {
+        format!(
+            "{:40} {:>10.4}s  net={:>9.2} MB (bg {:>4.1}%)  bufhit={:>5.1}%  dpuhit={:>5.1}%",
+            self.label,
+            self.elapsed_secs(),
+            self.network_bytes() as f64 / 1e6,
+            self.network.background_fraction() * 100.0,
+            self.buffer.hit_rate() * 100.0,
+            self.dpu_hit_rate * 100.0,
+        )
+    }
+}
+
+
+impl crate::util::json::ToJson for RunMetrics {
+    fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj([
+            ("label", self.label.as_str().into()),
+            ("elapsed_ns", self.elapsed_ns.into()),
+            ("elapsed_secs", self.elapsed_secs().into()),
+            ("faults", self.host.faults.into()),
+            ("zero_fills", self.host.zero_fills.into()),
+            ("writebacks", self.host.writebacks.into()),
+            ("stall_ns", self.host.stall_ns.into()),
+            ("buffer_hits", self.buffer.hits.into()),
+            ("buffer_misses", self.buffer.misses.into()),
+            ("buffer_hit_rate", self.buffer.hit_rate().into()),
+            ("network_bytes", self.network_bytes().into()),
+            ("on_demand_bytes", self.network.on_demand_bytes().into()),
+            ("background_bytes", self.network.background_bytes().into()),
+            ("writeback_bytes", self.network.writeback_bytes().into()),
+            ("background_fraction", self.network.background_fraction().into()),
+            ("pcie_bytes", self.network.pcie_bytes().into()),
+            ("dpu_reads", self.dpu.reads.into()),
+            ("dpu_dynamic_hits", self.dpu.dynamic_hits.into()),
+            ("dpu_static_serves", self.dpu.static_serves.into()),
+            ("dpu_prefetch_entries", self.dpu.prefetch_entries.into()),
+            ("dpu_prefetch_bytes", self.dpu.prefetch_bytes.into()),
+            ("dpu_hit_rate", self.dpu_hit_rate.into()),
+            ("mean_batch_factor", self.mean_batch_factor.into()),
+        ])
+    }
+}
+
+impl std::fmt::Display for RunMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "run: {}", self.label)?;
+        writeln!(f, "  elapsed          : {:.6} s", self.elapsed_secs())?;
+        writeln!(
+            f,
+            "  page buffer      : {} hits / {} misses ({:.1}% hit)",
+            self.buffer.hits,
+            self.buffer.misses,
+            self.buffer.hit_rate() * 100.0
+        )?;
+        writeln!(
+            f,
+            "  faults           : {} ({} zero-fill, {} writebacks)",
+            self.host.faults, self.host.zero_fills, self.host.writebacks
+        )?;
+        writeln!(
+            f,
+            "  fetch sources    : ssd={} memnode={} dpu-cache={} dpu-static={}",
+            self.host.sources[0], self.host.sources[1], self.host.sources[2], self.host.sources[3]
+        )?;
+        writeln!(
+            f,
+            "  network          : {:.2} MB total, {:.2} MB on-demand, {:.2} MB background, {:.2} MB writeback",
+            self.network.network_bytes() as f64 / 1e6,
+            self.network.on_demand_bytes() as f64 / 1e6,
+            self.network.background_bytes() as f64 / 1e6,
+            self.network.writeback_bytes() as f64 / 1e6,
+        )?;
+        writeln!(
+            f,
+            "  dpu              : {} reads ({} cache hits, {} static), {} prefetch entries, hit rate {:.1}%",
+            self.dpu.reads,
+            self.dpu.dynamic_hits,
+            self.dpu.static_serves,
+            self.dpu.prefetch_entries,
+            self.dpu_hit_rate * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::ToJson;
+
+    fn metric(elapsed: Ns, net: u64) -> RunMetrics {
+        let mut m = RunMetrics {
+            label: "t".into(),
+            elapsed_ns: elapsed,
+            ..Default::default()
+        };
+        m.network.rx.on_demand_bytes = net;
+        m
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let fast = metric(1_000, 0);
+        let slow = metric(7_900, 0);
+        assert!((fast.speedup_over(&slow) - 7.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn traffic_delta_sign_convention() {
+        let base = metric(1, 1000);
+        let reduced = metric(1, 580);
+        let increased = metric(1, 1690);
+        assert!((reduced.traffic_delta_over(&base) + 0.42).abs() < 1e-9);
+        assert!((increased.traffic_delta_over(&base) - 0.69).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serializes_to_json() {
+        let m = metric(123, 456);
+        let j = m.to_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(v.get("elapsed_ns").unwrap().as_u64(), Some(123));
+        assert_eq!(v.get("network_bytes").unwrap().as_u64(), Some(456));
+    }
+
+    #[test]
+    fn display_contains_key_fields() {
+        let s = format!("{}", metric(2_000_000_000, 1 << 20));
+        assert!(s.contains("elapsed"));
+        assert!(s.contains("network"));
+    }
+}

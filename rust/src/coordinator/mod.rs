@@ -1,0 +1,12 @@
+//! Coordinator — configuration, cluster assembly, the SODA service, and
+//! experiment orchestration.
+
+pub mod cluster;
+pub mod config;
+pub mod metrics;
+pub mod service;
+
+pub use cluster::{Cluster, ClusterInner};
+pub use config::{BackendKind, CachingMode, ClusterConfig, SodaConfig};
+pub use metrics::RunMetrics;
+pub use service::SodaService;

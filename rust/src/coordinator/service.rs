@@ -1,0 +1,183 @@
+//! The SODA service — wires a configuration to a cluster and hands out
+//! per-process clients (host agents).
+//!
+//! Multiple clients attached to one service share the node's DPU agent
+//! ("this DPU sharing is fully transparent from the client's perspective",
+//! §III) and contend on the same simulated links and cores.
+
+use super::cluster::Cluster;
+use super::config::{BackendKind, SodaConfig};
+use super::metrics::RunMetrics;
+use crate::backend::{DpuStore, MemServerStore, RemoteStore, SsdStore};
+use crate::dpu::DpuAgent;
+use crate::host::HostAgent;
+use crate::sim::Ns;
+
+/// A configured SODA deployment on a cluster.
+#[derive(Clone, Debug)]
+pub struct SodaService {
+    cluster: Cluster,
+    cfg: SodaConfig,
+}
+
+impl SodaService {
+    /// Attach a SODA configuration to the cluster. Rebuilds the DPU agent
+    /// with the configuration's optimization flags (fresh caches).
+    pub fn attach(cluster: &Cluster, cfg: SodaConfig) -> Self {
+        if let Some(opts) = cfg.dpu_opts() {
+            cluster.with(|inner| {
+                let mut dcfg = inner.dpu.cfg.clone();
+                dcfg.opts = opts;
+                inner.dpu = DpuAgent::new(dcfg);
+            });
+        }
+        SodaService {
+            cluster: cluster.clone(),
+            cfg,
+        }
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    pub fn config(&self) -> &SodaConfig {
+        &self.cfg
+    }
+
+    /// NUMA node the client's communication buffer binds to.
+    pub fn numa_node(&self) -> usize {
+        if self.cfg.numa_aware {
+            self.cluster.config().fabric.numa.best_node()
+        } else {
+            0 // the "default behavior" the paper contrasts against
+        }
+    }
+
+    fn make_store(&self) -> Box<dyn RemoteStore> {
+        match self.cfg.backend {
+            BackendKind::Ssd => Box::new(SsdStore::new(self.cluster.clone())),
+            BackendKind::MemServer => Box::new(MemServerStore::new(self.cluster.clone())),
+            BackendKind::Dpu(_) => Box::new(DpuStore::new(self.cluster.clone())),
+        }
+    }
+
+    /// Create a client with an explicit page-buffer size.
+    pub fn client_with_buffer(&self, name: impl Into<String>, buffer_bytes: u64) -> HostAgent {
+        let ccfg = self.cluster.config();
+        HostAgent::with_policy(
+            name,
+            self.make_store(),
+            buffer_bytes.min(ccfg.host_mem_bytes),
+            ccfg.chunk_bytes,
+            self.cfg.evict_threshold,
+            self.cfg.threads,
+            self.cfg.qp_count,
+            self.numa_node(),
+            self.cfg.host_timing,
+            self.cfg.evict_policy,
+        )
+    }
+
+    /// Create a client sized for a FAM footprint: buffer = `buffer_fraction`
+    /// of the footprint (§V: 1/3), clamped to host memory.
+    pub fn client_for_footprint(&self, name: impl Into<String>, footprint_bytes: u64) -> HostAgent {
+        let buffer = ((footprint_bytes as f64 * self.cfg.buffer_fraction) as u64)
+            .max(4 * self.cluster.config().chunk_bytes);
+        self.client_with_buffer(name, buffer)
+    }
+
+    /// Snapshot run metrics for a finished phase.
+    pub fn collect(&self, label: impl Into<String>, elapsed: Ns, agent: &HostAgent) -> RunMetrics {
+        let inner_stats = self.cluster.network_stats();
+        RunMetrics {
+            label: label.into(),
+            elapsed_ns: elapsed,
+            host: agent.stats(),
+            buffer: agent.buffer_stats(),
+            network: inner_stats,
+            dpu: self.cluster.dpu_stats(),
+            dpu_hit_rate: self.cluster.dpu_hit_rate(),
+            mean_batch_factor: self.cluster.with(|i| i.dpu.mean_batch_factor()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{CachingMode, ClusterConfig};
+    use crate::host::Placement;
+
+    #[test]
+    fn attach_applies_dpu_opts() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let cfg = SodaConfig::default()
+            .with_backend(BackendKind::DPU_BASE)
+            .with_caching(CachingMode::None);
+        let _svc = SodaService::attach(&cluster, cfg);
+        cluster.with(|i| {
+            assert!(!i.dpu.cfg.opts.aggregation);
+            assert!(!i.dpu.cfg.opts.dynamic_cache);
+        });
+    }
+
+    #[test]
+    fn numa_node_follows_awareness_flag() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let aware = SodaService::attach(&cluster, SodaConfig::default());
+        assert_eq!(aware.numa_node(), 2);
+        let mut cfg = SodaConfig::default();
+        cfg.numa_aware = false;
+        let naive = SodaService::attach(&cluster, cfg);
+        assert_eq!(naive.numa_node(), 0);
+    }
+
+    #[test]
+    fn client_buffer_respects_footprint_fraction() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let svc = SodaService::attach(&cluster, SodaConfig::default());
+        let footprint = 3 * 1024 * 1024u64;
+        let client = svc.client_for_footprint("p0", footprint);
+        // buffer = footprint/3 = 1 MiB → 256 pages at 4 KiB.
+        assert_eq!(client.chunk_bytes(), cluster.config().chunk_bytes);
+        let (_, _) = (client.stats(), client.buffer_stats());
+    }
+
+    #[test]
+    fn end_to_end_fault_through_service() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let svc = SodaService::attach(
+            &cluster,
+            SodaConfig::default().with_backend(BackendKind::MemServer),
+        );
+        let mut client = svc.client_with_buffer("p0", 64 << 10);
+        let chunk = client.chunk_bytes();
+        let (h, t0) = client.alloc(0, "x", 4 * chunk, Some(vec![1; (4 * chunk) as usize]), Placement::Default);
+        let mut out = vec![0u8; 16];
+        let t1 = client.read_bytes(t0, 0, h.region, 0, &mut out);
+        assert!(out.iter().all(|&b| b == 1));
+        let m = svc.collect("test", t1, &client);
+        assert!(m.network_bytes() > 0);
+        assert_eq!(m.host.faults, 1);
+    }
+
+    #[test]
+    fn two_clients_share_one_dpu() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let svc = SodaService::attach(
+            &cluster,
+            SodaConfig::default().with_backend(BackendKind::DPU_FULL),
+        );
+        let mut a = svc.client_with_buffer("a", 64 << 10);
+        let mut b = svc.client_with_buffer("b", 64 << 10);
+        let chunk = a.chunk_bytes();
+        let (h, t0) = a.alloc(0, "g", 4 * chunk, Some(vec![2; (4 * chunk) as usize]), Placement::Default);
+        let shared = b.map_shared("g", h);
+        assert!(!shared.writable);
+        let mut out = vec![0u8; 8];
+        let t1 = a.read_bytes(t0, 0, h.region, 0, &mut out);
+        let _t2 = b.read_bytes(t1, 0, shared.region, chunk, &mut out);
+        assert_eq!(cluster.dpu_stats().reads, 2, "both processes hit the same DPU");
+    }
+}

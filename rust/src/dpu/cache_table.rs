@@ -1,0 +1,397 @@
+//! Cache Table — the dynamic DPU cache (§III-A, §IV-C).
+//!
+//! Data is cached in a fixed-size registered memory region (zero-copy
+//! request fulfillment), organized as an array of large entries (1 MB on
+//! the testbed — deliberately larger than the 64 KB page so one prefetch
+//! amortizes several on-demand fetches). A hash table maps entry ids to
+//! slots; eviction is *random* to minimize overhead; a per-entry *refcount*
+//! pins entries with outstanding request fulfillments so they cannot be
+//! evicted mid-transfer, letting the paper drop the global mutex during
+//! request processing.
+//!
+//! Each slot carries a `ready_at` virtual timestamp: a prefetched entry is
+//! only usable once its background transfer has completed — a lookup that
+//! races an in-flight prefetch is a miss, exactly as on real hardware.
+
+use crate::host::buffer::PageKey;
+use crate::memnode::RegionId;
+use crate::sim::rng::Rng;
+use crate::sim::Ns;
+use crate::util::fxhash::FxHashMap;
+
+/// Identity of one cache entry (an aligned block of pages of a region).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EntryKey {
+    pub region: RegionId,
+    pub entry: u64,
+}
+
+impl EntryKey {
+    /// The entry containing `page`, with `pages_per_entry` pages per entry.
+    pub fn containing(key: PageKey, pages_per_entry: u64) -> Self {
+        EntryKey {
+            region: key.region,
+            entry: key.page / pages_per_entry,
+        }
+    }
+
+    pub fn first_page(&self, pages_per_entry: u64) -> u64 {
+        self.entry * pages_per_entry
+    }
+}
+
+#[derive(Debug)]
+struct Slot {
+    key: EntryKey,
+    data: Box<[u8]>,
+    ready_at: Ns,
+    refcount: u32,
+    valid: bool,
+}
+
+/// Cache statistics (drives Fig 10 and the adaptive-disable logic).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// Misses that raced an in-flight prefetch of the same entry.
+    pub not_ready: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Insertions dropped because every candidate slot was pinned.
+    pub pinned_drops: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+}
+
+/// Fixed-capacity cache of large entries with random eviction.
+#[derive(Debug)]
+pub struct CacheTable {
+    slots: Vec<Slot>,
+    map: FxHashMap<EntryKey, u32>,
+    entry_bytes: u64,
+    chunk_bytes: u64,
+    stats: CacheStats,
+}
+
+impl CacheTable {
+    /// `capacity_bytes` of DPU DRAM organized in `entry_bytes` entries over
+    /// `chunk_bytes` host pages.
+    pub fn new(capacity_bytes: u64, entry_bytes: u64, chunk_bytes: u64) -> Self {
+        assert!(entry_bytes >= chunk_bytes && entry_bytes % chunk_bytes == 0);
+        let n_slots = (capacity_bytes / entry_bytes).max(1) as usize;
+        CacheTable {
+            slots: Vec::with_capacity(n_slots),
+            map: FxHashMap::default(),
+            entry_bytes,
+            chunk_bytes,
+            stats: CacheStats::default(),
+        }
+        .with_slots(n_slots)
+    }
+
+    fn with_slots(mut self, n: usize) -> Self {
+        for _ in 0..n {
+            self.slots.push(Slot {
+                key: EntryKey { region: 0, entry: 0 },
+                data: Box::from(&[][..]),
+                ready_at: 0,
+                refcount: 0,
+                valid: false,
+            });
+        }
+        self
+    }
+
+    pub fn entry_bytes(&self) -> u64 {
+        self.entry_bytes
+    }
+
+    pub fn pages_per_entry(&self) -> u64 {
+        self.entry_bytes / self.chunk_bytes
+    }
+
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn resident_entries(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Is the entry resident (regardless of readiness)? Used by the
+    /// prefetcher to avoid duplicate fetches.
+    pub fn contains(&self, key: EntryKey) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    /// Look up the page at virtual time `now`. On a ready hit, returns the
+    /// page's bytes within the entry. Counts hit/miss/not-ready.
+    pub fn lookup_page(&mut self, now: Ns, page: PageKey) -> Option<&[u8]> {
+        self.stats.lookups += 1;
+        let ekey = EntryKey::containing(page, self.pages_per_entry());
+        match self.map.get(&ekey).copied() {
+            Some(idx) => {
+                let slot = &self.slots[idx as usize];
+                if slot.ready_at > now {
+                    self.stats.not_ready += 1;
+                    self.stats.misses += 1;
+                    return None;
+                }
+                self.stats.hits += 1;
+                let off = (page.page % self.pages_per_entry()) * self.chunk_bytes;
+                Some(&self.slots[idx as usize].data
+                    [off as usize..(off + self.chunk_bytes) as usize])
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Pin an entry during request fulfillment (prevents eviction).
+    pub fn pin(&mut self, key: EntryKey) -> bool {
+        if let Some(&idx) = self.map.get(&key) {
+            self.slots[idx as usize].refcount += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn unpin(&mut self, key: EntryKey) {
+        if let Some(&idx) = self.map.get(&key) {
+            let s = &mut self.slots[idx as usize];
+            debug_assert!(s.refcount > 0, "unpin without pin");
+            s.refcount = s.refcount.saturating_sub(1);
+        }
+    }
+
+    pub fn refcount(&self, key: EntryKey) -> u32 {
+        self.map
+            .get(&key)
+            .map(|&i| self.slots[i as usize].refcount)
+            .unwrap_or(0)
+    }
+
+    /// Insert a prefetched entry that becomes usable at `ready_at`.
+    /// Uses random eviction among unpinned slots; drops the insertion if a
+    /// bounded number of random probes only finds pinned slots.
+    pub fn insert(&mut self, key: EntryKey, data: Vec<u8>, ready_at: Ns, rng: &mut Rng) -> bool {
+        assert_eq!(data.len() as u64, self.entry_bytes, "entry size mismatch");
+        if self.map.contains_key(&key) {
+            // Refresh readiness (e.g. re-prefetch after eviction race).
+            let idx = self.map[&key];
+            let s = &mut self.slots[idx as usize];
+            s.data = data.into_boxed_slice();
+            s.ready_at = ready_at;
+            return true;
+        }
+        // Find a victim: first an invalid slot, else random probes.
+        let idx = if self.map.len() < self.slots.len() {
+            self.slots
+                .iter()
+                .position(|s| !s.valid)
+                .expect("free slot exists") as u32
+        } else {
+            let mut victim = None;
+            for _ in 0..8 {
+                let i = rng.index(self.slots.len()) as u32;
+                if self.slots[i as usize].refcount == 0 {
+                    victim = Some(i);
+                    break;
+                }
+            }
+            match victim {
+                Some(i) => {
+                    let old = self.slots[i as usize].key;
+                    self.map.remove(&old);
+                    self.stats.evictions += 1;
+                    i
+                }
+                None => {
+                    self.stats.pinned_drops += 1;
+                    return false;
+                }
+            }
+        };
+        let s = &mut self.slots[idx as usize];
+        s.key = key;
+        s.data = data.into_boxed_slice();
+        s.ready_at = ready_at;
+        s.refcount = 0;
+        s.valid = true;
+        self.map.insert(key, idx);
+        self.stats.insertions += 1;
+        true
+    }
+
+    /// Invalidate one entry (coherence: the host wrote back a page whose
+    /// entry is cached — the single-writer restriction makes this the only
+    /// coherence action SODA ever needs).
+    pub fn invalidate(&mut self, key: EntryKey) -> bool {
+        if let Some(idx) = self.map.remove(&key) {
+            let s = &mut self.slots[idx as usize];
+            debug_assert_eq!(s.refcount, 0, "invalidating a pinned entry");
+            s.valid = false;
+            s.data = Box::from(&[][..]);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Invalidate everything (cache disable / region free).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        for s in &mut self.slots {
+            s.valid = false;
+            s.refcount = 0;
+            s.data = Box::from(&[][..]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(slots: usize) -> CacheTable {
+        // 4 pages of 1 KB per entry.
+        CacheTable::new(slots as u64 * 4096, 4096, 1024)
+    }
+
+    fn entry_data(tag: u8) -> Vec<u8> {
+        vec![tag; 4096]
+    }
+
+    fn ek(e: u64) -> EntryKey {
+        EntryKey { region: 1, entry: e }
+    }
+
+    #[test]
+    fn entry_key_containment() {
+        let e = EntryKey::containing(PageKey::new(1, 7), 4);
+        assert_eq!(e, ek(1));
+        assert_eq!(e.first_page(4), 4);
+    }
+
+    #[test]
+    fn hit_serves_correct_page_slice() {
+        let mut t = table(2);
+        let mut rng = Rng::new(0);
+        let mut data = entry_data(0);
+        // Page 5 lives at offset (5 % 4) * 1024 = 1024.
+        data[1024..2048].fill(9);
+        t.insert(ek(1), data, 0, &mut rng);
+        let page = t.lookup_page(10, PageKey::new(1, 5)).expect("hit");
+        assert!(page.iter().all(|&b| b == 9));
+        assert_eq!(t.stats().hits, 1);
+    }
+
+    #[test]
+    fn miss_on_absent_entry() {
+        let mut t = table(2);
+        assert!(t.lookup_page(0, PageKey::new(1, 0)).is_none());
+        assert_eq!(t.stats().misses, 1);
+    }
+
+    #[test]
+    fn in_flight_prefetch_is_not_ready() {
+        let mut t = table(2);
+        let mut rng = Rng::new(0);
+        t.insert(ek(0), entry_data(1), 1_000, &mut rng);
+        assert!(t.lookup_page(500, PageKey::new(1, 0)).is_none());
+        assert_eq!(t.stats().not_ready, 1);
+        assert!(t.lookup_page(1_000, PageKey::new(1, 0)).is_some());
+    }
+
+    #[test]
+    fn random_eviction_when_full() {
+        let mut t = table(2);
+        let mut rng = Rng::new(42);
+        assert!(t.insert(ek(0), entry_data(0), 0, &mut rng));
+        assert!(t.insert(ek(1), entry_data(1), 0, &mut rng));
+        assert!(t.insert(ek(2), entry_data(2), 0, &mut rng));
+        assert_eq!(t.resident_entries(), 2);
+        assert_eq!(t.stats().evictions, 1);
+        assert!(t.contains(ek(2)), "new entry must be resident");
+    }
+
+    #[test]
+    fn pinned_entries_survive_eviction() {
+        let mut t = table(2);
+        let mut rng = Rng::new(7);
+        t.insert(ek(0), entry_data(0), 0, &mut rng);
+        t.insert(ek(1), entry_data(1), 0, &mut rng);
+        assert!(t.pin(ek(0)));
+        assert!(t.pin(ek(1)));
+        // All pinned: insertion is dropped, nothing evicted.
+        assert!(!t.insert(ek(2), entry_data(2), 0, &mut rng));
+        assert_eq!(t.stats().pinned_drops, 1);
+        assert!(t.contains(ek(0)) && t.contains(ek(1)));
+        t.unpin(ek(0));
+        // Now ek(0) is the only unpinned victim.
+        assert!(t.insert(ek(3), entry_data(3), 0, &mut rng));
+        assert!(!t.contains(ek(0)));
+        assert!(t.contains(ek(1)), "pinned entry survived");
+    }
+
+    #[test]
+    fn refcount_tracks_pin_unpin() {
+        let mut t = table(2);
+        let mut rng = Rng::new(0);
+        t.insert(ek(0), entry_data(0), 0, &mut rng);
+        t.pin(ek(0));
+        t.pin(ek(0));
+        assert_eq!(t.refcount(ek(0)), 2);
+        t.unpin(ek(0));
+        assert_eq!(t.refcount(ek(0)), 1);
+        assert!(!t.pin(ek(99)), "pin of absent entry fails");
+    }
+
+    #[test]
+    fn reinsert_refreshes_ready_time() {
+        let mut t = table(2);
+        let mut rng = Rng::new(0);
+        t.insert(ek(0), entry_data(0), 100, &mut rng);
+        t.insert(ek(0), entry_data(1), 50, &mut rng);
+        assert_eq!(t.resident_entries(), 1);
+        let p = t.lookup_page(60, PageKey::new(1, 0)).expect("ready after refresh");
+        assert!(p.iter().all(|&b| b == 1));
+    }
+
+    #[test]
+    fn clear_invalidates_all() {
+        let mut t = table(4);
+        let mut rng = Rng::new(0);
+        t.insert(ek(0), entry_data(0), 0, &mut rng);
+        t.clear();
+        assert_eq!(t.resident_entries(), 0);
+        assert!(t.lookup_page(0, PageKey::new(1, 0)).is_none());
+    }
+
+    #[test]
+    fn hit_rate_computation() {
+        let mut t = table(2);
+        let mut rng = Rng::new(0);
+        t.insert(ek(0), entry_data(0), 0, &mut rng);
+        t.lookup_page(0, PageKey::new(1, 0)); // hit
+        t.lookup_page(0, PageKey::new(1, 99)); // miss
+        assert!((t.stats().hit_rate() - 0.5).abs() < 1e-9);
+    }
+}

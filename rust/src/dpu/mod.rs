@@ -1,0 +1,22 @@
+//! DPU agent — SODA's SmartNIC offload target (§III).
+//!
+//! Everything that runs on the BlueField SoC in the paper lives here:
+//! request handling, task aggregation, the asynchronous forwarding
+//! pipeline, and the two caching strategies with their supporting data
+//! structures (recent list, cache table, static cache, prefetcher).
+
+pub mod agent;
+pub mod aggregate;
+pub mod cache_table;
+pub mod pipeline;
+pub mod prefetch;
+pub mod recent_list;
+pub mod static_cache;
+
+pub use agent::{DpuAgent, DpuConfig, DpuOpts, DpuStats, DpuTiming, ReadOutcome, Source};
+pub use aggregate::Aggregator;
+pub use cache_table::{CacheTable, EntryKey};
+pub use pipeline::{ForwardMode, Forwarder};
+pub use prefetch::{PrefetchConfig, Prefetcher};
+pub use recent_list::RecentList;
+pub use static_cache::StaticCache;

@@ -1,0 +1,205 @@
+//! Asynchronous request forwarding (§III).
+//!
+//! "When the DPU agent forwards a request to the memory node, the DPU agent
+//! needs to wait for its completion. This blocking operation limits its
+//! scalability [...] request forwarding is pipelined in two separate threads
+//! by asynchronously handling the communication to the memory node. One
+//! thread is responsible for interacting with the host agent in receiving
+//! requests, looking up their metadata, composing specific operations to the
+//! memory node, and initiating server operations. The other thread is
+//! dedicated to polling for responses from the memory node operations and
+//! then staging the data to the host agent's memory buffer."
+//!
+//! Model: in **sync** mode one DPU core is *held for the whole network round
+//! trip* — with 8 low-power cores and ~15 µs RTTs, throughput caps at
+//! ~0.5 M req/s. In **async** mode the core pool is split into a receive
+//! stage and a completion stage; each request costs only its processing time
+//! on each stage and the network wait holds no core.
+
+use crate::sim::server::ServerPool;
+use crate::sim::Ns;
+
+/// Forwarding mode of the DPU agent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForwardMode {
+    /// Blocking: the core that receives the request also waits for the
+    /// memory node's response (Fig 11 `base`/`agg` configurations).
+    Sync,
+    /// Two-stage pipeline on disjoint core sets.
+    Async,
+}
+
+/// The DPU's forwarding engine: owns the core pools.
+#[derive(Debug)]
+pub struct Forwarder {
+    mode: ForwardMode,
+    /// Sync mode: all cores. Async mode: the receive/initiate stage cores.
+    stage1: ServerPool,
+    /// Async mode only: completion-polling / staging cores.
+    stage2: Option<ServerPool>,
+}
+
+impl Forwarder {
+    /// `cores` = total DPU cores (BlueField-2: 8 Cortex-A72).
+    pub fn new(mode: ForwardMode, cores: usize) -> Self {
+        assert!(cores >= 2 || mode == ForwardMode::Sync, "async needs ≥ 2 cores");
+        match mode {
+            ForwardMode::Sync => Forwarder {
+                mode,
+                stage1: ServerPool::new("dpu.cores", cores),
+                stage2: None,
+            },
+            ForwardMode::Async => {
+                // The paper dedicates one pipeline to rx and one to cq
+                // polling; we split the SoC evenly (rounding rx up).
+                let rx = cores.div_ceil(2);
+                let cq = cores - rx;
+                Forwarder {
+                    mode,
+                    stage1: ServerPool::new("dpu.rx", rx),
+                    stage2: Some(ServerPool::new("dpu.cq", cq.max(1))),
+                }
+            }
+        }
+    }
+
+    pub fn mode(&self) -> ForwardMode {
+        self.mode
+    }
+
+    /// Forward one request.
+    ///
+    /// * `arrive`      — request available in the shared receive queue.
+    /// * `rx_ns`       — stage-1 processing (rx, metadata lookup, compose,
+    ///                    initiate server op).
+    /// * `transfer`    — charges the network fetch; `f(initiated_at) -> data_arrival`.
+    /// * `complete_ns` — stage-2 processing (CQ poll, stage data to host).
+    ///
+    /// Returns the time the response is ready to be sent to the host.
+    pub fn forward(
+        &mut self,
+        arrive: Ns,
+        rx_ns: Ns,
+        transfer: impl FnOnce(Ns) -> Ns,
+        complete_ns: Ns,
+    ) -> Ns {
+        match self.mode {
+            ForwardMode::Sync => {
+                // One core does rx + blocks on the wire + completion.
+                let (_, end) = self.stage1.admit_with(arrive, |start| {
+                    let initiated = start + rx_ns;
+                    let data_at = transfer(initiated);
+                    data_at + complete_ns
+                });
+                end
+            }
+            ForwardMode::Async => {
+                let (_, initiated) = self.stage1.admit(arrive, rx_ns);
+                let data_at = transfer(initiated);
+                let (_, staged) = self
+                    .stage2
+                    .as_mut()
+                    .expect("async has stage2")
+                    .admit(data_at, complete_ns);
+                staged
+            }
+        }
+    }
+
+    /// Charge non-forwarding DPU work (cache lookups, prefetch maintenance,
+    /// writeback handling) to the receive-stage cores.
+    pub fn service(&mut self, now: Ns, ns: Ns) -> Ns {
+        self.stage1.admit(now, ns).1
+    }
+
+    /// Charge background work (prefetch issue) to the completion-stage cores
+    /// in async mode (they also run the prefetch workers), else stage 1.
+    pub fn background(&mut self, now: Ns, ns: Ns) -> Ns {
+        match &mut self.stage2 {
+            Some(p) => p.admit(now, ns).1,
+            None => self.stage1.admit(now, ns).1,
+        }
+    }
+
+    pub fn jobs(&self) -> u64 {
+        self.stage1.jobs() + self.stage2.as_ref().map(|p| p.jobs()).unwrap_or(0)
+    }
+
+    pub fn busy_ns(&self) -> Ns {
+        self.stage1.busy_ns() + self.stage2.as_ref().map(|p| p.busy_ns()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RTT: Ns = 15_000;
+
+    fn fetch(initiated: Ns) -> Ns {
+        initiated + RTT
+    }
+
+    #[test]
+    fn sync_holds_core_for_round_trip() {
+        let mut f = Forwarder::new(ForwardMode::Sync, 1);
+        let a = f.forward(0, 500, fetch, 400);
+        assert_eq!(a, 500 + RTT + 400);
+        // Second request waits for the first's *entire* round trip.
+        let b = f.forward(0, 500, fetch, 400);
+        assert_eq!(b, a + 500 + RTT + 400);
+    }
+
+    #[test]
+    fn async_overlaps_network_wait() {
+        let mut f = Forwarder::new(ForwardMode::Async, 2);
+        let a = f.forward(0, 500, fetch, 400);
+        let b = f.forward(0, 500, fetch, 400);
+        assert_eq!(a, 500 + RTT + 400);
+        // Request B's rx starts right after A's rx (same stage-1 core),
+        // its network wait overlaps A's.
+        assert_eq!(b, 1_000 + RTT + 400);
+        assert!(b - a < RTT, "network waits must overlap");
+    }
+
+    #[test]
+    fn async_throughput_beats_sync_under_load() {
+        let mut sync = Forwarder::new(ForwardMode::Sync, 8);
+        let mut asyn = Forwarder::new(ForwardMode::Async, 8);
+        let n = 64;
+        let sync_done = (0..n).map(|_| sync.forward(0, 500, fetch, 400)).max().unwrap();
+        let async_done = (0..n).map(|_| asyn.forward(0, 500, fetch, 400)).max().unwrap();
+        assert!(
+            async_done < sync_done / 2,
+            "async {async_done} should be far below sync {sync_done}"
+        );
+    }
+
+    #[test]
+    fn sync_single_request_latency_is_lower_than_async_pipeline() {
+        // With no load, both give the same latency (no pipeline penalty in
+        // this model beyond stage separation).
+        let mut sync = Forwarder::new(ForwardMode::Sync, 8);
+        let mut asyn = Forwarder::new(ForwardMode::Async, 8);
+        assert_eq!(
+            sync.forward(0, 500, fetch, 400),
+            asyn.forward(0, 500, fetch, 400)
+        );
+    }
+
+    #[test]
+    fn service_uses_stage1() {
+        let mut f = Forwarder::new(ForwardMode::Async, 4);
+        let t = f.service(0, 300);
+        assert_eq!(t, 300);
+        assert_eq!(f.jobs(), 1);
+    }
+
+    #[test]
+    fn split_keeps_at_least_one_core_per_stage() {
+        let f = Forwarder::new(ForwardMode::Async, 2);
+        assert_eq!(f.mode(), ForwardMode::Async);
+        // Implicit: constructor did not panic; stage2 exists.
+        assert_eq!(f.jobs(), 0);
+    }
+}

@@ -1,0 +1,190 @@
+//! Prefetch policy for dynamic caching (§III-A).
+//!
+//! "Based on accesses to the DPU cache, the prefetcher loads adjacent data
+//! chunks from the memory node and stages them on the DPU cache, which
+//! occurs off the critical path. Moreover, the larger transfer size avoids
+//! the overhead of several smaller transfers."
+//!
+//! The prefetch worker consumes the [`RecentList`] through a sequence
+//! cursor (the condition-variable hand-off of the C++ implementation) and
+//! plans whole-entry fetches: the entry containing each recently requested
+//! page plus `depth` adjacent entries ahead, skipping entries already
+//! resident or in flight.
+
+use super::cache_table::{CacheTable, EntryKey};
+use super::recent_list::RecentList;
+use crate::memnode::RegionId;
+
+/// Prefetcher configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PrefetchConfig {
+    /// Adjacent entries to fetch ahead of each accessed entry.
+    pub depth: u64,
+    /// Maximum entries planned per scan (bounds background burstiness).
+    pub max_per_scan: usize,
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        PrefetchConfig {
+            depth: 1,
+            max_per_scan: 8,
+        }
+    }
+}
+
+/// Prefetch statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefetchStats {
+    pub scans: u64,
+    pub planned: u64,
+    /// Entries skipped because already resident/in-flight.
+    pub deduped: u64,
+}
+
+/// The prefetch planner.
+#[derive(Debug, Default)]
+pub struct Prefetcher {
+    pub cfg: PrefetchConfig,
+    cursor: u64,
+    stats: PrefetchStats,
+}
+
+impl Prefetcher {
+    pub fn new(cfg: PrefetchConfig) -> Self {
+        Prefetcher {
+            cfg,
+            cursor: 0,
+            stats: PrefetchStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> PrefetchStats {
+        self.stats
+    }
+
+    /// Scan new recent-list entries and plan entry fetches.
+    ///
+    /// `region_entries(region)` bounds the entry index (no prefetch past the
+    /// end of a region). Returns deduplicated entries in plan order.
+    pub fn plan(
+        &mut self,
+        recent: &RecentList,
+        table: &CacheTable,
+        region_entries: impl Fn(RegionId) -> u64,
+    ) -> Vec<EntryKey> {
+        self.stats.scans += 1;
+        let new = recent.since(self.cursor);
+        self.cursor = recent.seq();
+        let ppe = table.pages_per_entry();
+        let mut out: Vec<EntryKey> = Vec::new();
+        for page in new {
+            let base = EntryKey::containing(page, ppe);
+            let limit = region_entries(page.region);
+            // The accessed entry itself, then `depth` adjacent ones ahead.
+            for delta in 0..=self.cfg.depth {
+                let e = EntryKey {
+                    region: base.region,
+                    entry: base.entry + delta,
+                };
+                if e.entry >= limit {
+                    break;
+                }
+                if table.contains(e) || out.contains(&e) {
+                    self.stats.deduped += 1;
+                    continue;
+                }
+                out.push(e);
+                if out.len() >= self.cfg.max_per_scan {
+                    self.stats.planned += out.len() as u64;
+                    return out;
+                }
+            }
+        }
+        self.stats.planned += out.len() as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::host::buffer::PageKey;
+
+    fn table() -> CacheTable {
+        // 64 slots of 4 pages (1 KB pages).
+        CacheTable::new(64 * 4096, 4096, 1024)
+    }
+
+    fn plan_for(pages: &[u64], t: &CacheTable, p: &mut Prefetcher) -> Vec<u64> {
+        let mut r = RecentList::new(128);
+        for &pg in pages {
+            r.push(PageKey::new(1, pg));
+        }
+        p.plan(&r, t, |_| 1_000).iter().map(|e| e.entry).collect()
+    }
+
+    #[test]
+    fn plans_accessed_and_adjacent_entry() {
+        let t = table();
+        let mut p = Prefetcher::new(PrefetchConfig::default());
+        // Page 5 -> entry 1; plan entries 1 and 2.
+        assert_eq!(plan_for(&[5], &t, &mut p), vec![1, 2]);
+    }
+
+    #[test]
+    fn dedups_resident_entries() {
+        let mut t = table();
+        let mut rng = crate::sim::rng::Rng::new(0);
+        t.insert(EntryKey { region: 1, entry: 1 }, vec![0; 4096], 0, &mut rng);
+        let mut p = Prefetcher::new(PrefetchConfig::default());
+        assert_eq!(plan_for(&[5], &t, &mut p), vec![2]);
+        assert_eq!(p.stats().deduped, 1);
+    }
+
+    #[test]
+    fn respects_region_bounds() {
+        let t = table();
+        let mut p = Prefetcher::new(PrefetchConfig::default());
+        let mut r = RecentList::new(128);
+        r.push(PageKey::new(1, 7)); // entry 1 of a 2-entry region
+        let planned = p.plan(&r, &t, |_| 2);
+        assert_eq!(planned.iter().map(|e| e.entry).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn cursor_consumes_only_new_accesses() {
+        let t = table();
+        let mut p = Prefetcher::new(PrefetchConfig::default());
+        let mut r = RecentList::new(128);
+        r.push(PageKey::new(1, 0));
+        let first = p.plan(&r, &t, |_| 1_000);
+        assert!(!first.is_empty());
+        // Nothing new: next scan plans nothing.
+        assert!(p.plan(&r, &t, |_| 1_000).is_empty());
+        r.push(PageKey::new(1, 40));
+        let second = p.plan(&r, &t, |_| 1_000);
+        assert_eq!(second[0].entry, 10);
+    }
+
+    #[test]
+    fn scan_bound_caps_burst() {
+        let t = table();
+        let mut p = Prefetcher::new(PrefetchConfig {
+            depth: 1,
+            max_per_scan: 3,
+        });
+        let planned = plan_for(&[0, 8, 16, 24, 32], &t, &mut p);
+        assert_eq!(planned.len(), 3);
+    }
+
+    #[test]
+    fn depth_zero_fetches_only_accessed_entry() {
+        let t = table();
+        let mut p = Prefetcher::new(PrefetchConfig {
+            depth: 0,
+            max_per_scan: 8,
+        });
+        assert_eq!(plan_for(&[5], &t, &mut p), vec![1]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Recent List — access-history ring buffer for the prefetcher (§IV-C).
+//!
+//! "The recent list maintains a history of recent accesses used for
+//! prefetching. It is implemented in a ring buffer storing the ids of the
+//! 128 most recently requested pages. For each new request, the DPU agent
+//! pushes the requested id to the head of the list. The tail element is
+//! overwritten if the list is full."
+//!
+//! The paper protects it with a mutex + condition variable; our simulator is
+//! single-threaded, so the lock is modeled as a (tiny) CPU cost charged by
+//! the DPU agent, and the structure itself stays lock-free. The ring also
+//! tracks a monotonically increasing sequence number so prefetch workers can
+//! consume only entries newer than their last scan — the condition-variable
+//! hand-off, deterministically.
+
+use crate::host::buffer::PageKey;
+
+/// Default capacity from the paper: 128 most recent page ids.
+pub const DEFAULT_CAPACITY: usize = 128;
+
+/// Fixed-capacity ring of recently requested page ids.
+#[derive(Clone, Debug)]
+pub struct RecentList {
+    ring: Vec<PageKey>,
+    capacity: usize,
+    /// Total number of pushes ever; head position is `seq % capacity`.
+    seq: u64,
+}
+
+impl RecentList {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        RecentList {
+            ring: Vec::with_capacity(capacity),
+            capacity,
+            seq: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Sequence number of the next push (consumer cursor anchor).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Push a requested page id, overwriting the tail if full.
+    pub fn push(&mut self, key: PageKey) {
+        if self.ring.len() < self.capacity {
+            self.ring.push(key);
+        } else {
+            let pos = (self.seq % self.capacity as u64) as usize;
+            self.ring[pos] = key;
+        }
+        self.seq += 1;
+    }
+
+    /// Entries pushed at or after `from_seq`, oldest first. This is what a
+    /// prefetch worker waiting on the condition variable would observe on
+    /// wake-up. If more than `capacity` pushes happened since `from_seq`,
+    /// only the surviving (most recent `capacity`) entries are returned.
+    pub fn since(&self, from_seq: u64) -> Vec<PageKey> {
+        let available_from = self.seq.saturating_sub(self.ring.len() as u64);
+        let start = from_seq.max(available_from);
+        (start..self.seq)
+            .map(|s| self.ring[(s % self.capacity as u64) as usize])
+            .collect()
+    }
+
+    /// The most recent `n` entries, newest first.
+    pub fn latest(&self, n: usize) -> Vec<PageKey> {
+        let n = n.min(self.ring.len());
+        (0..n)
+            .map(|i| {
+                let s = self.seq - 1 - i as u64;
+                self.ring[(s % self.capacity as u64) as usize]
+            })
+            .collect()
+    }
+}
+
+impl Default for RecentList {
+    fn default() -> Self {
+        Self::new(DEFAULT_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(p: u64) -> PageKey {
+        PageKey::new(1, p)
+    }
+
+    #[test]
+    fn push_and_latest() {
+        let mut r = RecentList::new(4);
+        for p in 0..3 {
+            r.push(k(p));
+        }
+        assert_eq!(r.latest(2), vec![k(2), k(1)]);
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    fn overwrites_tail_when_full() {
+        let mut r = RecentList::new(3);
+        for p in 0..5 {
+            r.push(k(p));
+        }
+        assert_eq!(r.len(), 3);
+        // Oldest surviving entries are 2, 3, 4.
+        let mut all = r.latest(3);
+        all.sort_by_key(|k| k.page);
+        assert_eq!(all, vec![k(2), k(3), k(4)]);
+    }
+
+    #[test]
+    fn since_returns_new_entries_in_order() {
+        let mut r = RecentList::new(8);
+        r.push(k(0));
+        let cursor = r.seq();
+        r.push(k(1));
+        r.push(k(2));
+        assert_eq!(r.since(cursor), vec![k(1), k(2)]);
+        assert_eq!(r.since(r.seq()), vec![]);
+    }
+
+    #[test]
+    fn since_clamps_to_survivors_after_wraparound() {
+        let mut r = RecentList::new(2);
+        let cursor = r.seq(); // 0
+        for p in 0..10 {
+            r.push(k(p));
+        }
+        // Only the last 2 survive.
+        assert_eq!(r.since(cursor), vec![k(8), k(9)]);
+    }
+
+    #[test]
+    fn default_capacity_matches_paper() {
+        assert_eq!(RecentList::default().capacity(), 128);
+    }
+}

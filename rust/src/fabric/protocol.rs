@@ -1,0 +1,227 @@
+//! SODA wire protocol — the request formats of Table I.
+//!
+//! The data plane uses two RDMA-based protocols (§IV-B):
+//!
+//! * **one-sided** — the requester reads/writes remote memory directly with
+//!   RDMA READ/WRITE; the remote endpoint is passive. Used for server data
+//!   and the static-cache strategy, where the full region is known to be
+//!   resident remotely.
+//! * **two-sided** — RDMA SEND carrying a request the remote CPU must
+//!   process in-line (dynamic caching needs an active cache-lookup step).
+//!   The RDMA *immediate data* word carries the request type.
+//!
+//! Table I request layouts (bit widths are exact):
+//!
+//! | read request      | bits | | write request | bits     |
+//! |-------------------|------| |---------------|----------|
+//! | region_id         | 16   | | region_id     | 16       |
+//! | page_offset       | 48   | | page_offset   | 48       |
+//! | dest_addr         | 64   | | size          | 32       |
+//! | size              | 32   | | data          | variable |
+//! | dest_rkey         | 32   | |               |          |
+
+
+/// Wire size of a read request: 16+48+64+32+32 bits = 24 bytes.
+pub const READ_REQUEST_BYTES: u64 = 24;
+/// Wire size of a write-request *header* (data follows): 16+48+32 bits = 12 bytes.
+pub const WRITE_HEADER_BYTES: u64 = 12;
+/// Control-plane RPC message size (QP setup, region ops).
+pub const RPC_BYTES: u64 = 64;
+
+/// Maximum encodable region id (16 bits).
+pub const MAX_REGION_ID: u16 = u16::MAX;
+/// Maximum encodable page offset (48 bits).
+pub const MAX_PAGE_OFFSET: u64 = (1 << 48) - 1;
+
+/// Request type carried in the RDMA immediate-data word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u32)]
+pub enum RequestKind {
+    Read = 1,
+    Write = 2,
+}
+
+impl RequestKind {
+    pub fn from_imm(imm: u32) -> Option<RequestKind> {
+        match imm {
+            1 => Some(RequestKind::Read),
+            2 => Some(RequestKind::Write),
+            _ => None,
+        }
+    }
+
+    pub fn to_imm(self) -> u32 {
+        self as u32
+    }
+}
+
+/// Table I(a): read request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReadRequest {
+    /// FAM region identifier (16 bits on the wire).
+    pub region_id: u16,
+    /// Page offset within the region (48 bits on the wire).
+    pub page_offset: u64,
+    /// Destination buffer address on the requester (64 bits).
+    pub dest_addr: u64,
+    /// Transfer size in bytes (32 bits).
+    pub size: u32,
+    /// RDMA rkey of the destination buffer, used when the response is
+    /// delivered with a one-sided WRITE (on the testbed SEND is selected).
+    pub dest_rkey: u32,
+}
+
+impl ReadRequest {
+    /// Pack into the exact 24-byte Table I(a) layout (little-endian fields,
+    /// page_offset truncated to its 48-bit wire width).
+    pub fn pack(&self) -> [u8; 24] {
+        assert!(
+            self.page_offset <= MAX_PAGE_OFFSET,
+            "page_offset exceeds 48-bit wire field"
+        );
+        let mut b = [0u8; 24];
+        b[0..2].copy_from_slice(&self.region_id.to_le_bytes());
+        b[2..8].copy_from_slice(&self.page_offset.to_le_bytes()[..6]);
+        b[8..16].copy_from_slice(&self.dest_addr.to_le_bytes());
+        b[16..20].copy_from_slice(&self.size.to_le_bytes());
+        b[20..24].copy_from_slice(&self.dest_rkey.to_le_bytes());
+        b
+    }
+
+    pub fn unpack(b: &[u8; 24]) -> ReadRequest {
+        let mut off = [0u8; 8];
+        off[..6].copy_from_slice(&b[2..8]);
+        ReadRequest {
+            region_id: u16::from_le_bytes([b[0], b[1]]),
+            page_offset: u64::from_le_bytes(off),
+            dest_addr: u64::from_le_bytes(b[8..16].try_into().unwrap()),
+            size: u32::from_le_bytes(b[16..20].try_into().unwrap()),
+            dest_rkey: u32::from_le_bytes(b[20..24].try_into().unwrap()),
+        }
+    }
+}
+
+/// Table I(b): write request header; `data` of `size` bytes follows inline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WriteHeader {
+    pub region_id: u16,
+    pub page_offset: u64,
+    pub size: u32,
+}
+
+impl WriteHeader {
+    pub fn pack(&self) -> [u8; 12] {
+        assert!(
+            self.page_offset <= MAX_PAGE_OFFSET,
+            "page_offset exceeds 48-bit wire field"
+        );
+        let mut b = [0u8; 12];
+        b[0..2].copy_from_slice(&self.region_id.to_le_bytes());
+        b[2..8].copy_from_slice(&self.page_offset.to_le_bytes()[..6]);
+        b[8..12].copy_from_slice(&self.size.to_le_bytes());
+        b
+    }
+
+    pub fn unpack(b: &[u8; 12]) -> WriteHeader {
+        let mut off = [0u8; 8];
+        off[..6].copy_from_slice(&b[2..8]);
+        WriteHeader {
+            region_id: u16::from_le_bytes([b[0], b[1]]),
+            page_offset: u64::from_le_bytes(off),
+            size: u32::from_le_bytes(b[8..12].try_into().unwrap()),
+        }
+    }
+
+    /// Total wire bytes of a write request carrying its data inline.
+    pub fn wire_bytes(&self) -> u64 {
+        WRITE_HEADER_BYTES + self.size as u64
+    }
+}
+
+/// Control-plane RPC verbs (QP lifecycle, region management; §IV-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ControlRpc {
+    /// Establish a queue pair with the remote endpoint.
+    QpSetup,
+    /// Tear down a queue pair.
+    QpTeardown,
+    /// Reserve `pages` pages for a region on the memory node.
+    RegionReserve { region_id: u16, pages: u64 },
+    /// Free a region on the memory node.
+    RegionFree { region_id: u16 },
+    /// Ask the memory node to pre-load a file into a region (§IV-D).
+    RegionLoadFile { region_id: u16 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_request_roundtrip() {
+        let r = ReadRequest {
+            region_id: 0xBEEF,
+            page_offset: 0x1234_5678_9ABC,
+            dest_addr: 0xDEAD_BEEF_CAFE_F00D,
+            size: 65536,
+            dest_rkey: 0x0102_0304,
+        };
+        assert_eq!(ReadRequest::unpack(&r.pack()), r);
+    }
+
+    #[test]
+    fn write_header_roundtrip() {
+        let w = WriteHeader {
+            region_id: 7,
+            page_offset: MAX_PAGE_OFFSET,
+            size: 4096,
+        };
+        assert_eq!(WriteHeader::unpack(&w.pack()), w);
+        assert_eq!(w.wire_bytes(), 12 + 4096);
+    }
+
+    #[test]
+    fn wire_sizes_match_table1() {
+        // Table I(a): 16+48+64+32+32 = 192 bits = 24 bytes.
+        assert_eq!(std::mem::size_of_val(&ReadRequest {
+            region_id: 0, page_offset: 0, dest_addr: 0, size: 0, dest_rkey: 0
+        }.pack()) as u64, READ_REQUEST_BYTES);
+        // Table I(b): 16+48+32 = 96 bits = 12 bytes header.
+        assert_eq!(std::mem::size_of_val(&WriteHeader {
+            region_id: 0, page_offset: 0, size: 0
+        }.pack()) as u64, WRITE_HEADER_BYTES);
+    }
+
+    #[test]
+    #[should_panic(expected = "48-bit")]
+    fn page_offset_over_48_bits_panics() {
+        ReadRequest {
+            region_id: 0,
+            page_offset: 1 << 48,
+            dest_addr: 0,
+            size: 0,
+            dest_rkey: 0,
+        }
+        .pack();
+    }
+
+    #[test]
+    fn immediate_data_encodes_request_kind() {
+        assert_eq!(RequestKind::from_imm(1), Some(RequestKind::Read));
+        assert_eq!(RequestKind::from_imm(2), Some(RequestKind::Write));
+        assert_eq!(RequestKind::from_imm(99), None);
+        assert_eq!(RequestKind::Read.to_imm(), 1);
+    }
+
+    #[test]
+    fn max_fields_roundtrip() {
+        let r = ReadRequest {
+            region_id: MAX_REGION_ID,
+            page_offset: MAX_PAGE_OFFSET,
+            dest_addr: u64::MAX,
+            size: u32::MAX,
+            dest_rkey: u32::MAX,
+        };
+        assert_eq!(ReadRequest::unpack(&r.pack()), r);
+    }
+}

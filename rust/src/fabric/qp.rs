@@ -1,0 +1,174 @@
+//! RDMA queue pairs and doorbell batching.
+//!
+//! §IV-B: the host agent maintains *multiple independent QPs* toward the DPU
+//! agent and the memory node — a single shared QP would need locking and
+//! limit NIC parallelism (Kalia et al.'s design guidelines, the paper's
+//! ref [20]). With task aggregation, groups of forwarded requests are posted
+//! with *doorbell batching*: one MMIO doorbell rings for the whole batch,
+//! amortizing the per-op NIC-notification overhead.
+
+use crate::sim::Ns;
+
+/// CPU cost of building and posting one work-queue entry.
+pub const WQE_BUILD_NS: Ns = 60;
+/// CPU + MMIO cost of ringing a doorbell.
+pub const DOORBELL_NS: Ns = 180;
+/// Extra per-op cost when multiple threads contend on one shared QP's lock.
+pub const QP_LOCK_CONTENTION_NS: Ns = 250;
+
+/// A single RDMA queue pair endpoint (bookkeeping + cost model).
+#[derive(Clone, Debug)]
+pub struct QueuePair {
+    pub id: u32,
+    posted: u64,
+    completed: u64,
+    doorbells: u64,
+}
+
+impl QueuePair {
+    pub fn new(id: u32) -> Self {
+        QueuePair {
+            id,
+            posted: 0,
+            completed: 0,
+            doorbells: 0,
+        }
+    }
+
+    /// Post a batch of `n` WQEs with a single doorbell. Returns the CPU time
+    /// consumed on the issuing side.
+    pub fn post_batch(&mut self, n: u64) -> Ns {
+        assert!(n > 0, "empty batch");
+        self.posted += n;
+        self.doorbells += 1;
+        n * WQE_BUILD_NS + DOORBELL_NS
+    }
+
+    /// Post `n` WQEs individually (no doorbell batching) — the unoptimized
+    /// path Fig 11's `base` configuration uses.
+    pub fn post_individually(&mut self, n: u64) -> Ns {
+        assert!(n > 0);
+        self.posted += n;
+        self.doorbells += n;
+        n * (WQE_BUILD_NS + DOORBELL_NS)
+    }
+
+    /// Mark `n` completions polled from the CQ.
+    pub fn complete(&mut self, n: u64) {
+        self.completed += n;
+        debug_assert!(self.completed <= self.posted, "completed more than posted");
+    }
+
+    pub fn outstanding(&self) -> u64 {
+        self.posted - self.completed
+    }
+
+    pub fn posted(&self) -> u64 {
+        self.posted
+    }
+
+    pub fn doorbells(&self) -> u64 {
+        self.doorbells
+    }
+}
+
+/// A set of independent QPs, one per issuing thread when possible.
+#[derive(Clone, Debug)]
+pub struct QpPool {
+    qps: Vec<QueuePair>,
+}
+
+impl QpPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        QpPool {
+            qps: (0..n as u32).map(QueuePair::new).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.qps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.qps.is_empty()
+    }
+
+    /// QP used by thread `tid` (round-robin when threads > QPs).
+    pub fn for_thread(&mut self, tid: usize) -> &mut QueuePair {
+        let n = self.qps.len();
+        &mut self.qps[tid % n]
+    }
+
+    /// Per-op posting cost for thread `tid`: lock contention applies only
+    /// when several threads share one QP.
+    pub fn post_cost_ns(&mut self, tid: usize, threads: usize, batch: u64) -> Ns {
+        let shared = threads > self.qps.len();
+        let base = self.for_thread(tid).post_batch(batch);
+        if shared {
+            base + QP_LOCK_CONTENTION_NS * batch
+        } else {
+            base
+        }
+    }
+
+    pub fn total_posted(&self) -> u64 {
+        self.qps.iter().map(|q| q.posted()).sum()
+    }
+
+    pub fn total_doorbells(&self) -> u64 {
+        self.qps.iter().map(|q| q.doorbells()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doorbell_batching_amortizes_cost() {
+        let mut a = QueuePair::new(0);
+        let mut b = QueuePair::new(1);
+        let batched = a.post_batch(16);
+        let individual = b.post_individually(16);
+        assert!(batched < individual);
+        assert_eq!(a.doorbells(), 1);
+        assert_eq!(b.doorbells(), 16);
+        assert_eq!(individual - batched, 15 * DOORBELL_NS);
+    }
+
+    #[test]
+    fn outstanding_tracks_post_and_complete() {
+        let mut q = QueuePair::new(0);
+        q.post_batch(4);
+        assert_eq!(q.outstanding(), 4);
+        q.complete(3);
+        assert_eq!(q.outstanding(), 1);
+    }
+
+    #[test]
+    fn pool_assigns_threads_round_robin() {
+        let mut p = QpPool::new(4);
+        assert_eq!(p.for_thread(0).id, 0);
+        assert_eq!(p.for_thread(5).id, 1);
+        assert_eq!(p.for_thread(7).id, 3);
+    }
+
+    #[test]
+    fn shared_qp_pays_lock_contention() {
+        let mut dedicated = QpPool::new(24);
+        let mut shared = QpPool::new(1);
+        let c_ded = dedicated.post_cost_ns(3, 24, 1);
+        let c_shared = shared.post_cost_ns(3, 24, 1);
+        assert_eq!(c_shared - c_ded, QP_LOCK_CONTENTION_NS);
+    }
+
+    #[test]
+    fn pool_totals() {
+        let mut p = QpPool::new(2);
+        p.post_cost_ns(0, 2, 3);
+        p.post_cost_ns(1, 2, 2);
+        assert_eq!(p.total_posted(), 5);
+        assert_eq!(p.total_doorbells(), 2);
+    }
+}

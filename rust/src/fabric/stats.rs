@@ -1,0 +1,118 @@
+//! Fabric-wide traffic accounting — the simulated `port_xmit_data`.
+//!
+//! The paper measures network traffic with mlx5 port counters on the memory
+//! server (§V): counter delta over the run, in 32-bit words. We keep byte
+//! counters per link and traffic class and expose both bytes and the
+//! paper's word units.
+
+use crate::sim::link::LinkStats;
+
+/// Snapshot of all four link counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetworkStats {
+    pub tx: LinkStats,
+    pub rx: LinkStats,
+    pub pcie_h2d: LinkStats,
+    pub pcie_d2h: LinkStats,
+}
+
+impl NetworkStats {
+    /// Data-plane bytes crossing the network in either direction — what the
+    /// traffic figures (Figs 8–9) report.
+    pub fn network_bytes(&self) -> u64 {
+        self.tx.data_bytes() + self.rx.data_bytes()
+    }
+
+    /// The paper's measurement unit: transmitted 32-bit words.
+    pub fn network_words(&self) -> u64 {
+        self.network_bytes() / 4
+    }
+
+    /// On-demand (critical-path) network bytes.
+    pub fn on_demand_bytes(&self) -> u64 {
+        self.tx.on_demand_bytes + self.rx.on_demand_bytes
+    }
+
+    /// Background (prefetch / cache-fill) network bytes.
+    pub fn background_bytes(&self) -> u64 {
+        self.tx.background_bytes + self.rx.background_bytes
+    }
+
+    /// Writeback network bytes.
+    pub fn writeback_bytes(&self) -> u64 {
+        self.tx.writeback_bytes + self.rx.writeback_bytes
+    }
+
+    /// Fraction of data-plane network traffic that is background — Fig 9's
+    /// key observation (76–93 % under dynamic caching).
+    pub fn background_fraction(&self) -> f64 {
+        let total = self.network_bytes();
+        if total == 0 {
+            return 0.0;
+        }
+        self.background_bytes() as f64 / total as f64
+    }
+
+    /// Intra-node (PCIe) bytes in both directions.
+    pub fn pcie_bytes(&self) -> u64 {
+        self.pcie_h2d.data_bytes() + self.pcie_d2h.data_bytes()
+    }
+
+    pub fn diff(&self, earlier: &NetworkStats) -> NetworkStats {
+        fn d(a: &LinkStats, b: &LinkStats) -> LinkStats {
+            LinkStats {
+                on_demand_bytes: a.on_demand_bytes - b.on_demand_bytes,
+                background_bytes: a.background_bytes - b.background_bytes,
+                writeback_bytes: a.writeback_bytes - b.writeback_bytes,
+                control_bytes: a.control_bytes - b.control_bytes,
+                on_demand_ops: a.on_demand_ops - b.on_demand_ops,
+                background_ops: a.background_ops - b.background_ops,
+                writeback_ops: a.writeback_ops - b.writeback_ops,
+                control_ops: a.control_ops - b.control_ops,
+                busy_ns: a.busy_ns - b.busy_ns,
+            }
+        }
+        NetworkStats {
+            tx: d(&self.tx, &earlier.tx),
+            rx: d(&self.rx, &earlier.rx),
+            pcie_h2d: d(&self.pcie_h2d, &earlier.pcie_h2d),
+            pcie_d2h: d(&self.pcie_d2h, &earlier.pcie_d2h),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Fabric, FabricConfig};
+    use crate::sim::link::TrafficClass;
+
+    #[test]
+    fn snapshot_diff_isolates_an_interval() {
+        let mut f = Fabric::new(FabricConfig::default());
+        f.net_read(0, 1000, 2, TrafficClass::OnDemand);
+        let s0 = f.network_stats();
+        f.net_read(0, 2000, 2, TrafficClass::Background);
+        let s1 = f.network_stats();
+        let d = s1.diff(&s0);
+        assert_eq!(d.background_bytes(), 2000);
+        assert_eq!(d.on_demand_bytes(), 0);
+    }
+
+    #[test]
+    fn background_fraction() {
+        let mut f = Fabric::new(FabricConfig::default());
+        f.net_read(0, 1000, 2, TrafficClass::OnDemand);
+        f.net_read(0, 3000, 2, TrafficClass::Background);
+        let s = f.network_stats();
+        assert!((s.background_fraction() - 0.75).abs() < 1e-9);
+        assert_eq!(s.network_words(), 1000); // 4000 bytes = 1000 words
+    }
+
+    #[test]
+    fn empty_stats_have_zero_fraction() {
+        let s = NetworkStats::default();
+        assert_eq!(s.background_fraction(), 0.0);
+        assert_eq!(s.network_bytes(), 0);
+    }
+}

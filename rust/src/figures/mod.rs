@@ -1,0 +1,98 @@
+//! Figure harness — regenerates every table and figure of the paper's
+//! evaluation from the simulator's virtual time and counters.
+//!
+//! Each `figN()` returns a [`FigureReport`] with the same rows/series the
+//! paper plots; `soda figures --all` prints them and dumps JSON for
+//! EXPERIMENTS.md. Absolute numbers come from our calibrated substrate,
+//! so the *shapes* (who wins, by what factor, where crossovers sit) are
+//! the reproduction target, as recorded in EXPERIMENTS.md.
+
+pub mod ablations;
+pub mod characterization;
+pub mod evaluation;
+
+pub use ablations::{ablation_entry_size, ablation_evict_policy, ablation_prefetch_depth, ablation_qp_count};
+pub use characterization::{fig3, fig4, fig5, table1, table2};
+pub use evaluation::{fig10, fig11, fig6, fig7, fig8, fig9};
+
+use crate::util::json::Json;
+
+/// A regenerated table/figure: human-readable lines + machine JSON.
+#[derive(Clone, Debug)]
+pub struct FigureReport {
+    pub id: &'static str,
+    pub title: String,
+    pub lines: Vec<String>,
+    pub data: Json,
+}
+
+impl FigureReport {
+    pub fn new(id: &'static str, title: impl Into<String>) -> Self {
+        FigureReport {
+            id,
+            title: title.into(),
+            lines: Vec::new(),
+            data: Json::Obj(Default::default()),
+        }
+    }
+
+    pub fn line(&mut self, s: impl Into<String>) {
+        self.lines.push(s.into());
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("── {}: {} ──\n", self.id, self.title);
+        for l in &self.lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// All figure ids in paper order.
+pub const ALL_FIGURES: [&str; 11] = [
+    "table1", "table2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+];
+
+/// Run one figure by id at `scale` (evaluation figures only use scale).
+pub fn run_figure(id: &str, scale: f64, threads: usize) -> Option<FigureReport> {
+    match id {
+        "table1" => Some(table1()),
+        "table2" => Some(table2(scale)),
+        "fig3" => Some(fig3()),
+        "fig4" => Some(fig4()),
+        "fig5" => Some(fig5()),
+        "fig6" => Some(fig6(scale, threads)),
+        "fig7" => Some(fig7(scale, threads)),
+        "fig8" => Some(fig8(scale, threads)),
+        "fig9" => Some(fig9(scale, threads)),
+        "fig10" => Some(fig10(scale, threads)),
+        "fig11" => Some(fig11(scale, threads)),
+        "abl-entry" => Some(ablation_entry_size(scale, threads)),
+        "abl-prefetch" => Some(ablation_prefetch_depth(scale, threads)),
+        "abl-evict" => Some(ablation_evict_policy(scale, threads)),
+        "abl-qp" => Some(ablation_qp_count(scale, threads)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_lines() {
+        let mut r = FigureReport::new("figX", "test");
+        r.line("a 1");
+        r.line("b 2");
+        let s = r.render();
+        assert!(s.contains("figX"));
+        assert!(s.contains("a 1\nb 2\n"));
+    }
+
+    #[test]
+    fn unknown_figure_is_none() {
+        assert!(run_figure("fig99", 1.0, 4).is_none());
+    }
+}

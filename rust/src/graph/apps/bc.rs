@@ -1,0 +1,184 @@
+//! Betweenness centrality — "finds the number of shortest paths passing
+//! through a vertex" (§V).
+//!
+//! Ligra's BC: single-source Brandes. A forward frontier sweep accumulates
+//! shortest-path counts (`sigma`) level by level; a backward sweep over the
+//! stored level frontiers accumulates dependencies
+//! `delta[u] = Σ_{v ∈ succ(u)} sigma[u]/sigma[v] · (1 + delta[v])`.
+//! Both phases scan FAM adjacency lists; the backward phase revisits the
+//! same pages in reverse level order — the access pattern that makes BC the
+//! least prefetch-friendly app in Fig 10 (61 % hit rate).
+
+use crate::graph::csr::{CsrGraph, VertexId};
+use crate::graph::fam_graph::FamGraph;
+use crate::graph::ops::{edge_map, EdgeMapOpts};
+use crate::graph::runner::GraphRunner;
+use crate::graph::subset::VertexSubset;
+
+/// BC output for one source.
+#[derive(Clone, Debug)]
+pub struct BcResult {
+    /// Dependency score per vertex (unnormalized single-source BC).
+    pub scores: Vec<f64>,
+    pub levels: Vec<i32>,
+    pub sigma: Vec<f64>,
+}
+
+/// Single-source Brandes BC on FAM.
+pub fn bc(r: &mut GraphRunner, g: &FamGraph, src: VertexId) -> BcResult {
+    let n = g.n;
+    let mut levels = vec![-1i32; n];
+    let mut sigma = vec![0.0f64; n];
+    levels[src as usize] = 0;
+    sigma[src as usize] = 1.0;
+    let mut frontier = VertexSubset::single(src);
+    let mut level_sets: Vec<Vec<VertexId>> = vec![vec![src]];
+    let mut round = 0i32;
+
+    // Forward phase: accumulate path counts level by level.
+    while !frontier.is_empty() {
+        round += 1;
+        let levels_c = std::cell::Cell::from_mut(levels.as_mut_slice()).as_slice_of_cells();
+        let next = edge_map(
+            r,
+            g,
+            &frontier,
+            |u, v| {
+                // Contributions add from every frontier predecessor; the
+                // vertex activates once (first touch this round).
+                if levels_c[v as usize].get() < 0 {
+                    levels_c[v as usize].set(round);
+                    sigma[v as usize] = sigma[u as usize];
+                    true
+                } else if levels_c[v as usize].get() == round {
+                    sigma[v as usize] += sigma[u as usize];
+                    false
+                } else {
+                    false
+                }
+            },
+            |v| levels_c[v as usize].get() < 0 || levels_c[v as usize].get() == round,
+            EdgeMapOpts::default(),
+        );
+        if next.is_empty() {
+            break;
+        }
+        level_sets.push(next.to_sparse());
+        frontier = next;
+    }
+
+    // Backward phase: dependency accumulation, deepest level first.
+    let mut delta = vec![0.0f64; n];
+    let cm = r.compute;
+    for depth in (0..level_sets.len().saturating_sub(1)).rev() {
+        let level = level_sets[depth].clone();
+        let mut scratch = Vec::new();
+        let mut nbrs: Vec<VertexId> = Vec::new();
+        r.parallel_chunks(&level, cm.grain_sparse, |agent, tid, u, now| {
+            let t = g.neighbors_into(agent, now, tid, u, &mut scratch, &mut nbrs);
+            let mut compute = cm.per_vertex_ns;
+            let lu = levels[u as usize];
+            for &v in &nbrs {
+                compute += cm.per_edge_ns;
+                if levels[v as usize] == lu + 1 && sigma[v as usize] > 0.0 {
+                    delta[u as usize] +=
+                        sigma[u as usize] / sigma[v as usize] * (1.0 + delta[v as usize]);
+                }
+            }
+            t + compute
+        });
+    }
+    BcResult {
+        scores: delta,
+        levels,
+        sigma,
+    }
+}
+
+/// Reference single-source Brandes (sequential).
+pub fn bc_ref(csr: &CsrGraph, src: VertexId) -> Vec<f64> {
+    let n = csr.n();
+    let mut levels = vec![-1i32; n];
+    let mut sigma = vec![0.0f64; n];
+    let mut order: Vec<VertexId> = Vec::new();
+    levels[src as usize] = 0;
+    sigma[src as usize] = 1.0;
+    let mut queue = std::collections::VecDeque::from([src]);
+    while let Some(u) = queue.pop_front() {
+        order.push(u);
+        for &v in csr.neighbors(u) {
+            if levels[v as usize] < 0 {
+                levels[v as usize] = levels[u as usize] + 1;
+                queue.push_back(v);
+            }
+            if levels[v as usize] == levels[u as usize] + 1 {
+                sigma[v as usize] += sigma[u as usize];
+            }
+        }
+    }
+    let mut delta = vec![0.0f64; n];
+    for &u in order.iter().rev() {
+        for &v in csr.neighbors(u) {
+            if levels[v as usize] == levels[u as usize] + 1 && sigma[v as usize] > 0.0 {
+                delta[u as usize] += sigma[u as usize] / sigma[v as usize] * (1.0 + delta[v as usize]);
+            }
+        }
+    }
+    delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::apps::test_support::fam_setup;
+    use crate::graph::gen::{rmat, toys};
+
+    fn assert_close(a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < 1e-9, "score {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn path_centrality_peaks_in_middle() {
+        let csr = toys::path(5);
+        let (mut r, g) = fam_setup(&csr);
+        let out = bc(&mut r, &g, 0);
+        // From source 0 on a path: every interior vertex lies on all paths
+        // to vertices beyond it: delta = [., 3, 2, 1, 0].
+        assert_close(&out.scores[1..], &[3.0, 2.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn sigma_counts_shortest_paths() {
+        // Diamond: two shortest paths 0→3.
+        let csr = crate::graph::csr::CsrGraph::from_edges_symmetric(
+            4,
+            &[(0, 1), (0, 2), (1, 3), (2, 3)],
+        );
+        let (mut r, g) = fam_setup(&csr);
+        let out = bc(&mut r, &g, 0);
+        assert_eq!(out.sigma[3], 2.0);
+        assert_eq!(out.levels, vec![0, 1, 1, 2]);
+        // Each middle vertex carries half the dependency of v3 = 0.5 each.
+        assert_close(&out.scores, &bc_ref(&csr, 0));
+    }
+
+    #[test]
+    fn matches_reference_on_rmat() {
+        let csr = rmat(1 << 8, 1_500, 0.57, 0.19, 0.19, 23);
+        let (mut r, g) = fam_setup(&csr);
+        let out = bc(&mut r, &g, 0);
+        assert_close(&out.scores, &bc_ref(&csr, 0));
+    }
+
+    #[test]
+    fn star_center_has_all_dependency() {
+        let csr = toys::star(10);
+        let (mut r, g) = fam_setup(&csr);
+        let out = bc(&mut r, &g, 1); // from a leaf
+        // All paths from leaf 1 to the other 8 leaves pass through 0.
+        assert!((out.scores[0] - 8.0).abs() < 1e-12);
+    }
+}

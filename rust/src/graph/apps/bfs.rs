@@ -1,0 +1,134 @@
+//! Breadth-first search — "constructs a search tree containing all nodes
+//! reachable from the initial source vertex" (§V).
+//!
+//! Direction-switching frontier BFS over the FAM-backed graph, plus a plain
+//! in-memory reference used by the test suite (levels are traversal-order
+//! independent, so correctness compares levels).
+
+use crate::graph::csr::{CsrGraph, VertexId};
+use crate::graph::fam_graph::FamGraph;
+use crate::graph::ops::{edge_map, EdgeMapOpts};
+use crate::graph::runner::GraphRunner;
+use crate::graph::subset::VertexSubset;
+use std::collections::VecDeque;
+
+/// BFS output: level per vertex (-1 = unreached) and parent (-1 = none).
+#[derive(Clone, Debug)]
+pub struct BfsResult {
+    pub levels: Vec<i32>,
+    pub parents: Vec<i64>,
+    pub rounds: u32,
+}
+
+/// Frontier BFS on FAM.
+pub fn bfs(r: &mut GraphRunner, g: &FamGraph, src: VertexId) -> BfsResult {
+    let n = g.n;
+    let mut levels = vec![-1i32; n];
+    let mut parents = vec![-1i64; n];
+    levels[src as usize] = 0;
+    parents[src as usize] = src as i64;
+    let mut frontier = VertexSubset::single(src);
+    let mut round = 0i32;
+    while !frontier.is_empty() {
+        round += 1;
+        // Cell views let `update` (writer) and `cond` (reader) share state,
+        // mirroring Ligra's CAS-based updateAtomic.
+        let levels_c = std::cell::Cell::from_mut(levels.as_mut_slice()).as_slice_of_cells();
+        frontier = edge_map(
+            r,
+            g,
+            &frontier,
+            |u, v| {
+                if levels_c[v as usize].get() < 0 {
+                    levels_c[v as usize].set(round);
+                    parents[v as usize] = u as i64;
+                    true
+                } else {
+                    false
+                }
+            },
+            |v| levels_c[v as usize].get() < 0,
+            EdgeMapOpts {
+                early_exit: true,
+                ..Default::default()
+            },
+        );
+    }
+    BfsResult {
+        levels,
+        parents,
+        rounds: round as u32 - u32::from(round > 0),
+    }
+}
+
+/// In-memory reference BFS (queue-based).
+pub fn bfs_ref(csr: &CsrGraph, src: VertexId) -> Vec<i32> {
+    let mut levels = vec![-1i32; csr.n()];
+    levels[src as usize] = 0;
+    let mut q = VecDeque::from([src]);
+    while let Some(u) = q.pop_front() {
+        for &v in csr.neighbors(u) {
+            if levels[v as usize] < 0 {
+                levels[v as usize] = levels[u as usize] + 1;
+                q.push_back(v);
+            }
+        }
+    }
+    levels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::apps::test_support::{fam_setup, ref_setup};
+    use crate::graph::gen::{rmat, toys};
+
+    #[test]
+    fn bfs_levels_on_path() {
+        let csr = toys::path(6);
+        let (mut r, g) = fam_setup(&csr);
+        let out = bfs(&mut r, &g, 0);
+        assert_eq!(out.levels, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(out.rounds, 5);
+    }
+
+    #[test]
+    fn bfs_matches_reference_on_rmat() {
+        let csr = rmat(1 << 9, 3_000, 0.57, 0.19, 0.19, 11);
+        let (mut r, g) = fam_setup(&csr);
+        let out = bfs(&mut r, &g, 0);
+        assert_eq!(out.levels, bfs_ref(&csr, 0));
+    }
+
+    #[test]
+    fn parents_are_consistent_with_levels() {
+        let csr = rmat(1 << 8, 1_200, 0.57, 0.19, 0.19, 3);
+        let (mut r, g) = fam_setup(&csr);
+        let out = bfs(&mut r, &g, 0);
+        for v in 0..csr.n() {
+            if out.levels[v] > 0 {
+                let p = out.parents[v] as usize;
+                assert_eq!(out.levels[p], out.levels[v] - 1, "vertex {v}");
+                assert!(csr.neighbors(v as u32).contains(&(p as u32)));
+            }
+        }
+    }
+
+    #[test]
+    fn unreachable_vertices_stay_unvisited() {
+        let csr = toys::two_triangles();
+        let (mut r, g) = fam_setup(&csr);
+        let out = bfs(&mut r, &g, 0);
+        assert!(out.levels[0..3].iter().all(|&l| l >= 0));
+        assert!(out.levels[3..6].iter().all(|&l| l == -1));
+    }
+
+    #[test]
+    fn bfs_advances_virtual_time() {
+        let csr = ref_setup();
+        let (mut r, g) = fam_setup(&csr);
+        let t0 = r.now();
+        bfs(&mut r, &g, 0);
+        assert!(r.now() > t0);
+    }
+}

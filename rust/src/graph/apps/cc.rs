@@ -1,0 +1,129 @@
+//! Connected components — "partitions an input graph into fully connected
+//! components" (§V).
+//!
+//! Ligra's label-propagation Components: every vertex starts with its own
+//! id; `edge_map` propagates the minimum id along edges until no label
+//! changes. At the fixpoint each vertex carries the minimum vertex id of
+//! its component (deterministic regardless of schedule).
+
+use crate::graph::csr::{CsrGraph, VertexId};
+use crate::graph::fam_graph::FamGraph;
+use crate::graph::ops::{edge_map, EdgeMapOpts};
+use crate::graph::runner::GraphRunner;
+use crate::graph::subset::VertexSubset;
+
+/// Components output: component label per vertex (= min vertex id).
+#[derive(Clone, Debug)]
+pub struct CcResult {
+    pub labels: Vec<VertexId>,
+    pub rounds: u32,
+    pub components: usize,
+}
+
+/// Label-propagation components on FAM.
+pub fn cc(r: &mut GraphRunner, g: &FamGraph) -> CcResult {
+    let n = g.n;
+    let mut labels: Vec<VertexId> = (0..n as VertexId).collect();
+    let mut frontier = VertexSubset::all(n);
+    let mut rounds = 0;
+    while !frontier.is_empty() {
+        rounds += 1;
+        frontier = edge_map(
+            r,
+            g,
+            &frontier,
+            |u, v| {
+                if labels[u as usize] < labels[v as usize] {
+                    labels[v as usize] = labels[u as usize];
+                    true
+                } else {
+                    false
+                }
+            },
+            |_| true,
+            EdgeMapOpts::default(),
+        );
+    }
+    let mut uniq: Vec<VertexId> = labels.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    CcResult {
+        components: uniq.len(),
+        labels,
+        rounds,
+    }
+}
+
+/// Reference components via union-find.
+pub fn cc_ref(csr: &CsrGraph) -> Vec<VertexId> {
+    let n = csr.n();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    fn find(parent: &mut [u32], x: u32) -> u32 {
+        let mut root = x;
+        while parent[root as usize] != root {
+            root = parent[root as usize];
+        }
+        let mut cur = x;
+        while parent[cur as usize] != root {
+            let next = parent[cur as usize];
+            parent[cur as usize] = root;
+            cur = next;
+        }
+        root
+    }
+    for u in 0..n as u32 {
+        for &v in csr.neighbors(u) {
+            let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+            if ru != rv {
+                parent[ru.max(rv) as usize] = ru.min(rv);
+            }
+        }
+    }
+    // Normalize to the minimum member id.
+    (0..n as u32).map(|v| find(&mut parent, v)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::apps::test_support::fam_setup;
+    use crate::graph::gen::{rmat, toys};
+
+    #[test]
+    fn two_triangles_two_components() {
+        let csr = toys::two_triangles();
+        let (mut r, g) = fam_setup(&csr);
+        let out = cc(&mut r, &g);
+        assert_eq!(out.components, 2);
+        assert_eq!(out.labels, vec![0, 0, 0, 3, 3, 3]);
+    }
+
+    #[test]
+    fn matches_union_find_on_rmat() {
+        let csr = rmat(1 << 9, 1_200, 0.57, 0.19, 0.19, 21);
+        let (mut r, g) = fam_setup(&csr);
+        let out = cc(&mut r, &g);
+        assert_eq!(out.labels, cc_ref(&csr));
+    }
+
+    #[test]
+    fn isolated_vertices_are_singletons() {
+        // Vertices 4,5 isolated (n=6, edges only among 0..3).
+        let csr = crate::graph::csr::CsrGraph::from_edges_symmetric(6, &[(0, 1), (2, 3)]);
+        let (mut r, g) = fam_setup(&csr);
+        let out = cc(&mut r, &g);
+        assert_eq!(out.components, 4);
+        assert_eq!(out.labels[4], 4);
+        assert_eq!(out.labels[5], 5);
+    }
+
+    #[test]
+    fn connected_graph_single_component() {
+        let csr = toys::binary_tree(4);
+        let (mut r, g) = fam_setup(&csr);
+        let out = cc(&mut r, &g);
+        assert_eq!(out.components, 1);
+        assert!(out.labels.iter().all(|&l| l == 0));
+        assert!(out.rounds >= 2);
+    }
+}

@@ -1,0 +1,130 @@
+//! The five case-study applications (§V): BFS, PageRank, Radii, BC, CC —
+//! the Ligra benchmark set the paper evaluates on four real-world graphs.
+
+pub mod bc;
+pub mod bfs;
+pub mod cc;
+pub mod pagerank;
+pub mod radii;
+
+pub use bc::{bc, bc_ref, BcResult};
+pub use bfs::{bfs, bfs_ref, BfsResult};
+pub use cc::{cc, cc_ref, CcResult};
+pub use pagerank::{pagerank, pagerank_ref, PrResult};
+pub use radii::{radii, radii_ref, RadiiResult};
+
+use crate::graph::fam_graph::FamGraph;
+use crate::graph::runner::GraphRunner;
+
+/// Application selector used by the experiment harness and CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum App {
+    Bfs,
+    PageRank,
+    Radii,
+    Bc,
+    Components,
+}
+
+impl App {
+    pub const ALL: [App; 5] = [App::Bfs, App::PageRank, App::Radii, App::Bc, App::Components];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            App::Bfs => "bfs",
+            App::PageRank => "pagerank",
+            App::Radii => "radii",
+            App::Bc => "bc",
+            App::Components => "components",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<App> {
+        Self::ALL.iter().copied().find(|a| a.name() == name)
+    }
+
+    /// Run the application on a FAM graph with default parameters
+    /// (source 0, 20 PR iterations, radii seed from the app).
+    pub fn run(&self, r: &mut GraphRunner, g: &FamGraph) {
+        match self {
+            App::Bfs => {
+                bfs(r, g, 0);
+            }
+            App::PageRank => {
+                pagerank(r, g, 20);
+            }
+            App::Radii => {
+                radii(r, g, 0xAD11);
+            }
+            App::Bc => {
+                bc(r, g, 0);
+            }
+            App::Components => {
+                cc(r, g);
+            }
+        }
+    }
+}
+
+/// Shared test scaffolding for app tests.
+#[cfg(test)]
+pub(crate) mod test_support {
+    use crate::backend::MemServerStore;
+    use crate::coordinator::cluster::Cluster;
+    use crate::coordinator::config::ClusterConfig;
+    use crate::graph::csr::CsrGraph;
+    use crate::graph::fam_graph::{BuildMode, FamGraph};
+    use crate::graph::runner::GraphRunner;
+    use crate::host::agent::HostTiming;
+    use crate::host::HostAgent;
+
+    /// FAM runner over a MemServer backend with a generous buffer.
+    pub fn fam_setup(csr: &CsrGraph) -> (GraphRunner, FamGraph) {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let chunk = cluster.config().chunk_bytes;
+        let agent = HostAgent::new(
+            "test",
+            Box::new(MemServerStore::new(cluster.clone())),
+            512 * chunk,
+            chunk,
+            1.0,
+            4,
+            4,
+            2,
+            HostTiming::default(),
+        );
+        let mut r = GraphRunner::new(agent, 4, 0);
+        let (g, t) = FamGraph::build(&mut r.agent, 0, csr, BuildMode::FileBacked);
+        r.set_clock(t);
+        (r, g)
+    }
+
+    /// A small default graph for smoke tests.
+    pub fn ref_setup() -> CsrGraph {
+        crate::graph::gen::toys::binary_tree(4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn app_names_roundtrip() {
+        for app in App::ALL {
+            assert_eq!(App::by_name(app.name()), Some(app));
+        }
+        assert_eq!(App::by_name("nope"), None);
+    }
+
+    #[test]
+    fn all_apps_run_on_a_small_graph() {
+        let csr = crate::graph::gen::toys::binary_tree(3);
+        for app in App::ALL {
+            let (mut r, g) = test_support::fam_setup(&csr);
+            let t0 = r.now();
+            app.run(&mut r, &g);
+            assert!(r.now() > t0, "{} did not advance time", app.name());
+        }
+    }
+}

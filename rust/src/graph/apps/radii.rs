@@ -1,0 +1,147 @@
+//! Radii estimation — "estimates the distance to the farthest vertex for
+//! each vertex in a graph" (§V).
+//!
+//! Ligra's bit-parallel multi-BFS: K (≤64) sampled sources propagate
+//! simultaneously, one bit each, through a `Visited` bitmask per vertex.
+//! `radii[v]` ends as the last round in which `v` received a new source's
+//! bit, i.e. `max_{s ∈ sample} dist(s, v)` — the eccentricity estimate.
+
+use crate::graph::csr::{CsrGraph, VertexId};
+use crate::graph::fam_graph::FamGraph;
+use crate::graph::ops::{edge_map, EdgeMapOpts};
+use crate::graph::runner::GraphRunner;
+use crate::graph::subset::VertexSubset;
+use crate::sim::rng::Rng;
+
+/// Radii output.
+#[derive(Clone, Debug)]
+pub struct RadiiResult {
+    /// Estimated eccentricity per vertex (-1 if unreached by any sample).
+    pub radii: Vec<i32>,
+    pub sources: Vec<VertexId>,
+    pub rounds: u32,
+}
+
+/// Bit-parallel radii estimation with up to 64 sampled sources.
+pub fn radii(r: &mut GraphRunner, g: &FamGraph, seed: u64) -> RadiiResult {
+    let n = g.n;
+    let k = n.min(64);
+    let mut rng = Rng::new(seed);
+    // Sample k distinct sources.
+    let mut sources: Vec<VertexId> = Vec::with_capacity(k);
+    let mut chosen = vec![false; n];
+    while sources.len() < k {
+        let v = rng.index(n);
+        if !chosen[v] {
+            chosen[v] = true;
+            sources.push(v as VertexId);
+        }
+    }
+    sources.sort_unstable();
+
+    let mut visited = vec![0u64; n];
+    let mut next_visited = vec![0u64; n];
+    let mut radii_v = vec![-1i32; n];
+    for (bit, &s) in sources.iter().enumerate() {
+        visited[s as usize] |= 1u64 << bit;
+        next_visited[s as usize] |= 1u64 << bit;
+        radii_v[s as usize] = 0;
+    }
+    let mut frontier = VertexSubset::from_vertices(sources.clone());
+    let mut round = 0i32;
+    while !frontier.is_empty() {
+        round += 1;
+        let next = edge_map(
+            r,
+            g,
+            &frontier,
+            |u, v| {
+                let to_write = visited[v as usize] | visited[u as usize];
+                if visited[v as usize] != to_write {
+                    next_visited[v as usize] |= to_write;
+                    if radii_v[v as usize] != round {
+                        radii_v[v as usize] = round;
+                        return true;
+                    }
+                }
+                false
+            },
+            |_| true,
+            EdgeMapOpts::default(),
+        );
+        // vertexMap: Visited <- NextVisited for the touched vertices.
+        for &v in next.to_sparse().iter() {
+            visited[v as usize] = next_visited[v as usize];
+        }
+        r.advance(next.len() as u64 * 2);
+        frontier = next;
+    }
+    RadiiResult {
+        radii: radii_v,
+        sources,
+        rounds: round.max(0) as u32,
+    }
+}
+
+/// Reference: K explicit BFS traversals, radii[v] = max dist over sources
+/// that reach v (-1 if none).
+pub fn radii_ref(csr: &CsrGraph, sources: &[VertexId]) -> Vec<i32> {
+    let n = csr.n();
+    let mut out = vec![-1i32; n];
+    for &s in sources {
+        let levels = super::bfs::bfs_ref(csr, s);
+        for v in 0..n {
+            if levels[v] >= 0 {
+                out[v] = out[v].max(levels[v]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::apps::test_support::fam_setup;
+    use crate::graph::gen::{rmat, toys};
+
+    #[test]
+    fn path_radii_from_all_sources() {
+        // n=5 ≤ 64 → every vertex is a source; radii = true eccentricity.
+        let csr = toys::path(5);
+        let (mut r, g) = fam_setup(&csr);
+        let out = radii(&mut r, &g, 1);
+        assert_eq!(out.sources.len(), 5);
+        assert_eq!(out.radii, vec![4, 3, 2, 3, 4]);
+    }
+
+    #[test]
+    fn matches_reference_with_same_sources() {
+        let csr = rmat(1 << 8, 1_500, 0.57, 0.19, 0.19, 13);
+        let (mut r, g) = fam_setup(&csr);
+        let out = radii(&mut r, &g, 7);
+        assert_eq!(out.radii, radii_ref(&csr, &out.sources));
+    }
+
+    #[test]
+    fn star_has_radius_two() {
+        let csr = toys::star(20);
+        let (mut r, g) = fam_setup(&csr);
+        let out = radii(&mut r, &g, 3);
+        // Leaf-to-leaf distance is 2; center eccentricity 1.
+        assert_eq!(out.radii[0], 1);
+        assert!(out.radii[1..].iter().all(|&x| x == 2));
+        assert_eq!(out.rounds, 3); // bits keep merging for a couple rounds
+    }
+
+    #[test]
+    fn samples_at_most_64_sources() {
+        let csr = rmat(1 << 9, 2_000, 0.57, 0.19, 0.19, 17);
+        let (mut r, g) = fam_setup(&csr);
+        let out = radii(&mut r, &g, 5);
+        assert_eq!(out.sources.len(), 64);
+        let mut uniq = out.sources.clone();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 64, "sources must be distinct");
+    }
+}

@@ -1,0 +1,212 @@
+//! In-memory CSR graph storage.
+//!
+//! Ligra's representation (§V): "the sparse CSR format to enable efficient
+//! storage of large real-world graphs by splitting the vertex and edge
+//! data" — an offsets array (the *vertex data*, one `u64` per vertex + 1)
+//! and an adjacency array (the *edge data*, one `u32` vertex id per edge).
+//! That split is exactly what SODA's caching strategies exploit: vertex
+//! data is small and hot (static cache), edge data is large and scanned
+//! (dynamic cache).
+//!
+//! All evaluation graphs are symmetrized, matching Ligra's usage for the
+//! five benchmark applications.
+
+/// Vertex id type (u32 covers the scaled graphs comfortably).
+pub type VertexId = u32;
+
+/// Compressed sparse row graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrGraph {
+    /// Offset of each vertex's adjacency list; length `n + 1`.
+    pub offsets: Vec<u64>,
+    /// Concatenated adjacency lists; length `m`.
+    pub edges: Vec<VertexId>,
+}
+
+impl CsrGraph {
+    /// Build from an edge list over `n` vertices. Self-loops are kept,
+    /// duplicate edges are kept (multigraph semantics, like Ligra's input).
+    pub fn from_edges(n: usize, list: &[(VertexId, VertexId)]) -> CsrGraph {
+        let mut degree = vec![0u64; n];
+        for &(u, _) in list {
+            degree[u as usize] += 1;
+        }
+        let mut offsets = vec![0u64; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + degree[v];
+        }
+        let mut cursor = offsets.clone();
+        let mut edges = vec![0 as VertexId; list.len()];
+        for &(u, v) in list {
+            let c = &mut cursor[u as usize];
+            edges[*c as usize] = v;
+            *c += 1;
+        }
+        // Sort each adjacency list for deterministic iteration + locality.
+        for v in 0..n {
+            let (s, e) = (offsets[v] as usize, offsets[v + 1] as usize);
+            edges[s..e].sort_unstable();
+        }
+        CsrGraph { offsets, edges }
+    }
+
+    /// Build a symmetrized graph from a directed edge list (adds the
+    /// reverse of every edge, deduplicating).
+    pub fn from_edges_symmetric(n: usize, list: &[(VertexId, VertexId)]) -> CsrGraph {
+        let mut both = Vec::with_capacity(list.len() * 2);
+        for &(u, v) in list {
+            both.push((u, v));
+            both.push((v, u));
+        }
+        both.sort_unstable();
+        both.dedup();
+        CsrGraph::from_edges(n, &both)
+    }
+
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn m(&self) -> u64 {
+        self.edges.len() as u64
+    }
+
+    pub fn degree(&self, v: VertexId) -> u64 {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let (s, e) = (
+            self.offsets[v as usize] as usize,
+            self.offsets[v as usize + 1] as usize,
+        );
+        &self.edges[s..e]
+    }
+
+    /// Average degree E/V (the Table II column).
+    pub fn avg_degree(&self) -> f64 {
+        self.m() as f64 / self.n().max(1) as f64
+    }
+
+    /// Transposed graph (equal to self for symmetric graphs).
+    pub fn transpose(&self) -> CsrGraph {
+        let n = self.n();
+        let mut list = Vec::with_capacity(self.edges.len());
+        for u in 0..n as VertexId {
+            for &v in self.neighbors(u) {
+                list.push((v, u));
+            }
+        }
+        CsrGraph::from_edges(n, &list)
+    }
+
+    /// Is every edge mirrored?
+    pub fn is_symmetric(&self) -> bool {
+        for u in 0..self.n() as VertexId {
+            for &v in self.neighbors(u) {
+                if self.neighbors(v).binary_search(&u).is_err() {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Bytes of the vertex data (offsets array) — the static-cache target.
+    pub fn vertex_bytes(&self) -> u64 {
+        (self.offsets.len() * std::mem::size_of::<u64>()) as u64
+    }
+
+    /// Bytes of the edge data (adjacency array) — the dynamic-cache target.
+    pub fn edge_bytes(&self) -> u64 {
+        (self.edges.len() * std::mem::size_of::<VertexId>()) as u64
+    }
+
+    /// Serialize offsets to little-endian bytes (the FAM vertex object).
+    pub fn offsets_bytes_le(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.offsets.len() * 8);
+        for &o in &self.offsets {
+            out.extend_from_slice(&o.to_le_bytes());
+        }
+        out
+    }
+
+    /// Serialize edges to little-endian bytes (the FAM edge object).
+    pub fn edges_bytes_le(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.edges.len() * 4);
+        for &e in &self.edges {
+            out.extend_from_slice(&e.to_le_bytes());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> CsrGraph {
+        // 0-1, 0-2, 1-3, 2-3 undirected.
+        CsrGraph::from_edges_symmetric(4, &[(0, 1), (0, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn from_edges_builds_sorted_adjacency() {
+        let g = CsrGraph::from_edges(3, &[(0, 2), (0, 1), (2, 0)]);
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[] as &[u32]);
+        assert_eq!(g.neighbors(2), &[0]);
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn symmetric_construction_mirrors_edges() {
+        let g = diamond();
+        assert!(g.is_symmetric());
+        assert_eq!(g.m(), 8);
+        assert_eq!(g.neighbors(3), &[1, 2]);
+    }
+
+    #[test]
+    fn transpose_of_symmetric_is_identity() {
+        let g = diamond();
+        assert_eq!(g.transpose(), g);
+    }
+
+    #[test]
+    fn transpose_reverses_directed_edges() {
+        let g = CsrGraph::from_edges(3, &[(0, 1), (0, 2)]);
+        let t = g.transpose();
+        assert_eq!(t.neighbors(1), &[0]);
+        assert_eq!(t.neighbors(2), &[0]);
+        assert_eq!(t.neighbors(0), &[] as &[u32]);
+        assert!(!g.is_symmetric());
+    }
+
+    #[test]
+    fn byte_serialization_roundtrips() {
+        let g = diamond();
+        let ob = g.offsets_bytes_le();
+        let eb = g.edges_bytes_le();
+        assert_eq!(ob.len() as u64, g.vertex_bytes());
+        assert_eq!(eb.len() as u64, g.edge_bytes());
+        let o0 = u64::from_le_bytes(ob[8..16].try_into().unwrap());
+        assert_eq!(o0, g.offsets[1]);
+        let e0 = u32::from_le_bytes(eb[0..4].try_into().unwrap());
+        assert_eq!(e0, g.edges[0]);
+    }
+
+    #[test]
+    fn avg_degree() {
+        let g = diamond();
+        assert!((g.avg_degree() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_edges_kept() {
+        let g = CsrGraph::from_edges(2, &[(0, 1), (0, 1)]);
+        assert_eq!(g.degree(0), 2);
+    }
+}

@@ -1,0 +1,220 @@
+//! FAM-backed graph — the case-study integration (§V).
+//!
+//! "We use Ligra [...] to utilize FAM by changing the graph construction
+//! routine to use the allocation APIs in SODA. [...] the vertex and edge
+//! data structures are allocated and backed on a network-attached memory
+//! node." The *vertex data* (CSR offsets, `(n+1)·8` bytes) and *edge data*
+//! (adjacency, `m·4` bytes) become two FAM objects; edge data is typically
+//! an order of magnitude larger, which is why the experiments pin vertex
+//! data statically and cache edge data dynamically.
+//!
+//! Mutable per-vertex algorithm state (parents, ranks, labels) stays in
+//! ordinary host memory, as in Ligra.
+
+use super::csr::{CsrGraph, VertexId};
+use crate::host::{FamHandle, HostAgent, Placement};
+use crate::sim::Ns;
+
+/// How the FAM objects get their content.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BuildMode {
+    /// `SODA_alloc(bytes, file_name)`: the memory node pre-loads the graph
+    /// file server-side (§IV-D) — no construction traffic from the host.
+    FileBacked,
+    /// Anonymous objects written through the host agent's buffer (exercises
+    /// the dirty-eviction / write-back path).
+    WriteThrough,
+}
+
+/// A graph whose CSR arrays live in fabric-attached memory.
+#[derive(Clone, Debug)]
+pub struct FamGraph {
+    pub n: usize,
+    pub m: u64,
+    /// FAM object holding `(n+1)` little-endian u64 offsets (vertex data).
+    pub offsets: FamHandle,
+    /// FAM object holding `m` little-endian u32 targets (edge data).
+    pub edges: FamHandle,
+}
+
+impl FamGraph {
+    /// Move a CSR graph into FAM through `agent`. Returns the graph and the
+    /// completion time of construction.
+    pub fn build(
+        agent: &mut HostAgent,
+        now: Ns,
+        csr: &CsrGraph,
+        mode: BuildMode,
+    ) -> (FamGraph, Ns) {
+        let n = csr.n();
+        let m = csr.m();
+        let off_bytes = csr.offsets_bytes_le();
+        let edge_bytes = csr.edges_bytes_le();
+        let (off_len, edge_len) = (off_bytes.len() as u64, edge_bytes.len() as u64);
+        match mode {
+            BuildMode::FileBacked => {
+                let (offsets, t1) =
+                    agent.alloc(now, "graph.offsets", off_len, Some(off_bytes), Placement::Static);
+                let (edges, t2) =
+                    agent.alloc(t1, "graph.edges", edge_len, Some(edge_bytes), Placement::Default);
+                (FamGraph { n, m, offsets, edges }, t2)
+            }
+            BuildMode::WriteThrough => {
+                let (offsets, t1) =
+                    agent.alloc(now, "graph.offsets", off_len, None, Placement::Static);
+                let (edges, t2) =
+                    agent.alloc(t1, "graph.edges", edge_len, None, Placement::Default);
+                let t3 = agent.write_bytes(t2, 0, offsets.region, 0, &off_bytes);
+                let t4 = agent.write_bytes(t3, 0, edges.region, 0, &edge_bytes);
+                let t5 = agent.flush(t4);
+                (FamGraph { n, m, offsets, edges }, t5)
+            }
+        }
+    }
+
+    /// Total FAM footprint (sizes the page buffer at 1/3, §V).
+    pub fn footprint_bytes(&self) -> u64 {
+        self.offsets.bytes + self.edges.bytes
+    }
+
+    /// Pin the vertex data in the DPU static cache (the §V static-caching
+    /// configuration). Returns completion, or `None` without a DPU.
+    pub fn pin_vertices_static(&self, agent: &mut HostAgent, now: Ns) -> Option<Ns> {
+        agent.pin_static(now, "graph.offsets")
+    }
+
+    /// Read `offsets[v]` and `offsets[v+1]` (two FAM touches, usually the
+    /// same page). Returns `(start, end, completion)`.
+    pub fn offset_pair(
+        &self,
+        agent: &mut HostAgent,
+        now: Ns,
+        tid: usize,
+        v: VertexId,
+    ) -> (u64, u64, Ns) {
+        let mut buf = [0u8; 16];
+        let t = agent.read_bytes(now, tid, self.offsets.region, v as u64 * 8, &mut buf);
+        let start = u64::from_le_bytes(buf[0..8].try_into().unwrap());
+        let end = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+        debug_assert!(end >= start && end <= self.m);
+        (start, end, t)
+    }
+
+    /// Degree of `v` (charged as an offset read).
+    pub fn degree(&self, agent: &mut HostAgent, now: Ns, tid: usize, v: VertexId) -> (u64, Ns) {
+        let (s, e, t) = self.offset_pair(agent, now, tid, v);
+        (e - s, t)
+    }
+
+    /// Read `v`'s adjacency list into `out` (clears it first). Returns
+    /// completion time. `scratch` is reused byte storage.
+    pub fn neighbors_into(
+        &self,
+        agent: &mut HostAgent,
+        now: Ns,
+        tid: usize,
+        v: VertexId,
+        scratch: &mut Vec<u8>,
+        out: &mut Vec<VertexId>,
+    ) -> Ns {
+        let (start, end, t0) = self.offset_pair(agent, now, tid, v);
+        out.clear();
+        let deg = (end - start) as usize;
+        if deg == 0 {
+            return t0;
+        }
+        scratch.resize(deg * 4, 0);
+        let t1 = agent.read_bytes(t0, tid, self.edges.region, start * 4, scratch);
+        out.reserve(deg);
+        for c in scratch.chunks_exact(4) {
+            out.push(u32::from_le_bytes(c.try_into().unwrap()));
+        }
+        t1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::MemServerStore;
+    use crate::coordinator::cluster::Cluster;
+    use crate::coordinator::config::ClusterConfig;
+    use crate::graph::gen::toys;
+    use crate::host::agent::HostTiming;
+
+    fn agent() -> (HostAgent, Cluster) {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let chunk = cluster.config().chunk_bytes;
+        let a = HostAgent::new(
+            "p0",
+            Box::new(MemServerStore::new(cluster.clone())),
+            64 * chunk,
+            chunk,
+            1.0,
+            4,
+            4,
+            2,
+            HostTiming::default(),
+        );
+        (a, cluster)
+    }
+
+    #[test]
+    fn file_backed_graph_reads_back_correctly() {
+        let (mut a, _c) = agent();
+        let csr = toys::two_triangles();
+        let (g, t0) = FamGraph::build(&mut a, 0, &csr, BuildMode::FileBacked);
+        assert_eq!(g.n, 6);
+        assert_eq!(g.m, csr.m());
+        let mut scratch = Vec::new();
+        let mut nbrs = Vec::new();
+        let mut t = t0;
+        for v in 0..6u32 {
+            t = g.neighbors_into(&mut a, t, 0, v, &mut scratch, &mut nbrs);
+            assert_eq!(nbrs.as_slice(), csr.neighbors(v), "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn write_through_matches_file_backed() {
+        let (mut a1, _c1) = agent();
+        let (mut a2, _c2) = agent();
+        let csr = toys::binary_tree(3);
+        let (g1, t1) = FamGraph::build(&mut a1, 0, &csr, BuildMode::FileBacked);
+        let (g2, t2) = FamGraph::build(&mut a2, 0, &csr, BuildMode::WriteThrough);
+        assert!(t2 > t1, "write-through construction costs more time");
+        let mut s = Vec::new();
+        let (mut n1, mut n2) = (Vec::new(), Vec::new());
+        for v in 0..csr.n() as u32 {
+            g1.neighbors_into(&mut a1, t1, 0, v, &mut s, &mut n1);
+            g2.neighbors_into(&mut a2, t2, 0, v, &mut s, &mut n2);
+            assert_eq!(n1, n2);
+        }
+        assert!(a2.stats().writebacks > 0, "construction wrote back dirty pages");
+    }
+
+    #[test]
+    fn degrees_and_offsets() {
+        let (mut a, _c) = agent();
+        let csr = toys::star(9);
+        let (g, t0) = FamGraph::build(&mut a, 0, &csr, BuildMode::FileBacked);
+        let (d0, t1) = g.degree(&mut a, t0, 0, 0);
+        assert_eq!(d0, 8);
+        let (d3, _) = g.degree(&mut a, t1, 0, 3);
+        assert_eq!(d3, 1);
+        assert_eq!(g.footprint_bytes(), (10 * 8 + 16 * 4) as u64);
+    }
+
+    #[test]
+    fn vertex_object_is_static_placement() {
+        let (mut a, _c) = agent();
+        let csr = toys::path(4);
+        let (g, _) = FamGraph::build(&mut a, 0, &csr, BuildMode::FileBacked);
+        assert_eq!(g.offsets.placement, Placement::Static);
+        assert_eq!(g.edges.placement, Placement::Default);
+        // Edge object ~an order of magnitude larger on real graphs; here
+        // just check both exist and sizes are right.
+        assert_eq!(g.offsets.bytes, 5 * 8);
+        assert_eq!(g.edges.bytes, 6 * 4);
+    }
+}

@@ -1,0 +1,172 @@
+//! Graph I/O: text edge lists and a compact binary CSR format.
+//!
+//! The binary format is what `SODA_alloc(bytes, file_name)` pre-loads on
+//! the memory node; the text format covers SNAP/SuiteSparse-style inputs.
+
+use super::csr::{CsrGraph, VertexId};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SODACSR1";
+
+/// Parse a whitespace-separated edge list (`u v` per line, `#` comments).
+/// Vertex count = max id + 1 unless `n` is given.
+pub fn parse_edge_list(text: &str, n: Option<usize>, symmetric: bool) -> Result<CsrGraph> {
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut max_id = 0u32;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (u, v) = match (it.next(), it.next()) {
+            (Some(u), Some(v)) => (u, v),
+            _ => bail!("line {}: expected 'u v'", lineno + 1),
+        };
+        let u: u32 = u.parse().with_context(|| format!("line {}", lineno + 1))?;
+        let v: u32 = v.parse().with_context(|| format!("line {}", lineno + 1))?;
+        max_id = max_id.max(u).max(v);
+        edges.push((u, v));
+    }
+    let n = n.unwrap_or(max_id as usize + 1);
+    if (max_id as usize) >= n {
+        bail!("vertex id {max_id} out of range for n = {n}");
+    }
+    Ok(if symmetric {
+        CsrGraph::from_edges_symmetric(n, &edges)
+    } else {
+        CsrGraph::from_edges(n, &edges)
+    })
+}
+
+/// Serialize to the binary CSR format.
+pub fn write_binary(g: &CsrGraph, w: &mut impl Write) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&(g.n() as u64).to_le_bytes())?;
+    w.write_all(&g.m().to_le_bytes())?;
+    w.write_all(&g.offsets_bytes_le())?;
+    w.write_all(&g.edges_bytes_le())?;
+    Ok(())
+}
+
+/// Read the binary CSR format.
+pub fn read_binary(r: &mut impl Read) -> Result<CsrGraph> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a SODA CSR file");
+    }
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    r.read_exact(&mut buf8)?;
+    let m = u64::from_le_bytes(buf8) as usize;
+    if n > (1 << 33) || m > (1 << 36) {
+        bail!("implausible CSR header: n = {n}, m = {m}");
+    }
+    let mut offsets = vec![0u64; n + 1];
+    for o in offsets.iter_mut() {
+        r.read_exact(&mut buf8)?;
+        *o = u64::from_le_bytes(buf8);
+    }
+    let mut buf4 = [0u8; 4];
+    let mut edges = vec![0u32; m];
+    for e in edges.iter_mut() {
+        r.read_exact(&mut buf4)?;
+        *e = u32::from_le_bytes(buf4);
+    }
+    if offsets[n] != m as u64 {
+        bail!("corrupt CSR: offsets[n] = {} != m = {m}", offsets[n]);
+    }
+    if offsets.windows(2).any(|w| w[0] > w[1]) {
+        bail!("corrupt CSR: offsets are not monotone");
+    }
+    Ok(CsrGraph { offsets, edges })
+}
+
+/// Save to a file.
+pub fn save(g: &CsrGraph, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_binary(g, &mut f)
+}
+
+/// Load from a file (binary if magic matches, else text edge list).
+pub fn load(path: impl AsRef<Path>) -> Result<CsrGraph> {
+    let mut f = std::fs::File::open(&path)?;
+    let mut magic = [0u8; 8];
+    use std::io::Seek;
+    let is_binary = f.read_exact(&mut magic).is_ok() && &magic == MAGIC;
+    f.seek(std::io::SeekFrom::Start(0))?;
+    if is_binary {
+        read_binary(&mut BufReader::new(f))
+    } else {
+        let mut text = String::new();
+        f.read_to_string(&mut text)?;
+        parse_edge_list(&text, None, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{rmat, toys};
+
+    #[test]
+    fn edge_list_parsing() {
+        let g = parse_edge_list("# comment\n0 1\n1 2\n\n2 0\n", None, false).unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.neighbors(0), &[1]);
+    }
+
+    #[test]
+    fn edge_list_symmetric_mode() {
+        let g = parse_edge_list("0 1\n", None, true).unwrap();
+        assert_eq!(g.neighbors(1), &[0]);
+    }
+
+    #[test]
+    fn edge_list_errors() {
+        assert!(parse_edge_list("0\n", None, false).is_err());
+        assert!(parse_edge_list("0 x\n", None, false).is_err());
+        assert!(parse_edge_list("0 9\n", Some(3), false).is_err());
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = rmat(1 << 8, 1_000, 0.57, 0.19, 0.19, 3);
+        let mut buf = Vec::new();
+        write_binary(&g, &mut buf).unwrap();
+        let back = read_binary(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        assert!(read_binary(&mut &b"NOTACSRX"[..]).is_err());
+        let g = toys::path(3);
+        let mut buf = Vec::new();
+        write_binary(&g, &mut buf).unwrap();
+        buf[20] ^= 0xFF; // corrupt the edge-count header field
+        assert!(read_binary(&mut buf.as_slice()).is_err());
+        buf[20] ^= 0xFF;
+        buf[32] ^= 0xFF; // corrupt offsets[1]
+        assert!(read_binary(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_and_text_autodetect() {
+        let dir = std::env::temp_dir();
+        let bin = dir.join("soda_test_graph.bin");
+        let txt = dir.join("soda_test_graph.txt");
+        let g = toys::two_triangles();
+        save(&g, &bin).unwrap();
+        assert_eq!(load(&bin).unwrap(), g);
+        std::fs::write(&txt, "0 1\n1 2\n2 0\n3 4\n4 5\n5 3\n").unwrap();
+        assert_eq!(load(&txt).unwrap(), g);
+        let _ = std::fs::remove_file(bin);
+        let _ = std::fs::remove_file(txt);
+    }
+}

@@ -1,0 +1,22 @@
+//! Ligra-like parallel graph-processing framework over FAM (§V).
+//!
+//! CSR storage split into vertex/edge FAM objects, a frontier abstraction
+//! with push/pull direction switching, modeled OpenMP-style threading, the
+//! Table II graph generators, and the five benchmark applications.
+
+pub mod apps;
+pub mod csr;
+pub mod fam_graph;
+pub mod gen;
+pub mod io;
+pub mod ops;
+pub mod runner;
+pub mod subset;
+
+pub use apps::App;
+pub use csr::{CsrGraph, VertexId};
+pub use fam_graph::{BuildMode, FamGraph};
+pub use gen::{GraphSpec, TableII};
+pub use ops::{edge_map, vertex_map, Direction, EdgeMapOpts};
+pub use runner::{ComputeModel, GraphRunner};
+pub use subset::VertexSubset;

@@ -1,0 +1,309 @@
+//! Ligra-style graph primitives: `edge_map` and `vertex_map`.
+//!
+//! `edge_map(G, F, update, cond)` applies `update(u, v)` over edges leaving
+//! the frontier `F`, returning the set of newly activated targets. Like
+//! Ligra it switches between:
+//!
+//! * **sparse (push)** — iterate frontier vertices, scan their out-edges;
+//! * **dense (pull)**  — iterate all eligible vertices, scan their in-edges
+//!   until one is in the frontier (optionally with early exit).
+//!
+//! All adjacency reads go through the FAM paging path, so direction
+//! switching changes the page access pattern — sparse touches scattered
+//! adjacency pages, dense streams the whole edge array — which is what
+//! makes the DPU prefetcher's hit rate application-dependent (Fig 10).
+//!
+//! Graphs are symmetric (§V inputs), so in-edges == out-edges.
+
+use super::csr::VertexId;
+use super::fam_graph::FamGraph;
+use super::runner::GraphRunner;
+use super::subset::VertexSubset;
+use crate::sim::Ns;
+
+/// Dense/sparse selection for one edge_map call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Auto,
+    ForceSparse,
+    ForceDense,
+}
+
+/// Options controlling one edge_map invocation.
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeMapOpts {
+    pub direction: Direction,
+    /// Dense mode: stop scanning a vertex's in-edges once `cond(v)` turns
+    /// false (BFS-style) — Ligra's edgeMapDense early break.
+    pub early_exit: bool,
+}
+
+impl Default for EdgeMapOpts {
+    fn default() -> Self {
+        EdgeMapOpts {
+            direction: Direction::Auto,
+            early_exit: false,
+        }
+    }
+}
+
+/// Apply `update` over edges out of `frontier`; returns newly activated
+/// vertices. `update(u, v) -> bool` must return true exactly when it
+/// activates `v` for the next frontier (first-touch semantics are the
+/// caller's responsibility, e.g. via a parents/visited array).
+/// `cond(v) -> bool` gates eligible targets.
+pub fn edge_map(
+    r: &mut GraphRunner,
+    g: &FamGraph,
+    frontier: &VertexSubset,
+    mut update: impl FnMut(VertexId, VertexId) -> bool,
+    cond: impl Fn(VertexId) -> bool,
+    opts: EdgeMapOpts,
+) -> VertexSubset {
+    let dense = match opts.direction {
+        Direction::ForceSparse => false,
+        Direction::ForceDense => true,
+        Direction::Auto => frontier.should_densify(g.n),
+    };
+    if dense {
+        edge_map_dense(r, g, frontier, &mut update, &cond, opts.early_exit)
+    } else {
+        edge_map_sparse(r, g, frontier, &mut update, &cond)
+    }
+}
+
+fn edge_map_sparse(
+    r: &mut GraphRunner,
+    g: &FamGraph,
+    frontier: &VertexSubset,
+    update: &mut impl FnMut(VertexId, VertexId) -> bool,
+    cond: &impl Fn(VertexId) -> bool,
+) -> VertexSubset {
+    let items = frontier.to_sparse();
+    let cm = r.compute;
+    let mut next = Vec::new();
+    let mut scratch = Vec::new();
+    let mut nbrs: Vec<VertexId> = Vec::new();
+    r.parallel_chunks(&items, cm.grain_sparse, |agent, tid, u, now| {
+        let t = g.neighbors_into(agent, now, tid, u, &mut scratch, &mut nbrs);
+        let mut compute = cm.per_vertex_ns;
+        for &v in &nbrs {
+            compute += cm.per_edge_ns;
+            if cond(v) && update(u, v) {
+                next.push(v);
+            }
+        }
+        t + compute
+    });
+    VertexSubset::from_vertices(next)
+}
+
+fn edge_map_dense(
+    r: &mut GraphRunner,
+    g: &FamGraph,
+    frontier: &VertexSubset,
+    update: &mut impl FnMut(VertexId, VertexId) -> bool,
+    cond: &impl Fn(VertexId) -> bool,
+    early_exit: bool,
+) -> VertexSubset {
+    let fd = frontier.to_dense(g.n);
+    let all: Vec<VertexId> = (0..g.n as VertexId).collect();
+    let cm = r.compute;
+    let mut next = Vec::new();
+    let mut scratch = Vec::new();
+    let mut nbrs: Vec<VertexId> = Vec::new();
+    r.parallel_chunks(&all, cm.grain_dense, |agent, tid, v, now| {
+        if !cond(v) {
+            return now + cm.per_skip_ns;
+        }
+        let t = g.neighbors_into(agent, now, tid, v, &mut scratch, &mut nbrs);
+        let mut compute = cm.per_vertex_ns;
+        let mut activated = false;
+        for &u in &nbrs {
+            compute += cm.per_edge_ns;
+            if fd.contains(u) && update(u, v) {
+                activated = true;
+            }
+            if early_exit && !cond(v) {
+                break;
+            }
+        }
+        if activated {
+            next.push(v);
+        }
+        t + compute
+    });
+    VertexSubset::from_vertices(next)
+}
+
+/// Apply `f` to every vertex in the subset (host-side state update; no FAM
+/// traffic unless `f` touches the agent — Ligra's vertexMap).
+pub fn vertex_map(
+    r: &mut GraphRunner,
+    subset: &VertexSubset,
+    mut f: impl FnMut(VertexId),
+) -> Ns {
+    let items = subset.to_sparse();
+    let cm = r.compute;
+    r.parallel_chunks(&items, cm.grain_dense, |_, _, v, now| {
+        f(v);
+        now + cm.per_vertex_ns
+    })
+}
+
+/// Sum of `weight(v)` over the subset with per-vertex charging — used for
+/// degree-sum style reductions.
+pub fn vertex_reduce<T: Copy + std::ops::AddAssign + Default>(
+    r: &mut GraphRunner,
+    subset: &VertexSubset,
+    mut weight: impl FnMut(VertexId) -> T,
+) -> T {
+    let mut acc = T::default();
+    vertex_map(r, subset, |v| {
+        let w = weight(v);
+        acc += w;
+    });
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::MemServerStore;
+    use crate::coordinator::cluster::Cluster;
+    use crate::coordinator::config::ClusterConfig;
+    use crate::graph::fam_graph::BuildMode;
+    use crate::graph::gen::toys;
+    use crate::host::agent::HostTiming;
+    use crate::host::HostAgent;
+
+    fn setup(csr: &crate::graph::csr::CsrGraph) -> (GraphRunner, FamGraph) {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let chunk = cluster.config().chunk_bytes;
+        let agent = HostAgent::new(
+            "p0",
+            Box::new(MemServerStore::new(cluster.clone())),
+            256 * chunk,
+            chunk,
+            1.0,
+            4,
+            4,
+            2,
+            HostTiming::default(),
+        );
+        let mut r = GraphRunner::new(agent, 4, 0);
+        let (g, t) = FamGraph::build(&mut r.agent, 0, csr, BuildMode::FileBacked);
+        r.set_clock(t);
+        (r, g)
+    }
+
+    #[test]
+    fn sparse_push_one_bfs_level() {
+        let csr = toys::path(5);
+        let (mut r, g) = setup(&csr);
+        let mut visited = vec![false; 5];
+        visited[0] = true;
+        let vc = std::cell::Cell::from_mut(visited.as_mut_slice()).as_slice_of_cells();
+        let next = edge_map(
+            &mut r,
+            &g,
+            &VertexSubset::single(0),
+            |_, v| {
+                if !vc[v as usize].get() {
+                    vc[v as usize].set(true);
+                    true
+                } else {
+                    false
+                }
+            },
+            |v| !vc[v as usize].get(),
+            EdgeMapOpts {
+                direction: Direction::ForceSparse,
+                ..Default::default()
+            },
+        );
+        assert_eq!(next.to_sparse(), vec![1]);
+        assert!(r.now() > 0);
+    }
+
+    #[test]
+    fn dense_pull_matches_sparse_push() {
+        let csr = toys::binary_tree(3);
+        let n = csr.n();
+        let run = |dir: Direction| {
+            let (mut r, g) = setup(&csr);
+            let mut visited = vec![false; n];
+            visited[0] = true;
+            let vc = std::cell::Cell::from_mut(visited.as_mut_slice()).as_slice_of_cells();
+            let mut frontier = VertexSubset::single(0);
+            let mut levels = Vec::new();
+            while !frontier.is_empty() {
+                levels.push(frontier.to_sparse());
+                frontier = edge_map(
+                    &mut r,
+                    &g,
+                    &frontier,
+                    |_, v| {
+                        if !vc[v as usize].get() {
+                            vc[v as usize].set(true);
+                            true
+                        } else {
+                            false
+                        }
+                    },
+                    |v| !vc[v as usize].get(),
+                    EdgeMapOpts {
+                        direction: dir,
+                        early_exit: dir == Direction::ForceDense,
+                    },
+                );
+            }
+            levels
+        };
+        assert_eq!(run(Direction::ForceSparse), run(Direction::ForceDense));
+    }
+
+    #[test]
+    fn auto_densifies_large_frontier() {
+        let csr = toys::star(16);
+        let (mut r, g) = setup(&csr);
+        // All leaves active (15/16 > 1/20) -> dense path exercises pull.
+        let frontier = VertexSubset::from_vertices((1..16).collect());
+        let mut hit_center = false;
+        let next = edge_map(
+            &mut r,
+            &g,
+            &frontier,
+            |_, v| {
+                if v == 0 && !hit_center {
+                    hit_center = true;
+                    true
+                } else {
+                    false
+                }
+            },
+            |v| v == 0,
+            EdgeMapOpts::default(),
+        );
+        assert_eq!(next.to_sparse(), vec![0]);
+    }
+
+    #[test]
+    fn vertex_map_applies_to_all() {
+        let csr = toys::path(6);
+        let (mut r, _g) = setup(&csr);
+        let mut count = 0;
+        let t0 = r.now();
+        vertex_map(&mut r, &VertexSubset::all(6), |_| count += 1);
+        assert_eq!(count, 6);
+        assert!(r.now() > t0);
+    }
+
+    #[test]
+    fn vertex_reduce_sums() {
+        let csr = toys::path(4);
+        let (mut r, _g) = setup(&csr);
+        let total: u64 = vertex_reduce(&mut r, &VertexSubset::all(4), |v| v as u64);
+        assert_eq!(total, 6);
+    }
+}

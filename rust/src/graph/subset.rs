@@ -1,0 +1,140 @@
+//! VertexSubset — Ligra's frontier abstraction.
+//!
+//! A frontier is either *sparse* (an explicit vertex list, cheap when small)
+//! or *dense* (a bitmap over all vertices, cheap when large). `edge_map`
+//! switches traversal direction based on the representation, following
+//! Ligra's push/pull optimization.
+
+use super::csr::VertexId;
+
+/// A set of active vertices.
+#[derive(Clone, Debug)]
+pub enum VertexSubset {
+    /// Explicit sorted vertex ids.
+    Sparse(Vec<VertexId>),
+    /// Bitmap + population count.
+    Dense { bits: Vec<bool>, count: usize },
+}
+
+impl VertexSubset {
+    pub fn empty() -> VertexSubset {
+        VertexSubset::Sparse(Vec::new())
+    }
+
+    pub fn single(v: VertexId) -> VertexSubset {
+        VertexSubset::Sparse(vec![v])
+    }
+
+    pub fn from_vertices(mut vs: Vec<VertexId>) -> VertexSubset {
+        vs.sort_unstable();
+        vs.dedup();
+        VertexSubset::Sparse(vs)
+    }
+
+    /// All `n` vertices (dense).
+    pub fn all(n: usize) -> VertexSubset {
+        VertexSubset::Dense {
+            bits: vec![true; n],
+            count: n,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            VertexSubset::Sparse(v) => v.len(),
+            VertexSubset::Dense { count, .. } => *count,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn contains(&self, v: VertexId) -> bool {
+        match self {
+            VertexSubset::Sparse(vs) => vs.binary_search(&v).is_ok(),
+            VertexSubset::Dense { bits, .. } => bits.get(v as usize).copied().unwrap_or(false),
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, VertexSubset::Dense { .. })
+    }
+
+    /// Convert to a dense bitmap over `n` vertices.
+    pub fn to_dense(&self, n: usize) -> VertexSubset {
+        match self {
+            VertexSubset::Dense { .. } => self.clone(),
+            VertexSubset::Sparse(vs) => {
+                let mut bits = vec![false; n];
+                for &v in vs {
+                    bits[v as usize] = true;
+                }
+                VertexSubset::Dense {
+                    bits,
+                    count: vs.len(),
+                }
+            }
+        }
+    }
+
+    /// Convert to a sorted sparse list.
+    pub fn to_sparse(&self) -> Vec<VertexId> {
+        match self {
+            VertexSubset::Sparse(vs) => vs.clone(),
+            VertexSubset::Dense { bits, .. } => bits
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b)
+                .map(|(i, _)| i as VertexId)
+                .collect(),
+        }
+    }
+
+    /// Ligra's representation/direction heuristic: switch to dense when the
+    /// frontier covers more than `1/threshold_frac` of the vertices.
+    pub fn should_densify(&self, n: usize) -> bool {
+        self.len() * 20 > n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_basics() {
+        let s = VertexSubset::from_vertices(vec![3, 1, 3, 2]);
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(2));
+        assert!(!s.contains(0));
+        assert!(!s.is_dense());
+        assert_eq!(s.to_sparse(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let s = VertexSubset::from_vertices(vec![0, 4, 7]);
+        let d = s.to_dense(8);
+        assert!(d.is_dense());
+        assert_eq!(d.len(), 3);
+        assert!(d.contains(4));
+        assert!(!d.contains(5));
+        assert_eq!(d.to_sparse(), vec![0, 4, 7]);
+    }
+
+    #[test]
+    fn all_and_empty() {
+        assert_eq!(VertexSubset::all(10).len(), 10);
+        assert!(VertexSubset::empty().is_empty());
+        assert_eq!(VertexSubset::single(5).to_sparse(), vec![5]);
+    }
+
+    #[test]
+    fn densify_heuristic() {
+        let small = VertexSubset::from_vertices(vec![1, 2]);
+        assert!(!small.should_densify(100));
+        let big = VertexSubset::from_vertices((0..10).collect());
+        assert!(big.should_densify(100));
+    }
+}

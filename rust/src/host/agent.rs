@@ -1,0 +1,516 @@
+//! The host agent (§III) — SODA's compute-node runtime.
+//!
+//! Manages the staging buffer for FAM data, monitors accesses to FAM-backed
+//! objects (the `userfaultfd` mechanism of §IV-D, realized here as an
+//! explicit `touch` API with identical interception points), issues
+//! requests on miss, and evicts dirty chunks when the buffer fills. The
+//! communication buffer is bound to the NUMA node closest to the NIC when
+//! NUMA-aware placement is enabled (§III) — the measured difference is the
+//! whole of Fig 3.
+
+use super::buffer::{BufferStats, PageBuffer, PageKey};
+use super::fam::{FamHandle, ObjectTable, Placement};
+use crate::backend::{FetchSource, RemoteStore};
+use crate::fabric::qp::QpPool;
+use crate::memnode::RegionId;
+use crate::sim::Ns;
+use crate::util::fxhash::FxHashMap;
+
+/// Host-side CPU cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct HostTiming {
+    /// uffd trap + handler dispatch + metadata lookup on a miss.
+    pub fault_trap_ns: Ns,
+    /// Cost of touching a resident page. Near zero: with uffd management a
+    /// hit is an ordinary mapped-memory access served by the MMU — the
+    /// runtime never sees it (the same reason eviction is fault-ordered).
+    pub hit_ns: Ns,
+    /// Buffer management per eviction.
+    pub evict_mgmt_ns: Ns,
+    /// Zero-fill of a first-touch anonymous page (no remote fetch needed).
+    pub zero_fill_ns: Ns,
+}
+
+impl Default for HostTiming {
+    fn default() -> Self {
+        HostTiming {
+            fault_trap_ns: 2_500,
+            hit_ns: 0,
+            evict_mgmt_ns: 300,
+            zero_fill_ns: 1_500,
+        }
+    }
+}
+
+/// Host agent statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HostStats {
+    pub faults: u64,
+    pub zero_fills: u64,
+    pub writebacks: u64,
+    /// Total fault stall time across threads (miss latency sum).
+    pub stall_ns: Ns,
+    /// Fetches by source: [Ssd, MemNode, DpuCache, DpuStatic].
+    pub sources: [u64; 4],
+}
+
+impl HostStats {
+    fn count(&mut self, src: FetchSource) {
+        let i = match src {
+            FetchSource::Ssd => 0,
+            FetchSource::MemNode => 1,
+            FetchSource::DpuCache => 2,
+            FetchSource::DpuStatic => 3,
+        };
+        self.sources[i] += 1;
+    }
+
+    pub fn fetched(&self, src: FetchSource) -> u64 {
+        let i = match src {
+            FetchSource::Ssd => 0,
+            FetchSource::MemNode => 1,
+            FetchSource::DpuCache => 2,
+            FetchSource::DpuStatic => 3,
+        };
+        self.sources[i]
+    }
+}
+
+/// A compute-node process's SODA runtime endpoint.
+pub struct HostAgent {
+    pub name: String,
+    buffer: PageBuffer,
+    store: Box<dyn RemoteStore>,
+    objects: ObjectTable,
+    qp: QpPool,
+    /// NUMA node holding the communication buffer.
+    pub numa_node: usize,
+    threads: usize,
+    timing: HostTiming,
+    chunk_bytes: u64,
+    /// Pages with meaningful remote content (anonymous first-touch pages
+    /// are zero-filled locally, like a kernel's zero page).
+    materialized: FxHashMap<RegionId, Vec<u64>>,
+    stats: HostStats,
+    /// Optional miss trace `(time, page)` for workload replay (Fig 8).
+    trace: Option<Vec<(Ns, PageKey)>>,
+}
+
+impl HostAgent {
+    /// `numa_aware` picks the NIC-local node (the libnuma binding of §IV-A);
+    /// otherwise the "default behavior" lands the buffer on node 0.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: impl Into<String>,
+        store: Box<dyn RemoteStore>,
+        buffer_bytes: u64,
+        chunk_bytes: u64,
+        evict_threshold: f64,
+        threads: usize,
+        qp_count: usize,
+        numa_node: usize,
+        timing: HostTiming,
+    ) -> Self {
+        Self::with_policy(
+            name,
+            store,
+            buffer_bytes,
+            chunk_bytes,
+            evict_threshold,
+            threads,
+            qp_count,
+            numa_node,
+            timing,
+            super::buffer::EvictPolicy::FaultFifo,
+        )
+    }
+
+    /// Like [`Self::new`] with an explicit buffer eviction policy (the
+    /// FaultFifo/AccessLru ablation of DESIGN.md §6c).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_policy(
+        name: impl Into<String>,
+        store: Box<dyn RemoteStore>,
+        buffer_bytes: u64,
+        chunk_bytes: u64,
+        evict_threshold: f64,
+        threads: usize,
+        qp_count: usize,
+        numa_node: usize,
+        timing: HostTiming,
+        policy: super::buffer::EvictPolicy,
+    ) -> Self {
+        HostAgent {
+            name: name.into(),
+            buffer: PageBuffer::with_policy(buffer_bytes, chunk_bytes, evict_threshold, policy),
+            store,
+            objects: ObjectTable::new(),
+            qp: QpPool::new(qp_count.max(1)),
+            numa_node,
+            threads: threads.max(1),
+            timing,
+            chunk_bytes,
+            materialized: FxHashMap::default(),
+            stats: HostStats::default(),
+            trace: None,
+        }
+    }
+
+    /// Start recording the miss (fault) trace.
+    pub fn enable_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    /// Take the recorded trace (stops recording).
+    pub fn take_trace(&mut self) -> Vec<(Ns, PageKey)> {
+        self.trace.take().unwrap_or_default()
+    }
+
+    pub fn chunk_bytes(&self) -> u64 {
+        self.chunk_bytes
+    }
+
+    pub fn buffer_stats(&self) -> BufferStats {
+        self.buffer.stats()
+    }
+
+    pub fn stats(&self) -> HostStats {
+        self.stats
+    }
+
+    pub fn store_name(&self) -> &'static str {
+        self.store.name()
+    }
+
+    pub fn object(&self, name: &str) -> Option<FamHandle> {
+        self.objects.get(name)
+    }
+
+    fn mark_materialized(&mut self, key: PageKey) {
+        let bits = self.materialized.entry(key.region).or_default();
+        let word = (key.page / 64) as usize;
+        if bits.len() <= word {
+            bits.resize(word + 1, 0);
+        }
+        bits[word] |= 1 << (key.page % 64);
+    }
+
+    fn is_materialized(&self, key: PageKey) -> bool {
+        self.materialized
+            .get(&key.region)
+            .map(|bits| {
+                let word = (key.page / 64) as usize;
+                word < bits.len() && bits[word] & (1 << (key.page % 64)) != 0
+            })
+            .unwrap_or(false)
+    }
+
+    fn mark_region_materialized(&mut self, region: RegionId, pages: u64) {
+        let words = (pages as usize).div_ceil(64);
+        self.materialized.insert(region, vec![u64::MAX; words]);
+    }
+
+    /// `SODA_alloc`: create a FAM-backed object. `file` pre-loads server-side
+    /// data (its pages are immediately materialized); anonymous objects
+    /// zero-fill on first touch. Returns the handle and completion time.
+    pub fn alloc(
+        &mut self,
+        now: Ns,
+        name: impl Into<String>,
+        bytes: u64,
+        file: Option<Vec<u8>>,
+        placement: Placement,
+    ) -> (FamHandle, Ns) {
+        let file_backed = file.is_some();
+        let (region, done) = self.store.alloc(now, bytes, file);
+        let handle = FamHandle {
+            region,
+            bytes,
+            placement,
+            writable: true,
+        };
+        if file_backed {
+            self.mark_region_materialized(region, handle.pages(self.chunk_bytes));
+        }
+        self.objects.insert(name, handle);
+        (handle, done)
+    }
+
+    /// Map an object another process allocated (read-only sharing; §III
+    /// restricts writable mappings to single clients).
+    pub fn map_shared(&mut self, name: impl Into<String>, mut handle: FamHandle) -> FamHandle {
+        handle.writable = false;
+        self.mark_region_materialized(handle.region, handle.pages(self.chunk_bytes));
+        self.objects.insert(name, handle);
+        handle
+    }
+
+    /// Free an object and its region.
+    pub fn dealloc(&mut self, now: Ns, name: &str) -> Option<Ns> {
+        let handle = self.objects.remove(name)?;
+        self.materialized.remove(&handle.region);
+        Some(self.store.free(now, handle.region))
+    }
+
+    /// The page-fault path: ensure `key` is resident, return completion.
+    pub fn touch_page(&mut self, now: Ns, tid: usize, key: PageKey, write: bool) -> Ns {
+        if self.buffer.access(key, write).is_some() {
+            return now + self.timing.hit_ns;
+        }
+        self.stats.faults += 1;
+        if let Some(trace) = &mut self.trace {
+            trace.push((now, key));
+        }
+        let mut t = now + self.timing.fault_trap_ns;
+
+        // Proactive eviction: keep the buffer under its threshold; dirty
+        // chunks are written back (the store decides whether the host blocks
+        // for durability or is released at DPU hand-off).
+        while self.buffer.over_threshold() || self.buffer.is_full() {
+            let Some(ev) = self.buffer.evict_lru() else { break };
+            t += self.timing.evict_mgmt_ns;
+            if ev.dirty {
+                let released = self.store.writeback(t, ev.key, &ev.data);
+                self.mark_materialized(ev.key);
+                self.stats.writebacks += 1;
+                t = released;
+            }
+            self.buffer.recycle(ev.data);
+        }
+
+        if self.is_materialized(key) {
+            // Post the request on this thread's QP and fetch.
+            t += self.qp.post_cost_ns(tid, self.threads, 1);
+            let frame = self.buffer.insert_with(key, write, |_| {});
+            let (done, src) = self.store.fetch(t, key, self.numa_node, frame);
+            self.stats.count(src);
+            self.stats.stall_ns += done.saturating_sub(now);
+            done
+        } else {
+            // Anonymous first touch: local zero-fill, no remote traffic.
+            self.buffer.insert_with(key, write, |d| d.fill(0));
+            self.stats.zero_fills += 1;
+            let done = t + self.timing.zero_fill_ns;
+            self.stats.stall_ns += done.saturating_sub(now);
+            done
+        }
+    }
+
+    /// Read `out.len()` bytes at `offset` of a region, faulting as needed.
+    pub fn read_bytes(
+        &mut self,
+        now: Ns,
+        tid: usize,
+        region: RegionId,
+        offset: u64,
+        out: &mut [u8],
+    ) -> Ns {
+        let mut t = now;
+        let mut done = 0usize;
+        while done < out.len() {
+            let abs = offset + done as u64;
+            let page = abs / self.chunk_bytes;
+            let in_page = (abs % self.chunk_bytes) as usize;
+            let take = ((self.chunk_bytes as usize - in_page).min(out.len() - done)).max(1);
+            let key = PageKey::new(region, page);
+            t = self.touch_page(t, tid, key, false);
+            let frame = self.buffer.peek(key).expect("just touched");
+            out[done..done + take].copy_from_slice(&frame[in_page..in_page + take]);
+            done += take;
+        }
+        t
+    }
+
+    /// Write bytes at `offset`, faulting pages (read-modify-write) and
+    /// marking them dirty.
+    pub fn write_bytes(
+        &mut self,
+        now: Ns,
+        tid: usize,
+        region: RegionId,
+        offset: u64,
+        data: &[u8],
+    ) -> Ns {
+        let mut t = now;
+        let mut done = 0usize;
+        while done < data.len() {
+            let abs = offset + done as u64;
+            let page = abs / self.chunk_bytes;
+            let in_page = (abs % self.chunk_bytes) as usize;
+            let take = ((self.chunk_bytes as usize - in_page).min(data.len() - done)).max(1);
+            let key = PageKey::new(region, page);
+            t = self.touch_page(t, tid, key, true);
+            let frame = self.buffer.peek(key).expect("just touched");
+            frame[in_page..in_page + take].copy_from_slice(&data[done..done + take]);
+            done += take;
+        }
+        t
+    }
+
+    /// Flush all dirty pages to the store (barrier / pre-pin sync).
+    pub fn flush(&mut self, now: Ns) -> Ns {
+        let mut t = now;
+        for ev in self.buffer.drain_dirty() {
+            let released = self.store.writeback(t, ev.key, &ev.data);
+            self.mark_materialized(ev.key);
+            self.stats.writebacks += 1;
+            t = released;
+            self.buffer.recycle(ev.data);
+        }
+        t
+    }
+
+    /// Pin an object into the DPU static cache (flushes first so the bulk
+    /// load sees current data). No-op `None` on DPU-less backends.
+    pub fn pin_static(&mut self, now: Ns, name: &str) -> Option<Ns> {
+        let handle = self.objects.get(name)?;
+        let t = self.flush(now);
+        self.store.pin_static(t, handle.region)
+    }
+
+    /// Drop every resident page (cold-cache boundary between experiment
+    /// phases; dirty pages are flushed first).
+    pub fn invalidate_buffer(&mut self, now: Ns) -> Ns {
+        let t = self.flush(now);
+        while let Some(ev) = self.buffer.evict_lru() {
+            debug_assert!(!ev.dirty);
+            self.buffer.recycle(ev.data);
+        }
+        t
+    }
+}
+
+impl std::fmt::Debug for HostAgent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HostAgent")
+            .field("name", &self.name)
+            .field("store", &self.store.name())
+            .field("resident_pages", &self.buffer.resident_pages())
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::MemServerStore;
+    use crate::coordinator::cluster::Cluster;
+    use crate::coordinator::config::ClusterConfig;
+
+    fn agent_with_buffer_pages(pages: u64) -> (HostAgent, Cluster) {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let chunk = cluster.config().chunk_bytes;
+        let store = Box::new(MemServerStore::new(cluster.clone()));
+        let agent = HostAgent::new(
+            "p0",
+            store,
+            pages * chunk,
+            chunk,
+            1.0,
+            4,
+            4,
+            2,
+            HostTiming::default(),
+        );
+        (agent, cluster)
+    }
+
+    #[test]
+    fn anonymous_first_touch_is_local_zero_fill() {
+        let (mut a, cluster) = agent_with_buffer_pages(8);
+        let (h, t0) = a.alloc(0, "x", 4 * a.chunk_bytes(), None, Placement::Default);
+        cluster.reset_stats();
+        let mut out = vec![0xFFu8; 16];
+        a.read_bytes(t0, 0, h.region, 0, &mut out);
+        assert!(out.iter().all(|&b| b == 0), "anon pages read as zero");
+        assert_eq!(cluster.network_stats().on_demand_bytes(), 0, "no remote fetch");
+        assert_eq!(a.stats().zero_fills, 1);
+    }
+
+    #[test]
+    fn write_then_evict_then_read_roundtrips_through_memnode() {
+        let (mut a, cluster) = agent_with_buffer_pages(2);
+        let chunk = a.chunk_bytes();
+        let (h, t0) = a.alloc(0, "x", 8 * chunk, None, Placement::Default);
+        // Write distinct bytes to 4 pages; buffer holds only 2 → evictions.
+        let mut t = t0;
+        for p in 0..4u64 {
+            let data = vec![p as u8 + 1; chunk as usize];
+            t = a.write_bytes(t, 0, h.region, p * chunk, &data);
+        }
+        assert!(a.stats().writebacks >= 2, "dirty evictions happened");
+        // Read back page 0 (evicted long ago) — must refetch real bytes.
+        let mut out = vec![0u8; chunk as usize];
+        a.read_bytes(t, 0, h.region, 0, &mut out);
+        assert!(out.iter().all(|&b| b == 1), "page 0 data survived eviction");
+        assert!(cluster.network_stats().writeback_bytes() > 0);
+    }
+
+    #[test]
+    fn buffer_hits_avoid_remote_traffic() {
+        let (mut a, cluster) = agent_with_buffer_pages(8);
+        let chunk = a.chunk_bytes();
+        let file = vec![7u8; (2 * chunk) as usize];
+        let (h, t0) = a.alloc(0, "f", 2 * chunk, Some(file), Placement::Default);
+        let mut out = vec![0u8; 64];
+        let t1 = a.read_bytes(t0, 0, h.region, 0, &mut out);
+        let before = cluster.network_stats().on_demand_bytes();
+        let t2 = a.read_bytes(t1, 0, h.region, 8, &mut out);
+        assert_eq!(cluster.network_stats().on_demand_bytes(), before, "hit: no traffic");
+        assert!(t2 - t1 < 1_000, "hit latency is sub-µs");
+    }
+
+    #[test]
+    fn read_spanning_pages() {
+        let (mut a, _cluster) = agent_with_buffer_pages(8);
+        let chunk = a.chunk_bytes();
+        let mut file = vec![0u8; (2 * chunk) as usize];
+        file[chunk as usize - 1] = 1;
+        file[chunk as usize] = 2;
+        let (h, t0) = a.alloc(0, "f", 2 * chunk, Some(file), Placement::Default);
+        let mut out = [0u8; 2];
+        a.read_bytes(t0, 0, h.region, chunk - 1, &mut out);
+        assert_eq!(out, [1, 2]);
+        assert_eq!(a.stats().faults, 2, "two pages faulted");
+    }
+
+    #[test]
+    fn flush_makes_data_durable_without_eviction() {
+        let (mut a, _c) = agent_with_buffer_pages(8);
+        let chunk = a.chunk_bytes();
+        let (h, t0) = a.alloc(0, "x", 2 * chunk, None, Placement::Default);
+        let data = vec![9u8; chunk as usize];
+        let t1 = a.write_bytes(t0, 0, h.region, 0, &data);
+        let t2 = a.flush(t1);
+        assert!(t2 > t1);
+        assert_eq!(a.stats().writebacks, 1);
+        // Invalidate and re-read: the data must come back from the store.
+        let t3 = a.invalidate_buffer(t2);
+        let mut out = vec![0u8; chunk as usize];
+        a.read_bytes(t3, 0, h.region, 0, &mut out);
+        assert!(out.iter().all(|&b| b == 9));
+    }
+
+    #[test]
+    fn dealloc_frees_the_region() {
+        let (mut a, cluster) = agent_with_buffer_pages(4);
+        let (_, t0) = a.alloc(0, "x", 4096, None, Placement::Default);
+        let used_before = cluster.with(|i| i.memnode.store.used());
+        assert!(used_before > 0);
+        a.dealloc(t0, "x").expect("object exists");
+        assert_eq!(cluster.with(|i| i.memnode.store.used()), 0);
+        assert!(a.object("x").is_none());
+    }
+
+    #[test]
+    fn stall_accounting_accumulates() {
+        let (mut a, _c) = agent_with_buffer_pages(4);
+        let chunk = a.chunk_bytes();
+        let (h, t0) = a.alloc(0, "f", chunk, Some(vec![1; chunk as usize]), Placement::Default);
+        let mut out = vec![0u8; 8];
+        a.read_bytes(t0, 0, h.region, 0, &mut out);
+        assert!(a.stats().stall_ns > 0);
+        assert_eq!(a.stats().fetched(FetchSource::MemNode), 1);
+    }
+}

@@ -1,0 +1,512 @@
+//! The host agent's unified page buffer (§III).
+//!
+//! One buffer is shared by *all* FAM-backed objects and managed in
+//! equal-sized data chunks (64 KB on the testbed) with an LRU policy, "to
+//! ensure the local buffer is distributed to FAM-backed objects as needed".
+//! Dirty chunks are written back on eviction; a *proactive eviction policy*
+//! triggers when the buffer reaches a threshold load factor so that
+//! evictions stay off the fault critical path.
+//!
+//! Implementation: fixed frame pool + intrusive doubly-linked LRU list over
+//! frame indices + hash map for residency lookup. No allocation on the
+//! steady-state fault path — evicted frames donate their storage to the
+//! incoming page.
+
+use crate::memnode::RegionId;
+use crate::util::fxhash::FxHashMap;
+
+/// Eviction policy of the unified buffer.
+///
+/// The paper's buffer is managed through `userfaultfd`, which only observes
+/// page *faults* — once a chunk is mapped, later accesses are invisible to
+/// the runtime (user space has no access bits). "LRU" therefore means
+/// least-recently-FAULTED ([`EvictPolicy::FaultFifo`]), and hot pages churn
+/// once the buffer turns over — the access-density effect that makes DPU
+/// static caching pay off (Fig 9). [`EvictPolicy::AccessLru`] is the
+/// idealized policy (as if access bits were free) kept for ablation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Order by fault time (what uffd-based management can implement).
+    FaultFifo,
+    /// Order by access time (idealized; requires hardware access bits).
+    AccessLru,
+}
+
+/// Identity of one page (chunk) of a FAM region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PageKey {
+    pub region: RegionId,
+    /// Page index within the region (page_offset / chunk_bytes).
+    pub page: u64,
+}
+
+impl PageKey {
+    pub fn new(region: RegionId, page: u64) -> Self {
+        PageKey { region, page }
+    }
+
+    /// Byte offset of this page within its region.
+    pub fn byte_offset(&self, chunk_bytes: u64) -> u64 {
+        self.page * chunk_bytes
+    }
+}
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Debug)]
+struct Frame {
+    key: PageKey,
+    data: Box<[u8]>,
+    dirty: bool,
+    prev: u32,
+    next: u32,
+}
+
+/// A page evicted from the buffer; `dirty` means it must be written back.
+#[derive(Debug)]
+pub struct EvictedPage {
+    pub key: PageKey,
+    pub data: Box<[u8]>,
+    pub dirty: bool,
+}
+
+/// Buffer statistics for the host agent's metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BufferStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions_clean: u64,
+    pub evictions_dirty: u64,
+}
+
+impl BufferStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Unified LRU page buffer.
+#[derive(Debug)]
+pub struct PageBuffer {
+    chunk_bytes: u64,
+    frames: Vec<Frame>,
+    map: FxHashMap<PageKey, u32>,
+    /// Most-recently-used frame.
+    head: u32,
+    /// Least-recently-used frame.
+    tail: u32,
+    /// Reusable storage from freed frames.
+    spare: Vec<Box<[u8]>>,
+    /// Frame slots vacated by eviction, reusable by the next insert.
+    free_slots: Vec<u32>,
+    capacity_pages: usize,
+    /// Proactive-eviction trigger: load factor above which the agent starts
+    /// evicting ahead of demand (§III, "triggered when the buffer reaches a
+    /// threshold load factor").
+    load_threshold: f64,
+    policy: EvictPolicy,
+    stats: BufferStats,
+}
+
+impl PageBuffer {
+    pub fn new(capacity_bytes: u64, chunk_bytes: u64, load_threshold: f64) -> Self {
+        Self::with_policy(capacity_bytes, chunk_bytes, load_threshold, EvictPolicy::FaultFifo)
+    }
+
+    pub fn with_policy(
+        capacity_bytes: u64,
+        chunk_bytes: u64,
+        load_threshold: f64,
+        policy: EvictPolicy,
+    ) -> Self {
+        assert!(chunk_bytes > 0 && chunk_bytes.is_power_of_two());
+        assert!((0.0..=1.0).contains(&load_threshold));
+        let capacity_pages = (capacity_bytes / chunk_bytes).max(1) as usize;
+        PageBuffer {
+            chunk_bytes,
+            frames: Vec::with_capacity(capacity_pages.min(1 << 20)),
+            map: FxHashMap::default(),
+            head: NIL,
+            tail: NIL,
+            spare: Vec::new(),
+            free_slots: Vec::new(),
+            capacity_pages,
+            load_threshold,
+            policy,
+            stats: BufferStats::default(),
+        }
+    }
+
+    pub fn policy(&self) -> EvictPolicy {
+        self.policy
+    }
+
+    pub fn chunk_bytes(&self) -> u64 {
+        self.chunk_bytes
+    }
+
+    pub fn capacity_pages(&self) -> usize {
+        self.capacity_pages
+    }
+
+    pub fn resident_pages(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn load_factor(&self) -> f64 {
+        self.map.len() as f64 / self.capacity_pages as f64
+    }
+
+    pub fn stats(&self) -> BufferStats {
+        self.stats
+    }
+
+    pub fn is_resident(&self, key: PageKey) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    fn unlink(&mut self, idx: u32) {
+        let (prev, next) = {
+            let f = &self.frames[idx as usize];
+            (f.prev, f.next)
+        };
+        if prev != NIL {
+            self.frames[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.frames[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, idx: u32) {
+        let old_head = self.head;
+        {
+            let f = &mut self.frames[idx as usize];
+            f.prev = NIL;
+            f.next = old_head;
+        }
+        if old_head != NIL {
+            self.frames[old_head as usize].prev = idx;
+        } else {
+            self.tail = idx;
+        }
+        self.head = idx;
+    }
+
+    /// Look up a page; on hit, the frame moves to MRU and its data is
+    /// returned. `write` marks the frame dirty. Counts hit/miss.
+    pub fn access(&mut self, key: PageKey, write: bool) -> Option<&mut [u8]> {
+        match self.map.get(&key).copied() {
+            Some(idx) => {
+                self.stats.hits += 1;
+                // AccessLru refreshes recency on every hit; FaultFifo cannot
+                // see hits (uffd only reports faults), so order is untouched.
+                if self.policy == EvictPolicy::AccessLru {
+                    self.unlink(idx);
+                    self.push_front(idx);
+                }
+                let f = &mut self.frames[idx as usize];
+                if write {
+                    f.dirty = true;
+                }
+                Some(&mut f.data)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Non-counting residency probe returning the data if present (used by
+    /// multi-page copies after an explicit fault).
+    pub fn peek(&mut self, key: PageKey) -> Option<&mut [u8]> {
+        let idx = self.map.get(&key).copied()?;
+        Some(&mut self.frames[idx as usize].data)
+    }
+
+    /// True if inserting one more page should be preceded by eviction(s)
+    /// under the proactive policy.
+    pub fn over_threshold(&self) -> bool {
+        (self.map.len() + 1) as f64 > self.load_threshold * self.capacity_pages as f64
+    }
+
+    /// True if the buffer is completely full (demand eviction required).
+    pub fn is_full(&self) -> bool {
+        self.map.len() >= self.capacity_pages
+    }
+
+    /// Evict the LRU page, returning it for potential writeback.
+    pub fn evict_lru(&mut self) -> Option<EvictedPage> {
+        let idx = self.tail;
+        if idx == NIL {
+            return None;
+        }
+        self.unlink(idx);
+        let frame = &mut self.frames[idx as usize];
+        let key = frame.key;
+        let dirty = frame.dirty;
+        // Donate a fresh empty box and steal the data.
+        let data = std::mem::replace(&mut frame.data, Box::from(&[][..]));
+        self.map.remove(&key);
+        // The frame slot becomes spare storage via the free index trick: we
+        // keep indices dense by tracking spares separately.
+        self.free_slots.push(idx);
+        if dirty {
+            self.stats.evictions_dirty += 1;
+        } else {
+            self.stats.evictions_clean += 1;
+        }
+        Some(EvictedPage { key, data, dirty })
+    }
+
+    /// Insert a page (must not be resident; caller evicts first if full).
+    /// `fill` populates the frame's storage. Returns a mutable view.
+    pub fn insert_with(
+        &mut self,
+        key: PageKey,
+        dirty: bool,
+        fill: impl FnOnce(&mut [u8]),
+    ) -> &mut [u8] {
+        assert!(!self.map.contains_key(&key), "page already resident: {key:?}");
+        assert!(
+            self.map.len() < self.capacity_pages,
+            "buffer full; evict before insert"
+        );
+        let idx = if let Some(idx) = self.free_slots.pop() {
+            let data = self
+                .spare
+                .pop()
+                .unwrap_or_else(|| vec![0u8; self.chunk_bytes as usize].into_boxed_slice());
+            let f = &mut self.frames[idx as usize];
+            f.key = key;
+            f.data = data;
+            f.dirty = dirty;
+            idx
+        } else {
+            let idx = self.frames.len() as u32;
+            self.frames.push(Frame {
+                key,
+                data: vec![0u8; self.chunk_bytes as usize].into_boxed_slice(),
+                dirty,
+                prev: NIL,
+                next: NIL,
+            });
+            idx
+        };
+        self.push_front(idx);
+        self.map.insert(key, idx);
+        let f = &mut self.frames[idx as usize];
+        fill(&mut f.data);
+        &mut f.data
+    }
+
+    /// Return spare storage (an evicted page's buffer after writeback) so
+    /// the steady state allocates nothing.
+    pub fn recycle(&mut self, data: Box<[u8]>) {
+        if data.len() == self.chunk_bytes as usize {
+            self.spare.push(data);
+        }
+    }
+
+    /// Drain every resident dirty page (flush at deallocation / barrier).
+    pub fn drain_dirty(&mut self) -> Vec<EvictedPage> {
+        let mut out = Vec::new();
+        let keys: Vec<PageKey> = self.map.keys().copied().collect();
+        for key in keys {
+            let idx = self.map[&key];
+            if self.frames[idx as usize].dirty {
+                self.unlink(idx);
+                self.map.remove(&key);
+                let frame = &mut self.frames[idx as usize];
+                let data = std::mem::replace(&mut frame.data, Box::from(&[][..]));
+                self.free_slots.push(idx);
+                self.stats.evictions_dirty += 1;
+                out.push(EvictedPage { key, data, dirty: true });
+            }
+        }
+        out.sort_by_key(|e| e.key);
+        out
+    }
+
+    /// LRU order of resident keys, most recent first (testing / debugging).
+    pub fn lru_order(&self) -> Vec<PageKey> {
+        let mut out = Vec::with_capacity(self.map.len());
+        let mut idx = self.head;
+        while idx != NIL {
+            out.push(self.frames[idx as usize].key);
+            idx = self.frames[idx as usize].next;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf(pages: usize) -> PageBuffer {
+        PageBuffer::new(pages as u64 * 4096, 4096, 1.0)
+    }
+
+    fn buf_lru(pages: usize) -> PageBuffer {
+        PageBuffer::with_policy(pages as u64 * 4096, 4096, 1.0, EvictPolicy::AccessLru)
+    }
+
+    fn k(p: u64) -> PageKey {
+        PageKey::new(1, p)
+    }
+
+    #[test]
+    fn insert_then_access_hits() {
+        let mut b = buf(4);
+        b.insert_with(k(0), false, |d| d[0] = 42);
+        let d = b.access(k(0), false).expect("resident");
+        assert_eq!(d[0], 42);
+        let s = b.stats();
+        assert_eq!((s.hits, s.misses), (1, 0));
+    }
+
+    #[test]
+    fn miss_counts() {
+        let mut b = buf(4);
+        assert!(b.access(k(9), false).is_none());
+        assert_eq!(b.stats().misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut b = buf_lru(3);
+        for p in 0..3 {
+            b.insert_with(k(p), false, |_| {});
+        }
+        // Touch page 0 so page 1 becomes LRU.
+        b.access(k(0), false);
+        let ev = b.evict_lru().unwrap();
+        assert_eq!(ev.key, k(1));
+        assert!(!ev.dirty);
+    }
+
+    #[test]
+    fn fault_fifo_ignores_hits() {
+        // Default policy: a hit must NOT refresh recency (uffd cannot see
+        // accesses), so the hot page 0 is still evicted first.
+        let mut b = buf(3);
+        for p in 0..3 {
+            b.insert_with(k(p), false, |_| {});
+        }
+        b.access(k(0), false); // hot, but invisible to the manager
+        let ev = b.evict_lru().unwrap();
+        assert_eq!(ev.key, k(0), "fault-FIFO evicts by fault order");
+        assert_eq!(b.policy(), EvictPolicy::FaultFifo);
+    }
+
+    #[test]
+    fn dirty_propagates_to_eviction() {
+        let mut b = buf(2);
+        b.insert_with(k(0), false, |_| {});
+        b.access(k(0), true); // write marks dirty
+        b.insert_with(k(1), false, |_| {});
+        b.access(k(1), false);
+        let ev = b.evict_lru().unwrap(); // page 0 is LRU
+        assert_eq!(ev.key, k(0));
+        assert!(ev.dirty);
+        assert_eq!(b.stats().evictions_dirty, 1);
+    }
+
+    #[test]
+    fn eviction_frees_capacity_and_data_survives() {
+        let mut b = buf(2);
+        b.insert_with(k(0), true, |d| d.fill(7));
+        b.insert_with(k(1), false, |_| {});
+        assert!(b.is_full());
+        let ev = b.evict_lru().unwrap();
+        assert!(ev.data.iter().all(|&x| x == 7), "evicted data intact");
+        assert!(!b.is_full());
+        b.recycle(ev.data);
+        b.insert_with(k(2), false, |_| {});
+        assert!(b.is_resident(k(2)));
+        assert!(!b.is_resident(k(0)));
+    }
+
+    #[test]
+    fn proactive_threshold() {
+        let mut b = PageBuffer::new(10 * 4096, 4096, 0.8);
+        for p in 0..7 {
+            b.insert_with(k(p), false, |_| {});
+        }
+        assert!(!b.over_threshold()); // 8th insert ok: 8 <= 0.8*10
+        b.insert_with(k(7), false, |_| {});
+        assert!(b.over_threshold()); // 9th insert would exceed
+    }
+
+    #[test]
+    fn unified_across_regions() {
+        let mut b = buf(4);
+        b.insert_with(PageKey::new(1, 0), false, |_| {});
+        b.insert_with(PageKey::new(2, 0), false, |_| {});
+        assert_eq!(b.resident_pages(), 2);
+        assert!(b.is_resident(PageKey::new(1, 0)));
+        assert!(b.is_resident(PageKey::new(2, 0)));
+        // Same page index, different region — distinct keys.
+        assert!(!b.is_resident(PageKey::new(3, 0)));
+    }
+
+    #[test]
+    fn drain_dirty_returns_only_dirty_sorted() {
+        let mut b = buf(8);
+        for p in 0..6 {
+            b.insert_with(k(p), p % 2 == 0, |_| {});
+        }
+        let drained = b.drain_dirty();
+        let keys: Vec<u64> = drained.iter().map(|e| e.key.page).collect();
+        assert_eq!(keys, vec![0, 2, 4]);
+        assert_eq!(b.resident_pages(), 3);
+    }
+
+    #[test]
+    fn lru_order_reflects_touches() {
+        let mut b = buf_lru(4);
+        for p in 0..3 {
+            b.insert_with(k(p), false, |_| {});
+        }
+        b.access(k(0), false);
+        assert_eq!(b.lru_order(), vec![k(0), k(2), k(1)]);
+    }
+
+    #[test]
+    fn reinsert_after_evict() {
+        let mut b = buf(1);
+        b.insert_with(k(0), false, |d| d[0] = 1);
+        let ev = b.evict_lru().unwrap();
+        b.recycle(ev.data);
+        b.insert_with(k(0), false, |d| d[0] = 2);
+        assert_eq!(b.access(k(0), false).unwrap()[0], 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "already resident")]
+    fn double_insert_panics() {
+        let mut b = buf(2);
+        b.insert_with(k(0), false, |_| {});
+        b.insert_with(k(0), false, |_| {});
+    }
+
+    #[test]
+    fn hit_rate() {
+        let mut b = buf(2);
+        b.insert_with(k(0), false, |_| {});
+        b.access(k(0), false);
+        b.access(k(1), false);
+        assert!((b.stats().hit_rate() - 0.5).abs() < 1e-9);
+    }
+}

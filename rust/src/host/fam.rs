@@ -1,0 +1,131 @@
+//! FAM-backed memory objects (§III, §IV-D).
+//!
+//! SODA interfaces with applications *only through memory objects*: a
+//! FAM-backed object is a contiguous region in the process's virtual
+//! address space whose backing pages live on a memory node. The C API is
+//!
+//! ```c
+//! void *anon_obj = SODA_alloc(&num_bytes, NULL);        // anonymous
+//! void *file_obj = SODA_alloc(&num_bytes, file_name);   // server-side file
+//! ```
+//!
+//! Here an object is a [`FamHandle`] whose `region` is the memory-node
+//! region id; "virtual addresses" are `(region, byte offset)` pairs. The
+//! host agent maintains the metadata and the mapping between FAM-backed
+//! objects and memory nodes, including the extended static-cache flag used
+//! to route requests (§III-A).
+
+use crate::memnode::RegionId;
+use std::collections::HashMap;
+
+/// Placement/caching hint for a FAM object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Normal FAM-backed object; dynamic caching (if enabled on the DPU)
+    /// applies.
+    Default,
+    /// Application requests this object be pinned in the DPU's static cache
+    /// once populated (small, high access density — e.g. vertex data).
+    Static,
+}
+
+/// A mapped FAM-backed memory object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FamHandle {
+    pub region: RegionId,
+    pub bytes: u64,
+    pub placement: Placement,
+    /// Writable mappings are restricted to a single client (§III: coherence
+    /// is avoided, not solved — snoop/directory protocols are out of scope).
+    pub writable: bool,
+}
+
+impl FamHandle {
+    pub fn pages(&self, chunk_bytes: u64) -> u64 {
+        self.bytes.div_ceil(chunk_bytes)
+    }
+}
+
+/// Per-process object table: named objects → handles.
+#[derive(Clone, Debug, Default)]
+pub struct ObjectTable {
+    objects: HashMap<String, FamHandle>,
+}
+
+impl ObjectTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, h: FamHandle) -> Option<FamHandle> {
+        self.objects.insert(name.into(), h)
+    }
+
+    pub fn get(&self, name: &str) -> Option<FamHandle> {
+        self.objects.get(name).copied()
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<FamHandle> {
+        self.objects.remove(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.objects.values().map(|h| h.bytes).sum()
+    }
+
+    pub fn handles(&self) -> impl Iterator<Item = (&str, FamHandle)> {
+        self.objects.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_page_count_rounds_up() {
+        let h = FamHandle {
+            region: 1,
+            bytes: 100_000,
+            placement: Placement::Default,
+            writable: true,
+        };
+        assert_eq!(h.pages(65536), 2);
+        assert_eq!(h.pages(4096), 25);
+    }
+
+    #[test]
+    fn table_insert_get_remove() {
+        let mut t = ObjectTable::new();
+        let h = FamHandle {
+            region: 7,
+            bytes: 4096,
+            placement: Placement::Static,
+            writable: false,
+        };
+        assert!(t.insert("vertices", h).is_none());
+        assert_eq!(t.get("vertices"), Some(h));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.total_bytes(), 4096);
+        assert_eq!(t.remove("vertices"), Some(h));
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn reinsert_returns_previous() {
+        let mut t = ObjectTable::new();
+        let a = FamHandle { region: 1, bytes: 10, placement: Placement::Default, writable: true };
+        let b = FamHandle { region: 2, bytes: 20, placement: Placement::Default, writable: true };
+        t.insert("x", a);
+        assert_eq!(t.insert("x", b), Some(a));
+        assert_eq!(t.get("x"), Some(b));
+    }
+}

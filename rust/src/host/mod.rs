@@ -1,0 +1,9 @@
+//! Host agent — SODA's compute-node component (§III).
+
+pub mod agent;
+pub mod buffer;
+pub mod fam;
+
+pub use agent::{HostAgent, HostStats, HostTiming};
+pub use buffer::{BufferStats, EvictPolicy, EvictedPage, PageBuffer, PageKey};
+pub use fam::{FamHandle, ObjectTable, Placement};

@@ -1,0 +1,59 @@
+//! # SODA-RS
+//!
+//! A full reproduction of **"Disaggregated Memory with SmartNIC Offloading:
+//! a Case Study on Graph Processing"** (Wahlgren, Schieffer, Gokhale,
+//! Pearce, Peng — CS.DC 2024): the SODA runtime for fabric-attached memory
+//! with DPU offloading, rebuilt in Rust on a calibrated discrete-event
+//! hardware substrate, plus the Ligra-style graph framework and the five
+//! applications of the paper's case study.
+//!
+//! Architecture (three layers):
+//! * **L3 (this crate)** — the SODA coordinator: host agent, DPU agent,
+//!   memory agent, simulated RDMA fabric, SSD baseline, graph framework,
+//!   figure harness.
+//! * **L2/L1 (python/, build-time only)** — a JAX PageRank superstep over
+//!   a Pallas blocked-ELL SpMV kernel, AOT-lowered to HLO text.
+//! * **runtime/** — PJRT bridge executing those artifacts from Rust.
+//!
+//! Quickstart:
+//! ```no_run
+//! use soda::prelude::*;
+//! let cluster = Cluster::build(ClusterConfig::default());
+//! let svc = SodaService::attach(&cluster, SodaConfig::default());
+//! let mut proc0 = svc.client_with_buffer("rank0", 32 << 20);
+//! let (obj, t) = proc0.alloc(0, "data", 1 << 20, None, Placement::Default);
+//! let t = proc0.write_bytes(t, 0, obj.region, 0, b"hello FAM");
+//! let mut out = [0u8; 9];
+//! proc0.read_bytes(t, 0, obj.region, 0, &mut out);
+//! assert_eq!(&out, b"hello FAM");
+//! ```
+
+pub mod analytic;
+pub mod backend;
+pub mod coordinator;
+pub mod dpu;
+pub mod fabric;
+pub mod figures;
+pub mod graph;
+pub mod host;
+pub mod memnode;
+pub mod runtime;
+pub mod sim;
+pub mod ssd;
+pub mod util;
+pub mod workload;
+
+/// Common imports for downstream users.
+pub mod prelude {
+    pub use crate::coordinator::{
+        BackendKind, CachingMode, Cluster, ClusterConfig, RunMetrics, SodaConfig, SodaService,
+    };
+    pub use crate::dpu::DpuOpts;
+    pub use crate::graph::csr::CsrGraph;
+    pub use crate::graph::fam_graph::{BuildMode, FamGraph};
+    pub use crate::graph::gen::{GraphSpec, TableII};
+    pub use crate::graph::runner::GraphRunner;
+    pub use crate::graph::App;
+    pub use crate::host::{FamHandle, HostAgent, PageKey, Placement};
+    pub use crate::sim::{ns_to_secs, Ns};
+}

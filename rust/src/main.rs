@@ -1,0 +1,162 @@
+//! `soda` — the SODA-RS command-line launcher.
+//!
+//! ```text
+//! soda figures --all [--scale F] [--threads N] [--json DIR]
+//! soda figures fig6 fig10 ...
+//! soda run <app> <graph> [--backend B] [--caching M] [--scale F]
+//! soda advisor [--hit-rate H]
+//! soda xla-info
+//! ```
+
+use anyhow::{bail, Result};
+use soda::analytic::CachingAdvisor;
+use soda::coordinator::config::{BackendKind, CachingMode};
+use soda::dpu::DpuOpts;
+use soda::fabric::FabricConfig;
+use soda::figures::{run_figure, ALL_FIGURES};
+use soda::graph::apps::App;
+use soda::util::cli::Args;
+use soda::util::json::ToJson;
+use soda::workload::{ExperimentSpec, Workbench};
+
+const DEFAULT_SCALE: f64 = 0.001;
+
+fn parse_backend(s: &str) -> Result<BackendKind> {
+    Ok(match s {
+        "ssd" => BackendKind::Ssd,
+        "memserver" | "mem" => BackendKind::MemServer,
+        "dpu-base" => BackendKind::DPU_BASE,
+        "dpu-opt" => BackendKind::DPU_OPT,
+        "dpu-full" | "dpu" => BackendKind::DPU_FULL,
+        "dpu-agg" => BackendKind::Dpu(DpuOpts { aggregation: true, async_forward: false, dynamic_cache: false }),
+        "dpu-async" => BackendKind::Dpu(DpuOpts { aggregation: false, async_forward: true, dynamic_cache: false }),
+        other => bail!("unknown backend '{other}' (ssd|memserver|dpu-base|dpu-opt|dpu-full|dpu-agg|dpu-async)"),
+    })
+}
+
+fn parse_caching(s: &str) -> Result<CachingMode> {
+    Ok(match s {
+        "none" => CachingMode::None,
+        "static" => CachingMode::Static,
+        "dynamic" => CachingMode::Dynamic,
+        other => bail!("unknown caching mode '{other}' (none|static|dynamic)"),
+    })
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let scale = args.opt_f64("scale", DEFAULT_SCALE);
+    let threads = args.opt_usize("threads", 24);
+    let ids: Vec<String> = if args.flag("all") || args.positional.is_empty() {
+        ALL_FIGURES.iter().map(|s| s.to_string()).collect()
+    } else {
+        args.positional.clone()
+    };
+    let json_dir = args.opt("json").map(std::path::PathBuf::from);
+    if let Some(dir) = &json_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    for id in &ids {
+        let started = std::time::Instant::now();
+        let Some(report) = run_figure(id, scale, threads) else {
+            bail!("unknown figure '{id}' (known: {})", ALL_FIGURES.join(", "));
+        };
+        println!("{}", report.render());
+        eprintln!("[{} regenerated in {:.1}s wallclock]\n", id, started.elapsed().as_secs_f64());
+        if let Some(dir) = &json_dir {
+            std::fs::write(dir.join(format!("{id}.json")), report.data.to_string())?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let (Some(app_name), Some(graph)) = (args.positional.first(), args.positional.get(1)) else {
+        bail!("usage: soda run <app> <graph> [--backend B] [--caching M] [--scale F]");
+    };
+    let app = App::by_name(app_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown app '{app_name}' (bfs|pagerank|radii|bc|components)"))?;
+    let graph: &'static str = match graph.as_str() {
+        "friendster" => "friendster",
+        "sk-2005" => "sk-2005",
+        "moliere" => "moliere",
+        "twitter7" => "twitter7",
+        other => bail!("unknown graph '{other}' (friendster|sk-2005|moliere|twitter7)"),
+    };
+    let backend = parse_backend(args.opt("backend").unwrap_or("dpu-opt"))?;
+    let caching = parse_caching(args.opt("caching").unwrap_or(match backend {
+        BackendKind::Dpu(_) => "static",
+        _ => "none",
+    }))?;
+    let mut wb = Workbench::new(args.opt_f64("scale", DEFAULT_SCALE));
+    wb.threads = args.opt_usize("threads", 24);
+    let spec = ExperimentSpec { app, graph, backend, caching };
+    let m = if args.flag("with-bg-bfs") {
+        let (m, replayed) = wb.run_with_background_bfs(&spec);
+        eprintln!("[background BFS trace: {replayed} faults replayed]");
+        m
+    } else {
+        wb.run(&spec)
+    };
+    if args.flag("json") {
+        println!("{}", m.to_json().to_string());
+    } else {
+        println!("{m}");
+    }
+    Ok(())
+}
+
+fn cmd_advisor(args: &Args) -> Result<()> {
+    let cfg = FabricConfig::default();
+    let adv = CachingAdvisor::from_fabric(&cfg);
+    println!("platform: B_net = {} GB/s, B_intra = {} GB/s", adv.b_net_gbps, adv.b_intra_gbps);
+    println!("Eq.3 threshold: dynamic caching pays off above h* = {:.1}%", adv.threshold() * 100.0);
+    if let Some(h) = args.opt("hit-rate") {
+        let h: f64 = h.parse()?;
+        println!("observed h = {:.1}% -> {:?}", h * 100.0, adv.advise(h));
+    }
+    Ok(())
+}
+
+fn cmd_xla_info() -> Result<()> {
+    let client = soda::runtime::cpu_client()?;
+    println!("PJRT platform: {} ({} devices)", client.platform_name(), client.device_count());
+    match soda::runtime::Manifest::load("artifacts") {
+        Ok(m) => {
+            println!("artifacts under artifacts/:");
+            for a in &m.artifacts {
+                println!("  {} (n={}, k={}, tile={})", a.file, a.n, a.k, a.tile_rows);
+            }
+        }
+        Err(e) => println!("no artifacts: {e} — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn usage() -> &'static str {
+    "soda — SmartNIC-offloaded disaggregated memory (SODA) reproduction\n\
+     commands:\n\
+       figures [--all | <id>...] [--scale F] [--threads N] [--json DIR]\n\
+           regenerate paper tables/figures (table1 table2 fig3..fig11)\n\
+           plus ablations (abl-entry abl-prefetch abl-evict abl-qp)\n\
+       run <app> <graph> [--backend B] [--caching M] [--scale F] [--with-bg-bfs] [--json]\n\
+           run one application on one graph and print metrics\n\
+       advisor [--hit-rate H]\n\
+           evaluate the Eq.1-3 analytical caching model on this platform\n\
+       xla-info\n\
+           show the PJRT runtime + AOT artifacts\n"
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("figures") => cmd_figures(&args),
+        Some("run") => cmd_run(&args),
+        Some("advisor") => cmd_advisor(&args),
+        Some("xla-info") => cmd_xla_info(),
+        Some("help") | None => {
+            print!("{}", usage());
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n{}", usage()),
+    }
+}

@@ -1,0 +1,339 @@
+//! Memory agent — the memory-node side of SODA (§III).
+//!
+//! The paper keeps this agent deliberately thin: it "only handles simple
+//! tasks like reserving and freeing memory resources". Data-plane reads and
+//! writes are served passively by the NIC via one-sided RDMA against
+//! registered regions; only control RPCs (region reserve/free/load) and the
+//! two-sided protocol touch the memory node's CPU.
+//!
+//! [`RegionStore`] holds the actual backing bytes — it is shared with the
+//! SSD substrate so every paging backend moves *real data* and writeback
+//! correctness is testable end to end.
+
+use crate::sim::server::ServerPool;
+use crate::sim::Ns;
+use std::collections::HashMap;
+
+/// Region id newtype matching the 16-bit wire field.
+pub type RegionId = u16;
+
+/// Error type for region operations.
+#[derive(Debug, PartialEq, Eq)]
+pub enum MemError {
+    OutOfCapacity { requested: u64, available: u64 },
+    NoSuchRegion(RegionId),
+    OutOfBounds { region: RegionId, offset: u64, len: u64, size: u64 },
+    DuplicateRegion(RegionId),
+}
+
+impl std::fmt::Display for MemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemError::OutOfCapacity { requested, available } => {
+                write!(f, "out of capacity: requested {requested} B, available {available} B")
+            }
+            MemError::NoSuchRegion(r) => write!(f, "no such region {r}"),
+            MemError::OutOfBounds { region, offset, len, size } => write!(
+                f,
+                "region {region}: access [{offset}, {offset}+{len}) out of bounds (size {size})"
+            ),
+            MemError::DuplicateRegion(r) => write!(f, "region {r} already exists"),
+        }
+    }
+}
+
+impl std::error::Error for MemError {}
+
+/// Byte-addressed region storage with a capacity budget.
+#[derive(Clone, Debug, Default)]
+pub struct RegionStore {
+    capacity: u64,
+    used: u64,
+    regions: HashMap<RegionId, Vec<u8>>,
+}
+
+impl RegionStore {
+    pub fn new(capacity: u64) -> Self {
+        RegionStore {
+            capacity,
+            used: 0,
+            regions: HashMap::new(),
+        }
+    }
+
+    /// Reserve `bytes` for a new region, zero-initialized (anonymous
+    /// mapping mode of `SODA_alloc`).
+    pub fn reserve(&mut self, id: RegionId, bytes: u64) -> Result<(), MemError> {
+        if self.regions.contains_key(&id) {
+            return Err(MemError::DuplicateRegion(id));
+        }
+        let available = self.capacity - self.used;
+        if bytes > available {
+            return Err(MemError::OutOfCapacity { requested: bytes, available });
+        }
+        self.used += bytes;
+        self.regions.insert(id, vec![0u8; bytes as usize]);
+        Ok(())
+    }
+
+    /// Reserve a region pre-loaded with `data` (file-backed mode of
+    /// `SODA_alloc`: the named file is opened on the server, §IV-D).
+    pub fn reserve_with_data(&mut self, id: RegionId, data: Vec<u8>) -> Result<(), MemError> {
+        let bytes = data.len() as u64;
+        if self.regions.contains_key(&id) {
+            return Err(MemError::DuplicateRegion(id));
+        }
+        let available = self.capacity - self.used;
+        if bytes > available {
+            return Err(MemError::OutOfCapacity { requested: bytes, available });
+        }
+        self.used += bytes;
+        self.regions.insert(id, data);
+        Ok(())
+    }
+
+    pub fn free(&mut self, id: RegionId) -> Result<(), MemError> {
+        match self.regions.remove(&id) {
+            Some(data) => {
+                self.used -= data.len() as u64;
+                Ok(())
+            }
+            None => Err(MemError::NoSuchRegion(id)),
+        }
+    }
+
+    pub fn read(&self, id: RegionId, offset: u64, out: &mut [u8]) -> Result<(), MemError> {
+        let region = self.regions.get(&id).ok_or(MemError::NoSuchRegion(id))?;
+        let end = offset + out.len() as u64;
+        if end > region.len() as u64 {
+            return Err(MemError::OutOfBounds {
+                region: id,
+                offset,
+                len: out.len() as u64,
+                size: region.len() as u64,
+            });
+        }
+        out.copy_from_slice(&region[offset as usize..end as usize]);
+        Ok(())
+    }
+
+    pub fn write(&mut self, id: RegionId, offset: u64, data: &[u8]) -> Result<(), MemError> {
+        let region = self.regions.get_mut(&id).ok_or(MemError::NoSuchRegion(id))?;
+        let end = offset + data.len() as u64;
+        if end > region.len() as u64 {
+            return Err(MemError::OutOfBounds {
+                region: id,
+                offset,
+                len: data.len() as u64,
+                size: region.len() as u64,
+            });
+        }
+        region[offset as usize..end as usize].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Borrow a region's bytes (zero-copy read path for the simulator).
+    pub fn slice(&self, id: RegionId, offset: u64, len: u64) -> Result<&[u8], MemError> {
+        let region = self.regions.get(&id).ok_or(MemError::NoSuchRegion(id))?;
+        let end = offset + len;
+        if end > region.len() as u64 {
+            return Err(MemError::OutOfBounds { region: id, offset, len, size: region.len() as u64 });
+        }
+        Ok(&region[offset as usize..end as usize])
+    }
+
+    pub fn region_size(&self, id: RegionId) -> Option<u64> {
+        self.regions.get(&id).map(|r| r.len() as u64)
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn region_count(&self) -> usize {
+        self.regions.len()
+    }
+}
+
+/// Configuration for a memory node (testbed: 256 GB DRAM; scaled by default
+/// elsewhere in `ClusterConfig`).
+#[derive(Clone, Debug)]
+pub struct MemNodeConfig {
+    pub capacity_bytes: u64,
+    /// RPC service threads on the memory node.
+    pub rpc_threads: usize,
+    /// CPU time to process one control RPC.
+    pub rpc_service_ns: Ns,
+    /// CPU time to process one two-sided data request.
+    pub data_service_ns: Ns,
+}
+
+impl Default for MemNodeConfig {
+    fn default() -> Self {
+        MemNodeConfig {
+            capacity_bytes: 256 << 30,
+            rpc_threads: 4,
+            rpc_service_ns: 1_500,
+            data_service_ns: 400,
+        }
+    }
+}
+
+/// The memory agent: region store + RPC service pool.
+#[derive(Debug)]
+pub struct MemoryNode {
+    pub cfg: MemNodeConfig,
+    pub store: RegionStore,
+    cpu: ServerPool,
+    next_region: RegionId,
+}
+
+impl MemoryNode {
+    pub fn new(cfg: MemNodeConfig) -> Self {
+        MemoryNode {
+            store: RegionStore::new(cfg.capacity_bytes),
+            cpu: ServerPool::new("memnode.cpu", cfg.rpc_threads),
+            next_region: 1,
+            cfg,
+        }
+    }
+
+    /// Allocate a fresh region id and reserve `bytes` (control plane).
+    /// Returns `(region_id, completion_time)`.
+    pub fn reserve(&mut self, now: Ns, bytes: u64) -> Result<(RegionId, Ns), MemError> {
+        let id = self.next_region;
+        self.store.reserve(id, bytes)?;
+        self.next_region = self.next_region.wrapping_add(1).max(1);
+        let (_, done) = self.cpu.admit(now, self.cfg.rpc_service_ns);
+        Ok((id, done))
+    }
+
+    /// Reserve a region pre-loaded with file contents.
+    pub fn reserve_file(&mut self, now: Ns, data: Vec<u8>) -> Result<(RegionId, Ns), MemError> {
+        let id = self.next_region;
+        self.store.reserve_with_data(id, data)?;
+        self.next_region = self.next_region.wrapping_add(1).max(1);
+        // Loading a file costs proportionally more than a plain reserve.
+        let (_, done) = self.cpu.admit(now, self.cfg.rpc_service_ns * 4);
+        Ok((id, done))
+    }
+
+    pub fn free(&mut self, now: Ns, id: RegionId) -> Result<Ns, MemError> {
+        self.store.free(id)?;
+        let (_, done) = self.cpu.admit(now, self.cfg.rpc_service_ns);
+        Ok(done)
+    }
+
+    /// CPU service for one two-sided data request (the one-sided protocol
+    /// bypasses this entirely — the NIC serves it).
+    pub fn serve_two_sided(&mut self, now: Ns) -> Ns {
+        self.cpu.admit(now, self.cfg.data_service_ns).1
+    }
+
+    pub fn cpu_jobs(&self) -> u64 {
+        self.cpu.jobs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_read_write_roundtrip() {
+        let mut m = MemoryNode::new(MemNodeConfig {
+            capacity_bytes: 1 << 20,
+            ..Default::default()
+        });
+        let (id, _) = m.reserve(0, 4096).unwrap();
+        m.store.write(id, 100, b"hello").unwrap();
+        let mut buf = [0u8; 5];
+        m.store.read(id, 100, &mut buf).unwrap();
+        assert_eq!(&buf, b"hello");
+    }
+
+    #[test]
+    fn anonymous_regions_are_zeroed() {
+        let mut s = RegionStore::new(1 << 20);
+        s.reserve(1, 1024).unwrap();
+        assert!(s.slice(1, 0, 1024).unwrap().iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn capacity_is_enforced() {
+        let mut s = RegionStore::new(1000);
+        s.reserve(1, 600).unwrap();
+        let err = s.reserve(2, 600).unwrap_err();
+        assert_eq!(err, MemError::OutOfCapacity { requested: 600, available: 400 });
+        s.free(1).unwrap();
+        s.reserve(2, 600).unwrap();
+        assert_eq!(s.used(), 600);
+    }
+
+    #[test]
+    fn bounds_are_enforced() {
+        let mut s = RegionStore::new(1 << 20);
+        s.reserve(1, 100).unwrap();
+        let mut buf = [0u8; 10];
+        assert!(matches!(s.read(1, 95, &mut buf), Err(MemError::OutOfBounds { .. })));
+        assert!(matches!(s.write(1, 95, &buf), Err(MemError::OutOfBounds { .. })));
+        assert!(matches!(s.read(2, 0, &mut buf), Err(MemError::NoSuchRegion(2))));
+    }
+
+    #[test]
+    fn duplicate_region_rejected() {
+        let mut s = RegionStore::new(1 << 20);
+        s.reserve(1, 100).unwrap();
+        assert_eq!(s.reserve(1, 100).unwrap_err(), MemError::DuplicateRegion(1));
+    }
+
+    #[test]
+    fn file_backed_region_preloads_data() {
+        let mut m = MemoryNode::new(MemNodeConfig {
+            capacity_bytes: 1 << 20,
+            ..Default::default()
+        });
+        let (id, _) = m.reserve_file(0, b"graph-data".to_vec()).unwrap();
+        assert_eq!(m.store.slice(id, 0, 10).unwrap(), b"graph-data");
+        assert_eq!(m.store.region_size(id), Some(10));
+    }
+
+    #[test]
+    fn region_ids_are_unique_and_nonzero() {
+        let mut m = MemoryNode::new(MemNodeConfig {
+            capacity_bytes: 1 << 20,
+            ..Default::default()
+        });
+        let (a, _) = m.reserve(0, 10).unwrap();
+        let (b, _) = m.reserve(0, 10).unwrap();
+        assert_ne!(a, b);
+        assert!(a > 0 && b > 0);
+    }
+
+    #[test]
+    fn rpc_service_consumes_cpu_time() {
+        let mut m = MemoryNode::new(MemNodeConfig {
+            capacity_bytes: 1 << 20,
+            rpc_threads: 1,
+            ..Default::default()
+        });
+        let (_, t1) = m.reserve(0, 10).unwrap();
+        let (_, t2) = m.reserve(0, 10).unwrap();
+        assert!(t2 > t1, "single RPC thread must serialize");
+        assert_eq!(m.cpu_jobs(), 2);
+    }
+
+    #[test]
+    fn two_sided_service_charges_time() {
+        let mut m = MemoryNode::new(MemNodeConfig {
+            capacity_bytes: 1 << 20,
+            ..Default::default()
+        });
+        let t = m.serve_two_sided(1_000);
+        assert_eq!(t, 1_000 + m.cfg.data_service_ns);
+    }
+}

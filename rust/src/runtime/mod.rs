@@ -1,0 +1,229 @@
+//! PJRT runtime bridge — executes the AOT artifacts from the Rust hot path.
+//!
+//! The build-time Python stack (L2 model + L1 Pallas kernel) lowers to HLO
+//! *text* under `artifacts/`; this module loads a module with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client,
+//! and exposes typed `step` calls. Python never runs at request time — the
+//! `soda` binary is self-contained once `make artifacts` has produced the
+//! files.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Description of one AOT artifact (from `artifacts/manifest.json`).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub n: usize,
+    pub k: usize,
+    pub tile_rows: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let arts = match v.get("artifacts") {
+            Some(Json::Arr(items)) => items,
+            _ => bail!("manifest missing 'artifacts' array"),
+        };
+        let mut artifacts = Vec::new();
+        for a in arts {
+            artifacts.push(ArtifactSpec {
+                file: a
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing file"))?
+                    .to_string(),
+                n: a.get("n").and_then(|x| x.as_u64()).unwrap_or(0) as usize,
+                k: a.get("k").and_then(|x| x.as_u64()).unwrap_or(0) as usize,
+                tile_rows: a.get("tile_rows").and_then(|x| x.as_u64()).unwrap_or(0) as usize,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Find the artifact for a given (n, k).
+    pub fn find(&self, n: usize, k: usize) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.n == n && a.k == k)
+    }
+
+    /// Smallest artifact whose n ≥ the requested vertex count (rows are
+    /// padded up to the artifact's N).
+    pub fn best_for(&self, n: usize, k: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.n >= n && a.k >= k)
+            .min_by_key(|a| (a.n, a.k))
+    }
+}
+
+/// A compiled PageRank-superstep executable.
+pub struct PagerankEngine {
+    exe: xla::PjRtLoadedExecutable,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl PagerankEngine {
+    /// Load + compile `artifacts/pagerank_step_{n}x{k}.hlo.txt`.
+    pub fn load(client: &xla::PjRtClient, dir: impl AsRef<Path>, spec: &ArtifactSpec) -> Result<Self> {
+        let path = dir.as_ref().join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("HLO parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("PJRT compile: {e}"))?;
+        Ok(PagerankEngine {
+            exe,
+            n: spec.n,
+            k: spec.k,
+        })
+    }
+
+    /// Run one superstep. All slices must match the artifact's shapes
+    /// (`ranks`, `inv_deg`, `spill` length n; `cols` length n*k row-major,
+    /// -1 padded). Returns `(new_ranks, l1_delta)`.
+    pub fn step(
+        &self,
+        ranks: &[f32],
+        inv_deg: &[f32],
+        cols: &[i32],
+        spill: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        if ranks.len() != self.n || inv_deg.len() != self.n || spill.len() != self.n {
+            bail!("vector length != artifact n = {}", self.n);
+        }
+        if cols.len() != self.n * self.k {
+            bail!("cols length {} != n*k = {}", cols.len(), self.n * self.k);
+        }
+        let ranks_l = xla::Literal::vec1(ranks);
+        let inv_l = xla::Literal::vec1(inv_deg);
+        let cols_l = xla::Literal::vec1(cols).reshape(&[self.n as i64, self.k as i64])?;
+        let spill_l = xla::Literal::vec1(spill);
+        let result = self.exe.execute::<xla::Literal>(&[ranks_l, inv_l, cols_l, spill_l])?[0][0]
+            .to_literal_sync()?;
+        // Lowered with return_tuple=True: ((new_ranks, delta),).
+        let (new_ranks_l, delta_l) = result.to_tuple2()?;
+        let new_ranks = new_ranks_l.to_vec::<f32>()?;
+        let delta = delta_l.to_vec::<f32>()?[0];
+        Ok((new_ranks, delta))
+    }
+}
+
+/// Convenience: CPU PJRT client (one per process).
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))
+}
+
+/// Pure-Rust oracle of the artifact's math — used to validate the PJRT
+/// round trip end to end and as the no-artifact fallback.
+pub fn pagerank_step_ref(
+    ranks: &[f32],
+    inv_deg: &[f32],
+    cols: &[i32],
+    k: usize,
+    spill: &[f32],
+    damping: f32,
+) -> (Vec<f32>, f32) {
+    let n = ranks.len();
+    let contrib: Vec<f32> = ranks.iter().zip(inv_deg).map(|(r, d)| r * d).collect();
+    let mut out = vec![0.0f32; n];
+    let base = (1.0 - damping) / n as f32;
+    let mut delta = 0.0f32;
+    for v in 0..n {
+        let mut s = spill[v];
+        for slot in 0..k {
+            let c = cols[v * k + slot];
+            if c >= 0 {
+                s += contrib[c as usize];
+            }
+        }
+        out[v] = base + damping * s;
+        delta += (out[v] - ranks[v]).abs();
+    }
+    (out, delta)
+}
+
+/// Convert adjacency lists into the artifact's padded ELL + spill layout.
+/// Returns `(cols, spill_assignments)` where `spill_assignments[v]` are the
+/// neighbors beyond slot `k` (summed host-side each iteration).
+pub fn to_ell(neighbors: &[Vec<u32>], n_padded: usize, k: usize) -> (Vec<i32>, Vec<Vec<u32>>) {
+    let mut cols = vec![-1i32; n_padded * k];
+    let mut spill = vec![Vec::new(); n_padded];
+    for (v, nbrs) in neighbors.iter().enumerate() {
+        for (slot, &u) in nbrs.iter().enumerate() {
+            if slot < k {
+                cols[v * k + slot] = u as i32;
+            } else {
+                spill[v].push(u);
+            }
+        }
+    }
+    (cols, spill)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("soda_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":[{"file":"a.hlo.txt","n":1024,"k":8,"tile_rows":256},
+                             {"file":"b.hlo.txt","n":4096,"k":16,"tile_rows":512}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.find(1024, 8).unwrap().file, "a.hlo.txt");
+        assert!(m.find(999, 9).is_none());
+        assert_eq!(m.best_for(800, 8).unwrap().n, 1024);
+        assert_eq!(m.best_for(2000, 8).unwrap().n, 4096);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn ref_step_conserves_mass_on_regular_graph() {
+        // 4-cycle: every vertex degree 2; ranks stay uniform.
+        let n = 4;
+        let neighbors: Vec<Vec<u32>> = (0..n)
+            .map(|v| vec![((v + 1) % n) as u32, ((v + n - 1) % n) as u32])
+            .collect();
+        let (cols, spill_lists) = to_ell(&neighbors, n, 2);
+        assert!(spill_lists.iter().all(|s| s.is_empty()));
+        let ranks = vec![0.25f32; n];
+        let inv_deg = vec![0.5f32; n];
+        let (out, delta) = pagerank_step_ref(&ranks, &inv_deg, &cols, 2, &vec![0.0; n], 0.85);
+        assert!(out.iter().all(|&r| (r - 0.25).abs() < 1e-6));
+        assert!(delta < 1e-6);
+    }
+
+    #[test]
+    fn to_ell_spills_wide_rows() {
+        let neighbors = vec![vec![1, 2, 3, 4], vec![0]];
+        let (cols, spill) = to_ell(&neighbors, 4, 2);
+        assert_eq!(&cols[0..2], &[1, 2]);
+        assert_eq!(spill[0], vec![3, 4]);
+        assert_eq!(cols[2], 0); // row 1 slot 0
+        assert_eq!(cols[3], -1);
+        assert!(spill[1].is_empty());
+        assert_eq!(cols[3 * 2], -1, "padded rows are empty");
+    }
+}

@@ -1,0 +1,150 @@
+//! Time-ordered event queue.
+//!
+//! A minimal deterministic event core: events are `(time, seq, payload)`
+//! tuples popped in `(time, seq)` order, where `seq` is an insertion counter
+//! that breaks ties reproducibly. Used by the thread-merge loop
+//! ([`super::threads::ThreadSet`]) and by agents that defer work (proactive
+//! eviction sweeps, prefetch completions).
+
+use super::Ns;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<T> {
+    time: Ns,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-heap of timestamped events.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+    now: Ns,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+        }
+    }
+
+    /// Schedule `payload` at absolute time `time`.
+    pub fn push(&mut self, time: Ns, payload: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, seq, payload });
+    }
+
+    /// Pop the earliest event, advancing the queue's notion of `now`.
+    ///
+    /// Panics in debug builds if events would run backwards in time —
+    /// that indicates a causality bug in an agent.
+    pub fn pop(&mut self) -> Option<(Ns, T)> {
+        let e = self.heap.pop()?;
+        debug_assert!(e.time >= self.now, "event queue time went backwards");
+        self.now = e.time;
+        Some((e.time, e.payload))
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<Ns> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Last popped event time.
+    pub fn now(&self) -> Ns {
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a");
+        q.push(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(5, 1);
+        q.push(5, 2);
+        q.push(5, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn now_tracks_last_pop() {
+        let mut q = EventQueue::new();
+        q.push(100, ());
+        q.push(200, ());
+        assert_eq!(q.now(), 0);
+        q.pop();
+        assert_eq!(q.now(), 100);
+        q.pop();
+        assert_eq!(q.now(), 200);
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(10, 'x');
+        assert_eq!(q.pop(), Some((10, 'x')));
+        q.push(15, 'y');
+        q.push(12, 'z');
+        assert_eq!(q.pop(), Some((12, 'z')));
+        assert_eq!(q.peek_time(), Some(15));
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_empty());
+    }
+}

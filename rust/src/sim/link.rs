@@ -1,0 +1,241 @@
+//! Bandwidth-shared link resource with latency and traffic accounting.
+//!
+//! A [`Link`] models one direction of a physical interconnect segment
+//! (host→DPU over PCIe, DPU→memory-node over the RoCE fabric, …) as a FIFO
+//! store-and-forward pipe: a transfer of `s` bytes occupies the wire for
+//! `s / bandwidth` and then experiences the propagation latency. Queueing and
+//! bandwidth contention between concurrent requests emerge from the shared
+//! `busy_until` timeline — exactly the effect the paper's task aggregation
+//! and pipelining optimizations exist to manage.
+//!
+//! Per-link byte counters reproduce the paper's measurement methodology
+//! (mlx5 `port_xmit_data` counters on the server, §V), split by traffic
+//! class so Fig. 9's on-demand vs. background decomposition can be rebuilt.
+
+use super::Ns;
+
+/// Classification of traffic for the Fig. 8/9 accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TrafficClass {
+    /// Latency-critical on-demand fetch on the application's critical path.
+    OnDemand,
+    /// Prefetch / static-cache-fill traffic off the critical path.
+    Background,
+    /// Dirty-page writeback.
+    Writeback,
+    /// RPC control-plane messages (QP setup, region metadata).
+    Control,
+}
+
+/// Byte/op counters per traffic class, the simulated `port_xmit_data`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkStats {
+    pub on_demand_bytes: u64,
+    pub background_bytes: u64,
+    pub writeback_bytes: u64,
+    pub control_bytes: u64,
+    pub on_demand_ops: u64,
+    pub background_ops: u64,
+    pub writeback_ops: u64,
+    pub control_ops: u64,
+    /// Total wire-busy time, for utilization reporting.
+    pub busy_ns: Ns,
+}
+
+impl LinkStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.on_demand_bytes + self.background_bytes + self.writeback_bytes + self.control_bytes
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.on_demand_ops + self.background_ops + self.writeback_ops + self.control_ops
+    }
+
+    /// Data-plane bytes (everything except control RPCs) — what the paper's
+    /// network-traffic figures count.
+    pub fn data_bytes(&self) -> u64 {
+        self.on_demand_bytes + self.background_bytes + self.writeback_bytes
+    }
+
+    fn record(&mut self, class: TrafficClass, bytes: u64) {
+        match class {
+            TrafficClass::OnDemand => {
+                self.on_demand_bytes += bytes;
+                self.on_demand_ops += 1;
+            }
+            TrafficClass::Background => {
+                self.background_bytes += bytes;
+                self.background_ops += 1;
+            }
+            TrafficClass::Writeback => {
+                self.writeback_bytes += bytes;
+                self.writeback_ops += 1;
+            }
+            TrafficClass::Control => {
+                self.control_bytes += bytes;
+                self.control_ops += 1;
+            }
+        }
+    }
+
+    pub fn merge(&mut self, other: &LinkStats) {
+        self.on_demand_bytes += other.on_demand_bytes;
+        self.background_bytes += other.background_bytes;
+        self.writeback_bytes += other.writeback_bytes;
+        self.control_bytes += other.control_bytes;
+        self.on_demand_ops += other.on_demand_ops;
+        self.background_ops += other.background_ops;
+        self.writeback_ops += other.writeback_ops;
+        self.control_ops += other.control_ops;
+        self.busy_ns += other.busy_ns;
+    }
+}
+
+/// One direction of an interconnect segment.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub name: String,
+    /// Peak bandwidth in GB/s (== bytes/ns).
+    pub bandwidth_gbps: f64,
+    /// One-way propagation + stack latency in ns.
+    pub latency_ns: Ns,
+    /// Fixed per-operation overhead (doorbell, WQE processing) in ns.
+    pub per_op_ns: Ns,
+    busy_until: Ns,
+    stats: LinkStats,
+}
+
+impl Link {
+    pub fn new(name: impl Into<String>, bandwidth_gbps: f64, latency_ns: Ns, per_op_ns: Ns) -> Self {
+        assert!(bandwidth_gbps > 0.0);
+        Link {
+            name: name.into(),
+            bandwidth_gbps,
+            latency_ns,
+            per_op_ns,
+            busy_until: 0,
+            stats: LinkStats::default(),
+        }
+    }
+
+    /// Reserve the wire for `bytes` starting no earlier than `now` at the
+    /// link's peak bandwidth. Returns the arrival (completion) time at the
+    /// far end.
+    pub fn transfer(&mut self, now: Ns, bytes: u64, class: TrafficClass) -> Ns {
+        self.transfer_at(now, bytes, self.bandwidth_gbps, class)
+    }
+
+    /// Reserve the wire at an explicit effective bandwidth — used by the
+    /// NUMA/message-size model which derates the peak (§IV-A, Figs 3–4).
+    pub fn transfer_at(&mut self, now: Ns, bytes: u64, gbps: f64, class: TrafficClass) -> Ns {
+        let gbps = gbps.min(self.bandwidth_gbps);
+        let ser = super::ser_ns(bytes, gbps) + self.per_op_ns;
+        let start = self.busy_until.max(now);
+        self.busy_until = start + ser;
+        self.stats.record(class, bytes);
+        self.stats.busy_ns += ser;
+        self.busy_until + self.latency_ns
+    }
+
+    /// Time at which the wire is next free (for backpressure decisions).
+    pub fn next_free(&self) -> Ns {
+        self.busy_until
+    }
+
+    /// Instantaneous queue depth expressed as time-backlog relative to `now`.
+    pub fn backlog_ns(&self, now: Ns) -> Ns {
+        self.busy_until.saturating_sub(now)
+    }
+
+    pub fn stats(&self) -> &LinkStats {
+        &self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = LinkStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> Link {
+        // 12.5 GB/s (100 Gb/s), 2 µs latency, 100 ns per-op overhead.
+        Link::new("net", 12.5, 2_000, 100)
+    }
+
+    #[test]
+    fn single_transfer_time() {
+        let mut l = link();
+        let done = l.transfer(0, 65536, TrafficClass::OnDemand);
+        // 65536/12.5 = 5242.88 -> 5243 + 100 per-op + 2000 latency
+        assert_eq!(done, 5243 + 100 + 2_000);
+    }
+
+    #[test]
+    fn fifo_queueing_serializes_transfers() {
+        let mut l = link();
+        let a = l.transfer(0, 65536, TrafficClass::OnDemand);
+        let b = l.transfer(0, 65536, TrafficClass::OnDemand);
+        // Second transfer waits for the first's wire occupancy (not latency).
+        assert_eq!(b - a, 5343);
+    }
+
+    #[test]
+    fn idle_gap_is_not_charged() {
+        let mut l = link();
+        let a = l.transfer(0, 1024, TrafficClass::OnDemand);
+        let later = a + 1_000_000;
+        let b = l.transfer(later, 1024, TrafficClass::OnDemand);
+        assert_eq!(b - later, super::super::ser_ns(1024, 12.5) + 100 + 2_000);
+    }
+
+    #[test]
+    fn derated_bandwidth_cannot_exceed_peak() {
+        let mut l = link();
+        let t_peak = l.transfer_at(0, 1 << 20, 100.0, TrafficClass::OnDemand);
+        let mut l2 = link();
+        let t_at = l2.transfer(0, 1 << 20, TrafficClass::OnDemand);
+        assert_eq!(t_peak, t_at, "requested bandwidth above peak must clamp");
+    }
+
+    #[test]
+    fn stats_split_by_class() {
+        let mut l = link();
+        l.transfer(0, 100, TrafficClass::OnDemand);
+        l.transfer(0, 200, TrafficClass::Background);
+        l.transfer(0, 300, TrafficClass::Writeback);
+        l.transfer(0, 50, TrafficClass::Control);
+        let s = l.stats();
+        assert_eq!(s.on_demand_bytes, 100);
+        assert_eq!(s.background_bytes, 200);
+        assert_eq!(s.writeback_bytes, 300);
+        assert_eq!(s.control_bytes, 50);
+        assert_eq!(s.total_bytes(), 650);
+        assert_eq!(s.data_bytes(), 600);
+        assert_eq!(s.total_ops(), 4);
+    }
+
+    #[test]
+    fn backlog_reflects_queue() {
+        let mut l = link();
+        assert_eq!(l.backlog_ns(0), 0);
+        l.transfer(0, 1 << 20, TrafficClass::OnDemand);
+        assert!(l.backlog_ns(0) > 80_000);
+        assert_eq!(l.backlog_ns(l.next_free()), 0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = LinkStats::default();
+        a.record(TrafficClass::OnDemand, 10);
+        let mut b = LinkStats::default();
+        b.record(TrafficClass::OnDemand, 32);
+        b.record(TrafficClass::Control, 8);
+        a.merge(&b);
+        assert_eq!(a.on_demand_bytes, 42);
+        assert_eq!(a.control_bytes, 8);
+        assert_eq!(a.on_demand_ops, 2);
+    }
+}

@@ -1,0 +1,77 @@
+//! Discrete-event simulation substrate.
+//!
+//! Everything timing-related in SODA-RS runs on *virtual time*: the graph
+//! applications execute for real (functional simulation) while every memory
+//! request is charged against shared simulated resources — links, DPU cores,
+//! SSD channels (timing simulation). Virtual time makes every figure in the
+//! paper deterministic and independent of the machine running the simulation.
+//!
+//! The model is resource-timeline based rather than coroutine based: each
+//! resource tracks when it is next free, and a request's completion time is
+//! computed by composing resource reservations along its path
+//! (host agent → QP → PCIe link → DPU cores → network link → memory node).
+//! Concurrency between the paper's 24 Ligra threads is modeled by the
+//! [`threads::ThreadSet`] time-ordered merge.
+
+pub mod engine;
+pub mod link;
+pub mod rng;
+pub mod server;
+pub mod threads;
+
+/// Virtual time in nanoseconds.
+pub type Ns = u64;
+
+/// One second of virtual time.
+pub const SECOND: Ns = 1_000_000_000;
+/// One millisecond of virtual time.
+pub const MILLISECOND: Ns = 1_000_000;
+/// One microsecond of virtual time.
+pub const MICROSECOND: Ns = 1_000;
+
+/// Convert a virtual-time duration to fractional seconds.
+pub fn ns_to_secs(ns: Ns) -> f64 {
+    ns as f64 / SECOND as f64
+}
+
+/// Convert fractional seconds to virtual nanoseconds.
+pub fn secs_to_ns(s: f64) -> Ns {
+    (s * SECOND as f64).round() as Ns
+}
+
+/// Bandwidth expressed in GB/s. Because 1 GB/s == 1 byte/ns, the
+/// serialization delay of `bytes` at `gbps` is simply `bytes / gbps` ns.
+pub fn ser_ns(bytes: u64, gbps: f64) -> Ns {
+    debug_assert!(gbps > 0.0, "bandwidth must be positive");
+    (bytes as f64 / gbps).ceil() as Ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialization_delay_is_bytes_over_gbps() {
+        // 64 KiB at 12.5 GB/s (100 Gb/s) = 5242.88 ns -> ceil 5243
+        assert_eq!(ser_ns(65536, 12.5), 5243);
+        // 1 GiB at 1 GB/s ~ 1.07 s
+        assert_eq!(ser_ns(1 << 30, 1.0), 1 << 30);
+    }
+
+    #[test]
+    fn time_conversions_roundtrip() {
+        assert_eq!(ns_to_secs(SECOND), 1.0);
+        assert_eq!(secs_to_ns(2.5), 2_500_000_000);
+        assert_eq!(ns_to_secs(secs_to_ns(0.125)), 0.125);
+    }
+
+    #[test]
+    fn ser_ns_monotone_in_bytes() {
+        let mut prev = 0;
+        for b in [1u64, 100, 4096, 65536, 1 << 20] {
+            let t = ser_ns(b, 12.5);
+            assert!(t >= prev);
+            prev = t;
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! k-server processing resource.
+//!
+//! Models a pool of identical service units — the 8 ARM A72 cores of the
+//! BlueField-2 DPU, the I/O channels of an NVMe device, the RPC threads of
+//! the memory agent. A job admitted at `now` with service demand `d` starts
+//! on the earliest-free unit and completes at `start + d`. This captures the
+//! paper's core observation that the DPU's low-power cores become the
+//! bottleneck unless requests are aggregated and pipelined.
+
+use super::Ns;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Pool of `k` identical servers with FCFS admission.
+#[derive(Clone, Debug)]
+pub struct ServerPool {
+    pub name: String,
+    free_at: BinaryHeap<Reverse<Ns>>,
+    k: usize,
+    jobs: u64,
+    busy_ns: Ns,
+}
+
+impl ServerPool {
+    pub fn new(name: impl Into<String>, k: usize) -> Self {
+        assert!(k > 0, "server pool needs at least one unit");
+        let mut free_at = BinaryHeap::with_capacity(k);
+        for _ in 0..k {
+            free_at.push(Reverse(0));
+        }
+        ServerPool {
+            name: name.into(),
+            free_at,
+            k,
+            jobs: 0,
+            busy_ns: 0,
+        }
+    }
+
+    /// Number of service units.
+    pub fn units(&self) -> usize {
+        self.k
+    }
+
+    /// Admit a job: returns `(start, end)` of its service interval.
+    pub fn admit(&mut self, now: Ns, service_ns: Ns) -> (Ns, Ns) {
+        let Reverse(free) = self.free_at.pop().expect("pool is never empty");
+        let start = free.max(now);
+        let end = start + service_ns;
+        self.free_at.push(Reverse(end));
+        self.jobs += 1;
+        self.busy_ns += service_ns;
+        (start, end)
+    }
+
+    /// Admit a job whose service duration depends on its start time (e.g. a
+    /// core that blocks on a network round trip it initiates). `f(start)`
+    /// must return the completion time (≥ start).
+    pub fn admit_with(&mut self, now: Ns, f: impl FnOnce(Ns) -> Ns) -> (Ns, Ns) {
+        let Reverse(free) = self.free_at.pop().expect("pool is never empty");
+        let start = free.max(now);
+        let end = f(start);
+        debug_assert!(end >= start, "job completed before it started");
+        self.free_at.push(Reverse(end));
+        self.jobs += 1;
+        self.busy_ns += end - start;
+        (start, end)
+    }
+
+    /// Earliest time any unit is free.
+    pub fn next_free(&self) -> Ns {
+        self.free_at.peek().map(|Reverse(t)| *t).unwrap_or(0)
+    }
+
+    /// Total jobs processed.
+    pub fn jobs(&self) -> u64 {
+        self.jobs
+    }
+
+    /// Aggregate busy time across all units.
+    pub fn busy_ns(&self) -> Ns {
+        self.busy_ns
+    }
+
+    /// Mean utilization over `[0, horizon]`.
+    pub fn utilization(&self, horizon: Ns) -> f64 {
+        if horizon == 0 {
+            return 0.0;
+        }
+        self.busy_ns as f64 / (horizon as f64 * self.k as f64)
+    }
+
+    pub fn reset(&mut self) {
+        self.free_at.clear();
+        for _ in 0..self.k {
+            self.free_at.push(Reverse(0));
+        }
+        self.jobs = 0;
+        self.busy_ns = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_server_serializes() {
+        let mut p = ServerPool::new("cpu", 1);
+        let (s1, e1) = p.admit(0, 100);
+        let (s2, e2) = p.admit(0, 100);
+        assert_eq!((s1, e1), (0, 100));
+        assert_eq!((s2, e2), (100, 200));
+    }
+
+    #[test]
+    fn k_servers_run_k_jobs_in_parallel() {
+        let mut p = ServerPool::new("dpu", 8);
+        let ends: Vec<Ns> = (0..8).map(|_| p.admit(0, 500).1).collect();
+        assert!(ends.iter().all(|&e| e == 500));
+        // 9th job queues behind the earliest completion.
+        let (s9, e9) = p.admit(0, 500);
+        assert_eq!((s9, e9), (500, 1000));
+    }
+
+    #[test]
+    fn late_arrival_starts_at_now() {
+        let mut p = ServerPool::new("cpu", 2);
+        p.admit(0, 10);
+        let (s, e) = p.admit(1_000, 10);
+        assert_eq!((s, e), (1_000, 1_010));
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut p = ServerPool::new("cpu", 2);
+        p.admit(0, 100);
+        p.admit(0, 100);
+        assert!((p.utilization(100) - 1.0).abs() < 1e-12);
+        assert!((p.utilization(200) - 0.5).abs() < 1e-12);
+        assert_eq!(p.jobs(), 2);
+    }
+
+    #[test]
+    fn reset_clears_timeline() {
+        let mut p = ServerPool::new("cpu", 1);
+        p.admit(0, 1_000_000);
+        p.reset();
+        let (s, _) = p.admit(0, 1);
+        assert_eq!(s, 0);
+        assert_eq!(p.jobs(), 1);
+    }
+}

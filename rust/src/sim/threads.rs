@@ -1,0 +1,222 @@
+//! Modeled application threads.
+//!
+//! The paper runs Ligra with 24 OpenMP threads (§V); the highly concurrent
+//! request stream those threads produce is what task aggregation and the
+//! asynchronous forwarding pipeline exploit. [`ThreadSet`] models T threads
+//! as independent virtual clocks with a barrier per Ligra superstep, and
+//! [`ThreadSet::run_interleaved`] replays per-thread work queues in global
+//! time order so that shared-state effects (page buffer hits on pages
+//! faulted by a sibling thread, DPU cache warm-up, link contention) happen
+//! in a causally consistent order.
+
+use super::engine::EventQueue;
+use super::Ns;
+
+/// A set of T virtual thread clocks with superstep barriers.
+#[derive(Clone, Debug)]
+pub struct ThreadSet {
+    clocks: Vec<Ns>,
+}
+
+impl ThreadSet {
+    pub fn new(threads: usize, start: Ns) -> Self {
+        assert!(threads > 0);
+        ThreadSet {
+            clocks: vec![start; threads],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.clocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clocks.is_empty()
+    }
+
+    /// Current virtual time of thread `tid`.
+    pub fn now(&self, tid: usize) -> Ns {
+        self.clocks[tid]
+    }
+
+    /// Charge `d` ns of work to thread `tid`.
+    pub fn advance(&mut self, tid: usize, d: Ns) {
+        self.clocks[tid] += d;
+    }
+
+    /// Move thread `tid` forward to absolute time `t` (no-op if already past).
+    pub fn sync_to(&mut self, tid: usize, t: Ns) {
+        if self.clocks[tid] < t {
+            self.clocks[tid] = t;
+        }
+    }
+
+    /// Superstep barrier: all threads join at the max clock; returns it.
+    pub fn barrier(&mut self) -> Ns {
+        let t = self.time();
+        for c in &mut self.clocks {
+            *c = t;
+        }
+        t
+    }
+
+    /// Latest clock — the set's notion of elapsed time.
+    pub fn time(&self) -> Ns {
+        *self.clocks.iter().max().expect("non-empty")
+    }
+
+    /// Earliest clock.
+    pub fn min_time(&self) -> Ns {
+        *self.clocks.iter().min().expect("non-empty")
+    }
+
+    /// Replay per-thread work queues in global time order.
+    ///
+    /// `work[tid]` is the ordered list of items thread `tid` executes.
+    /// `f(tid, item, now)` performs the item starting at virtual time `now`
+    /// and returns its completion time (≥ `now`). Items within one thread are
+    /// sequential; across threads the earliest-clock thread always runs next,
+    /// which is exactly the interleaving a work-conserving scheduler
+    /// produces.
+    pub fn run_interleaved<W, F>(&mut self, work: Vec<Vec<W>>, mut f: F)
+    where
+        F: FnMut(usize, W, Ns) -> Ns,
+    {
+        assert!(work.len() <= self.clocks.len(), "more work queues than threads");
+        let mut queues: Vec<std::vec::IntoIter<W>> =
+            work.into_iter().map(|w| w.into_iter()).collect();
+        let mut pq: EventQueue<usize> = EventQueue::new();
+        for tid in 0..queues.len() {
+            pq.push(self.clocks[tid], tid);
+        }
+        while let Some((_, tid)) = pq.pop() {
+            if let Some(item) = queues[tid].next() {
+                let now = self.clocks[tid];
+                let done = f(tid, item, now);
+                debug_assert!(done >= now, "work item completed in the past");
+                self.clocks[tid] = done;
+                pq.push(done, tid);
+            }
+        }
+    }
+
+    /// Dynamic (work-conserving) schedule: the earliest-clock thread takes
+    /// the next item — OpenMP `schedule(dynamic)`, which is what keeps
+    /// Ligra balanced on power-law degree distributions. Items are handed
+    /// out in order, so the merged access stream stays near-sequential.
+    pub fn run_dynamic<W, F>(&mut self, items: impl IntoIterator<Item = W>, mut f: F)
+    where
+        F: FnMut(usize, W, Ns) -> Ns,
+    {
+        let mut it = items.into_iter();
+        let mut pq: EventQueue<usize> = EventQueue::new();
+        for tid in 0..self.clocks.len() {
+            pq.push(self.clocks[tid], tid);
+        }
+        while let Some((_, tid)) = pq.pop() {
+            if let Some(item) = it.next() {
+                let now = self.clocks[tid];
+                let done = f(tid, item, now);
+                debug_assert!(done >= now, "work item completed in the past");
+                self.clocks[tid] = done;
+                pq.push(done, tid);
+            }
+        }
+    }
+
+    /// Round-robin partition of `n` items into `t ≤ len()` queues — the
+    /// static schedule Ligra's parallel_for uses for frontier chunks.
+    pub fn partition(n: usize, t: usize) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::with_capacity(n / t + 1); t];
+        // Block (not strided) partition: preserves the sequential locality of
+        // each thread's index range, which is what OpenMP static scheduling
+        // gives Ligra and what makes prefetching meaningful.
+        let base = n / t;
+        let rem = n % t;
+        let mut start = 0;
+        for (tid, q) in out.iter_mut().enumerate() {
+            let len = base + usize::from(tid < rem);
+            q.extend(start..start + len);
+            start += len;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_syncs_all_clocks() {
+        let mut ts = ThreadSet::new(4, 0);
+        ts.advance(0, 10);
+        ts.advance(2, 50);
+        assert_eq!(ts.barrier(), 50);
+        for tid in 0..4 {
+            assert_eq!(ts.now(tid), 50);
+        }
+    }
+
+    #[test]
+    fn interleave_orders_by_clock() {
+        let mut ts = ThreadSet::new(2, 0);
+        let mut order = Vec::new();
+        // Thread 0 items take 30 ns, thread 1 items take 10 ns.
+        ts.run_interleaved(vec![vec![0usize, 1], vec![10usize, 11, 12]], |tid, item, now| {
+            order.push(item);
+            now + if tid == 0 { 30 } else { 10 }
+        });
+        // t=0: both ready; tid 0 first (insertion order), then 1.
+        // completions: t0 item0 @30, t1: 10@10, 11@20, 12@30, t0 item1 @60.
+        assert_eq!(order, vec![0, 10, 11, 12, 1]);
+        assert_eq!(ts.time(), 60);
+    }
+
+    #[test]
+    fn interleave_respects_staggered_start_clocks() {
+        let mut ts = ThreadSet::new(2, 0);
+        ts.advance(0, 100); // thread 0 starts late
+        let mut order = Vec::new();
+        ts.run_interleaved(vec![vec!['a'], vec!['b']], |_, item, now| {
+            order.push(item);
+            now + 1
+        });
+        assert_eq!(order, vec!['b', 'a']);
+    }
+
+    #[test]
+    fn partition_is_balanced_and_complete() {
+        let parts = ThreadSet::partition(10, 3);
+        assert_eq!(parts.len(), 3);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+        let mut all: Vec<usize> = parts.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        // Block partition: each queue is a contiguous range.
+        for p in &parts {
+            for w in p.windows(2) {
+                assert_eq!(w[1], w[0] + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_handles_fewer_items_than_threads() {
+        let parts = ThreadSet::partition(2, 8);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn min_and_max_time() {
+        let mut ts = ThreadSet::new(3, 5);
+        ts.advance(1, 20);
+        assert_eq!(ts.min_time(), 5);
+        assert_eq!(ts.time(), 25);
+        ts.sync_to(0, 15);
+        assert_eq!(ts.now(0), 15);
+        ts.sync_to(0, 10); // no-op backwards
+        assert_eq!(ts.now(0), 15);
+    }
+}

@@ -1,0 +1,191 @@
+//! Minimal benchmark harness (criterion substitute for the offline build).
+//!
+//! `cargo bench` targets use [`Bench`] for wall-clock micro/meso benchmarks:
+//! warm-up, fixed sample count, median/mean/stddev/min reporting, and a
+//! black-box to defeat the optimizer. For paper figures the *virtual-time*
+//! results come from the figure harness ([`crate::figures`]); these benches
+//! measure the simulator's own hot-path performance (the §Perf deliverable).
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// One benchmark's collected statistics (nanoseconds per iteration).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            (s[n / 2 - 1] + s[n / 2]) / 2.0
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let var = self
+            .samples
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / self.samples.len().max(1) as f64;
+        var.sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    /// Samples collected per benchmark.
+    pub samples: usize,
+    /// Minimum time spent per sample (iterations auto-scale).
+    pub min_sample_time: Duration,
+    pub warmup: Duration,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Keep totals modest: this machine has one core and many benches.
+        Bench {
+            samples: 15,
+            min_sample_time: Duration::from_millis(20),
+            warmup: Duration::from_millis(50),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn quick() -> Self {
+        Bench {
+            samples: 7,
+            min_sample_time: Duration::from_millis(5),
+            warmup: Duration::from_millis(10),
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark: `f` is a single iteration; its return value is
+    /// black-boxed.
+    pub fn bench<R>(&mut self, name: impl Into<String>, mut f: impl FnMut() -> R) -> &Stats {
+        let name = name.into();
+        // Warm-up and iteration-count calibration.
+        let warm_start = Instant::now();
+        let mut iters_per_sample = 1u64;
+        while warm_start.elapsed() < self.warmup {
+            let t = Instant::now();
+            bb(f());
+            let one = t.elapsed();
+            if one.as_nanos() > 0 {
+                iters_per_sample = (self.min_sample_time.as_nanos() / one.as_nanos().max(1))
+                    .clamp(1, 1 << 24) as u64;
+            }
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                bb(f());
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        }
+        let stats = Stats { name: name.clone(), samples };
+        println!(
+            "bench {:48} median {:>12}  mean {:>12}  sd {:>10}  min {:>12}  (x{iters_per_sample})",
+            stats.name,
+            fmt_ns(stats.median()),
+            fmt_ns(stats.mean()),
+            fmt_ns(stats.stddev()),
+            fmt_ns(stats.min()),
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Print a section header (figure id, parameters).
+    pub fn section(&self, title: &str) {
+        println!("\n=== {title} ===");
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_median_and_min() {
+        let s = Stats {
+            name: "t".into(),
+            samples: vec![3.0, 1.0, 2.0],
+        };
+        assert_eq!(s.median(), 2.0);
+        assert_eq!(s.min(), 1.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn even_sample_median_averages() {
+        let s = Stats {
+            name: "t".into(),
+            samples: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        assert_eq!(s.median(), 2.5);
+    }
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bench {
+            samples: 3,
+            min_sample_time: Duration::from_micros(100),
+            warmup: Duration::from_micros(100),
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.bench("noop", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].median() >= 0.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Minimal CLI argument parsing (clap substitute, offline build).
+//!
+//! Supports `soda <command> [positional...] [--flag] [--key value|--key=value]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .map(|s| parse_size(s).unwrap_or_else(|| panic!("invalid --{name}: {s}")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("invalid --{name}: {s}")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt_u64(name, default as u64) as usize
+    }
+}
+
+/// Parse sizes with optional binary suffix: `4096`, `64k`, `16m`, `2g`.
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim().to_ascii_lowercase();
+    let (num, mult) = if let Some(n) = s.strip_suffix('k') {
+        (n.to_string(), 1u64 << 10)
+    } else if let Some(n) = s.strip_suffix('m') {
+        (n.to_string(), 1 << 20)
+    } else if let Some(n) = s.strip_suffix('g') {
+        (n.to_string(), 1 << 30)
+    } else {
+        (s, 1)
+    };
+    num.trim().parse::<u64>().ok().map(|v| v * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_command_positional_options_flags() {
+        let a = args(&[
+            "run", "pagerank", "friendster", "--backend", "dpu-opt", "--scale=0.5", "--json",
+        ]);
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["pagerank", "friendster"]);
+        assert_eq!(a.opt("backend"), Some("dpu-opt"));
+        assert_eq!(a.opt_f64("scale", 1.0), 0.5);
+        assert!(a.flag("json"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn last_flag_without_value() {
+        let a = args(&["figures", "--all"]);
+        assert!(a.flag("all"));
+    }
+
+    #[test]
+    fn size_suffixes() {
+        assert_eq!(parse_size("4096"), Some(4096));
+        assert_eq!(parse_size("64k"), Some(64 << 10));
+        assert_eq!(parse_size("16M"), Some(16 << 20));
+        assert_eq!(parse_size("2g"), Some(2 << 30));
+        assert_eq!(parse_size("x"), None);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&["run"]);
+        assert_eq!(a.opt_u64("iters", 20), 20);
+        assert_eq!(a.opt_usize("threads", 24), 24);
+    }
+}

@@ -1,0 +1,94 @@
+//! Fast non-cryptographic hasher for simulator hot paths (FxHash algorithm
+//! — the rustc hasher). The page buffer and cache table sit on the fault
+//! path of every simulated memory access; std's SipHash costs ~4x more per
+//! probe for keys this small (§Perf optimization, EXPERIMENTS.md).
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// FxHash: wrapping multiply + rotate per word.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u16(&mut self, v: u16) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+/// Drop-in `HashMap` state for hot-path maps.
+pub type FxBuild = BuildHasherDefault<FxHasher>;
+
+/// `HashMap` with FxHash.
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuild>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distributes_small_keys() {
+        let mut buckets = [0u32; 64];
+        for region in 0..8u16 {
+            for page in 0..512u64 {
+                let mut h = FxHasher::default();
+                h.write_u16(region);
+                h.write_u64(page);
+                buckets[(h.finish() % 64) as usize] += 1;
+            }
+        }
+        let max = *buckets.iter().max().unwrap();
+        let min = *buckets.iter().min().unwrap();
+        assert!(max < min * 3, "poor distribution: {min}..{max}");
+    }
+
+    #[test]
+    fn map_works() {
+        let mut m: FxHashMap<(u16, u64), u32> = FxHashMap::default();
+        for i in 0..1000u64 {
+            m.insert((1, i), i as u32);
+        }
+        assert_eq!(m.get(&(1, 500)), Some(&500));
+        assert_eq!(m.len(), 1000);
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree utility layer.
+//!
+//! The offline build environment provides only `xla` and `anyhow`, so the
+//! small pieces other projects pull from crates.io live here instead:
+//! JSON ([`json`]), benchmarking ([`bench`]), property testing
+//! ([`quickcheck`]) and CLI parsing ([`cli`]).
+
+pub mod bench;
+pub mod fxhash;
+pub mod cli;
+pub mod json;
+pub mod quickcheck;

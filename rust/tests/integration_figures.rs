@@ -1,0 +1,103 @@
+//! Integration: the figure harness regenerates every table/figure with the
+//! paper's qualitative shapes at a reduced scale (the full-scale run is
+//! recorded in EXPERIMENTS.md via `soda figures --all`).
+
+use soda::figures;
+use soda::util::json::Json;
+
+const S: f64 = 0.0002;
+const T: usize = 24;
+
+fn rows(r: &figures::FigureReport) -> Vec<Json> {
+    match r.data.get("rows") {
+        Some(Json::Arr(v)) => v.clone(),
+        _ => panic!("{}: no rows", r.id),
+    }
+}
+
+#[test]
+fn fig3_numa2_dominates() {
+    let r = figures::fig3();
+    for row in rows(&r) {
+        if let Some(Json::Arr(bw)) = row.get("bw") {
+            let v: Vec<f64> = bw.iter().map(|x| x.as_f64().unwrap()).collect();
+            assert!(v[2] >= v[0] && v[2] >= v[1] && v[2] >= v[3]);
+        }
+    }
+}
+
+#[test]
+fn fig5_reproduces_50pct_rule() {
+    let r = figures::fig5();
+    let h = r.data.get("required_hit_rate").unwrap().as_f64().unwrap();
+    assert!((0.4..0.55).contains(&h), "testbed rule: ~50% hit rate needed, got {h}");
+}
+
+#[test]
+fn fig6_memserver_beats_ssd_in_most_cases() {
+    let r = figures::fig6(S, T);
+    let speedups: Vec<f64> = rows(&r)
+        .iter()
+        .map(|row| row.get("speedup").unwrap().as_f64().unwrap())
+        .collect();
+    let wins = speedups.iter().filter(|&&s| s > 1.0).count();
+    assert!(
+        wins >= 14,
+        "paper: 17/20 cases favor network memory; got {wins}/20 ({speedups:?})"
+    );
+}
+
+#[test]
+fn fig7_dpu_base_is_slower_than_memserver() {
+    let r = figures::fig7(S, T);
+    for row in rows(&r) {
+        let ratio = row.get("base_over_mem").unwrap().as_f64().unwrap();
+        assert!(
+            ratio > 1.0 && ratio < 1.6,
+            "naive DPU proxying should cost a bounded slowdown, got {ratio}"
+        );
+        let opt = row.get("opt_over_mem").unwrap().as_f64().unwrap();
+        assert!(opt <= ratio + 0.02, "optimizations must not make DPU slower than base");
+    }
+}
+
+#[test]
+fn fig9_static_caching_reduces_traffic_dynamic_shifts_to_background() {
+    let r = figures::fig9(S, T);
+    for row in rows(&r) {
+        let d_stat = row.get("static_delta").unwrap().as_f64().unwrap();
+        assert!(d_stat <= 0.02, "static caching must not add meaningful traffic: {d_stat}");
+        let bg_frac = row.get("dynamic_bg_fraction").unwrap().as_f64().unwrap();
+        assert!(
+            bg_frac > 0.5,
+            "dynamic caching must convert most traffic to background ({bg_frac})"
+        );
+    }
+}
+
+#[test]
+fn fig10_pagerank_most_predictable() {
+    let r = figures::fig10(S, T);
+    let mut pr = 0.0;
+    let mut bfs = 1.0;
+    for row in rows(&r) {
+        let app = row.get("app").unwrap().as_str().unwrap().to_string();
+        let h = row.get("friendster").unwrap().as_f64().unwrap();
+        if app == "pagerank" {
+            pr = h;
+        }
+        if app == "bfs" {
+            bfs = h;
+        }
+    }
+    assert!(pr > bfs, "PageRank ({pr}) must out-hit BFS ({bfs}) as in Fig 10");
+}
+
+#[test]
+fn all_figures_render_nonempty() {
+    for id in ["table1", "table2", "fig3", "fig4", "fig5"] {
+        let r = figures::run_figure(id, S, T).unwrap();
+        assert!(!r.lines.is_empty(), "{id} produced no lines");
+        assert!(r.render().contains(id));
+    }
+}

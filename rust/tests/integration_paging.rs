@@ -1,0 +1,176 @@
+//! Integration: the full paging path (host agent ⇄ backends ⇄ memory node)
+//! with real data movement, across all four backend configurations.
+
+use soda::backend::{DpuStore, MemServerStore, RemoteStore, SsdStore};
+use soda::coordinator::cluster::Cluster;
+use soda::coordinator::config::{BackendKind, CachingMode, ClusterConfig, SodaConfig};
+use soda::coordinator::service::SodaService;
+use soda::host::{HostAgent, Placement};
+use soda::sim::rng::Rng;
+
+fn agent_on(cluster: &Cluster, store: Box<dyn RemoteStore>, buffer_pages: u64) -> HostAgent {
+    let chunk = cluster.config().chunk_bytes;
+    HostAgent::new(
+        "it",
+        store,
+        buffer_pages * chunk,
+        chunk,
+        0.9,
+        8,
+        8,
+        2,
+        soda::host::HostTiming::default(),
+    )
+}
+
+/// Write a pseudorandom pattern through a tiny buffer (forcing evictions),
+/// then read it all back and verify byte equality.
+fn churn_roundtrip(mut agent: HostAgent, pages: u64) {
+    let chunk = agent.chunk_bytes();
+    let bytes = pages * chunk;
+    let (h, t0) = agent.alloc(0, "obj", bytes, None, Placement::Default);
+    let mut rng = Rng::new(7);
+    let mut expected = vec![0u8; bytes as usize];
+    rng_fill(&mut rng, &mut expected);
+    // Write in random-order page-sized strides.
+    let mut order: Vec<u64> = (0..pages).collect();
+    rng.shuffle(&mut order);
+    let mut t = t0;
+    for &p in &order {
+        let off = p * chunk;
+        t = agent.write_bytes(t, 0, h.region, off, &expected[off as usize..(off + chunk) as usize]);
+    }
+    // Read back in a different random order.
+    rng.shuffle(&mut order);
+    let mut got = vec![0u8; chunk as usize];
+    for &p in &order {
+        let off = p * chunk;
+        t = agent.read_bytes(t, 0, h.region, off, &mut got);
+        assert_eq!(
+            &got[..],
+            &expected[off as usize..(off + chunk) as usize],
+            "page {p} corrupted through eviction/writeback"
+        );
+    }
+    assert!(agent.stats().writebacks > 0, "small buffer must evict dirty pages");
+}
+
+#[test]
+fn churn_roundtrip_memserver() {
+    let cluster = Cluster::build(ClusterConfig::tiny());
+    let store = Box::new(MemServerStore::new(cluster.clone()));
+    churn_roundtrip(agent_on(&cluster, store, 4), 32);
+}
+
+#[test]
+fn churn_roundtrip_ssd() {
+    let cluster = Cluster::build(ClusterConfig::tiny());
+    let store = Box::new(SsdStore::new(cluster.clone()));
+    churn_roundtrip(agent_on(&cluster, store, 4), 32);
+}
+
+#[test]
+fn churn_roundtrip_dpu_full() {
+    let mut cfg = ClusterConfig::tiny();
+    cfg.dpu.opts = soda::dpu::DpuOpts::FULL;
+    let cluster = Cluster::build(cfg);
+    let store = Box::new(DpuStore::new(cluster.clone()));
+    churn_roundtrip(agent_on(&cluster, store, 4), 32);
+}
+
+#[test]
+fn churn_roundtrip_dpu_base() {
+    let mut cfg = ClusterConfig::tiny();
+    cfg.dpu.opts = soda::dpu::DpuOpts::BASE;
+    let cluster = Cluster::build(cfg);
+    let store = Box::new(DpuStore::new(cluster.clone()));
+    churn_roundtrip(agent_on(&cluster, store, 4), 32);
+}
+
+#[test]
+fn backend_timing_ordering_holds() {
+    // A cold page fetch must be fastest from DPU static cache, then
+    // memnode, then SSD — the premise of the whole paper.
+    let chunk = ClusterConfig::tiny().chunk_bytes;
+    let fetch_time = |backend: BackendKind, caching: CachingMode| {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let svc = SodaService::attach(
+            &cluster,
+            SodaConfig::default().with_backend(backend).with_caching(caching),
+        );
+        let mut a = svc.client_with_buffer("p", 16 * chunk);
+        let (h, t0) =
+            a.alloc(0, "x", 8 * chunk, Some(vec![1; (8 * chunk) as usize]), Placement::Static);
+        let t1 = if caching == CachingMode::Static {
+            a.pin_static(t0, "x").unwrap_or(t0)
+        } else {
+            t0
+        };
+        let mut out = vec![0u8; chunk as usize];
+        let t2 = a.read_bytes(t1, 0, h.region, 0, &mut out);
+        t2 - t1
+    };
+    let t_ssd = fetch_time(BackendKind::Ssd, CachingMode::None);
+    let t_mem = fetch_time(BackendKind::MemServer, CachingMode::None);
+    let t_static = fetch_time(BackendKind::DPU_OPT, CachingMode::Static);
+    assert!(t_static < t_mem, "DPU static cache ({t_static}) must beat memnode ({t_mem})");
+    assert!(t_mem < t_ssd, "memnode ({t_mem}) must beat SSD ({t_ssd})");
+}
+
+#[test]
+fn dirty_data_survives_dpu_writeback_pipeline() {
+    // Write through DPU (host released early), then verify on a second
+    // process that maps the region later.
+    let mut cfg = ClusterConfig::tiny();
+    cfg.dpu.opts = soda::dpu::DpuOpts::FULL;
+    let cluster = Cluster::build(cfg);
+    let chunk = cluster.config().chunk_bytes;
+    let mut writer = agent_on(&cluster, Box::new(DpuStore::new(cluster.clone())), 2);
+    let (h, t0) = writer.alloc(0, "shared", 8 * chunk, None, Placement::Default);
+    let mut t = t0;
+    for p in 0..8u64 {
+        let data = vec![(p + 1) as u8; chunk as usize];
+        t = writer.write_bytes(t, 0, h.region, p * chunk, &data);
+    }
+    let t = writer.flush(t);
+
+    let mut reader = agent_on(&cluster, Box::new(DpuStore::new(cluster.clone())), 16);
+    let shared = reader.map_shared("shared", h);
+    let mut out = vec![0u8; chunk as usize];
+    let mut t2 = t + 1_000_000;
+    for p in 0..8u64 {
+        t2 = reader.read_bytes(t2, 0, shared.region, p * chunk, &mut out);
+        assert!(out.iter().all(|&b| b == (p + 1) as u8), "page {p}");
+    }
+}
+
+#[test]
+fn numa_aware_placement_is_faster_end_to_end() {
+    let run = |numa_aware: bool| {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let mut scfg = SodaConfig::default().with_backend(BackendKind::MemServer);
+        scfg.numa_aware = numa_aware;
+        let svc = SodaService::attach(&cluster, scfg);
+        let chunk = cluster.config().chunk_bytes;
+        let mut a = svc.client_with_buffer("p", 4 * chunk);
+        let (h, t0) =
+            a.alloc(0, "x", 64 * chunk, Some(vec![1; (64 * chunk) as usize]), Placement::Default);
+        let mut out = vec![0u8; chunk as usize];
+        let mut t = t0;
+        for p in 0..64u64 {
+            t = a.read_bytes(t, 0, h.region, p * chunk, &mut out);
+        }
+        t - t0
+    };
+    let aware = run(true);
+    let naive = run(false);
+    assert!(aware < naive, "NUMA-aware placement must be faster ({aware} vs {naive})");
+}
+
+fn rng_fill(rng: &mut Rng, buf: &mut [u8]) {
+    for chunk in buf.chunks_mut(8) {
+        let v = rng.next_u64().to_le_bytes();
+        let n = chunk.len();
+        chunk.copy_from_slice(&v[..n]);
+    }
+}

@@ -1,0 +1,97 @@
+//! End-to-end AOT round trip: the python-lowered HLO artifacts load,
+//! compile and execute through PJRT from Rust, and the numbers match the
+//! pure-Rust oracle (which itself matches the python oracle via pytest).
+//!
+//! Requires `make artifacts` (skips gracefully if absent so `cargo test`
+//! works on a fresh checkout).
+
+use soda::runtime::{cpu_client, pagerank_step_ref, to_ell, Manifest, PagerankEngine};
+use soda::sim::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn artifact_executes_and_matches_oracle() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let spec = manifest.find(1024, 8).expect("default test artifact");
+    let client = cpu_client().expect("PJRT CPU client");
+    let engine = PagerankEngine::load(&client, &dir, spec).expect("compile artifact");
+
+    // Random ELL instance.
+    let (n, k) = (engine.n, engine.k);
+    let mut rng = Rng::new(42);
+    let ranks: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+    let inv_deg: Vec<f32> = (0..n).map(|_| (rng.f64() as f32) * 0.5).collect();
+    let cols: Vec<i32> = (0..n * k)
+        .map(|_| {
+            if rng.chance(0.3) {
+                -1
+            } else {
+                rng.below(n as u64) as i32
+            }
+        })
+        .collect();
+    let spill: Vec<f32> = (0..n).map(|_| (rng.f64() as f32) * 0.01).collect();
+
+    let (got, got_delta) = engine.step(&ranks, &inv_deg, &cols, &spill).expect("step");
+    let (want, want_delta) = pagerank_step_ref(&ranks, &inv_deg, &cols, k, &spill, 0.85);
+    assert_eq!(got.len(), n);
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-4, "rank {i}: {a} vs {b}");
+    }
+    assert!(
+        (got_delta - want_delta).abs() / want_delta.max(1e-6) < 1e-2,
+        "delta {got_delta} vs {want_delta}"
+    );
+}
+
+#[test]
+fn engine_rejects_wrong_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.find(1024, 8).unwrap();
+    let client = cpu_client().unwrap();
+    let engine = PagerankEngine::load(&client, &dir, spec).unwrap();
+    let bad = engine.step(&[0.0; 10], &[0.0; 10], &[0; 80], &[0.0; 10]);
+    assert!(bad.is_err());
+}
+
+#[test]
+fn multi_iteration_convergence_through_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.find(1024, 8).unwrap();
+    let client = cpu_client().unwrap();
+    let engine = PagerankEngine::load(&client, &dir, spec).unwrap();
+    let n = engine.n;
+
+    // Ring graph: uniform ranks are the fixed point.
+    let neighbors: Vec<Vec<u32>> = (0..n)
+        .map(|v| vec![((v + 1) % n) as u32, ((v + n - 1) % n) as u32])
+        .collect();
+    let (cols, spill_lists) = to_ell(&neighbors, n, engine.k);
+    assert!(spill_lists.iter().all(|s| s.is_empty()));
+    let inv_deg = vec![0.5f32; n];
+    let spill = vec![0.0f32; n];
+    // Start from a perturbed distribution.
+    let mut ranks = vec![1.0 / n as f32; n];
+    ranks[0] += 0.1;
+    ranks[1] -= 0.1;
+    let mut deltas = Vec::new();
+    for _ in 0..60 {
+        let (next, delta) = engine.step(&ranks, &inv_deg, &cols, &spill).unwrap();
+        ranks = next;
+        deltas.push(delta);
+    }
+    assert!(deltas.last().unwrap() < &1e-3, "deltas: {deltas:?}");
+    assert!(deltas[0] > deltas[deltas.len() - 1]);
+    let uniform = 1.0 / n as f32;
+    assert!(ranks.iter().all(|&r| (r - uniform).abs() < 1e-4));
+}

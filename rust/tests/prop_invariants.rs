@@ -1,0 +1,224 @@
+//! Property-based invariants over the coordinator's core state machines
+//! (in-tree quickcheck; see util::quickcheck). Each property runs over
+//! hundreds of randomized cases with deterministic seeds.
+
+use soda::dpu::{Aggregator, CacheTable, EntryKey, RecentList};
+use soda::host::buffer::{EvictPolicy, PageBuffer, PageKey};
+use soda::sim::link::{Link, TrafficClass};
+use soda::sim::rng::Rng;
+use soda::sim::server::ServerPool;
+use soda::util::quickcheck::{forall, vec_of, Config};
+
+#[test]
+fn prop_buffer_never_exceeds_capacity_and_preserves_data() {
+    forall(
+        Config { cases: 200, seed: 0xB0F },
+        |r| {
+            let cap = 2 + r.index(12);
+            let ops = vec_of(r, 200, |r| (r.below(32), r.chance(0.4)));
+            (cap, ops)
+        },
+        |(cap, ops)| {
+            let mut buf = PageBuffer::new(*cap as u64 * 64, 64, 1.0);
+            let mut shadow = std::collections::HashMap::new();
+            for (i, &(page, write)) in ops.iter().enumerate() {
+                let key = PageKey::new(1, page);
+                if buf.access(key, write).is_none() {
+                    while buf.is_full() {
+                        let ev = buf.evict_lru().ok_or("evict failed on full buffer")?;
+                        // dirty pages must carry the latest written tag
+                        if ev.dirty {
+                            let want = shadow.get(&ev.key.page).ok_or("dirty page unknown")?;
+                            if ev.data[0] != *want {
+                                return Err(format!("dirty page {:?} lost data", ev.key));
+                            }
+                        }
+                        buf.recycle(ev.data);
+                    }
+                    let tag = shadow.get(&page).copied().unwrap_or(0);
+                    let tag = if write { (i % 251) as u8 } else { tag };
+                    buf.insert_with(key, write, |d| d[0] = tag);
+                    if write {
+                        shadow.insert(page, tag);
+                    }
+                } else if write {
+                    let tag = (i % 251) as u8;
+                    buf.peek(key).unwrap()[0] = tag;
+                    shadow.insert(page, tag);
+                }
+                if buf.resident_pages() > *cap {
+                    return Err(format!("over capacity: {} > {cap}", buf.resident_pages()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fifo_eviction_order_is_fault_order() {
+    forall(
+        Config { cases: 100, seed: 0xF1F0 },
+        |r| vec_of(r, 40, |r| r.below(1000)),
+        |pages| {
+            let mut buf = PageBuffer::with_policy(64 * 4096, 4096, 1.0, EvictPolicy::FaultFifo);
+            let mut fault_order = Vec::new();
+            for &p in pages {
+                let key = PageKey::new(1, p);
+                if buf.access(key, false).is_none() && !buf.is_resident(key) {
+                    buf.insert_with(key, false, |_| {});
+                    fault_order.push(key);
+                }
+            }
+            // Evict everything: must come out in fault order.
+            let mut evicted = Vec::new();
+            while let Some(ev) = buf.evict_lru() {
+                evicted.push(ev.key);
+            }
+            if evicted != fault_order {
+                return Err(format!("FIFO violated: {evicted:?} vs {fault_order:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_link_arrivals_are_fifo_and_causal() {
+    forall(
+        Config { cases: 200, seed: 0x11F0 },
+        |r| vec_of(r, 64, |r| (r.below(1_000_000), 1 + r.below(1 << 20))),
+        |xfers| {
+            let mut link = Link::new("l", 10.0, 1_000, 50);
+            let mut sorted = xfers.clone();
+            sorted.sort();
+            let mut last_arrival = 0;
+            for &(t, bytes) in &sorted {
+                let arr = link.transfer(t, bytes, TrafficClass::OnDemand);
+                if arr < t + 1_000 {
+                    return Err(format!("arrival {arr} before latency floor"));
+                }
+                if arr < last_arrival {
+                    return Err("FIFO link reordered arrivals".to_string());
+                }
+                last_arrival = arr;
+            }
+            // Conservation: counted bytes == sum of transfers.
+            let total: u64 = sorted.iter().map(|&(_, b)| b).sum();
+            if link.stats().total_bytes() != total {
+                return Err("byte counter mismatch".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_server_pool_work_conservation() {
+    forall(
+        Config { cases: 200, seed: 0x5E6E },
+        |r| {
+            let k = 1 + r.index(8);
+            let jobs = vec_of(r, 100, |r| (r.below(10_000), 1 + r.below(5_000)));
+            (k, jobs)
+        },
+        |(k, jobs)| {
+            let mut pool = ServerPool::new("p", *k);
+            let mut sorted = jobs.clone();
+            sorted.sort();
+            let mut total = 0;
+            for &(t, d) in &sorted {
+                let (start, end) = pool.admit(t, d);
+                if start < t {
+                    return Err("job started before arrival".to_string());
+                }
+                if end - start != d {
+                    return Err("service time distorted".to_string());
+                }
+                total += d;
+            }
+            if pool.busy_ns() != total {
+                return Err("busy time not conserved".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_table_pinned_entries_survive_any_insert_storm() {
+    forall(
+        Config { cases: 100, seed: 0xCAFE },
+        |r| {
+            let pinned = r.below(4) as u64;
+            let storm = vec_of(r, 64, |r| r.below(512));
+            (pinned, storm)
+        },
+        |(pinned, storm)| {
+            let mut t = CacheTable::new(8 * 1024, 1024, 256);
+            let mut rng = Rng::new(1);
+            for e in 0..=*pinned {
+                t.insert(EntryKey { region: 1, entry: e }, vec![0; 1024], 0, &mut rng);
+                t.pin(EntryKey { region: 1, entry: e });
+            }
+            for &e in storm {
+                t.insert(EntryKey { region: 2, entry: e }, vec![0; 1024], 0, &mut rng);
+            }
+            for e in 0..=*pinned {
+                if !t.contains(EntryKey { region: 1, entry: e }) {
+                    return Err(format!("pinned entry {e} evicted"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_recent_list_holds_last_k() {
+    forall(
+        Config { cases: 200, seed: 0x11EC },
+        |r| vec_of(r, 300, |r| r.below(1 << 20)),
+        |pushes| {
+            let mut list = RecentList::new(128);
+            for &p in pushes {
+                list.push(PageKey::new(1, p));
+            }
+            let n = pushes.len().min(128);
+            let latest = list.latest(n);
+            for (i, k) in latest.iter().enumerate() {
+                let want = pushes[pushes.len() - 1 - i];
+                if k.page != want {
+                    return Err(format!("latest[{i}] = {} != {want}", k.page));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_aggregator_factor_bounded_and_monotone_in_load() {
+    forall(
+        Config { cases: 200, seed: 0xA66 },
+        |r| {
+            let max_batch = 1 + r.below(32);
+            let inflight = vec_of(r, 64, |r| 1_000 + r.below(1_000_000));
+            (max_batch, inflight)
+        },
+        |(max_batch, inflight)| {
+            let mut a = Aggregator::new(*max_batch);
+            for &c in inflight {
+                a.record_completion(c);
+            }
+            let f = a.batch_factor(0);
+            if f < 1 || f > *max_batch {
+                return Err(format!("factor {f} out of [1, {max_batch}]"));
+            }
+            if f != (inflight.len() as u64 + 1).min(*max_batch) {
+                return Err("factor must equal min(inflight+1, max_batch) at t=0".to_string());
+            }
+            Ok(())
+        },
+    );
+}

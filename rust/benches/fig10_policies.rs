@@ -1,0 +1,34 @@
+//! Bench: Fig 10 extension — dynamic-cache hit rate per replacement policy.
+//!
+//! Sweeps every engine of the unified cache subsystem over the Fig 10
+//! application streams (sequential PageRank vs frontier BFS), reporting the
+//! wallclock cost of each policy's bookkeeping alongside the hit rate the
+//! virtual-time run produced (`soda figures abl-cache-policy` prints the
+//! full hit-rate/traffic table).
+
+use soda::cache::PolicyKind;
+use soda::coordinator::config::{BackendKind, CachingMode};
+use soda::graph::App;
+use soda::util::bench::Bench;
+use soda::workload::{ExperimentSpec, Workbench};
+
+fn main() {
+    let mut b = Bench::quick();
+    b.section("fig10+: dynamic-cache hit rate by replacement policy (scale 2e-4)");
+    for app in [App::PageRank, App::Bfs] {
+        for policy in PolicyKind::ALL {
+            b.bench(format!("{}/friendster/{}", app.name(), policy.name()), || {
+                let mut wb = Workbench::new(0.0002);
+                wb.threads = 24;
+                wb.dpu_cache_policy = Some(policy);
+                let m = wb.run(&ExperimentSpec {
+                    app,
+                    graph: "friendster",
+                    backend: BackendKind::DPU_FULL,
+                    caching: CachingMode::Dynamic,
+                });
+                (m.dpu_hit_rate * 1e6) as u64
+            });
+        }
+    }
+}

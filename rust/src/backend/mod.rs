@@ -34,6 +34,22 @@ pub enum FetchSource {
     DpuStatic,
 }
 
+impl FetchSource {
+    /// Number of sources (length of per-source counter arrays).
+    pub const COUNT: usize = 4;
+
+    /// Stable index into per-source counter arrays such as
+    /// `HostStats::sources` (`[Ssd, MemNode, DpuCache, DpuStatic]`).
+    pub fn index(self) -> usize {
+        match self {
+            FetchSource::Ssd => 0,
+            FetchSource::MemNode => 1,
+            FetchSource::DpuCache => 2,
+            FetchSource::DpuStatic => 3,
+        }
+    }
+}
+
 /// The remote side of the paging path.
 pub trait RemoteStore {
     /// Human-readable backend name (figure labels).

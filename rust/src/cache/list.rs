@@ -1,0 +1,225 @@
+//! Intrusive doubly-linked list over frame-slot indices.
+//!
+//! The recency/insertion orders every list-based policy maintains are
+//! intrusive lists over `u32` slot ids, exactly like the original
+//! `PageBuffer`'s embedded prev/next fields — no allocation per operation,
+//! O(1) link/unlink/move, and the node storage grows monotonically with the
+//! highest slot id seen (slot spaces are dense in both shells).
+
+/// Sentinel for "no slot".
+pub(crate) const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Copy, Debug)]
+struct Node {
+    prev: u32,
+    next: u32,
+    linked: bool,
+}
+
+const UNLINKED: Node = Node {
+    prev: NIL,
+    next: NIL,
+    linked: false,
+};
+
+/// Doubly-linked list of slot indices; front = most recently pushed.
+#[derive(Debug)]
+pub struct IndexList {
+    nodes: Vec<Node>,
+    head: u32,
+    tail: u32,
+    len: usize,
+}
+
+impl Default for IndexList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IndexList {
+    pub fn new() -> Self {
+        IndexList {
+            nodes: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            len: 0,
+        }
+    }
+
+    fn ensure(&mut self, slot: u32) {
+        let need = slot as usize + 1;
+        if self.nodes.len() < need {
+            self.nodes.resize(need, UNLINKED);
+        }
+    }
+
+    pub fn contains(&self, slot: u32) -> bool {
+        self.nodes
+            .get(slot as usize)
+            .map(|n| n.linked)
+            .unwrap_or(false)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Link `slot` at the front (most-recent end).
+    pub fn push_front(&mut self, slot: u32) {
+        self.ensure(slot);
+        debug_assert!(!self.nodes[slot as usize].linked, "slot {slot} already linked");
+        let old_head = self.head;
+        {
+            let n = &mut self.nodes[slot as usize];
+            n.prev = NIL;
+            n.next = old_head;
+            n.linked = true;
+        }
+        if old_head != NIL {
+            self.nodes[old_head as usize].prev = slot;
+        } else {
+            self.tail = slot;
+        }
+        self.head = slot;
+        self.len += 1;
+    }
+
+    /// Remove `slot` from the list (no-op if not linked).
+    pub fn unlink(&mut self, slot: u32) {
+        if !self.contains(slot) {
+            return;
+        }
+        let (prev, next) = {
+            let n = &self.nodes[slot as usize];
+            (n.prev, n.next)
+        };
+        if prev != NIL {
+            self.nodes[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        self.nodes[slot as usize] = UNLINKED;
+        self.len -= 1;
+    }
+
+    /// Move a linked slot to the front (no-op if not linked).
+    pub fn move_to_front(&mut self, slot: u32) {
+        if self.contains(slot) {
+            self.unlink(slot);
+            self.push_front(slot);
+        }
+    }
+
+    /// The back (least-recent) slot.
+    pub fn back(&self) -> Option<u32> {
+        (self.tail != NIL).then_some(self.tail)
+    }
+
+    /// Walk back-to-front, returning the first slot satisfying `pred`.
+    pub fn rfind(&self, pred: &dyn Fn(u32) -> bool) -> Option<u32> {
+        let mut cur = self.tail;
+        while cur != NIL {
+            if pred(cur) {
+                return Some(cur);
+            }
+            cur = self.nodes[cur as usize].prev;
+        }
+        None
+    }
+
+    /// Slots front-to-back (most- to least-recently pushed).
+    pub fn iter_order(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.len);
+        let mut cur = self.head;
+        while cur != NIL {
+            out.push(cur);
+            cur = self.nodes[cur as usize].next;
+        }
+        out
+    }
+
+    pub fn clear(&mut self) {
+        self.nodes.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_unlink_order() {
+        let mut l = IndexList::new();
+        l.push_front(0);
+        l.push_front(5);
+        l.push_front(2);
+        assert_eq!(l.iter_order(), vec![2, 5, 0]);
+        assert_eq!(l.back(), Some(0));
+        assert_eq!(l.len(), 3);
+        l.unlink(5);
+        assert_eq!(l.iter_order(), vec![2, 0]);
+        assert!(!l.contains(5));
+        l.unlink(5); // no-op
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn move_to_front_reorders() {
+        let mut l = IndexList::new();
+        for s in 0..4 {
+            l.push_front(s);
+        }
+        l.move_to_front(1);
+        assert_eq!(l.iter_order(), vec![1, 3, 2, 0]);
+        assert_eq!(l.back(), Some(0));
+    }
+
+    #[test]
+    fn rfind_skips_back_entries() {
+        let mut l = IndexList::new();
+        for s in 0..4 {
+            l.push_front(s);
+        }
+        // back-to-front is 0,1,2,3; skip 0 and 1.
+        assert_eq!(l.rfind(&|s| s > 1), Some(2));
+        assert_eq!(l.rfind(&|_| false), None);
+    }
+
+    #[test]
+    fn unlink_head_and_tail() {
+        let mut l = IndexList::new();
+        l.push_front(0);
+        l.push_front(1);
+        l.unlink(1); // head
+        assert_eq!(l.iter_order(), vec![0]);
+        l.unlink(0); // tail == head
+        assert!(l.is_empty());
+        assert_eq!(l.back(), None);
+        l.push_front(7);
+        assert_eq!(l.iter_order(), vec![7]);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut l = IndexList::new();
+        l.push_front(3);
+        l.clear();
+        assert!(l.is_empty());
+        assert!(!l.contains(3));
+        l.push_front(3);
+        assert_eq!(l.len(), 1);
+    }
+}

@@ -1,0 +1,93 @@
+//! Access-LRU replacement — the idealized policy.
+//!
+//! Assumes access recency is free to observe (hardware access bits or an
+//! in-line software hook). Kept for ablation against
+//! [`FaultFifo`](super::PolicyKind::FaultFifo): the gap between the two is
+//! the cost of `userfaultfd`'s visibility limitation.
+
+use super::list::IndexList;
+use super::{PolicyKind, ReplacementPolicy};
+use crate::sim::rng::Rng;
+
+/// Least-recently-used policy with per-hit recency refresh.
+#[derive(Debug, Default)]
+pub struct AccessLruPolicy {
+    list: IndexList,
+}
+
+impl AccessLruPolicy {
+    pub fn new() -> Self {
+        AccessLruPolicy {
+            list: IndexList::new(),
+        }
+    }
+}
+
+impl ReplacementPolicy for AccessLruPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::AccessLru
+    }
+
+    fn on_insert(&mut self, slot: u32) {
+        self.list.push_front(slot);
+    }
+
+    fn on_touch(&mut self, slot: u32) {
+        self.list.move_to_front(slot);
+    }
+
+    fn on_remove(&mut self, slot: u32) {
+        self.list.unlink(slot);
+    }
+
+    fn victim(&mut self, _rng: &mut Rng, evictable: &dyn Fn(u32) -> bool) -> Option<u32> {
+        self.list.rfind(evictable)
+    }
+
+    fn order(&self) -> Vec<u32> {
+        self.list.iter_order()
+    }
+
+    fn len(&self) -> usize {
+        self.list.len()
+    }
+
+    fn clear(&mut self) {
+        self.list.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn touch_refreshes_recency() {
+        let mut p = AccessLruPolicy::new();
+        let mut rng = Rng::new(0);
+        for s in 0..3 {
+            p.on_insert(s);
+        }
+        p.on_touch(0);
+        // 0 is now MRU; 1 is LRU.
+        assert_eq!(p.victim(&mut rng, &|_| true), Some(1));
+        assert_eq!(p.order(), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn eviction_is_lru_order() {
+        let mut p = AccessLruPolicy::new();
+        let mut rng = Rng::new(0);
+        for s in 0..4 {
+            p.on_insert(s);
+        }
+        p.on_touch(1);
+        p.on_touch(0);
+        let mut out = Vec::new();
+        while let Some(v) = p.victim(&mut rng, &|_| true) {
+            p.on_remove(v);
+            out.push(v);
+        }
+        assert_eq!(out, vec![2, 3, 1, 0]);
+    }
+}

@@ -1,0 +1,252 @@
+//! Unified pluggable cache subsystem — one replacement engine for both
+//! SODA cache layers.
+//!
+//! The paper's claim that SODA "enables customizable data caching and
+//! prefetching optimizations" needs a seam the rest of the system can plug
+//! policies into. This module provides it:
+//!
+//! * [`ReplacementPolicy`] — the policy trait, expressed over *frame slots*
+//!   (`u32` indices into a fixed frame pool). The storage shell owns the
+//!   frames, the residency map, dirty bits and pin counts; the policy only
+//!   orders slots and picks victims. Pin-awareness enters through the
+//!   `evictable` predicate handed to [`ReplacementPolicy::victim`] (a slot
+//!   with a nonzero pin count is simply not evictable) plus the
+//!   `on_pin`/`on_unpin` notification hooks.
+//! * [`PolicyKind`] — the runtime-selectable policy set, parseable from
+//!   config JSON and the `soda` CLI (`fault-fifo`, `access-lru`, `random`,
+//!   `clock`, `slru`).
+//!
+//! Two storage shells sit on top:
+//!
+//! * the host agent's [`PageBuffer`](crate::host::buffer::PageBuffer)
+//!   (64 KB chunks, dirty tracking, proactive eviction), default policy
+//!   [`PolicyKind::FaultFifo`] — bit-identical to the original intrusive
+//!   LRU-by-fault-time implementation;
+//! * the DPU agent's [`CacheTable`](crate::dpu::cache_table::CacheTable)
+//!   (1 MB entries, refcount pinning), default policy
+//!   [`PolicyKind::Random`] — bit-identical to the original bounded
+//!   random-probe eviction, including its RNG draw sequence.
+//!
+//! Policies:
+//!
+//! | kind            | order maintained        | victim choice                  |
+//! |-----------------|-------------------------|--------------------------------|
+//! | `FaultFifo`     | insertion (fault) order | oldest fault (what uffd can do)|
+//! | `AccessLru`     | access recency          | least recently used (idealized)|
+//! | `Random`        | none                    | bounded uniform probes         |
+//! | `Clock`         | FIFO + reference bits   | second-chance sweep            |
+//! | `SegmentedLru`  | 2Q probation/protected  | probation LRU, then protected  |
+//!
+//! Policy selection is threaded through
+//! [`SodaConfig`](crate::coordinator::config::SodaConfig) (host buffer via
+//! `evict_policy`, DPU override via `dpu_cache_policy`),
+//! [`DpuConfig`](crate::dpu::DpuConfig) (`cache_policy`) and the `soda` CLI
+//! (`--evict-policy`, `--dpu-cache-policy`); the `abl-cache-policy` figure
+//! and the `fig10_policies` bench sweep all of them.
+
+pub mod clock;
+pub mod fifo;
+pub mod list;
+pub mod lru;
+pub mod random;
+pub mod slru;
+
+pub use clock::ClockPolicy;
+pub use fifo::FaultFifoPolicy;
+pub use list::IndexList;
+pub use lru::AccessLruPolicy;
+pub use random::RandomPolicy;
+pub use slru::SegmentedLruPolicy;
+
+use crate::sim::rng::Rng;
+
+/// The runtime-selectable replacement policies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// Order by fault (insertion) time; hits are invisible. This is what
+    /// `userfaultfd`-based buffer management can actually implement, and
+    /// the host buffer's seed-compatible default.
+    FaultFifo,
+    /// Order by access time (idealized; assumes free hardware access bits).
+    AccessLru,
+    /// Uniform random probes among unpinned slots (the paper's DPU cache
+    /// choice: minimal bookkeeping on wimpy cores).
+    Random,
+    /// Second-chance FIFO (one reference bit per slot).
+    Clock,
+    /// Segmented LRU (2Q-style): new pages enter a probationary queue and
+    /// must be re-referenced to reach the protected segment.
+    SegmentedLru,
+}
+
+impl PolicyKind {
+    /// Every policy, in ablation-sweep order.
+    pub const ALL: [PolicyKind; 5] = [
+        PolicyKind::FaultFifo,
+        PolicyKind::AccessLru,
+        PolicyKind::Random,
+        PolicyKind::Clock,
+        PolicyKind::SegmentedLru,
+    ];
+
+    /// Canonical name (config JSON / CLI / figure labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::FaultFifo => "fault-fifo",
+            PolicyKind::AccessLru => "access-lru",
+            PolicyKind::Random => "random",
+            PolicyKind::Clock => "clock",
+            PolicyKind::SegmentedLru => "slru",
+        }
+    }
+
+    /// Parse a policy name (accepts the canonical names plus common
+    /// aliases: `fifo`, `lru`, `segmented-lru`, `2q`).
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fault-fifo" | "fifo" => Some(PolicyKind::FaultFifo),
+            "access-lru" | "lru" => Some(PolicyKind::AccessLru),
+            "random" | "rand" => Some(PolicyKind::Random),
+            "clock" | "second-chance" => Some(PolicyKind::Clock),
+            "slru" | "segmented-lru" | "2q" => Some(PolicyKind::SegmentedLru),
+            _ => None,
+        }
+    }
+
+    /// Build the policy engine for a cache of `capacity_slots` frame slots.
+    pub fn build(&self, capacity_slots: usize) -> Box<dyn ReplacementPolicy> {
+        match self {
+            PolicyKind::FaultFifo => Box::new(FaultFifoPolicy::new()),
+            PolicyKind::AccessLru => Box::new(AccessLruPolicy::new()),
+            PolicyKind::Random => Box::new(RandomPolicy::new(capacity_slots)),
+            PolicyKind::Clock => Box::new(ClockPolicy::new()),
+            PolicyKind::SegmentedLru => Box::new(SegmentedLruPolicy::new(capacity_slots)),
+        }
+    }
+}
+
+/// A replacement policy over frame slots.
+///
+/// The storage shell calls the `on_*` hooks as frames change state and
+/// [`victim`](Self::victim) when it needs space. The policy never touches
+/// frame contents; `evictable(slot)` is the shell's combined
+/// residency/pin-count/dirty-constraint check (today: resident and pin
+/// count zero — dirty pages *are* evictable, the shell surfaces them for
+/// writeback via its `EvictedPage` return).
+pub trait ReplacementPolicy: std::fmt::Debug {
+    /// Which [`PolicyKind`] this engine implements.
+    fn kind(&self) -> PolicyKind;
+
+    /// A frame was inserted into `slot` (must not already be tracked).
+    fn on_insert(&mut self, slot: u32);
+
+    /// The frame in `slot` was accessed (cache hit).
+    fn on_touch(&mut self, slot: u32);
+
+    /// The frame in `slot` gained a pin (request fulfillment in flight).
+    fn on_pin(&mut self, _slot: u32) {}
+
+    /// The frame in `slot` dropped a pin.
+    fn on_unpin(&mut self, _slot: u32) {}
+
+    /// The frame in `slot` left the cache (eviction chosen by
+    /// [`victim`](Self::victim), invalidation, or drain).
+    fn on_remove(&mut self, slot: u32);
+
+    /// Pick an eviction victim among tracked slots for which
+    /// `evictable(slot)` holds. Stochastic policies draw from `rng`
+    /// (deterministic, seeded by the shell); others ignore it. Returns
+    /// `None` when no victim can be found within the policy's probe bound —
+    /// the shell decides whether that drops the insertion (DPU cache) or
+    /// falls back to a scan (host buffer).
+    ///
+    /// The chosen slot stays tracked until the shell calls
+    /// [`on_remove`](Self::on_remove).
+    fn victim(&mut self, rng: &mut Rng, evictable: &dyn Fn(u32) -> bool) -> Option<u32>;
+
+    /// Tracked slots, most-protected first (for `FaultFifo`/`AccessLru`
+    /// this is exactly MRU→LRU; the reverse is the eviction order).
+    fn order(&self) -> Vec<u32>;
+
+    /// Number of tracked slots.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Forget all tracked slots.
+    fn clear(&mut self);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for kind in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(PolicyKind::parse("FIFO"), Some(PolicyKind::FaultFifo));
+        assert_eq!(PolicyKind::parse("lru"), Some(PolicyKind::AccessLru));
+        assert_eq!(PolicyKind::parse("2q"), Some(PolicyKind::SegmentedLru));
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_produces_matching_kind() {
+        for kind in PolicyKind::ALL {
+            let engine = kind.build(16);
+            assert_eq!(engine.kind(), kind);
+            assert!(engine.is_empty());
+        }
+    }
+
+    /// Shared black-box conformance check: insert/touch/remove keeps the
+    /// tracked set consistent and victims are always tracked + evictable.
+    #[test]
+    fn conformance_all_policies() {
+        for kind in PolicyKind::ALL {
+            let mut engine = kind.build(8);
+            let mut rng = Rng::new(0xC04F);
+            for s in 0..8u32 {
+                engine.on_insert(s);
+            }
+            engine.on_touch(2);
+            engine.on_touch(5);
+            engine.on_touch(2);
+            assert_eq!(engine.len(), 8, "{kind:?}");
+            let order = engine.order();
+            assert_eq!(order.len(), 8, "{kind:?}");
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..8).collect::<Vec<_>>(), "{kind:?}");
+
+            // Evict everything; every victim must be tracked and pass the
+            // evictable predicate (here: not slot 3, simulating a pin).
+            // `Random` may legitimately return None when its bounded probes
+            // miss — retry; the RNG advances so the loop terminates.
+            let mut evicted = Vec::new();
+            let mut dry_probes = 0;
+            while engine.len() > 1 {
+                let tracked = engine.order();
+                match engine.victim(&mut rng, &|s| s != 3 && tracked.contains(&s)) {
+                    Some(v) => {
+                        assert_ne!(v, 3, "{kind:?} evicted the pinned slot");
+                        assert!(!evicted.contains(&v), "{kind:?} evicted {v} twice");
+                        engine.on_remove(v);
+                        evicted.push(v);
+                    }
+                    None => {
+                        dry_probes += 1;
+                        assert!(dry_probes < 10_000, "{kind:?}: victim never found");
+                    }
+                }
+            }
+            assert_eq!(engine.order(), vec![3], "{kind:?} must keep the pinned slot");
+            engine.clear();
+            assert!(engine.is_empty(), "{kind:?}");
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Segmented LRU (2Q-style) replacement.
+//!
+//! Two queues: new frames enter a *probationary* FIFO; a hit promotes a
+//! frame into the *protected* LRU segment (capped at ~2/3 of capacity,
+//! overflow demotes the protected LRU tail back to probation). Victims
+//! come from probation first, so scan-once data — a graph app streaming
+//! its edge array — washes through probation without displacing the
+//! re-referenced vertex pages that earned protection. This is the
+//! scan-resistance FIFO and LRU both lack, and the interesting contender
+//! in the policy ablation.
+
+use super::list::IndexList;
+use super::{PolicyKind, ReplacementPolicy};
+use crate::sim::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Segment {
+    None,
+    Probation,
+    Protected,
+}
+
+/// Segmented-LRU policy.
+#[derive(Debug)]
+pub struct SegmentedLruPolicy {
+    probation: IndexList,
+    protected: IndexList,
+    segment: Vec<Segment>,
+    /// Protected-segment cap (2/3 of total capacity, at least one slot).
+    protected_cap: usize,
+}
+
+impl SegmentedLruPolicy {
+    pub fn new(capacity_slots: usize) -> Self {
+        SegmentedLruPolicy {
+            probation: IndexList::new(),
+            protected: IndexList::new(),
+            segment: Vec::new(),
+            protected_cap: (capacity_slots * 2 / 3).max(1),
+        }
+    }
+
+    fn segment_of(&self, slot: u32) -> Segment {
+        self.segment
+            .get(slot as usize)
+            .copied()
+            .unwrap_or(Segment::None)
+    }
+
+    fn set_segment(&mut self, slot: u32, seg: Segment) {
+        let idx = slot as usize;
+        if self.segment.len() <= idx {
+            self.segment.resize(idx + 1, Segment::None);
+        }
+        self.segment[idx] = seg;
+    }
+}
+
+impl ReplacementPolicy for SegmentedLruPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::SegmentedLru
+    }
+
+    fn on_insert(&mut self, slot: u32) {
+        self.probation.push_front(slot);
+        self.set_segment(slot, Segment::Probation);
+    }
+
+    fn on_touch(&mut self, slot: u32) {
+        match self.segment_of(slot) {
+            Segment::Probation => {
+                self.probation.unlink(slot);
+                self.protected.push_front(slot);
+                self.set_segment(slot, Segment::Protected);
+                // Overflowing protection demotes its LRU tail to probation
+                // (it keeps a chance, but is evictable again).
+                if self.protected.len() > self.protected_cap {
+                    if let Some(demoted) = self.protected.back() {
+                        self.protected.unlink(demoted);
+                        self.probation.push_front(demoted);
+                        self.set_segment(demoted, Segment::Probation);
+                    }
+                }
+            }
+            Segment::Protected => {
+                self.protected.move_to_front(slot);
+            }
+            Segment::None => {}
+        }
+    }
+
+    fn on_remove(&mut self, slot: u32) {
+        match self.segment_of(slot) {
+            Segment::Probation => self.probation.unlink(slot),
+            Segment::Protected => self.protected.unlink(slot),
+            Segment::None => {}
+        }
+        self.set_segment(slot, Segment::None);
+    }
+
+    fn victim(&mut self, _rng: &mut Rng, evictable: &dyn Fn(u32) -> bool) -> Option<u32> {
+        self.probation
+            .rfind(evictable)
+            .or_else(|| self.protected.rfind(evictable))
+    }
+
+    fn order(&self) -> Vec<u32> {
+        // Most-protected first: protected MRU→LRU, then probation MRU→LRU.
+        let mut out = self.protected.iter_order();
+        out.extend(self.probation.iter_order());
+        out
+    }
+
+    fn len(&self) -> usize {
+        self.probation.len() + self.protected.len()
+    }
+
+    fn clear(&mut self) {
+        self.probation.clear();
+        self.protected.clear();
+        self.segment.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_hit_wonders_evict_before_promoted_pages() {
+        let mut p = SegmentedLruPolicy::new(6);
+        let mut rng = Rng::new(0);
+        for s in 0..4 {
+            p.on_insert(s);
+        }
+        p.on_touch(1); // promote 1 to protected
+        // Probation back-to-front is 0,2,3: victim is the oldest scan page.
+        assert_eq!(p.victim(&mut rng, &|_| true), Some(0));
+        p.on_remove(0);
+        assert_eq!(p.victim(&mut rng, &|_| true), Some(2));
+        // The promoted page survives the whole probation drain.
+        p.on_remove(2);
+        p.on_remove(3);
+        assert_eq!(p.order(), vec![1]);
+    }
+
+    #[test]
+    fn protected_overflow_demotes_lru_tail() {
+        let mut p = SegmentedLruPolicy::new(3); // protected_cap = 2
+        let mut rng = Rng::new(0);
+        for s in 0..3 {
+            p.on_insert(s);
+        }
+        p.on_touch(0);
+        p.on_touch(1);
+        p.on_touch(2); // protection overflows: 0 demoted back to probation
+        assert_eq!(p.len(), 3);
+        // Victim order: probation first (0), then protected LRU (1).
+        assert_eq!(p.victim(&mut rng, &|_| true), Some(0));
+        p.on_remove(0);
+        assert_eq!(p.victim(&mut rng, &|_| true), Some(1));
+    }
+
+    #[test]
+    fn protected_hits_refresh_recency() {
+        let mut p = SegmentedLruPolicy::new(8);
+        let mut rng = Rng::new(0);
+        for s in 0..2 {
+            p.on_insert(s);
+        }
+        p.on_touch(0);
+        p.on_touch(1);
+        p.on_touch(0); // 0 is now protected-MRU
+        p.on_remove(p.victim(&mut rng, &|_| true).unwrap()); // drains nothing from probation (empty) → protected LRU = 1
+        assert_eq!(p.order(), vec![0]);
+    }
+
+    #[test]
+    fn pinned_probation_falls_through_to_protected() {
+        let mut p = SegmentedLruPolicy::new(6);
+        let mut rng = Rng::new(0);
+        p.on_insert(0);
+        p.on_insert(1);
+        p.on_touch(1); // protected
+        assert_eq!(p.victim(&mut rng, &|s| s != 0), Some(1));
+    }
+}

@@ -3,14 +3,46 @@
 //! [`ClusterConfig`] describes the simulated hardware (testbed defaults,
 //! §IV–§V); [`SodaConfig`] describes the runtime's tunables — the knobs the
 //! paper explicitly exposes to applications (chunk size, buffer size,
-//! caching strategy, NUMA placement, thread count). Both serialize to JSON
-//! so experiments are reproducible from a config file via the `soda` CLI.
+//! caching strategy, NUMA placement, thread count, replacement policies,
+//! prefetch depth). Both speak JSON so experiments are reproducible from a
+//! config file via the `soda` CLI: [`SodaConfig`] round-trips losslessly
+//! through [`ToJson`]/[`SodaConfig::from_json`] (`soda config` prints the
+//! schema), and [`ClusterConfig::apply_json`] accepts an override file for
+//! the hardware-side knobs.
 
-use crate::dpu::{DpuConfig, DpuOpts};
+use crate::cache::PolicyKind;
+use crate::dpu::{DpuConfig, DpuOpts, PrefetchConfig};
 use crate::fabric::FabricConfig;
 use crate::host::agent::HostTiming;
 use crate::memnode::MemNodeConfig;
 use crate::ssd::SsdConfig;
+use crate::util::json::{Json, ToJson};
+
+fn want_str<'a>(v: &'a Json, what: &str) -> Result<&'a str, String> {
+    v.as_str().ok_or_else(|| format!("{what} must be a string"))
+}
+
+fn want_u64(v: &Json, what: &str) -> Result<u64, String> {
+    // Json numbers are f64: reject negatives and fractions instead of
+    // letting a bare cast truncate them to 0 and "pass" validation.
+    match v.as_f64() {
+        Some(f) if f >= 0.0 && f.fract() == 0.0 && f <= 9_007_199_254_740_992.0 => Ok(f as u64),
+        _ => Err(format!("{what} must be a non-negative integer")),
+    }
+}
+
+fn want_f64(v: &Json, what: &str) -> Result<f64, String> {
+    v.as_f64().ok_or_else(|| format!("{what} must be a number"))
+}
+
+fn want_bool(v: &Json, what: &str) -> Result<bool, String> {
+    v.as_bool().ok_or_else(|| format!("{what} must be a bool"))
+}
+
+fn want_policy(v: &Json, what: &str) -> Result<PolicyKind, String> {
+    let s = want_str(v, what)?;
+    PolicyKind::parse(s).ok_or_else(|| format!("{what}: unknown policy '{s}'"))
+}
 
 /// Simulated hardware description. Memory budgets default to a 1/64 scale
 /// of the testbed (256 GB memory node, 16 GB host cgroup, 16 GB DPU with
@@ -90,6 +122,62 @@ impl ClusterConfig {
         );
         self
     }
+
+    /// Apply a JSON override file (the hardware-side knobs experiments
+    /// sweep). Unknown keys are ignored; recognized top-level keys are
+    /// `chunk_bytes`, `host_mem_bytes`, `seed`, and under `dpu`:
+    /// `dynamic_cache_bytes`, `cache_entry_bytes`, `static_cache_bytes`,
+    /// `cores`, `max_batch`, `cache_policy`, `prefetch.{depth,
+    /// max_per_scan}`. Call [`Self::normalized`] afterwards.
+    pub fn apply_json(&mut self, v: &Json) -> Result<(), String> {
+        if let Some(x) = v.get("chunk_bytes") {
+            let bytes = want_u64(x, "chunk_bytes")?;
+            if bytes == 0 || !bytes.is_power_of_two() {
+                return Err(format!("chunk_bytes must be a power of two, got {bytes}"));
+            }
+            self.chunk_bytes = bytes;
+        }
+        if let Some(x) = v.get("host_mem_bytes") {
+            self.host_mem_bytes = want_u64(x, "host_mem_bytes")?;
+        }
+        if let Some(x) = v.get("seed") {
+            self.seed = want_u64(x, "seed")?;
+            // An explicit seed sweep must vary *every* stochastic
+            // component: propagate to the DPU cache's eviction RNG (its
+            // default otherwise stays at the seed-compatible constant).
+            self.dpu.seed = self.seed;
+        }
+        if let Some(d) = v.get("dpu") {
+            if let Some(x) = d.get("dynamic_cache_bytes") {
+                self.dpu.dynamic_cache_bytes = want_u64(x, "dpu.dynamic_cache_bytes")?;
+            }
+            if let Some(x) = d.get("cache_entry_bytes") {
+                self.dpu.cache_entry_bytes = want_u64(x, "dpu.cache_entry_bytes")?;
+            }
+            if let Some(x) = d.get("static_cache_bytes") {
+                self.dpu.static_cache_bytes = want_u64(x, "dpu.static_cache_bytes")?;
+            }
+            if let Some(x) = d.get("cores") {
+                self.dpu.cores = want_u64(x, "dpu.cores")? as usize;
+            }
+            if let Some(x) = d.get("max_batch") {
+                self.dpu.max_batch = want_u64(x, "dpu.max_batch")?;
+            }
+            if let Some(x) = d.get("cache_policy") {
+                self.dpu.cache_policy = want_policy(x, "dpu.cache_policy")?;
+            }
+            if let Some(p) = d.get("prefetch") {
+                if let Some(x) = p.get("depth") {
+                    self.dpu.prefetch.depth = want_u64(x, "dpu.prefetch.depth")?;
+                }
+                if let Some(x) = p.get("max_per_scan") {
+                    self.dpu.prefetch.max_per_scan =
+                        want_u64(x, "dpu.prefetch.max_per_scan")? as usize;
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Which paging backend a run uses — the Fig 6/7 x-axis.
@@ -130,6 +218,75 @@ impl BackendKind {
             }
         }
     }
+
+    /// Parse a backend label: the CLI names (`ssd`, `memserver`/`mem`,
+    /// `dpu-base`, `dpu-opt`, `dpu-full`/`dpu`, `dpu-agg`, `dpu-async`)
+    /// plus the custom form `dpu[agg=A,async=B,dyn=C]` emitted by
+    /// [`Self::label`], so every label round-trips.
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "ssd" => Some(BackendKind::Ssd),
+            "memserver" | "mem" => Some(BackendKind::MemServer),
+            "dpu-base" => Some(BackendKind::DPU_BASE),
+            "dpu-opt" => Some(BackendKind::DPU_OPT),
+            "dpu-full" | "dpu" => Some(BackendKind::DPU_FULL),
+            "dpu-agg" => Some(BackendKind::Dpu(DpuOpts {
+                aggregation: true,
+                async_forward: false,
+                dynamic_cache: false,
+            })),
+            "dpu-async" => Some(BackendKind::Dpu(DpuOpts {
+                aggregation: false,
+                async_forward: true,
+                dynamic_cache: false,
+            })),
+            other => Self::parse_custom(other).map(BackendKind::Dpu),
+        }
+    }
+
+    fn parse_custom(s: &str) -> Option<DpuOpts> {
+        let body = s.strip_prefix("dpu[")?.strip_suffix(']')?;
+        let mut opts = DpuOpts {
+            aggregation: false,
+            async_forward: false,
+            dynamic_cache: false,
+        };
+        for part in body.split(',') {
+            let (k, v) = part.split_once('=')?;
+            let on = match v.trim() {
+                "1" | "true" => true,
+                "0" | "false" => false,
+                _ => return None,
+            };
+            match k.trim() {
+                "agg" => opts.aggregation = on,
+                "async" => opts.async_forward = on,
+                "dyn" => opts.dynamic_cache = on,
+                _ => return None,
+            }
+        }
+        Some(opts)
+    }
+}
+
+/// A *partial* prefetcher override: each field set here replaces the
+/// cluster's corresponding `DpuConfig::prefetch` value at attach time;
+/// unset fields keep the cluster's tuning. This is what `--prefetch-depth`
+/// alone must mean — change depth, keep the cluster's `max_per_scan`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefetchOverride {
+    pub depth: Option<u64>,
+    pub max_per_scan: Option<usize>,
+}
+
+impl PrefetchOverride {
+    /// Merge this override over the cluster's effective prefetch config.
+    pub fn apply(&self, base: PrefetchConfig) -> PrefetchConfig {
+        PrefetchConfig {
+            depth: self.depth.unwrap_or(base.depth),
+            max_per_scan: self.max_per_scan.unwrap_or(base.max_per_scan),
+        }
+    }
 }
 
 /// Caching strategy selection for a run (§III-A / §V: static caching for
@@ -143,8 +300,27 @@ pub enum CachingMode {
     Dynamic,
 }
 
+impl CachingMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CachingMode::None => "none",
+            CachingMode::Static => "static",
+            CachingMode::Dynamic => "dynamic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CachingMode> {
+        match s {
+            "none" => Some(CachingMode::None),
+            "static" => Some(CachingMode::Static),
+            "dynamic" => Some(CachingMode::Dynamic),
+            _ => None,
+        }
+    }
+}
+
 /// Runtime tunables — the application-visible SODA knobs.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SodaConfig {
     pub backend: BackendKind,
     pub caching: CachingMode,
@@ -160,9 +336,16 @@ pub struct SodaConfig {
     /// locking).
     pub qp_count: usize,
     pub host_timing: HostTiming,
-    /// Page-buffer eviction policy (FaultFifo = what uffd can implement;
-    /// AccessLru = idealized, for ablation).
-    pub evict_policy: crate::host::buffer::EvictPolicy,
+    /// Host page-buffer replacement policy (FaultFifo = what uffd can
+    /// implement; the others are the ablation space of `abl-evict`).
+    pub evict_policy: PolicyKind,
+    /// DPU dynamic-cache replacement policy override; `None` keeps the
+    /// cluster's `DpuConfig::cache_policy` (paper default: random).
+    pub dpu_cache_policy: Option<PolicyKind>,
+    /// Partial prefetcher override; `None` keeps the cluster's
+    /// `DpuConfig::prefetch`, and unset fields of a `Some` keep the
+    /// cluster's value for that field.
+    pub prefetch: Option<PrefetchOverride>,
 }
 
 impl Default for SodaConfig {
@@ -176,7 +359,9 @@ impl Default for SodaConfig {
             numa_aware: true,
             qp_count: 24,
             host_timing: HostTiming::default(),
-            evict_policy: crate::host::buffer::EvictPolicy::FaultFifo,
+            evict_policy: PolicyKind::FaultFifo,
+            dpu_cache_policy: None,
+            prefetch: None,
         }
     }
 }
@@ -206,6 +391,140 @@ impl SodaConfig {
             }
             _ => None,
         }
+    }
+
+    /// Parse a [`SodaConfig`] from JSON. Every key is optional and
+    /// defaults to [`SodaConfig::default`]; the schema is exactly what
+    /// [`ToJson`] emits (`soda config` prints it).
+    pub fn from_json(v: &Json) -> Result<SodaConfig, String> {
+        Self::from_json_with(SodaConfig::default(), v)
+    }
+
+    /// Like [`Self::from_json`], but unspecified keys fall back to `base`
+    /// instead of [`SodaConfig::default`] — the CLI passes its effective
+    /// run defaults here so a partial `--config` file only overrides what
+    /// it names.
+    pub fn from_json_with(base: SodaConfig, v: &Json) -> Result<SodaConfig, String> {
+        let mut cfg = base;
+        if let Some(x) = v.get("backend") {
+            let s = want_str(x, "backend")?;
+            cfg.backend =
+                BackendKind::parse(s).ok_or_else(|| format!("unknown backend '{s}'"))?;
+        }
+        if let Some(x) = v.get("caching") {
+            let s = want_str(x, "caching")?;
+            cfg.caching =
+                CachingMode::parse(s).ok_or_else(|| format!("unknown caching mode '{s}'"))?;
+        }
+        if let Some(x) = v.get("buffer_fraction") {
+            let f = want_f64(x, "buffer_fraction")?;
+            if !(f.is_finite() && f > 0.0) {
+                return Err(format!("buffer_fraction must be a positive number, got {f}"));
+            }
+            cfg.buffer_fraction = f;
+        }
+        if let Some(x) = v.get("evict_threshold") {
+            let f = want_f64(x, "evict_threshold")?;
+            // PageBuffer asserts this range; fail at parse time with a
+            // clean error instead of panicking in client construction.
+            if !(0.0..=1.0).contains(&f) {
+                return Err(format!("evict_threshold must be within 0.0..=1.0, got {f}"));
+            }
+            cfg.evict_threshold = f;
+        }
+        if let Some(x) = v.get("threads") {
+            cfg.threads = want_u64(x, "threads")? as usize;
+        }
+        if let Some(x) = v.get("numa_aware") {
+            cfg.numa_aware = want_bool(x, "numa_aware")?;
+        }
+        if let Some(x) = v.get("qp_count") {
+            cfg.qp_count = want_u64(x, "qp_count")? as usize;
+        }
+        if let Some(t) = v.get("host_timing") {
+            let field = |key: &str, cur: u64| -> Result<u64, String> {
+                match t.get(key) {
+                    Some(x) => want_u64(x, &format!("host_timing.{key}")),
+                    None => Ok(cur),
+                }
+            };
+            cfg.host_timing = HostTiming {
+                fault_trap_ns: field("fault_trap_ns", cfg.host_timing.fault_trap_ns)?,
+                hit_ns: field("hit_ns", cfg.host_timing.hit_ns)?,
+                evict_mgmt_ns: field("evict_mgmt_ns", cfg.host_timing.evict_mgmt_ns)?,
+                zero_fill_ns: field("zero_fill_ns", cfg.host_timing.zero_fill_ns)?,
+            };
+        }
+        if let Some(x) = v.get("evict_policy") {
+            cfg.evict_policy = want_policy(x, "evict_policy")?;
+        }
+        match v.get("dpu_cache_policy") {
+            None | Some(Json::Null) => {}
+            Some(x) => cfg.dpu_cache_policy = Some(want_policy(x, "dpu_cache_policy")?),
+        }
+        match v.get("prefetch") {
+            None | Some(Json::Null) => {}
+            Some(p) => {
+                if !matches!(p, Json::Obj(_)) {
+                    return Err("prefetch must be an object {depth, max_per_scan} or null".into());
+                }
+                let mut pf = cfg.prefetch.unwrap_or_default();
+                match p.get("depth") {
+                    None | Some(Json::Null) => {}
+                    Some(x) => pf.depth = Some(want_u64(x, "prefetch.depth")?),
+                }
+                match p.get("max_per_scan") {
+                    None | Some(Json::Null) => {}
+                    Some(x) => pf.max_per_scan = Some(want_u64(x, "prefetch.max_per_scan")? as usize),
+                }
+                cfg.prefetch = Some(pf);
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+impl ToJson for SodaConfig {
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("backend", self.backend.label().into()),
+            ("caching", self.caching.name().into()),
+            ("buffer_fraction", self.buffer_fraction.into()),
+            ("evict_threshold", self.evict_threshold.into()),
+            ("threads", self.threads.into()),
+            ("numa_aware", self.numa_aware.into()),
+            ("qp_count", self.qp_count.into()),
+            (
+                "host_timing",
+                Json::obj([
+                    ("fault_trap_ns", self.host_timing.fault_trap_ns.into()),
+                    ("hit_ns", self.host_timing.hit_ns.into()),
+                    ("evict_mgmt_ns", self.host_timing.evict_mgmt_ns.into()),
+                    ("zero_fill_ns", self.host_timing.zero_fill_ns.into()),
+                ]),
+            ),
+            ("evict_policy", self.evict_policy.name().into()),
+            (
+                "dpu_cache_policy",
+                match self.dpu_cache_policy {
+                    Some(p) => p.name().into(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "prefetch",
+                match self.prefetch {
+                    Some(p) => Json::obj([
+                        ("depth", p.depth.map(Json::from).unwrap_or(Json::Null)),
+                        (
+                            "max_per_scan",
+                            p.max_per_scan.map(Json::from).unwrap_or(Json::Null),
+                        ),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+        ])
     }
 }
 
@@ -255,6 +574,29 @@ mod tests {
     }
 
     #[test]
+    fn backend_labels_round_trip_through_parse() {
+        let cases = [
+            BackendKind::SSD,
+            BackendKind::MEM_SERVER,
+            BackendKind::DPU_BASE,
+            BackendKind::DPU_OPT,
+            BackendKind::DPU_FULL,
+            BackendKind::Dpu(DpuOpts {
+                aggregation: true,
+                async_forward: false,
+                dynamic_cache: true,
+            }),
+        ];
+        for b in cases {
+            assert_eq!(BackendKind::parse(&b.label()), Some(b), "{}", b.label());
+        }
+        assert_eq!(BackendKind::parse("mem"), Some(BackendKind::MemServer));
+        assert_eq!(BackendKind::parse("dpu"), Some(BackendKind::DPU_FULL));
+        assert_eq!(BackendKind::parse("dpu[agg=2]"), None);
+        assert_eq!(BackendKind::parse("floppy"), None);
+    }
+
+    #[test]
     fn non_dpu_backend_disables_caching() {
         let s = SodaConfig::default().with_backend(BackendKind::MemServer);
         assert_eq!(s.caching, CachingMode::None);
@@ -278,5 +620,166 @@ mod tests {
         assert_eq!(c.dpu.chunk_bytes, c.chunk_bytes);
         assert!(c.dpu.cache_entry_bytes % c.chunk_bytes == 0);
         assert!(c.host_mem_bytes < c.memnode.capacity_bytes);
+    }
+
+    #[test]
+    fn soda_config_default_round_trips_through_json() {
+        let cfg = SodaConfig::default();
+        let text = cfg.to_json().to_string();
+        let back = SodaConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn soda_config_custom_round_trips_through_json() {
+        let cfg = SodaConfig {
+            backend: BackendKind::Dpu(DpuOpts {
+                aggregation: true,
+                async_forward: false,
+                dynamic_cache: true,
+            }),
+            caching: CachingMode::Dynamic,
+            buffer_fraction: 0.5,
+            evict_threshold: 0.75,
+            threads: 8,
+            numa_aware: false,
+            qp_count: 4,
+            host_timing: HostTiming {
+                fault_trap_ns: 111,
+                hit_ns: 2,
+                evict_mgmt_ns: 33,
+                zero_fill_ns: 44,
+            },
+            evict_policy: PolicyKind::SegmentedLru,
+            dpu_cache_policy: Some(PolicyKind::Clock),
+            prefetch: Some(PrefetchOverride {
+                depth: Some(6),
+                max_per_scan: Some(17),
+            }),
+        };
+        let text = cfg.to_json().to_string();
+        let back = SodaConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        // A partial override round-trips too (unset field stays unset).
+        let partial = SodaConfig {
+            prefetch: Some(PrefetchOverride {
+                depth: Some(4),
+                max_per_scan: None,
+            }),
+            ..SodaConfig::default()
+        };
+        let back = SodaConfig::from_json(&Json::parse(&partial.to_json().to_string()).unwrap());
+        assert_eq!(back.unwrap(), partial);
+    }
+
+    #[test]
+    fn prefetch_override_merges_field_wise() {
+        let cluster = PrefetchConfig {
+            depth: 8,
+            max_per_scan: 24,
+        };
+        let depth_only = PrefetchOverride {
+            depth: Some(4),
+            max_per_scan: None,
+        };
+        assert_eq!(
+            depth_only.apply(cluster),
+            PrefetchConfig {
+                depth: 4,
+                max_per_scan: 24
+            },
+            "unset fields must keep the cluster's tuning"
+        );
+        assert_eq!(PrefetchOverride::default().apply(cluster), cluster);
+    }
+
+    #[test]
+    fn soda_config_from_partial_json_fills_defaults() {
+        let v = Json::parse(r#"{"threads": 4, "evict_policy": "clock"}"#).unwrap();
+        let cfg = SodaConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.evict_policy, PolicyKind::Clock);
+        assert_eq!(cfg.backend, SodaConfig::default().backend);
+        assert_eq!(cfg.dpu_cache_policy, None);
+        assert_eq!(cfg.prefetch, None);
+    }
+
+    #[test]
+    fn soda_config_rejects_bad_values() {
+        assert!(SodaConfig::from_json(&Json::parse(r#"{"backend": "floppy"}"#).unwrap()).is_err());
+        assert!(SodaConfig::from_json(&Json::parse(r#"{"evict_policy": "mru"}"#).unwrap()).is_err());
+        assert!(SodaConfig::from_json(&Json::parse(r#"{"threads": "many"}"#).unwrap()).is_err());
+        // Negative and fractional numbers must error, not truncate to 0.
+        assert!(SodaConfig::from_json(&Json::parse(r#"{"threads": -4}"#).unwrap()).is_err());
+        assert!(SodaConfig::from_json(&Json::parse(r#"{"qp_count": 2.5}"#).unwrap()).is_err());
+        // Out-of-range floats error at parse time instead of panicking in
+        // PageBuffer construction.
+        assert!(SodaConfig::from_json(&Json::parse(r#"{"evict_threshold": 1.5}"#).unwrap()).is_err());
+        assert!(SodaConfig::from_json(&Json::parse(r#"{"buffer_fraction": -1}"#).unwrap()).is_err());
+        // A malformed prefetch value must error, not silently become the
+        // default prefetch override.
+        assert!(SodaConfig::from_json(&Json::parse(r#"{"prefetch": true}"#).unwrap()).is_err());
+        assert!(SodaConfig::from_json(&Json::parse(r#"{"prefetch": "deep"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn from_json_with_keeps_base_for_unspecified_keys() {
+        let mut base = SodaConfig::default();
+        base.host_timing.fault_trap_ns = 600;
+        base.qp_count = 7;
+        let v = Json::parse(r#"{"threads": 3}"#).unwrap();
+        let cfg = SodaConfig::from_json_with(base.clone(), &v).unwrap();
+        assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.host_timing.fault_trap_ns, 600, "base timing survives");
+        assert_eq!(cfg.qp_count, 7, "base qp_count survives");
+    }
+
+    #[test]
+    fn cluster_seed_override_propagates_to_dpu() {
+        let mut c = ClusterConfig::tiny();
+        let default_dpu_seed = c.dpu.seed;
+        c.apply_json(&Json::parse(r#"{"seed": 12345}"#).unwrap()).unwrap();
+        assert_eq!(c.seed, 12345);
+        assert_eq!(c.dpu.seed, 12345, "seed sweep must vary the DPU RNG too");
+        assert_ne!(c.dpu.seed, default_dpu_seed);
+    }
+
+    #[test]
+    fn cluster_config_rejects_degenerate_chunk_sizes() {
+        for bad in [r#"{"chunk_bytes": 0}"#, r#"{"chunk_bytes": -4096}"#, r#"{"chunk_bytes": 3000}"#] {
+            let mut c = ClusterConfig::tiny();
+            assert!(
+                c.apply_json(&Json::parse(bad).unwrap()).is_err(),
+                "must reject {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_config_applies_json_overrides() {
+        let mut c = ClusterConfig::tiny();
+        let v = Json::parse(
+            r#"{
+                "chunk_bytes": 8192,
+                "dpu": {
+                    "cache_entry_bytes": 32768,
+                    "cache_policy": "clock",
+                    "prefetch": {"depth": 5, "max_per_scan": 11}
+                }
+            }"#,
+        )
+        .unwrap();
+        c.apply_json(&v).unwrap();
+        let c = c.normalized();
+        assert_eq!(c.chunk_bytes, 8192);
+        assert_eq!(c.dpu.chunk_bytes, 8192);
+        assert_eq!(c.dpu.cache_entry_bytes, 32768);
+        assert_eq!(c.dpu.cache_policy, PolicyKind::Clock);
+        assert_eq!(c.dpu.prefetch.depth, 5);
+        assert_eq!(c.dpu.prefetch.max_per_scan, 11);
+        // Bad policy errors out.
+        let mut c2 = ClusterConfig::tiny();
+        let bad = Json::parse(r#"{"dpu": {"cache_policy": "mru"}}"#).unwrap();
+        assert!(c2.apply_json(&bad).is_err());
     }
 }

@@ -7,6 +7,6 @@ pub mod metrics;
 pub mod service;
 
 pub use cluster::{Cluster, ClusterInner};
-pub use config::{BackendKind, CachingMode, ClusterConfig, SodaConfig};
+pub use config::{BackendKind, CachingMode, ClusterConfig, PrefetchOverride, SodaConfig};
 pub use metrics::RunMetrics;
 pub use service::SodaService;

@@ -22,12 +22,21 @@ pub struct SodaService {
 
 impl SodaService {
     /// Attach a SODA configuration to the cluster. Rebuilds the DPU agent
-    /// with the configuration's optimization flags (fresh caches).
+    /// with the configuration's optimization flags (fresh caches), applying
+    /// the run's cache-policy and prefetch overrides when present.
     pub fn attach(cluster: &Cluster, cfg: SodaConfig) -> Self {
         if let Some(opts) = cfg.dpu_opts() {
             cluster.with(|inner| {
                 let mut dcfg = inner.dpu.cfg.clone();
                 dcfg.opts = opts;
+                if let Some(policy) = cfg.dpu_cache_policy {
+                    dcfg.cache_policy = policy;
+                }
+                if let Some(prefetch) = cfg.prefetch {
+                    // Field-wise merge: unset override fields keep the
+                    // cluster's prefetch tuning.
+                    dcfg.prefetch = prefetch.apply(dcfg.prefetch);
+                }
                 inner.dpu = DpuAgent::new(dcfg);
             });
         }
@@ -76,6 +85,7 @@ impl SodaService {
             self.numa_node(),
             self.cfg.host_timing,
             self.cfg.evict_policy,
+            ccfg.seed,
         )
     }
 
@@ -119,6 +129,27 @@ mod tests {
         cluster.with(|i| {
             assert!(!i.dpu.cfg.opts.aggregation);
             assert!(!i.dpu.cfg.opts.dynamic_cache);
+        });
+    }
+
+    #[test]
+    fn attach_applies_cache_policy_and_prefetch_overrides() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let cluster_scan = cluster.config().dpu.prefetch.max_per_scan;
+        let mut cfg = SodaConfig::default().with_backend(BackendKind::DPU_FULL);
+        cfg.dpu_cache_policy = Some(crate::cache::PolicyKind::Clock);
+        // Partial override: depth only — max_per_scan must keep the
+        // cluster's tuning.
+        cfg.prefetch = Some(crate::coordinator::config::PrefetchOverride {
+            depth: Some(3),
+            max_per_scan: None,
+        });
+        let _svc = SodaService::attach(&cluster, cfg);
+        cluster.with(|i| {
+            assert_eq!(i.dpu.cfg.cache_policy, crate::cache::PolicyKind::Clock);
+            assert_eq!(i.dpu.cfg.prefetch.depth, 3);
+            assert_eq!(i.dpu.cfg.prefetch.max_per_scan, cluster_scan);
+            assert_eq!(i.dpu.table.policy(), crate::cache::PolicyKind::Clock);
         });
     }
 

@@ -116,6 +116,9 @@ pub struct DpuConfig {
     pub opts: DpuOpts,
     pub timing: DpuTiming,
     pub prefetch: PrefetchConfig,
+    /// Replacement policy of the dynamic cache table (paper default:
+    /// random eviction "to minimize overhead" on the SoC cores).
+    pub cache_policy: crate::cache::PolicyKind,
     pub recent_list_capacity: usize,
     /// RNG seed for random cache eviction.
     pub seed: u64,
@@ -134,6 +137,7 @@ impl Default for DpuConfig {
             opts: DpuOpts::FULL,
             timing: DpuTiming::default(),
             prefetch: PrefetchConfig::default(),
+            cache_policy: crate::cache::PolicyKind::Random,
             recent_list_capacity: 128,
             seed: 0x50DA,
         }
@@ -199,7 +203,12 @@ impl DpuAgent {
             fwd: Forwarder::new(mode, cfg.cores),
             agg: Aggregator::new(cfg.max_batch),
             recent: RecentList::new(cfg.recent_list_capacity),
-            table: CacheTable::new(cfg.dynamic_cache_bytes, cfg.cache_entry_bytes, cfg.chunk_bytes),
+            table: CacheTable::with_policy(
+                cfg.dynamic_cache_bytes,
+                cfg.cache_entry_bytes,
+                cfg.chunk_bytes,
+                cfg.cache_policy,
+            ),
             static_cache: StaticCache::new(cfg.static_cache_bytes),
             prefetcher: Prefetcher::new(cfg.prefetch),
             rng: Rng::new(cfg.seed),

@@ -4,15 +4,24 @@
 //! request fulfillment), organized as an array of large entries (1 MB on
 //! the testbed — deliberately larger than the 64 KB page so one prefetch
 //! amortizes several on-demand fetches). A hash table maps entry ids to
-//! slots; eviction is *random* to minimize overhead; a per-entry *refcount*
-//! pins entries with outstanding request fulfillments so they cannot be
-//! evicted mid-transfer, letting the paper drop the global mutex during
-//! request processing.
+//! slots; a per-entry *refcount* pins entries with outstanding request
+//! fulfillments so they cannot be evicted mid-transfer, letting the paper
+//! drop the global mutex during request processing.
+//!
+//! Like the host buffer, this type is a frame-storage shell over the
+//! unified cache subsystem ([`crate::cache`]): victim selection is a
+//! pluggable [`ReplacementPolicy`] chosen via `DpuConfig::cache_policy` /
+//! `SodaConfig::dpu_cache_policy` / `soda run --dpu-cache-policy`. The
+//! default is [`PolicyKind::Random`] — the paper evicts randomly "to
+//! minimize overhead" on the wimpy SmartNIC cores — and reproduces the
+//! original bounded-probe behavior bit-for-bit, including the RNG draw
+//! sequence and the drop-on-all-pinned insertion path.
 //!
 //! Each slot carries a `ready_at` virtual timestamp: a prefetched entry is
 //! only usable once its background transfer has completed — a lookup that
 //! races an in-flight prefetch is a miss, exactly as on real hardware.
 
+use crate::cache::{PolicyKind, ReplacementPolicy};
 use crate::host::buffer::PageKey;
 use crate::memnode::RegionId;
 use crate::sim::rng::Rng;
@@ -73,11 +82,13 @@ impl CacheStats {
     }
 }
 
-/// Fixed-capacity cache of large entries with random eviction.
+/// Fixed-capacity cache of large entries with a pluggable replacement
+/// policy (default: random eviction, the paper's choice).
 #[derive(Debug)]
 pub struct CacheTable {
     slots: Vec<Slot>,
     map: FxHashMap<EntryKey, u32>,
+    engine: Box<dyn ReplacementPolicy>,
     entry_bytes: u64,
     chunk_bytes: u64,
     stats: CacheStats,
@@ -85,13 +96,24 @@ pub struct CacheTable {
 
 impl CacheTable {
     /// `capacity_bytes` of DPU DRAM organized in `entry_bytes` entries over
-    /// `chunk_bytes` host pages.
+    /// `chunk_bytes` host pages, with the paper's random eviction.
     pub fn new(capacity_bytes: u64, entry_bytes: u64, chunk_bytes: u64) -> Self {
+        Self::with_policy(capacity_bytes, entry_bytes, chunk_bytes, PolicyKind::Random)
+    }
+
+    /// Like [`Self::new`] with an explicit replacement policy.
+    pub fn with_policy(
+        capacity_bytes: u64,
+        entry_bytes: u64,
+        chunk_bytes: u64,
+        policy: PolicyKind,
+    ) -> Self {
         assert!(entry_bytes >= chunk_bytes && entry_bytes % chunk_bytes == 0);
         let n_slots = (capacity_bytes / entry_bytes).max(1) as usize;
         CacheTable {
             slots: Vec::with_capacity(n_slots),
             map: FxHashMap::default(),
+            engine: policy.build(n_slots),
             entry_bytes,
             chunk_bytes,
             stats: CacheStats::default(),
@@ -110,6 +132,10 @@ impl CacheTable {
             });
         }
         self
+    }
+
+    pub fn policy(&self) -> PolicyKind {
+        self.engine.kind()
     }
 
     pub fn entry_bytes(&self) -> u64 {
@@ -138,8 +164,9 @@ impl CacheTable {
         self.map.contains_key(&key)
     }
 
-    /// Look up the page at virtual time `now`. On a ready hit, returns the
-    /// page's bytes within the entry. Counts hit/miss/not-ready.
+    /// Look up the page at virtual time `now`. On a ready hit, the engine
+    /// is notified and the page's bytes within the entry are returned.
+    /// Counts hit/miss/not-ready.
     pub fn lookup_page(&mut self, now: Ns, page: PageKey) -> Option<&[u8]> {
         self.stats.lookups += 1;
         let ekey = EntryKey::containing(page, self.pages_per_entry());
@@ -152,6 +179,7 @@ impl CacheTable {
                     return None;
                 }
                 self.stats.hits += 1;
+                self.engine.on_touch(idx);
                 let off = (page.page % self.pages_per_entry()) * self.chunk_bytes;
                 Some(&self.slots[idx as usize].data
                     [off as usize..(off + self.chunk_bytes) as usize])
@@ -167,6 +195,7 @@ impl CacheTable {
     pub fn pin(&mut self, key: EntryKey) -> bool {
         if let Some(&idx) = self.map.get(&key) {
             self.slots[idx as usize].refcount += 1;
+            self.engine.on_pin(idx);
             true
         } else {
             false
@@ -178,6 +207,7 @@ impl CacheTable {
             let s = &mut self.slots[idx as usize];
             debug_assert!(s.refcount > 0, "unpin without pin");
             s.refcount = s.refcount.saturating_sub(1);
+            self.engine.on_unpin(idx);
         }
     }
 
@@ -189,8 +219,10 @@ impl CacheTable {
     }
 
     /// Insert a prefetched entry that becomes usable at `ready_at`.
-    /// Uses random eviction among unpinned slots; drops the insertion if a
-    /// bounded number of random probes only finds pinned slots.
+    /// A free slot is used when one exists; otherwise the engine picks a
+    /// victim among unpinned slots. The insertion is dropped (counted in
+    /// `pinned_drops`) when the engine finds none — for the default
+    /// `Random` policy that is the original bounded-probe behavior.
     pub fn insert(&mut self, key: EntryKey, data: Vec<u8>, ready_at: Ns, rng: &mut Rng) -> bool {
         assert_eq!(data.len() as u64, self.entry_bytes, "entry size mismatch");
         if self.map.contains_key(&key) {
@@ -201,23 +233,25 @@ impl CacheTable {
             s.ready_at = ready_at;
             return true;
         }
-        // Find a victim: first an invalid slot, else random probes.
+        // Find a slot: first an invalid one, else ask the engine.
         let idx = if self.map.len() < self.slots.len() {
             self.slots
                 .iter()
                 .position(|s| !s.valid)
                 .expect("free slot exists") as u32
         } else {
-            let mut victim = None;
-            for _ in 0..8 {
-                let i = rng.index(self.slots.len()) as u32;
-                if self.slots[i as usize].refcount == 0 {
-                    victim = Some(i);
-                    break;
-                }
-            }
+            let victim = {
+                let CacheTable { engine, slots, .. } = &mut *self;
+                engine.victim(rng, &|i: u32| {
+                    slots
+                        .get(i as usize)
+                        .map(|s| s.valid && s.refcount == 0)
+                        .unwrap_or(false)
+                })
+            };
             match victim {
                 Some(i) => {
+                    self.engine.on_remove(i);
                     let old = self.slots[i as usize].key;
                     self.map.remove(&old);
                     self.stats.evictions += 1;
@@ -235,6 +269,7 @@ impl CacheTable {
         s.ready_at = ready_at;
         s.refcount = 0;
         s.valid = true;
+        self.engine.on_insert(idx);
         self.map.insert(key, idx);
         self.stats.insertions += 1;
         true
@@ -249,6 +284,7 @@ impl CacheTable {
             debug_assert_eq!(s.refcount, 0, "invalidating a pinned entry");
             s.valid = false;
             s.data = Box::from(&[][..]);
+            self.engine.on_remove(idx);
             true
         } else {
             false
@@ -258,6 +294,7 @@ impl CacheTable {
     /// Invalidate everything (cache disable / region free).
     pub fn clear(&mut self) {
         self.map.clear();
+        self.engine.clear();
         for s in &mut self.slots {
             s.valid = false;
             s.refcount = 0;
@@ -273,6 +310,10 @@ mod tests {
     fn table(slots: usize) -> CacheTable {
         // 4 pages of 1 KB per entry.
         CacheTable::new(slots as u64 * 4096, 4096, 1024)
+    }
+
+    fn table_with(slots: usize, policy: PolicyKind) -> CacheTable {
+        CacheTable::with_policy(slots as u64 * 4096, 4096, 1024, policy)
     }
 
     fn entry_data(tag: u8) -> Vec<u8> {
@@ -330,6 +371,7 @@ mod tests {
         assert_eq!(t.resident_entries(), 2);
         assert_eq!(t.stats().evictions, 1);
         assert!(t.contains(ek(2)), "new entry must be resident");
+        assert_eq!(t.policy(), PolicyKind::Random);
     }
 
     #[test]
@@ -393,5 +435,68 @@ mod tests {
         t.lookup_page(0, PageKey::new(1, 0)); // hit
         t.lookup_page(0, PageKey::new(1, 99)); // miss
         assert!((t.stats().hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    // ---- pluggable-policy coverage -------------------------------------
+
+    /// Deterministic policies (everything but `Random`) must also respect
+    /// pins: a full table of pinned entries drops the insertion and counts
+    /// `pinned_drops` instead of evicting.
+    #[test]
+    fn pinned_drops_across_all_policies() {
+        for policy in PolicyKind::ALL {
+            let mut t = table_with(2, policy);
+            let mut rng = Rng::new(5);
+            t.insert(ek(0), entry_data(0), 0, &mut rng);
+            t.insert(ek(1), entry_data(1), 0, &mut rng);
+            t.pin(ek(0));
+            t.pin(ek(1));
+            assert!(!t.insert(ek(2), entry_data(2), 0, &mut rng), "{policy:?}");
+            assert_eq!(t.stats().pinned_drops, 1, "{policy:?}");
+            assert!(t.contains(ek(0)) && t.contains(ek(1)), "{policy:?}");
+            assert_eq!(t.stats().evictions, 0, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn clock_eviction_prefers_untouched_entries() {
+        let mut t = table_with(2, PolicyKind::Clock);
+        let mut rng = Rng::new(0);
+        t.insert(ek(0), entry_data(0), 0, &mut rng);
+        t.insert(ek(1), entry_data(1), 0, &mut rng);
+        // Touch entry 0: its reference bit protects it from the next sweep.
+        assert!(t.lookup_page(10, PageKey::new(1, 0)).is_some());
+        assert!(t.insert(ek(2), entry_data(2), 0, &mut rng));
+        assert!(t.contains(ek(0)), "referenced entry survives");
+        assert!(!t.contains(ek(1)), "unreferenced entry evicted");
+    }
+
+    #[test]
+    fn lru_eviction_order_in_table() {
+        let mut t = table_with(2, PolicyKind::AccessLru);
+        let mut rng = Rng::new(0);
+        t.insert(ek(0), entry_data(0), 0, &mut rng);
+        t.insert(ek(1), entry_data(1), 0, &mut rng);
+        assert!(t.lookup_page(10, PageKey::new(1, 0)).is_some()); // 0 is MRU
+        assert!(t.insert(ek(2), entry_data(2), 0, &mut rng));
+        assert!(t.contains(ek(0)));
+        assert!(!t.contains(ek(1)), "LRU entry evicted");
+        assert_eq!(t.policy(), PolicyKind::AccessLru);
+    }
+
+    /// The not-ready (in-flight prefetch) path must not touch the engine:
+    /// a racing lookup is a miss and must not refresh recency.
+    #[test]
+    fn not_ready_lookup_does_not_refresh_recency() {
+        let mut t = table_with(2, PolicyKind::AccessLru);
+        let mut rng = Rng::new(0);
+        t.insert(ek(0), entry_data(0), 1_000_000, &mut rng); // in flight
+        t.insert(ek(1), entry_data(1), 0, &mut rng);
+        // Page 4 lives in entry 1 (4 pages per entry): entry 1 → MRU.
+        assert!(t.lookup_page(10, PageKey::new(1, 4)).is_some());
+        assert!(t.lookup_page(20, PageKey::new(1, 0)).is_none()); // not ready
+        assert!(t.insert(ek(2), entry_data(2), 0, &mut rng));
+        assert!(!t.contains(ek(0)), "in-flight entry stayed LRU and evicts");
+        assert!(t.contains(ek(1)));
     }
 }

@@ -16,7 +16,7 @@ use super::recent_list::RecentList;
 use crate::memnode::RegionId;
 
 /// Prefetcher configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PrefetchConfig {
     /// Adjacent entries to fetch ahead of each accessed entry.
     pub depth: u64,

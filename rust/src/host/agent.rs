@@ -17,7 +17,7 @@ use crate::sim::Ns;
 use crate::util::fxhash::FxHashMap;
 
 /// Host-side CPU cost model.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct HostTiming {
     /// uffd trap + handler dispatch + metadata lookup on a miss.
     pub fault_trap_ns: Ns,
@@ -50,29 +50,17 @@ pub struct HostStats {
     pub writebacks: u64,
     /// Total fault stall time across threads (miss latency sum).
     pub stall_ns: Ns,
-    /// Fetches by source: [Ssd, MemNode, DpuCache, DpuStatic].
-    pub sources: [u64; 4],
+    /// Fetches by source, indexed by [`FetchSource::index`].
+    pub sources: [u64; FetchSource::COUNT],
 }
 
 impl HostStats {
     fn count(&mut self, src: FetchSource) {
-        let i = match src {
-            FetchSource::Ssd => 0,
-            FetchSource::MemNode => 1,
-            FetchSource::DpuCache => 2,
-            FetchSource::DpuStatic => 3,
-        };
-        self.sources[i] += 1;
+        self.sources[src.index()] += 1;
     }
 
     pub fn fetched(&self, src: FetchSource) -> u64 {
-        let i = match src {
-            FetchSource::Ssd => 0,
-            FetchSource::MemNode => 1,
-            FetchSource::DpuCache => 2,
-            FetchSource::DpuStatic => 3,
-        };
-        self.sources[i]
+        self.sources[src.index()]
     }
 }
 
@@ -122,11 +110,13 @@ impl HostAgent {
             numa_node,
             timing,
             super::buffer::EvictPolicy::FaultFifo,
+            PageBuffer::DEFAULT_RNG_SEED,
         )
     }
 
     /// Like [`Self::new`] with an explicit buffer eviction policy (the
-    /// FaultFifo/AccessLru ablation of DESIGN.md §6c).
+    /// policy ablation of `abl-evict`) and the RNG seed stochastic
+    /// policies draw from (the service passes `ClusterConfig::seed`).
     #[allow(clippy::too_many_arguments)]
     pub fn with_policy(
         name: impl Into<String>,
@@ -139,10 +129,17 @@ impl HostAgent {
         numa_node: usize,
         timing: HostTiming,
         policy: super::buffer::EvictPolicy,
+        buffer_seed: u64,
     ) -> Self {
         HostAgent {
             name: name.into(),
-            buffer: PageBuffer::with_policy(buffer_bytes, chunk_bytes, evict_threshold, policy),
+            buffer: PageBuffer::with_policy_seeded(
+                buffer_bytes,
+                chunk_bytes,
+                evict_threshold,
+                policy,
+                buffer_seed,
+            ),
             store,
             objects: ObjectTable::new(),
             qp: QpPool::new(qp_count.max(1)),

@@ -15,6 +15,24 @@
 //!   a Pallas blocked-ELL SpMV kernel, AOT-lowered to HLO text.
 //! * **runtime/** — PJRT bridge executing those artifacts from Rust.
 //!
+//! ## Cache layer map
+//!
+//! Both caching layers share one pluggable replacement subsystem
+//! ([`cache`]): a [`cache::ReplacementPolicy`] engine over frame slots,
+//! selected at runtime by [`cache::PolicyKind`].
+//!
+//! | layer | storage shell | default policy | selected by |
+//! |-------|---------------|----------------|-------------|
+//! | host agent (compute node) | [`host::buffer::PageBuffer`] — 64 KB chunks, dirty tracking, proactive eviction | `fault-fifo` (what `userfaultfd` can implement; seed-identical) | `SodaConfig::evict_policy`, CLI `--evict-policy` |
+//! | DPU agent (SmartNIC SoC) | [`dpu::cache_table::CacheTable`] — 1 MB entries, refcount pinning, `ready_at` racing | `random` (the paper's minimal-overhead choice; seed-identical) | `DpuConfig::cache_policy` via `ClusterConfig`, overridable per run by `SodaConfig::dpu_cache_policy`, CLI `--dpu-cache-policy` |
+//!
+//! From JSON: a [`coordinator::config::SodaConfig`] file (see `soda config`
+//! for the schema) carries `evict_policy`, `dpu_cache_policy` and the
+//! prefetcher's `{depth, max_per_scan}`; `ClusterConfig::apply_json`
+//! accepts the same knobs under `dpu.*` for cluster-wide defaults. The
+//! `abl-cache-policy` / `abl-evict` figures and the `fig10_policies` bench
+//! sweep every policy on both layers.
+//!
 //! Quickstart:
 //! ```no_run
 //! use soda::prelude::*;
@@ -30,6 +48,7 @@
 
 pub mod analytic;
 pub mod backend;
+pub mod cache;
 pub mod coordinator;
 pub mod dpu;
 pub mod fabric;
@@ -45,6 +64,7 @@ pub mod workload;
 
 /// Common imports for downstream users.
 pub mod prelude {
+    pub use crate::cache::PolicyKind;
     pub use crate::coordinator::{
         BackendKind, CachingMode, Cluster, ClusterConfig, RunMetrics, SodaConfig, SodaService,
     };

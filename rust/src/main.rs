@@ -2,45 +2,90 @@
 //!
 //! ```text
 //! soda figures --all [--scale F] [--threads N] [--json DIR]
-//! soda figures fig6 fig10 ...
+//! soda figures fig6 fig10 abl-cache-policy ...
 //! soda run <app> <graph> [--backend B] [--caching M] [--scale F]
+//!          [--evict-policy P] [--dpu-cache-policy P]
+//!          [--prefetch-depth N] [--prefetch-scan N]
+//!          [--config FILE] [--cluster-config FILE]
+//! soda config [--config FILE] [--evict-policy P] ...
 //! soda advisor [--hit-rate H]
 //! soda xla-info
 //! ```
 
 use anyhow::{bail, Result};
 use soda::analytic::CachingAdvisor;
-use soda::coordinator::config::{BackendKind, CachingMode};
-use soda::dpu::DpuOpts;
+use soda::cache::PolicyKind;
+use soda::coordinator::config::{BackendKind, CachingMode, SodaConfig};
 use soda::fabric::FabricConfig;
 use soda::figures::{run_figure, ALL_FIGURES};
 use soda::graph::apps::App;
 use soda::util::cli::Args;
-use soda::util::json::ToJson;
+use soda::util::json::{Json, ToJson};
 use soda::workload::{ExperimentSpec, Workbench};
 
 const DEFAULT_SCALE: f64 = 0.001;
 
 fn parse_backend(s: &str) -> Result<BackendKind> {
-    Ok(match s {
-        "ssd" => BackendKind::Ssd,
-        "memserver" | "mem" => BackendKind::MemServer,
-        "dpu-base" => BackendKind::DPU_BASE,
-        "dpu-opt" => BackendKind::DPU_OPT,
-        "dpu-full" | "dpu" => BackendKind::DPU_FULL,
-        "dpu-agg" => BackendKind::Dpu(DpuOpts { aggregation: true, async_forward: false, dynamic_cache: false }),
-        "dpu-async" => BackendKind::Dpu(DpuOpts { aggregation: false, async_forward: true, dynamic_cache: false }),
-        other => bail!("unknown backend '{other}' (ssd|memserver|dpu-base|dpu-opt|dpu-full|dpu-agg|dpu-async)"),
+    BackendKind::parse(s).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown backend '{s}' (ssd|memserver|dpu-base|dpu-opt|dpu-full|dpu-agg|dpu-async)"
+        )
     })
 }
 
 fn parse_caching(s: &str) -> Result<CachingMode> {
-    Ok(match s {
-        "none" => CachingMode::None,
-        "static" => CachingMode::Static,
-        "dynamic" => CachingMode::Dynamic,
-        other => bail!("unknown caching mode '{other}' (none|static|dynamic)"),
+    CachingMode::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown caching mode '{s}' (none|static|dynamic)"))
+}
+
+fn parse_policy(s: &str) -> Result<PolicyKind> {
+    PolicyKind::parse(s).ok_or_else(|| {
+        anyhow::anyhow!("unknown cache policy '{s}' (fault-fifo|access-lru|random|clock|slru)")
     })
+}
+
+/// Load a JSON file and parse it with our in-tree parser.
+fn load_json(path: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path)?;
+    Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+}
+
+/// Resolve the run's [`SodaConfig`]: start from the workbench's effective
+/// defaults, layer a `--config FILE` over them (unspecified keys keep the
+/// defaults), then explicit CLI flags override individual fields. Using
+/// the workbench base keeps `soda config > run.json` + `soda run
+/// --config run.json` bit-identical to the configless run.
+fn soda_config_from_args(args: &Args) -> Result<SodaConfig> {
+    let base = Workbench::base_soda_config();
+    let mut cfg = match args.opt("config") {
+        Some(path) => SodaConfig::from_json_with(base, &load_json(path)?)
+            .map_err(|e| anyhow::anyhow!("--config: {e}"))?,
+        None => base,
+    };
+    if let Some(s) = args.opt("evict-policy") {
+        cfg.evict_policy = parse_policy(s)?;
+    }
+    if let Some(s) = args.opt("dpu-cache-policy") {
+        cfg.dpu_cache_policy = Some(parse_policy(s)?);
+    }
+    // Partial prefetch override: each flag sets only its own field; the
+    // cluster's tuning fills whatever stays unset (merged at attach time).
+    if args.opt("prefetch-depth").is_some() || args.opt("prefetch-scan").is_some() {
+        let mut pf = cfg.prefetch.unwrap_or_default();
+        if args.opt("prefetch-depth").is_some() {
+            pf.depth = Some(args.opt_u64("prefetch-depth", 0));
+        }
+        if args.opt("prefetch-scan").is_some() {
+            pf.max_per_scan = Some(args.opt_usize("prefetch-scan", 0));
+        }
+        cfg.prefetch = Some(pf);
+    }
+    if let Some(s) = args.opt("threads") {
+        cfg.threads = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --threads: {s}"))?;
+    }
+    Ok(cfg)
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
@@ -82,13 +127,41 @@ fn cmd_run(args: &Args) -> Result<()> {
         "twitter7" => "twitter7",
         other => bail!("unknown graph '{other}' (friendster|sk-2005|moliere|twitter7)"),
     };
-    let backend = parse_backend(args.opt("backend").unwrap_or("dpu-opt"))?;
-    let caching = parse_caching(args.opt("caching").unwrap_or(match backend {
-        BackendKind::Dpu(_) => "static",
-        _ => "none",
-    }))?;
+    let scfg = soda_config_from_args(args)?;
+    // Flags beat the config file; the file beats the base defaults
+    // (backend dpu-opt + static caching, from base_soda_config).
+    let backend = match args.opt("backend") {
+        Some(s) => parse_backend(s)?,
+        None => scfg.backend,
+    };
+    let mut caching = match args.opt("caching") {
+        Some(s) => parse_caching(s)?,
+        None => scfg.caching,
+    };
+    // Non-DPU backends cannot cache on the DPU (same coercion as
+    // SodaConfig::with_backend; keeps the run label honest too).
+    if !matches!(backend, BackendKind::Dpu(_)) {
+        caching = CachingMode::None;
+    }
     let mut wb = Workbench::new(args.opt_f64("scale", DEFAULT_SCALE));
-    wb.threads = args.opt_usize("threads", 24);
+    // scfg.threads already carries any --threads override.
+    wb.threads = scfg.threads;
+    wb.evict_policy = scfg.evict_policy;
+    wb.dpu_cache_policy = scfg.dpu_cache_policy;
+    wb.prefetch = scfg.prefetch;
+    if args.opt("config").is_some() {
+        // A --config file is a full SodaConfig: honor every field
+        // (qp_count, numa_aware, buffer_fraction, host_timing, …), not
+        // just the policy knobs.
+        wb.soda_config_base = Some(scfg.clone());
+    }
+    if let Some(path) = args.opt("cluster-config") {
+        let v = load_json(path)?;
+        wb.cluster_config
+            .apply_json(&v)
+            .map_err(|e| anyhow::anyhow!("--cluster-config: {e}"))?;
+        wb.cluster_config = wb.cluster_config.clone().normalized();
+    }
     let spec = ExperimentSpec { app, graph, backend, caching };
     let m = if args.flag("with-bg-bfs") {
         let (m, replayed) = wb.run_with_background_bfs(&spec);
@@ -102,6 +175,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     } else {
         println!("{m}");
     }
+    Ok(())
+}
+
+/// Print the effective [`SodaConfig`] as JSON — the round-trippable schema
+/// `--config` accepts, with any CLI overrides applied. `soda config >
+/// run.json` then `soda run ... --config run.json` reproduces a setup.
+fn cmd_config(args: &Args) -> Result<()> {
+    let cfg = soda_config_from_args(args)?;
+    println!("{}", cfg.to_json().to_string());
     Ok(())
 }
 
@@ -137,9 +219,14 @@ fn usage() -> &'static str {
      commands:\n\
        figures [--all | <id>...] [--scale F] [--threads N] [--json DIR]\n\
            regenerate paper tables/figures (table1 table2 fig3..fig11)\n\
-           plus ablations (abl-entry abl-prefetch abl-evict abl-qp)\n\
+           plus ablations (abl-entry abl-prefetch abl-evict abl-qp abl-cache-policy)\n\
        run <app> <graph> [--backend B] [--caching M] [--scale F] [--with-bg-bfs] [--json]\n\
+           [--evict-policy P] [--dpu-cache-policy P] [--prefetch-depth N] [--prefetch-scan N]\n\
+           [--config FILE] [--cluster-config FILE]\n\
            run one application on one graph and print metrics\n\
+           (policies P: fault-fifo | access-lru | random | clock | slru)\n\
+       config [--config FILE] [--evict-policy P] [--dpu-cache-policy P] ...\n\
+           print the effective SodaConfig as JSON (the --config schema)\n\
        advisor [--hit-rate H]\n\
            evaluate the Eq.1-3 analytical caching model on this platform\n\
        xla-info\n\
@@ -151,6 +238,7 @@ fn main() -> Result<()> {
     match args.command.as_deref() {
         Some("figures") => cmd_figures(&args),
         Some("run") => cmd_run(&args),
+        Some("config") => cmd_config(&args),
         Some("advisor") => cmd_advisor(&args),
         Some("xla-info") => cmd_xla_info(),
         Some("help") | None => {

@@ -55,8 +55,21 @@ pub struct Workbench {
     pub threads: usize,
     graphs: HashMap<&'static str, CsrGraph>,
     pub cluster_config: ClusterConfig,
-    /// Eviction-policy override for ablation runs.
+    /// Host-buffer eviction-policy override for ablation runs.
     pub evict_policy: crate::host::EvictPolicy,
+    /// DPU dynamic-cache policy override (`None` keeps the cluster's
+    /// `DpuConfig::cache_policy`, i.e. the paper's random eviction).
+    pub dpu_cache_policy: Option<crate::cache::PolicyKind>,
+    /// Partial prefetcher override; `None` keeps the cluster's
+    /// `DpuConfig::prefetch`, unset fields of a `Some` keep the cluster's
+    /// value for that field.
+    pub prefetch: Option<crate::coordinator::config::PrefetchOverride>,
+    /// Full [`SodaConfig`] base for runs (e.g. a `--config` file): every
+    /// field (qp_count, numa_aware, buffer_fraction, host_timing, …) is
+    /// honored, with the explicit `threads`/policy/prefetch fields above
+    /// and the spec's backend/caching layered on top. `None` keeps the
+    /// workbench's scaled defaults.
+    pub soda_config_base: Option<SodaConfig>,
 }
 
 impl Workbench {
@@ -67,6 +80,9 @@ impl Workbench {
             graphs: HashMap::new(),
             cluster_config: Self::scaled_cluster_config_at(scale),
             evict_policy: crate::host::EvictPolicy::FaultFifo,
+            dpu_cache_policy: None,
+            prefetch: None,
+            soda_config_base: None,
         }
     }
 
@@ -131,19 +147,37 @@ impl Workbench {
         })
     }
 
-    fn soda_config(&self, spec: &ExperimentSpec) -> SodaConfig {
+    /// The effective [`SodaConfig`] a CLI run uses when no `--config` base
+    /// is supplied: the historical `soda run` defaults (backend `dpu-opt`,
+    /// static caching) with host-side per-fault software costs scaled like
+    /// the DPU's (see [`Self::scaled_cluster_config`]). `soda config`
+    /// starts from this, so `soda config > run.json` followed by
+    /// `soda run … --config run.json` reproduces the configless run.
+    pub fn base_soda_config() -> SodaConfig {
         SodaConfig {
-            threads: self.threads,
-            // Host-side per-fault software costs, scaled like the DPU's
-            // (see scaled_cluster_config).
+            backend: BackendKind::DPU_OPT,
+            caching: CachingMode::Static,
             host_timing: crate::host::HostTiming {
                 fault_trap_ns: 600,
                 hit_ns: 0,
                 evict_mgmt_ns: 100,
                 zero_fill_ns: 400,
             },
-            evict_policy: self.evict_policy,
             ..SodaConfig::default()
+        }
+    }
+
+    fn soda_config(&self, spec: &ExperimentSpec) -> SodaConfig {
+        let base = self
+            .soda_config_base
+            .clone()
+            .unwrap_or_else(Self::base_soda_config);
+        SodaConfig {
+            threads: self.threads,
+            evict_policy: self.evict_policy,
+            dpu_cache_policy: self.dpu_cache_policy,
+            prefetch: self.prefetch,
+            ..base
         }
         .with_backend(spec.backend)
         .with_caching(spec.caching)
@@ -324,6 +358,34 @@ mod tests {
         let mut wb = Workbench::new(0.0002); // ~13k-vertex friendster
         wb.threads = 8;
         wb
+    }
+
+    #[test]
+    fn soda_config_base_is_honored_in_full() {
+        let mut wb = quick_bench();
+        let mut base = SodaConfig::default();
+        base.qp_count = 4;
+        base.numa_aware = false;
+        base.buffer_fraction = 0.5;
+        base.evict_threshold = 0.8;
+        base.host_timing.fault_trap_ns = 777;
+        wb.soda_config_base = Some(base);
+        wb.evict_policy = crate::host::EvictPolicy::Clock;
+        let spec = ExperimentSpec {
+            app: App::Bfs,
+            graph: "friendster",
+            backend: BackendKind::MemServer,
+            caching: CachingMode::None,
+        };
+        let sc = wb.soda_config(&spec);
+        assert_eq!(sc.qp_count, 4, "--config qp_count must reach the run");
+        assert!(!sc.numa_aware, "--config numa_aware must reach the run");
+        assert!((sc.buffer_fraction - 0.5).abs() < 1e-12);
+        assert!((sc.evict_threshold - 0.8).abs() < 1e-12);
+        assert_eq!(sc.host_timing.fault_trap_ns, 777);
+        // Explicit workbench fields still layer on top of the base.
+        assert_eq!(sc.evict_policy, crate::host::EvictPolicy::Clock);
+        assert_eq!(sc.backend, BackendKind::MemServer);
     }
 
     #[test]

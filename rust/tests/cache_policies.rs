@@ -1,0 +1,248 @@
+//! Cache-subsystem invariants across every pluggable replacement policy:
+//! residency map ↔ policy-order consistency, pin safety (`pinned_drops`
+//! instead of eviction), dirty pages always surfaced through `EvictedPage`,
+//! and bit-identical fault-FIFO eviction order vs an explicit reference
+//! model of the seed implementation.
+
+use soda::cache::PolicyKind;
+use soda::dpu::{CacheTable, EntryKey};
+use soda::host::buffer::{PageBuffer, PageKey};
+use soda::sim::rng::Rng;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+fn k(p: u64) -> PageKey {
+    PageKey::new(1, p)
+}
+
+fn ek(e: u64) -> EntryKey {
+    EntryKey { region: 1, entry: e }
+}
+
+/// Mixed insert/touch/evict storm on the host buffer: after every step the
+/// engine's order lists exactly the resident keys, each exactly once.
+#[test]
+fn buffer_order_stays_consistent_with_residency_under_mixed_ops() {
+    for policy in PolicyKind::ALL {
+        let mut buf = PageBuffer::with_policy(6 * 4096, 4096, 1.0, policy);
+        let mut rng = Rng::new(0xBEEF ^ policy.name().len() as u64);
+        for step in 0..400u64 {
+            let page = rng.below(24);
+            let write = rng.chance(0.3);
+            if buf.access(k(page), write).is_none() {
+                while buf.is_full() {
+                    let ev = buf.evict_victim().expect("full buffer must evict");
+                    buf.recycle(ev.data);
+                }
+                buf.insert_with(k(page), write, |d| d[0] = (step % 251) as u8);
+            }
+            let order = buf.lru_order();
+            assert_eq!(
+                order.len(),
+                buf.resident_pages(),
+                "{policy:?}: order length vs resident count at step {step}"
+            );
+            let set: HashSet<PageKey> = order.iter().copied().collect();
+            assert_eq!(set.len(), order.len(), "{policy:?}: duplicate slot in order");
+            for key in &order {
+                assert!(buf.is_resident(*key), "{policy:?}: order lists evicted {key:?}");
+            }
+        }
+    }
+}
+
+/// Pinned DPU-cache entries survive arbitrary insert storms under every
+/// policy; when every slot is pinned the insertion is dropped and counted.
+#[test]
+fn pinned_entries_never_evicted_pinned_drops_counted() {
+    for policy in PolicyKind::ALL {
+        let mut t = CacheTable::with_policy(4 * 4096, 4096, 1024, policy);
+        let mut rng = Rng::new(0xF1A7);
+        for e in 0..4u64 {
+            assert!(t.insert(ek(e), vec![e as u8; 4096], 0, &mut rng));
+        }
+        t.pin(ek(0));
+        t.pin(ek(1));
+        // Storm: pinned entries must survive; unpinned ones churn.
+        for e in 10..40u64 {
+            t.insert(ek(e), vec![0; 4096], 0, &mut rng);
+            assert!(t.contains(ek(0)), "{policy:?}: pinned ek0 evicted");
+            assert!(t.contains(ek(1)), "{policy:?}: pinned ek1 evicted");
+        }
+        // Pin everything resident: the next insert must be dropped and
+        // counted, evicting nothing.
+        let resident_before = t.resident_entries();
+        for e in 0..64u64 {
+            if t.contains(ek(e)) && t.refcount(ek(e)) == 0 {
+                t.pin(ek(e));
+            }
+        }
+        let drops_before = t.stats().pinned_drops;
+        assert!(!t.insert(ek(99), vec![0; 4096], 0, &mut rng), "{policy:?}");
+        assert_eq!(t.stats().pinned_drops, drops_before + 1, "{policy:?}");
+        assert_eq!(t.resident_entries(), resident_before, "{policy:?}");
+        assert!(!t.contains(ek(99)), "{policy:?}");
+    }
+}
+
+/// Every dirty page leaves the buffer as a dirty `EvictedPage` carrying its
+/// latest bytes — under every policy, through both eviction and drain.
+#[test]
+fn dirty_pages_always_surface_on_eviction() {
+    for policy in PolicyKind::ALL {
+        let mut buf = PageBuffer::with_policy(5 * 4096, 4096, 1.0, policy);
+        let mut rng = Rng::new(0xD1E7);
+        let mut shadow_dirty: HashMap<u64, u8> = HashMap::new();
+        for step in 0..300u64 {
+            let page = rng.below(20);
+            let write = rng.chance(0.5);
+            let tag = (step % 251) as u8;
+            match buf.access(k(page), write) {
+                Some(data) => {
+                    if write {
+                        data[0] = tag;
+                        shadow_dirty.insert(page, tag);
+                    }
+                }
+                None => {
+                    while buf.is_full() {
+                        let ev = buf.evict_victim().expect("full buffer must evict");
+                        let expect = shadow_dirty.remove(&ev.key.page);
+                        assert_eq!(
+                            ev.dirty,
+                            expect.is_some(),
+                            "{policy:?}: dirty flag wrong for page {}",
+                            ev.key.page
+                        );
+                        if let Some(want) = expect {
+                            assert_eq!(ev.data[0], want, "{policy:?}: dirty data lost");
+                        }
+                        buf.recycle(ev.data);
+                    }
+                    buf.insert_with(k(page), write, |d| d[0] = tag);
+                    if write {
+                        shadow_dirty.insert(page, tag);
+                    }
+                }
+            }
+        }
+        // Whatever dirty pages remain resident must drain as dirty.
+        let drained = buf.drain_dirty();
+        for ev in &drained {
+            assert!(ev.dirty);
+            let want = shadow_dirty
+                .remove(&ev.key.page)
+                .unwrap_or_else(|| panic!("{policy:?}: drained clean page {:?}", ev.key));
+            assert_eq!(ev.data[0], want, "{policy:?}: drained data lost");
+        }
+        assert!(
+            shadow_dirty.is_empty(),
+            "{policy:?}: dirty pages vanished without surfacing: {shadow_dirty:?}"
+        );
+    }
+}
+
+/// Reference model of the seed's fault-FIFO buffer: an explicit queue in
+/// fault order. The default policy must match it *exactly* — same eviction
+/// sequence, same dirty flags, same hit/miss counters — on a pseudorandom
+/// workload (the acceptance criterion's bit-identical regression check).
+#[test]
+fn fault_fifo_matches_seed_reference_model_exactly() {
+    const CAP: usize = 8;
+    let mut buf = PageBuffer::new(CAP as u64 * 4096, 4096, 1.0);
+    assert_eq!(buf.policy(), PolicyKind::FaultFifo, "seed default policy");
+    let mut fifo: VecDeque<u64> = VecDeque::new(); // fault order, oldest first
+    let mut dirty: HashSet<u64> = HashSet::new();
+    let mut rng = Rng::new(0x5EED_F1F0);
+    let (mut hits, mut misses) = (0u64, 0u64);
+    for _ in 0..2_000 {
+        let page = rng.below(32);
+        let write = rng.chance(0.25);
+        if buf.access(k(page), write).is_some() {
+            hits += 1;
+            assert!(fifo.contains(&page), "model out of sync");
+            if write {
+                dirty.insert(page);
+            }
+            // Seed semantics: a hit must NOT change the fault order.
+        } else {
+            misses += 1;
+            assert!(!fifo.contains(&page), "model out of sync");
+            while fifo.len() >= CAP {
+                let expect = fifo.pop_front().unwrap();
+                let ev = buf.evict_victim().expect("buffer full");
+                assert_eq!(ev.key.page, expect, "eviction diverged from fault order");
+                assert_eq!(ev.dirty, dirty.remove(&expect), "dirty flag diverged");
+                buf.recycle(ev.data);
+            }
+            buf.insert_with(k(page), write, |_| {});
+            fifo.push_back(page);
+            if write {
+                dirty.insert(page);
+            }
+        }
+    }
+    let s = buf.stats();
+    assert_eq!((s.hits, s.misses), (hits, misses), "stats diverged");
+    // Drain the rest: still exact fault order.
+    while let Some(expect) = fifo.pop_front() {
+        let ev = buf.evict_victim().expect("resident pages remain");
+        assert_eq!(ev.key.page, expect, "tail eviction diverged from fault order");
+    }
+    assert_eq!(buf.resident_pages(), 0);
+}
+
+/// Golden fixed sequence for the default policy (hand-computed seed
+/// behavior): hits never reorder, evictions follow first-fault order.
+#[test]
+fn fault_fifo_golden_sequence() {
+    let mut buf = PageBuffer::new(3 * 4096, 4096, 1.0);
+    for p in [10u64, 20, 30] {
+        buf.insert_with(k(p), false, |_| {});
+    }
+    buf.access(k(10), false); // hot — invisible to uffd
+    buf.access(k(30), true); // dirty
+    let mut order: Vec<u64> = Vec::new();
+    while let Some(ev) = buf.evict_victim() {
+        order.push(ev.key.page);
+        buf.recycle(ev.data);
+    }
+    assert_eq!(order, vec![10, 20, 30], "fault order, untouched by hits");
+}
+
+/// The DPU cache's residency map and engine agree for every policy under a
+/// prefetch-like storm with racing readiness and invalidations.
+#[test]
+fn cache_table_residency_consistent_under_storm() {
+    for policy in PolicyKind::ALL {
+        let mut t = CacheTable::with_policy(8 * 4096, 4096, 1024, policy);
+        let mut rng = Rng::new(0x570F);
+        for step in 0..300u64 {
+            match rng.below(4) {
+                0 | 1 => {
+                    let key = ek(rng.below(40));
+                    let _ = t.insert(key, vec![0; 4096], step * 10, &mut rng);
+                }
+                2 => {
+                    // Lookup a page of a random known entry (may be not-ready).
+                    let e = rng.below(40);
+                    let _ = t.lookup_page(step * 10, PageKey::new(1, e * 4));
+                }
+                _ => {
+                    let key = ek(rng.below(40));
+                    if t.refcount(key) == 0 {
+                        t.invalidate(key);
+                    }
+                }
+            }
+            assert!(
+                t.resident_entries() <= t.slot_count(),
+                "{policy:?}: over capacity"
+            );
+        }
+        // clear() empties both map and engine; the table is reusable.
+        t.clear();
+        assert_eq!(t.resident_entries(), 0, "{policy:?}");
+        assert!(t.insert(ek(0), vec![1; 4096], 0, &mut rng), "{policy:?}");
+        assert!(t.lookup_page(10, PageKey::new(1, 0)).is_some(), "{policy:?}");
+    }
+}

@@ -1,0 +1,32 @@
+//! Bench: the batched fault engine's cumulative Fig 11 story — per-page
+//! base vs doorbell batching vs the async pipeline vs range coalescing.
+//! Reports wall-clock of the simulator runs; the virtual-time speedups
+//! come from `soda figures fig11`.
+use soda::figures::evaluation::fig11_configs;
+use soda::graph::App;
+use soda::util::bench::Bench;
+use soda::workload::{ExperimentSpec, Workbench};
+
+fn main() {
+    let mut b = Bench::quick();
+    b.section("fig11 batching: base -> +doorbell -> +async -> +coalesce (scale 2e-4)");
+    // The same table fig11 runs; the first four entries are the cumulative
+    // batching story (the caching columns are covered by fig11_breakdown).
+    for app in [App::PageRank, App::Bfs] {
+        for c in fig11_configs().iter().take(4) {
+            b.bench(format!("{}/friendster/{}", app.name(), c.name), || {
+                let mut wb = Workbench::new(0.0002);
+                wb.threads = 24;
+                wb.max_batch_pages = Some(c.batch);
+                wb.coalesce_fetch = Some(c.coalesce);
+                wb.run(&ExperimentSpec {
+                    app,
+                    graph: "friendster",
+                    backend: c.backend,
+                    caching: c.caching,
+                })
+                .elapsed_ns
+            });
+        }
+    }
+}

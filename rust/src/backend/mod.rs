@@ -21,7 +21,7 @@ pub use dpu_store::DpuStore;
 pub use memserver::MemServerStore;
 pub use ssd_store::SsdStore;
 
-use crate::host::buffer::PageKey;
+use crate::host::buffer::{PageKey, PageSpan};
 use crate::memnode::RegionId;
 use crate::sim::Ns;
 
@@ -66,6 +66,43 @@ pub trait RemoteStore {
     /// node `numa_node`. Returns `(data-available time, source)`.
     fn fetch(&mut self, now: Ns, key: PageKey, numa_node: usize, out: &mut [u8])
         -> (Ns, FetchSource);
+
+    /// Batched fetch: the host posted every span at `now` with a single
+    /// doorbell, so the backend may overlap the spans' round trips and
+    /// serve each coalesced span as one multi-page transfer. `out` receives
+    /// the spans' payloads concatenated in span order (`sum(pages) × chunk`
+    /// bytes); the return value is one `(data-available, source)` pair per
+    /// page, flattened in the same order.
+    ///
+    /// Contract: data-plane bytes-on-wire must equal the per-page
+    /// [`Self::fetch`] loop exactly — batching overlaps latency, it must
+    /// not alter traffic. Only completion times may improve. The default
+    /// implementation is the sequential per-page loop itself (no overlap),
+    /// so any backend is batch-correct out of the box.
+    fn fetch_batch(
+        &mut self,
+        now: Ns,
+        spans: &[PageSpan],
+        numa_node: usize,
+        out: &mut [u8],
+    ) -> Vec<(Ns, FetchSource)> {
+        let total: u64 = spans.iter().map(|s| s.pages).sum();
+        assert!(total > 0, "empty fetch batch");
+        debug_assert_eq!(out.len() as u64 % total, 0);
+        let chunk = (out.len() as u64 / total) as usize;
+        let mut res = Vec::with_capacity(total as usize);
+        let mut t = now;
+        let mut off = 0usize;
+        for s in spans {
+            for i in 0..s.pages {
+                let (done, src) = self.fetch(t, s.key_at(i), numa_node, &mut out[off..off + chunk]);
+                t = done;
+                off += chunk;
+                res.push((done, src));
+            }
+        }
+        res
+    }
 
     /// Write back a dirty page. Returns the time the *host* is released
     /// (offloaded stores release at hand-off; direct stores block until the

@@ -335,6 +335,13 @@ pub struct SodaConfig {
     /// Independent QPs for the data plane (§IV-B: multiple QPs avoid
     /// locking).
     pub qp_count: usize,
+    /// Max pages per batched fault window: a span's misses are coalesced
+    /// and posted with one doorbell, their round trips overlapped. `1`
+    /// disables batching (the per-page path — Fig 11 `base`).
+    pub max_batch_pages: u64,
+    /// Merge contiguous missing pages into multi-page range requests
+    /// (the `+coalesce` step of the extended Fig 11 breakdown).
+    pub coalesce_fetch: bool,
     pub host_timing: HostTiming,
     /// Host page-buffer replacement policy (FaultFifo = what uffd can
     /// implement; the others are the ablation space of `abl-evict`).
@@ -358,6 +365,8 @@ impl Default for SodaConfig {
             threads: 24,
             numa_aware: true,
             qp_count: 24,
+            max_batch_pages: crate::host::HostAgent::DEFAULT_MAX_BATCH_PAGES,
+            coalesce_fetch: true,
             host_timing: HostTiming::default(),
             evict_policy: PolicyKind::FaultFifo,
             dpu_cache_policy: None,
@@ -441,6 +450,16 @@ impl SodaConfig {
         if let Some(x) = v.get("qp_count") {
             cfg.qp_count = want_u64(x, "qp_count")? as usize;
         }
+        if let Some(x) = v.get("max_batch_pages") {
+            let n = want_u64(x, "max_batch_pages")?;
+            if n == 0 {
+                return Err("max_batch_pages must be >= 1 (1 disables batching)".into());
+            }
+            cfg.max_batch_pages = n;
+        }
+        if let Some(x) = v.get("coalesce_fetch") {
+            cfg.coalesce_fetch = want_bool(x, "coalesce_fetch")?;
+        }
         if let Some(t) = v.get("host_timing") {
             let field = |key: &str, cur: u64| -> Result<u64, String> {
                 match t.get(key) {
@@ -494,6 +513,8 @@ impl ToJson for SodaConfig {
             ("threads", self.threads.into()),
             ("numa_aware", self.numa_aware.into()),
             ("qp_count", self.qp_count.into()),
+            ("max_batch_pages", self.max_batch_pages.into()),
+            ("coalesce_fetch", self.coalesce_fetch.into()),
             (
                 "host_timing",
                 Json::obj([
@@ -644,6 +665,8 @@ mod tests {
             threads: 8,
             numa_aware: false,
             qp_count: 4,
+            max_batch_pages: 4,
+            coalesce_fetch: false,
             host_timing: HostTiming {
                 fault_trap_ns: 111,
                 hit_ns: 2,
@@ -720,6 +743,20 @@ mod tests {
         // default prefetch override.
         assert!(SodaConfig::from_json(&Json::parse(r#"{"prefetch": true}"#).unwrap()).is_err());
         assert!(SodaConfig::from_json(&Json::parse(r#"{"prefetch": "deep"}"#).unwrap()).is_err());
+        // Batching knobs: 0 pages is meaningless (1 = disabled).
+        assert!(SodaConfig::from_json(&Json::parse(r#"{"max_batch_pages": 0}"#).unwrap()).is_err());
+        assert!(SodaConfig::from_json(&Json::parse(r#"{"coalesce_fetch": "yes"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn batch_knobs_parse_and_default() {
+        let cfg = SodaConfig::default();
+        assert_eq!(cfg.max_batch_pages, 16, "default window matches the DPU SQ depth");
+        assert!(cfg.coalesce_fetch);
+        let v = Json::parse(r#"{"max_batch_pages": 1, "coalesce_fetch": false}"#).unwrap();
+        let cfg = SodaConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.max_batch_pages, 1);
+        assert!(!cfg.coalesce_fetch);
     }
 
     #[test]

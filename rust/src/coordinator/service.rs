@@ -74,7 +74,7 @@ impl SodaService {
     /// Create a client with an explicit page-buffer size.
     pub fn client_with_buffer(&self, name: impl Into<String>, buffer_bytes: u64) -> HostAgent {
         let ccfg = self.cluster.config();
-        HostAgent::with_policy(
+        let mut agent = HostAgent::with_policy(
             name,
             self.make_store(),
             buffer_bytes.min(ccfg.host_mem_bytes),
@@ -86,7 +86,9 @@ impl SodaService {
             self.cfg.host_timing,
             self.cfg.evict_policy,
             ccfg.seed,
-        )
+        );
+        agent.set_fetch_batch(self.cfg.max_batch_pages, self.cfg.coalesce_fetch);
+        agent
     }
 
     /// Create a client sized for a FAM footprint: buffer = `buffer_fraction`
@@ -151,6 +153,17 @@ mod tests {
             assert_eq!(i.dpu.cfg.prefetch.max_per_scan, cluster_scan);
             assert_eq!(i.dpu.table.policy(), crate::cache::PolicyKind::Clock);
         });
+    }
+
+    #[test]
+    fn clients_inherit_batch_knobs() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let mut cfg = SodaConfig::default();
+        cfg.max_batch_pages = 4;
+        cfg.coalesce_fetch = false;
+        let svc = SodaService::attach(&cluster, cfg);
+        let client = svc.client_with_buffer("p0", 64 << 10);
+        assert_eq!(client.fetch_batch(), (4, false));
     }
 
     #[test]

@@ -97,6 +97,22 @@ impl Aggregator {
         factor
     }
 
+    /// Observe an *explicitly formed* batch of `n` requests: the host
+    /// posted them together with one doorbell (the batched fault engine),
+    /// so the batch factor is known exactly instead of being estimated
+    /// from the in-flight window. Returns the factor, capped at the NIC
+    /// SQ depth like [`Self::batch_factor`]; stats count all `n` requests.
+    pub fn explicit_batch(&mut self, n: u64) -> u64 {
+        debug_assert!(n >= 1);
+        let factor = n.clamp(1, self.max_batch);
+        self.stats.requests += n;
+        self.stats.factor_sum += factor * n;
+        self.stats.max_factor = self.stats.max_factor.max(factor);
+        let state = (self.inflight.len() as u64 + n) * BATCH_STATE_BYTES_PER_REQ;
+        self.stats.peak_state_bytes = self.stats.peak_state_bytes.max(state);
+        factor
+    }
+
     /// Record that the request observed at `now` will complete at `done`.
     pub fn record_completion(&mut self, done: Ns) {
         // Keep the deque sorted by completion time (insert position from the
@@ -163,6 +179,17 @@ mod tests {
         a.record_completion(2_000);
         assert_eq!(a.concurrency(1_500), 2); // 2000 and 3000 remain
         assert_eq!(a.concurrency(2_500), 1);
+    }
+
+    #[test]
+    fn explicit_batch_uses_true_factor_and_counts_all_requests() {
+        let mut a = Aggregator::new(8);
+        assert_eq!(a.explicit_batch(5), 5);
+        assert_eq!(a.stats().requests, 5);
+        assert!((a.stats().mean_factor() - 5.0).abs() < 1e-12);
+        // Capped at the SQ depth.
+        assert_eq!(a.explicit_batch(32), 8);
+        assert_eq!(a.stats().max_factor, 8);
     }
 
     #[test]

@@ -41,30 +41,46 @@ pub struct Forwarder {
 
 impl Forwarder {
     /// `cores` = total DPU cores (BlueField-2: 8 Cortex-A72).
+    ///
+    /// Invariant: the stages never oversubscribe the SoC — `rx + cq ==
+    /// cores` in async mode. A two-stage pipeline needs one dedicated core
+    /// per stage, so with fewer than 2 cores async *degrades to sync
+    /// forwarding* (one core doing rx, wire wait, and completion in-line)
+    /// instead of inventing a phantom second core.
     pub fn new(mode: ForwardMode, cores: usize) -> Self {
-        assert!(cores >= 2 || mode == ForwardMode::Sync, "async needs ≥ 2 cores");
+        let cores = cores.max(1);
         match mode {
-            ForwardMode::Sync => Forwarder {
-                mode,
-                stage1: ServerPool::new("dpu.cores", cores),
-                stage2: None,
-            },
-            ForwardMode::Async => {
+            ForwardMode::Async if cores >= 2 => {
                 // The paper dedicates one pipeline to rx and one to cq
-                // polling; we split the SoC evenly (rounding rx up).
+                // polling; we split the SoC evenly (rounding rx up). With
+                // cores ≥ 2 both halves are non-empty and sum to `cores`.
                 let rx = cores.div_ceil(2);
                 let cq = cores - rx;
+                debug_assert!(rx >= 1 && cq >= 1 && rx + cq == cores);
                 Forwarder {
                     mode,
                     stage1: ServerPool::new("dpu.rx", rx),
-                    stage2: Some(ServerPool::new("dpu.cq", cq.max(1))),
+                    stage2: Some(ServerPool::new("dpu.cq", cq)),
                 }
             }
+            _ => Forwarder {
+                mode: ForwardMode::Sync,
+                stage1: ServerPool::new("dpu.cores", cores),
+                stage2: None,
+            },
         }
     }
 
     pub fn mode(&self) -> ForwardMode {
         self.mode
+    }
+
+    /// Core counts per stage: `(stage1, stage2)`; stage2 is 0 in sync mode.
+    pub fn stage_cores(&self) -> (usize, usize) {
+        (
+            self.stage1.units(),
+            self.stage2.as_ref().map(|p| p.units()).unwrap_or(0),
+        )
     }
 
     /// Forward one request.
@@ -199,7 +215,32 @@ mod tests {
     fn split_keeps_at_least_one_core_per_stage() {
         let f = Forwarder::new(ForwardMode::Async, 2);
         assert_eq!(f.mode(), ForwardMode::Async);
-        // Implicit: constructor did not panic; stage2 exists.
+        assert_eq!(f.stage_cores(), (1, 1));
         assert_eq!(f.jobs(), 0);
+    }
+
+    #[test]
+    fn async_split_never_oversubscribes_the_soc() {
+        // The documented invariant: rx + cq == cores for every async-capable
+        // core count (odd counts round rx up, cq never drops to 0).
+        for cores in 2..=9 {
+            let f = Forwarder::new(ForwardMode::Async, cores);
+            let (rx, cq) = f.stage_cores();
+            assert_eq!(rx + cq, cores, "{cores} cores: rx={rx} cq={cq}");
+            assert!(rx >= 1 && cq >= 1);
+            assert_eq!(f.mode(), ForwardMode::Async);
+        }
+    }
+
+    #[test]
+    fn single_core_async_degrades_to_sync() {
+        // One core cannot run a two-stage pipeline; instead of panicking or
+        // conjuring a second core, the forwarder runs sync on that core.
+        let mut f = Forwarder::new(ForwardMode::Async, 1);
+        assert_eq!(f.mode(), ForwardMode::Sync);
+        assert_eq!(f.stage_cores(), (1, 0));
+        let a = f.forward(0, 500, fetch, 400);
+        let b = f.forward(0, 500, fetch, 400);
+        assert_eq!(b - a, 500 + RTT + 400, "sync semantics: no overlap");
     }
 }

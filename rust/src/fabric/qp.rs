@@ -15,6 +15,11 @@ pub const WQE_BUILD_NS: Ns = 60;
 pub const DOORBELL_NS: Ns = 180;
 /// Extra per-op cost when multiple threads contend on one shared QP's lock.
 pub const QP_LOCK_CONTENTION_NS: Ns = 250;
+/// Send-queue depth: one doorbell covers at most this many WQEs (the NIC's
+/// SQ bound). Oversized batches ring one doorbell per SQ-depth group, so
+/// arbitrarily large `--max-batch-pages` sweeps can't report unphysical
+/// doorbell amortization.
+pub const SQ_DEPTH: u64 = 128;
 
 /// A single RDMA queue pair endpoint (bookkeeping + cost model).
 #[derive(Clone, Debug)]
@@ -35,13 +40,15 @@ impl QueuePair {
         }
     }
 
-    /// Post a batch of `n` WQEs with a single doorbell. Returns the CPU time
-    /// consumed on the issuing side.
+    /// Post a batch of `n` WQEs with doorbell batching: one doorbell per
+    /// SQ-depth group (a single ring for any batch up to [`SQ_DEPTH`]).
+    /// Returns the CPU time consumed on the issuing side.
     pub fn post_batch(&mut self, n: u64) -> Ns {
         assert!(n > 0, "empty batch");
+        let rings = n.div_ceil(SQ_DEPTH);
         self.posted += n;
-        self.doorbells += 1;
-        n * WQE_BUILD_NS + DOORBELL_NS
+        self.doorbells += rings;
+        n * WQE_BUILD_NS + rings * DOORBELL_NS
     }
 
     /// Post `n` WQEs individually (no doorbell batching) — the unoptimized
@@ -161,6 +168,16 @@ mod tests {
         let c_ded = dedicated.post_cost_ns(3, 24, 1);
         let c_shared = shared.post_cost_ns(3, 24, 1);
         assert_eq!(c_shared - c_ded, QP_LOCK_CONTENTION_NS);
+    }
+
+    #[test]
+    fn oversized_batch_rings_one_doorbell_per_sq_group() {
+        let mut q = QueuePair::new(0);
+        q.post_batch(SQ_DEPTH * 2 + 1);
+        assert_eq!(q.doorbells(), 3, "SQ depth bounds doorbell amortization");
+        let mut q2 = QueuePair::new(1);
+        q2.post_batch(SQ_DEPTH);
+        assert_eq!(q2.doorbells(), 1);
     }
 
     #[test]

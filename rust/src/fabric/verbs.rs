@@ -51,6 +51,21 @@ pub fn two_sided_request(fabric: &mut Fabric, now: Ns, numa_node: usize) -> Ns {
     )
 }
 
+/// Batched two-sided read request host → DPU: `n` Table I(a) descriptors
+/// travel as a *single* SEND (the aggregated task batch of §III). Bytes on
+/// the wire equal `n` individual requests; the per-message overhead is paid
+/// once, which is the host-side half of doorbell batching.
+pub fn two_sided_request_batch(fabric: &mut Fabric, now: Ns, numa_node: usize, n: u64) -> Ns {
+    debug_assert!(n >= 1);
+    fabric.intra(
+        now,
+        IntraOp::HostToDpuSend,
+        numa_node,
+        READ_REQUEST_BYTES * n,
+        TrafficClass::Control,
+    )
+}
+
 /// Two-sided write request host → DPU: header + dirty data inline.
 pub fn two_sided_write_request(
     fabric: &mut Fabric,
@@ -107,6 +122,23 @@ mod tests {
             TrafficClass::OnDemand,
         );
         assert!(t_send < t_write);
+    }
+
+    #[test]
+    fn batched_request_bytes_equal_individual_requests() {
+        let mut f1 = Fabric::new(FabricConfig::default());
+        let mut f2 = Fabric::new(FabricConfig::default());
+        let t_batch = two_sided_request_batch(&mut f1, 0, 2, 8);
+        let mut t_seq = 0;
+        for _ in 0..8 {
+            t_seq = two_sided_request(&mut f2, t_seq, 2);
+        }
+        assert_eq!(
+            f1.pcie_h2d.stats().control_bytes,
+            f2.pcie_h2d.stats().control_bytes,
+            "batching must not alter bytes-on-wire"
+        );
+        assert!(t_batch < t_seq, "one message beats eight chained sends");
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! is why we leave these values as tunable parameters.") plus the
 //! fault-FIFO vs access-LRU eviction ablation of DESIGN.md §6c.
 //!
-//! `soda ablations [entry|prefetch|evict|qp]`
+//! `soda figures [abl-entry|abl-prefetch|abl-evict|abl-cache-policy|abl-qp|abl-batch]`
 
 use super::FigureReport;
 use crate::coordinator::config::{BackendKind, CachingMode};
@@ -239,6 +239,76 @@ pub fn ablation_qp_count(scale: f64, threads: usize) -> FigureReport {
     r
 }
 
+/// Batched-fault-window sweep: how far doorbell batching + range
+/// coalescing carry once the window grows — runtime, realized doorbell
+/// amortization (WQEs per doorbell), and the traffic invariant.
+pub fn ablation_batch_size(scale: f64, threads: usize) -> FigureReport {
+    let mut r = FigureReport::new(
+        "abl-batch",
+        "batched fault window: runtime vs doorbell amortization (friendster, dpu-opt)",
+    );
+    r.line(format!(
+        "{:<12}{:<8}{:>12}{:>14}{:>14}{:>12}",
+        "app", "batch", "runtime ms", "wqe/doorbell", "faults", "net MB"
+    ));
+    let mut rows = Vec::new();
+    for app in [App::PageRank, App::Bfs] {
+        let mut base_net = None;
+        for batch in [1u64, 2, 4, 8, 16, 32] {
+            let mut wb = bench(scale, threads);
+            wb.max_batch_pages = Some(batch);
+            wb.coalesce_fetch = Some(batch > 1);
+            let m = wb.run(&ExperimentSpec {
+                app,
+                graph: "friendster",
+                backend: BackendKind::DPU_OPT,
+                caching: CachingMode::None,
+            });
+            let amort = m.host.qp_posted as f64 / m.host.qp_doorbells.max(1) as f64;
+            r.line(format!(
+                "{:<12}{:<8}{:>12.2}{:>14.2}{:>14}{:>12.2}",
+                app.name(),
+                batch,
+                m.elapsed_secs() * 1e3,
+                amort,
+                m.host.faults,
+                m.network_bytes() as f64 / 1e6,
+            ));
+            // The invariant the engine guarantees: batching must not alter
+            // data-plane traffic, only overlap its latency. This is
+            // deterministic here because `parallel_chunks` hands items out
+            // strictly in order (`ThreadSet::run_dynamic`), so the shared
+            // buffer sees the same op sequence at every batch size, and
+            // CachingMode::None keeps the timing-sensitive prefetcher out.
+            // Reported per cell (not asserted) so a future violation shows
+            // up in the data instead of aborting the whole figures run.
+            let net = m.network_bytes();
+            let invariant = *base_net.get_or_insert(net) == net;
+            if !invariant {
+                r.line(format!(
+                    "!! {}: traffic changed at batch {batch} ({net} bytes)",
+                    app.name()
+                ));
+            }
+            rows.push(Json::obj([
+                ("app", app.name().into()),
+                ("batch", batch.into()),
+                ("elapsed_ns", m.elapsed_ns.into()),
+                ("wqe_per_doorbell", amort.into()),
+                ("doorbells", m.host.qp_doorbells.into()),
+                ("faults", m.host.faults.into()),
+                ("net_bytes", net.into()),
+                ("traffic_invariant", invariant.into()),
+            ]));
+        }
+    }
+    r.line("-> the win saturates once the window covers a span's typical".to_string());
+    r.line("   miss burst (hub adjacency lists); traffic is invariant by".to_string());
+    r.line("   construction — batching overlaps latency, it moves no bytes.".to_string());
+    r.data = Json::obj([("rows", Json::Arr(rows)), ("scale", scale.into())]);
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -306,6 +376,41 @@ mod tests {
                     .any(|x| x.get("policy").unwrap().as_str() == Some(policy.name())),
                 "policy {policy:?} missing from sweep"
             );
+        }
+    }
+
+    #[test]
+    fn batch_sweep_reports_amortization_and_keeps_traffic_flat() {
+        let r = ablation_batch_size(S, 8);
+        let Some(Json::Arr(rows)) = r.data.get("rows") else {
+            panic!("no rows");
+        };
+        assert_eq!(rows.len(), 2 * 6);
+        let cell = |app: &str, batch: u64, field: &str| -> f64 {
+            rows.iter()
+                .find(|x| {
+                    x.get("app").unwrap().as_str() == Some(app)
+                        && x.get("batch").unwrap().as_u64() == Some(batch)
+                })
+                .unwrap_or_else(|| panic!("missing {app}/{batch}"))
+                .get(field)
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        for row in rows {
+            assert_eq!(
+                row.get("traffic_invariant").unwrap().as_bool(),
+                Some(true),
+                "batching altered traffic in {row:?}"
+            );
+        }
+        for app in ["pagerank", "bfs"] {
+            // A window with ≥ 2 misses rings one doorbell instead of many,
+            // so the total doorbell count must drop...
+            assert!(cell(app, 16, "doorbells") < cell(app, 1, "doorbells"));
+            // ...and batching never slows the run down.
+            assert!(cell(app, 16, "elapsed_ns") <= cell(app, 1, "elapsed_ns"));
         }
     }
 

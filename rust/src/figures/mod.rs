@@ -12,8 +12,8 @@ pub mod characterization;
 pub mod evaluation;
 
 pub use ablations::{
-    ablation_cache_policy, ablation_entry_size, ablation_evict_policy, ablation_prefetch_depth,
-    ablation_qp_count,
+    ablation_batch_size, ablation_cache_policy, ablation_entry_size, ablation_evict_policy,
+    ablation_prefetch_depth, ablation_qp_count,
 };
 pub use characterization::{fig3, fig4, fig5, table1, table2};
 pub use evaluation::{fig10, fig11, fig6, fig7, fig8, fig9};
@@ -77,6 +77,7 @@ pub fn run_figure(id: &str, scale: f64, threads: usize) -> Option<FigureReport> 
         "abl-evict" => Some(ablation_evict_policy(scale, threads)),
         "abl-cache-policy" => Some(ablation_cache_policy(scale, threads)),
         "abl-qp" => Some(ablation_qp_count(scale, threads)),
+        "abl-batch" => Some(ablation_batch_size(scale, threads)),
         _ => None,
     }
 }

@@ -30,6 +30,10 @@ pub fn pagerank(r: &mut GraphRunner, g: &FamGraph, iters: u32) -> PrResult {
     let mut contrib = vec![0.0f64; n];
     let mut sums = vec![0.0f64; n];
     let all: Vec<u32> = (0..n as u32).collect();
+    // Per-vertex scratch reused across all iterations: adjacency staging
+    // (runner-owned) and the degree-page key list for batched faulting.
+    let mut scratch = std::mem::take(&mut r.scratch);
+    let mut deg_pages: Vec<crate::host::PageKey> = Vec::new();
     let mut last_delta = 0.0;
     for _ in 0..iters {
         // Vertex-data sweep: contrib = rank / degree (offset reads on FAM).
@@ -48,33 +52,31 @@ pub fn pagerank(r: &mut GraphRunner, g: &FamGraph, iters: u32) -> PrResult {
         // the FAM vertex array: each pulled neighbor u touches u's offsets
         // page (deduplicated across the sorted list). This is the "high
         // access density" on vertex data that static caching exploits —
-        // the mechanism behind Fig 9's 42 % PageRank traffic cut.
+        // the mechanism behind Fig 9's 42 % PageRank traffic cut. The
+        // distinct pages of one vertex's pull are faulted as a single
+        // batch, so a hub's scattered offset-page misses overlap on the
+        // wire instead of paying one round trip each.
         sums.fill(0.0);
-        let all_items: Vec<u32> = (0..n as u32).collect();
-        let mut scratch = Vec::new();
-        let mut nbrs: Vec<u32> = Vec::new();
         let chunk = r.agent.chunk_bytes();
-        r.parallel_chunks(&all_items, cm.grain_dense, |agent, tid, v, now| {
-            let mut t = g.neighbors_into(agent, now, tid, v, &mut scratch, &mut nbrs);
+        r.parallel_chunks(&all, cm.grain_dense, |agent, tid, v, now| {
+            let mut t =
+                g.neighbors_into(agent, now, tid, v, &mut scratch.bytes, &mut scratch.nbrs);
             let mut compute = cm.per_vertex_ns;
             let mut acc = 0.0f64;
+            deg_pages.clear();
             let mut last_page = u64::MAX;
-            for &u in nbrs.iter() {
+            for &u in scratch.nbrs.iter() {
                 compute += cm.per_edge_ns;
-                // Read deg(u) from the FAM vertex object (page-granular,
+                // deg(u) lives on u's offsets page (page-granular;
                 // consecutive sorted neighbors share pages).
                 let page = (u as u64 * 8) / chunk;
                 if page != last_page {
-                    t = agent.touch_page(
-                        t,
-                        tid,
-                        crate::host::PageKey::new(g.offsets.region, page),
-                        false,
-                    );
+                    deg_pages.push(crate::host::PageKey::new(g.offsets.region, page));
                     last_page = page;
                 }
                 acc += contrib[u as usize];
             }
+            t = agent.touch_pages(t, tid, &deg_pages, false);
             sums[v as usize] = acc;
             t + compute
         });
@@ -88,6 +90,7 @@ pub fn pagerank(r: &mut GraphRunner, g: &FamGraph, iters: u32) -> PrResult {
         }
         r.advance((n as u64) * 2); // ~2 ns/vertex of scalar update work
     }
+    r.scratch = scratch;
     PrResult {
         ranks,
         iterations: iters,

@@ -82,12 +82,13 @@ fn edge_map_sparse(
     let items = frontier.to_sparse();
     let cm = r.compute;
     let mut next = Vec::new();
-    let mut scratch = Vec::new();
-    let mut nbrs: Vec<VertexId> = Vec::new();
+    // Adjacency scratch is owned by the runner and reused across
+    // supersteps — no per-edge_map allocation churn.
+    let mut scratch = std::mem::take(&mut r.scratch);
     r.parallel_chunks(&items, cm.grain_sparse, |agent, tid, u, now| {
-        let t = g.neighbors_into(agent, now, tid, u, &mut scratch, &mut nbrs);
+        let t = g.neighbors_into(agent, now, tid, u, &mut scratch.bytes, &mut scratch.nbrs);
         let mut compute = cm.per_vertex_ns;
-        for &v in &nbrs {
+        for &v in &scratch.nbrs {
             compute += cm.per_edge_ns;
             if cond(v) && update(u, v) {
                 next.push(v);
@@ -95,6 +96,7 @@ fn edge_map_sparse(
         }
         t + compute
     });
+    r.scratch = scratch;
     VertexSubset::from_vertices(next)
 }
 
@@ -110,16 +112,16 @@ fn edge_map_dense(
     let all: Vec<VertexId> = (0..g.n as VertexId).collect();
     let cm = r.compute;
     let mut next = Vec::new();
-    let mut scratch = Vec::new();
-    let mut nbrs: Vec<VertexId> = Vec::new();
+    // Runner-owned scratch, reused across supersteps (see edge_map_sparse).
+    let mut scratch = std::mem::take(&mut r.scratch);
     r.parallel_chunks(&all, cm.grain_dense, |agent, tid, v, now| {
         if !cond(v) {
             return now + cm.per_skip_ns;
         }
-        let t = g.neighbors_into(agent, now, tid, v, &mut scratch, &mut nbrs);
+        let t = g.neighbors_into(agent, now, tid, v, &mut scratch.bytes, &mut scratch.nbrs);
         let mut compute = cm.per_vertex_ns;
         let mut activated = false;
-        for &u in &nbrs {
+        for &u in &scratch.nbrs {
             compute += cm.per_edge_ns;
             if fd.contains(u) && update(u, v) {
                 activated = true;
@@ -133,6 +135,7 @@ fn edge_map_dense(
         }
         t + compute
     });
+    r.scratch = scratch;
     VertexSubset::from_vertices(next)
 }
 

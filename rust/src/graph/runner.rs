@@ -8,9 +8,22 @@
 //! original. Per-edge/per-vertex compute costs model the host CPU work
 //! that overlaps with paging.
 
+use super::csr::VertexId;
 use crate::host::HostAgent;
 use crate::sim::threads::ThreadSet;
 use crate::sim::Ns;
+
+/// Reusable adjacency scratch shared across `edge_map` supersteps: the raw
+/// neighbor-list bytes and their decoded vertex ids. Living on the runner,
+/// the buffers are allocated once per traversal instead of once per
+/// superstep — the inner-loop `Vec` churn the batching PR removes.
+#[derive(Debug, Default)]
+pub struct EdgeScratch {
+    /// Raw little-endian adjacency bytes (`neighbors_into` staging).
+    pub bytes: Vec<u8>,
+    /// Decoded neighbor ids of the vertex being processed.
+    pub nbrs: Vec<VertexId>,
+}
 
 /// Host compute-cost model for graph kernels (EPYC 7401-class core).
 #[derive(Clone, Copy, Debug)]
@@ -53,6 +66,9 @@ pub struct GraphRunner {
     /// Invoked with the current clock at every superstep boundary —
     /// used to co-schedule background processes (Fig 8 multi-tenancy).
     pub injector: Option<Box<dyn FnMut(Ns)>>,
+    /// Reusable adjacency scratch (`std::mem::take` it around a
+    /// `parallel_chunks` call and put it back after).
+    pub scratch: EdgeScratch,
 }
 
 impl GraphRunner {
@@ -63,6 +79,7 @@ impl GraphRunner {
             compute: ComputeModel::default(),
             clock: start,
             injector: None,
+            scratch: EdgeScratch::default(),
         }
     }
 

@@ -7,8 +7,28 @@
 //! communication buffer is bound to the NUMA node closest to the NIC when
 //! NUMA-aware placement is enabled (§III) — the measured difference is the
 //! whole of Fig 3.
+//!
+//! ## Batched fault engine
+//!
+//! [`HostAgent::touch_pages`] (and the span-based [`HostAgent::read_bytes`]
+//! / [`HostAgent::write_bytes`] built on it) is the batched counterpart of
+//! the per-page fault path: a span's pages are partitioned into hits /
+//! zero-fills / misses with one batched residency pre-scan, contiguous
+//! misses are coalesced into multi-page [`PageSpan`] range requests, the
+//! whole miss set is posted with a *single doorbell*
+//! ([`QueuePair::post_batch`](crate::fabric::qp::QueuePair::post_batch)),
+//! and the backend overlaps the fetches' network round trips
+//! ([`crate::backend::RemoteStore::fetch_batch`]) — so a k-page miss burst
+//! costs ~max(per-stage service) + one round trip instead of k round trips.
+//! Buffer metadata operations (hit touches, evictions, inserts) replay in
+//! exactly the per-page order, so final buffer state, fault counts and
+//! bytes-on-wire are identical to the sequential loop; only completion
+//! times improve. `SodaConfig::max_batch_pages` bounds the window (1
+//! disables batching) and `SodaConfig::coalesce_fetch` toggles range
+//! coalescing — the knobs the extended Fig 11 breakdown and `abl-batch`
+//! sweep.
 
-use super::buffer::{BufferStats, PageBuffer, PageKey};
+use super::buffer::{BufferStats, PageBuffer, PageKey, PageSpan};
 use super::fam::{FamHandle, ObjectTable, Placement};
 use crate::backend::{FetchSource, RemoteStore};
 use crate::fabric::qp::QpPool;
@@ -48,10 +68,16 @@ pub struct HostStats {
     pub faults: u64,
     pub zero_fills: u64,
     pub writebacks: u64,
-    /// Total fault stall time across threads (miss latency sum).
+    /// Total fault stall time across threads (miss latency sum; a batched
+    /// window stalls its thread once, not once per page).
     pub stall_ns: Ns,
     /// Fetches by source, indexed by [`FetchSource::index`].
     pub sources: [u64; FetchSource::COUNT],
+    /// WQEs posted on the data-plane QPs (snapshot at [`HostAgent::stats`]).
+    pub qp_posted: u64,
+    /// Doorbells rung — `qp_posted / qp_doorbells` is the realized
+    /// doorbell-batching factor the `abl-batch` ablation reports.
+    pub qp_doorbells: u64,
 }
 
 impl HostStats {
@@ -82,6 +108,19 @@ pub struct HostAgent {
     stats: HostStats,
     /// Optional miss trace `(time, page)` for workload replay (Fig 8).
     trace: Option<Vec<(Ns, PageKey)>>,
+    /// Max pages per batched fault window (1 = per-page sequential path).
+    max_batch_pages: u64,
+    /// Merge contiguous misses into multi-page range requests.
+    coalesce_fetch: bool,
+    /// Reused staging buffer for batched miss payloads (no steady-state
+    /// allocation on the fault path).
+    fetch_scratch: Vec<u8>,
+    /// Reused key list for the span walks of `read_bytes`/`write_bytes`.
+    span_keys: Vec<PageKey>,
+    /// Reused miss list of the current window.
+    miss_keys: Vec<PageKey>,
+    /// Reused per-window consumed-slot marks (parallel to `miss_keys`).
+    miss_used: Vec<bool>,
 }
 
 impl HostAgent {
@@ -150,7 +189,30 @@ impl HostAgent {
             materialized: FxHashMap::default(),
             stats: HostStats::default(),
             trace: None,
+            max_batch_pages: Self::DEFAULT_MAX_BATCH_PAGES,
+            coalesce_fetch: true,
+            fetch_scratch: Vec::new(),
+            span_keys: Vec::new(),
+            miss_keys: Vec::new(),
+            miss_used: Vec::new(),
         }
+    }
+
+    /// Default batched-fault window (pages) — matches the DPU's task-batch
+    /// SQ depth (`DpuConfig::max_batch`).
+    pub const DEFAULT_MAX_BATCH_PAGES: u64 = 16;
+
+    /// Configure the batched fault engine: `max_batch_pages` caps the pages
+    /// handled per fault window (1 restores the seed's per-page path);
+    /// `coalesce` merges contiguous misses into multi-page range requests.
+    pub fn set_fetch_batch(&mut self, max_batch_pages: u64, coalesce: bool) {
+        self.max_batch_pages = max_batch_pages.max(1);
+        self.coalesce_fetch = coalesce;
+    }
+
+    /// Current `(max_batch_pages, coalesce)` knobs of the fault engine.
+    pub fn fetch_batch(&self) -> (u64, bool) {
+        (self.max_batch_pages, self.coalesce_fetch)
     }
 
     /// Start recording the miss (fault) trace.
@@ -172,7 +234,10 @@ impl HostAgent {
     }
 
     pub fn stats(&self) -> HostStats {
-        self.stats
+        let mut s = self.stats;
+        s.qp_posted = self.qp.total_posted();
+        s.qp_doorbells = self.qp.total_doorbells();
+        s
     }
 
     pub fn store_name(&self) -> &'static str {
@@ -249,20 +314,10 @@ impl HostAgent {
         Some(self.store.free(now, handle.region))
     }
 
-    /// The page-fault path: ensure `key` is resident, return completion.
-    pub fn touch_page(&mut self, now: Ns, tid: usize, key: PageKey, write: bool) -> Ns {
-        if self.buffer.access(key, write).is_some() {
-            return now + self.timing.hit_ns;
-        }
-        self.stats.faults += 1;
-        if let Some(trace) = &mut self.trace {
-            trace.push((now, key));
-        }
-        let mut t = now + self.timing.fault_trap_ns;
-
-        // Proactive eviction: keep the buffer under its threshold; dirty
-        // chunks are written back (the store decides whether the host blocks
-        // for durability or is released at DPU hand-off).
+    /// Proactive eviction: keep the buffer under its threshold; dirty
+    /// chunks are written back (the store decides whether the host blocks
+    /// for durability or is released at DPU hand-off).
+    fn evict_for_insert(&mut self, mut t: Ns) -> Ns {
         while self.buffer.over_threshold() || self.buffer.is_full() {
             let Some(ev) = self.buffer.evict_lru() else { break };
             t += self.timing.evict_mgmt_ns;
@@ -274,7 +329,20 @@ impl HostAgent {
             }
             self.buffer.recycle(ev.data);
         }
+        t
+    }
 
+    /// The non-resident half of the per-page fault path: trap, evict as
+    /// needed, then fetch (materialized) or zero-fill (anonymous first
+    /// touch). The caller has already observed the miss via
+    /// `buffer.access`.
+    fn fault_one(&mut self, now: Ns, tid: usize, key: PageKey, write: bool) -> Ns {
+        self.stats.faults += 1;
+        if let Some(trace) = &mut self.trace {
+            trace.push((now, key));
+        }
+        let mut t = now + self.timing.fault_trap_ns;
+        t = self.evict_for_insert(t);
         if self.is_materialized(key) {
             // Post the request on this thread's QP and fetch.
             t += self.qp.post_cost_ns(tid, self.threads, 1);
@@ -293,7 +361,262 @@ impl HostAgent {
         }
     }
 
-    /// Read `out.len()` bytes at `offset` of a region, faulting as needed.
+    /// The page-fault path: ensure `key` is resident, return completion.
+    pub fn touch_page(&mut self, now: Ns, tid: usize, key: PageKey, write: bool) -> Ns {
+        if self.buffer.access(key, write).is_some() {
+            return now + self.timing.hit_ns;
+        }
+        self.fault_one(now, tid, key, write)
+    }
+
+    /// Batched fault path: ensure every page of `keys` is resident,
+    /// coalescing the misses into range requests posted with one doorbell
+    /// and overlapping their round trips (see the module docs). Observably
+    /// equivalent to calling [`Self::touch_page`] per key — identical final
+    /// buffer state, fault counts and bytes-on-wire — but a k-miss window
+    /// pays ~one round trip instead of k. Returns the completion time.
+    pub fn touch_pages(&mut self, now: Ns, tid: usize, keys: &[PageKey], write: bool) -> Ns {
+        self.touch_span(now, tid, keys, write, &mut |_, _| {})
+    }
+
+    /// Window-split driver shared by [`Self::touch_pages`] and the byte
+    /// spans: processes `keys` in `max_batch_pages`-sized fault windows,
+    /// invoking `sink(index, frame)` with each page's resident frame (in
+    /// key order) so callers copy bytes without a second buffer lookup.
+    fn touch_span(
+        &mut self,
+        now: Ns,
+        tid: usize,
+        keys: &[PageKey],
+        write: bool,
+        sink: &mut dyn FnMut(usize, &mut [u8]),
+    ) -> Ns {
+        let window = self.max_batch_pages.max(1) as usize;
+        let mut t = now;
+        let mut i = 0;
+        while i < keys.len() {
+            let end = (i + window).min(keys.len());
+            t = self.touch_window(t, tid, i, &keys[i..end], write, sink);
+            i = end;
+        }
+        t
+    }
+
+    /// One fault window: a single batched residency pre-scan finds the
+    /// misses that need the wire; windows with fewer than two such misses
+    /// take the sequential path (bit-identical to the seed's per-page
+    /// behavior), everything else goes through the batched engine.
+    fn touch_window(
+        &mut self,
+        now: Ns,
+        tid: usize,
+        base_idx: usize,
+        keys: &[PageKey],
+        write: bool,
+        sink: &mut dyn FnMut(usize, &mut [u8]),
+    ) -> Ns {
+        let mut miss = std::mem::take(&mut self.miss_keys);
+        miss.clear();
+        // Dedup: byte spans and the graph paths produce ascending keys, so
+        // while the miss list stays sorted a tail comparison is O(1); the
+        // linear scan only runs for out-of-order `touch_pages` callers.
+        let mut ascending = true;
+        for &k in keys {
+            if !self.buffer.is_resident(k) && self.is_materialized(k) {
+                let dup = match miss.last() {
+                    None => false,
+                    Some(&m) if m == k => true,
+                    Some(&m) if ascending && k > m => false,
+                    _ => miss.contains(&k),
+                };
+                if !dup {
+                    if miss.last().is_some_and(|&m| k < m) {
+                        ascending = false;
+                    }
+                    miss.push(k);
+                }
+            }
+        }
+        let t_end = if miss.len() >= 2 {
+            self.window_batched(now, tid, base_idx, keys, write, &miss, sink)
+        } else {
+            self.window_sequential(now, tid, base_idx, keys, write, sink)
+        };
+        miss.clear();
+        self.miss_keys = miss;
+        t_end
+    }
+
+    /// Per-page walk (0–1 fetchable misses in the window): the seed's
+    /// sequential fault loop, minus the redundant post-touch buffer lookup.
+    fn window_sequential(
+        &mut self,
+        now: Ns,
+        tid: usize,
+        base_idx: usize,
+        keys: &[PageKey],
+        write: bool,
+        sink: &mut dyn FnMut(usize, &mut [u8]),
+    ) -> Ns {
+        let mut t = now;
+        for (i, &key) in keys.iter().enumerate() {
+            if let Some(frame) = self.buffer.access(key, write) {
+                sink(base_idx + i, frame);
+                t += self.timing.hit_ns;
+                continue;
+            }
+            t = self.fault_one(t, tid, key, write);
+            let frame = self.buffer.peek(key).expect("just faulted");
+            sink(base_idx + i, frame);
+        }
+        t
+    }
+
+    /// The batched window: fetch the miss set up front (one trap, one
+    /// doorbell, overlapped round trips), then replay the *exact*
+    /// sequential per-page buffer operations — same access/evict/insert
+    /// order ⇒ same final buffer state, with page data arriving from the
+    /// prefetched staging scratch instead of k chained fetches.
+    #[allow(clippy::too_many_arguments)]
+    fn window_batched(
+        &mut self,
+        now: Ns,
+        tid: usize,
+        base_idx: usize,
+        keys: &[PageKey],
+        write: bool,
+        miss: &[PageKey],
+        sink: &mut dyn FnMut(usize, &mut [u8]),
+    ) -> Ns {
+        let chunk = self.chunk_bytes as usize;
+        let spans = PageSpan::coalesce(miss, self.coalesce_fetch);
+        // One trap covers the burst (the handler sees the whole faulting
+        // range), then the entire miss set posts with a single doorbell:
+        // one WQE per coalesced range request.
+        let mut t_wall = now + self.timing.fault_trap_ns;
+        t_wall += self.qp.post_cost_ns(tid, self.threads, spans.len() as u64);
+        let total = miss.len() * chunk;
+        let mut scratch = std::mem::take(&mut self.fetch_scratch);
+        if scratch.len() < total {
+            scratch.resize(total, 0);
+        }
+        let fetched = self
+            .store
+            .fetch_batch(t_wall, &spans, self.numa_node, &mut scratch[..total]);
+        debug_assert_eq!(fetched.len(), miss.len());
+        // Coalescing preserves key order, so scratch slot i holds miss[i].
+        let mut miss_used = std::mem::take(&mut self.miss_used);
+        miss_used.clear();
+        miss_used.resize(miss.len(), false);
+        // Misses are discovered in walk order, so each non-duplicate miss
+        // is consumed at the cursor; the scan behind it only runs for the
+        // rare duplicate/evicted-mid-window cases.
+        let mut miss_cursor = 0usize;
+        let mut t_data = t_wall;
+        let mut hit_time = 0;
+        for (i, &key) in keys.iter().enumerate() {
+            if let Some(frame) = self.buffer.access(key, write) {
+                sink(base_idx + i, frame);
+                t_wall += self.timing.hit_ns;
+                hit_time += self.timing.hit_ns;
+                continue;
+            }
+            self.stats.faults += 1;
+            if let Some(trace) = &mut self.trace {
+                // Stamp with the page's own fault-processing time, like the
+                // sequential path (the batch posts earlier, but the walk
+                // reaches this page at t_wall).
+                trace.push((t_wall, key));
+            }
+            t_wall = self.evict_for_insert(t_wall);
+            let slot = if miss_cursor < miss.len()
+                && miss[miss_cursor] == key
+                && !miss_used[miss_cursor]
+            {
+                Some(miss_cursor)
+            } else {
+                miss.iter().position(|&m| m == key).filter(|&m| !miss_used[m])
+            };
+            if let Some(m) = slot {
+                miss_used[m] = true;
+                miss_cursor = miss_cursor.max(m + 1);
+                let (done, src) = fetched[m];
+                let data = &scratch[m * chunk..(m + 1) * chunk];
+                let frame = self.buffer.insert_with(key, write, |d| d.copy_from_slice(data));
+                self.stats.count(src);
+                t_data = t_data.max(done);
+                sink(base_idx + i, frame);
+            } else if self.is_materialized(key) {
+                // Resident at the pre-scan (or already consumed) but missing
+                // now — this very window evicted it. Fall back to the
+                // sequential single fetch, exactly like the per-page loop.
+                t_wall += self.qp.post_cost_ns(tid, self.threads, 1);
+                {
+                    let frame = self.buffer.insert_with(key, write, |_| {});
+                    let (done, src) = self.store.fetch(t_wall, key, self.numa_node, frame);
+                    self.stats.count(src);
+                    t_data = t_data.max(done);
+                }
+                let frame = self.buffer.peek(key).expect("just inserted");
+                sink(base_idx + i, frame);
+            } else {
+                // Anonymous first touch: local zero-fill, no remote traffic.
+                self.stats.zero_fills += 1;
+                t_wall += self.timing.zero_fill_ns;
+                let frame = self.buffer.insert_with(key, write, |d| d.fill(0));
+                sink(base_idx + i, frame);
+            }
+        }
+        self.fetch_scratch = scratch;
+        miss_used.clear();
+        self.miss_used = miss_used;
+        let end = t_wall.max(t_data);
+        // The thread stalls once for the whole burst; per-page accounting
+        // would double-count the overlapped round trips. Hit service time
+        // is excluded, matching the sequential path's per-fault sum.
+        self.stats.stall_ns += end.saturating_sub(now).saturating_sub(hit_time);
+        end
+    }
+
+    /// Shared walk of a byte span's pages through the batched fault
+    /// engine. `copy(buf_range, frame_range, frame)` moves bytes between
+    /// the caller's buffer and each page's frame (direction is the
+    /// caller's choice); the ranges are the span/page overlap clamped to
+    /// the span's `[offset, offset + len)` window.
+    #[allow(clippy::too_many_arguments)]
+    fn span_bytes(
+        &mut self,
+        now: Ns,
+        tid: usize,
+        region: RegionId,
+        offset: u64,
+        len: u64,
+        write: bool,
+        copy: &mut dyn FnMut(std::ops::Range<usize>, std::ops::Range<usize>, &mut [u8]),
+    ) -> Ns {
+        let chunk = self.chunk_bytes;
+        let first_page = offset / chunk;
+        let last_page = (offset + len - 1) / chunk;
+        let mut keys = std::mem::take(&mut self.span_keys);
+        keys.clear();
+        keys.extend((first_page..=last_page).map(|p| PageKey::new(region, p)));
+        let t = self.touch_span(now, tid, &keys, write, &mut |idx, frame| {
+            let page_start = (first_page + idx as u64) * chunk;
+            let a = offset.max(page_start);
+            let b = (offset + len).min(page_start + chunk);
+            copy(
+                (a - offset) as usize..(b - offset) as usize,
+                (a - page_start) as usize..(b - page_start) as usize,
+                frame,
+            );
+        });
+        self.span_keys = keys;
+        t
+    }
+
+    /// Read `out.len()` bytes at `offset` of a region, faulting as needed —
+    /// the whole span goes through the batched fault engine, so the pages
+    /// it misses travel as coalesced range requests.
     pub fn read_bytes(
         &mut self,
         now: Ns,
@@ -302,24 +625,17 @@ impl HostAgent {
         offset: u64,
         out: &mut [u8],
     ) -> Ns {
-        let mut t = now;
-        let mut done = 0usize;
-        while done < out.len() {
-            let abs = offset + done as u64;
-            let page = abs / self.chunk_bytes;
-            let in_page = (abs % self.chunk_bytes) as usize;
-            let take = ((self.chunk_bytes as usize - in_page).min(out.len() - done)).max(1);
-            let key = PageKey::new(region, page);
-            t = self.touch_page(t, tid, key, false);
-            let frame = self.buffer.peek(key).expect("just touched");
-            out[done..done + take].copy_from_slice(&frame[in_page..in_page + take]);
-            done += take;
+        if out.is_empty() {
+            return now;
         }
-        t
+        let len = out.len() as u64;
+        self.span_bytes(now, tid, region, offset, len, false, &mut |buf, fr, frame| {
+            out[buf].copy_from_slice(&frame[fr]);
+        })
     }
 
     /// Write bytes at `offset`, faulting pages (read-modify-write) and
-    /// marking them dirty.
+    /// marking them dirty. Missed pages of the span fetch as one batch.
     pub fn write_bytes(
         &mut self,
         now: Ns,
@@ -328,20 +644,13 @@ impl HostAgent {
         offset: u64,
         data: &[u8],
     ) -> Ns {
-        let mut t = now;
-        let mut done = 0usize;
-        while done < data.len() {
-            let abs = offset + done as u64;
-            let page = abs / self.chunk_bytes;
-            let in_page = (abs % self.chunk_bytes) as usize;
-            let take = ((self.chunk_bytes as usize - in_page).min(data.len() - done)).max(1);
-            let key = PageKey::new(region, page);
-            t = self.touch_page(t, tid, key, true);
-            let frame = self.buffer.peek(key).expect("just touched");
-            frame[in_page..in_page + take].copy_from_slice(&data[done..done + take]);
-            done += take;
+        if data.is_empty() {
+            return now;
         }
-        t
+        let len = data.len() as u64;
+        self.span_bytes(now, tid, region, offset, len, true, &mut |buf, fr, frame| {
+            frame[fr].copy_from_slice(&data[buf]);
+        })
     }
 
     /// Flush all dirty pages to the store (barrier / pre-pin sync).
@@ -509,5 +818,180 @@ mod tests {
         a.read_bytes(t0, 0, h.region, 0, &mut out);
         assert!(a.stats().stall_ns > 0);
         assert_eq!(a.stats().fetched(FetchSource::MemNode), 1);
+    }
+
+    /// Regression (batching satellite): a cold multi-page span must charge
+    /// stall once per unit of elapsed fault time — the per-page terms
+    /// telescope to `end - start`. Charging each page against the span's
+    /// original start would multiply the stall by the page count.
+    #[test]
+    fn multi_page_span_stall_is_not_double_counted() {
+        for batch in [1u64, 8] {
+            let (mut a, _c) = agent_with_buffer_pages(16);
+            a.set_fetch_batch(batch, true);
+            let chunk = a.chunk_bytes();
+            let pages = 6u64;
+            let (h, t0) = a.alloc(
+                0,
+                "f",
+                pages * chunk,
+                Some(vec![2; (pages * chunk) as usize]),
+                Placement::Default,
+            );
+            let mut out = vec![0u8; (pages * chunk) as usize];
+            let t1 = a.read_bytes(t0, 0, h.region, 0, &mut out);
+            assert_eq!(a.stats().faults, pages, "batch={batch}");
+            assert_eq!(
+                a.stats().stall_ns,
+                t1 - t0,
+                "batch={batch}: pure-miss span stall must equal elapsed fault time"
+            );
+        }
+    }
+
+    /// Mixed windows (hits interleaved with misses) must not fold hit
+    /// service time into the stall sum — the sequential path only ever
+    /// counts per-fault latencies.
+    #[test]
+    fn mixed_window_stall_excludes_hit_service_time() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let chunk = cluster.config().chunk_bytes;
+        let store = Box::new(MemServerStore::new(cluster.clone()));
+        let mut a = HostAgent::new(
+            "p0",
+            store,
+            16 * chunk,
+            chunk,
+            1.0,
+            4,
+            4,
+            2,
+            HostTiming { hit_ns: 100, ..HostTiming::default() },
+        );
+        a.set_fetch_batch(8, true);
+        let (h, t0) = a.alloc(0, "f", 6 * chunk, Some(vec![3; (6 * chunk) as usize]), Placement::Default);
+        // Warm pages 0-2, then read a window of 3 hits + 3 misses.
+        let mut warm = vec![0u8; (3 * chunk) as usize];
+        let t1 = a.read_bytes(t0, 0, h.region, 0, &mut warm);
+        let stall1 = a.stats().stall_ns;
+        let mut out = vec![0u8; (6 * chunk) as usize];
+        let t2 = a.read_bytes(t1, 0, h.region, 0, &mut out);
+        assert!(out.iter().all(|&b| b == 3));
+        assert_eq!(
+            a.stats().stall_ns - stall1,
+            (t2 - t1) - 3 * 100,
+            "stall must exclude the 3 hits' service time"
+        );
+    }
+
+    // ---- batched fault engine ------------------------------------------
+
+    #[test]
+    fn touch_pages_is_equivalent_to_per_page_loop() {
+        // Same ops on twin clusters: batch=8 vs the sequential per-page
+        // path. Buffer state, counters and traffic must match exactly.
+        let (mut seq, c_seq) = agent_with_buffer_pages(8);
+        let (mut bat, c_bat) = agent_with_buffer_pages(8);
+        seq.set_fetch_batch(1, false);
+        bat.set_fetch_batch(8, true);
+        let chunk = seq.chunk_bytes();
+        let file: Vec<u8> = (0..24 * chunk).map(|i| (i % 251) as u8).collect();
+        let (h1, u0) = seq.alloc(0, "f", 24 * chunk, Some(file.clone()), Placement::Default);
+        let (h2, v0) = bat.alloc(0, "f", 24 * chunk, Some(file), Placement::Default);
+        c_seq.reset_stats();
+        c_bat.reset_stats();
+        // Mixed spans: contiguous run, overlap (re-hits), scattered pages.
+        let spans: [(u64, usize); 4] =
+            [(0, 6 * chunk as usize), (2 * chunk as usize, 8 * chunk as usize), (20 * chunk as usize, chunk as usize), (9 * chunk as usize, 3)];
+        let (mut u, mut v) = (u0, v0);
+        for &(off, len) in &spans {
+            let mut o1 = vec![0u8; len];
+            let mut o2 = vec![0u8; len];
+            u = seq.read_bytes(u, 0, h1.region, off as u64, &mut o1);
+            v = bat.read_bytes(v, 0, h2.region, off as u64, &mut o2);
+            assert_eq!(o1, o2, "span ({off}, {len})");
+        }
+        let (s1, s2) = (seq.stats(), bat.stats());
+        assert_eq!(s1.faults, s2.faults);
+        assert_eq!(s1.sources, s2.sources);
+        assert_eq!(seq.buffer_stats().hits, bat.buffer_stats().hits);
+        assert_eq!(seq.buffer_stats().misses, bat.buffer_stats().misses);
+        assert_eq!(
+            c_seq.network_stats().network_bytes(),
+            c_bat.network_stats().network_bytes(),
+            "batching must not alter data-plane traffic"
+        );
+        assert!(
+            s2.qp_doorbells < s1.qp_doorbells,
+            "one doorbell per window beats one per page ({} vs {})",
+            s2.qp_doorbells,
+            s1.qp_doorbells
+        );
+        assert!(v - v0 <= u - u0, "batched span must not be slower");
+    }
+
+    #[test]
+    fn batched_cold_span_beats_sequential_latency() {
+        let (mut seq, _c1) = agent_with_buffer_pages(32);
+        let (mut bat, _c2) = agent_with_buffer_pages(32);
+        seq.set_fetch_batch(1, false);
+        bat.set_fetch_batch(16, true);
+        let chunk = seq.chunk_bytes();
+        let file = vec![7u8; (16 * chunk) as usize];
+        let (h1, u0) = seq.alloc(0, "f", 16 * chunk, Some(file.clone()), Placement::Default);
+        let (h2, v0) = bat.alloc(0, "f", 16 * chunk, Some(file), Placement::Default);
+        let mut out = vec![0u8; (16 * chunk) as usize];
+        let u = seq.read_bytes(u0, 0, h1.region, 0, &mut out);
+        let v = bat.read_bytes(v0, 0, h2.region, 0, &mut out);
+        assert!(out.iter().all(|&b| b == 7));
+        assert!(
+            (v - v0) * 2 < u - u0,
+            "a 16-page cold span must overlap round trips (batched {} vs sequential {})",
+            v - v0,
+            u - u0
+        );
+    }
+
+    #[test]
+    fn touch_pages_handles_duplicates_and_empty() {
+        let (mut a, _c) = agent_with_buffer_pages(8);
+        let chunk = a.chunk_bytes();
+        let (h, t0) = a.alloc(0, "f", 4 * chunk, Some(vec![1; (4 * chunk) as usize]), Placement::Default);
+        assert_eq!(a.touch_pages(t0, 0, &[], false), t0);
+        let keys = [
+            PageKey::new(h.region, 0),
+            PageKey::new(h.region, 1),
+            PageKey::new(h.region, 0), // duplicate: second occurrence hits
+        ];
+        let t1 = a.touch_pages(t0, 0, &keys, false);
+        assert_eq!(a.stats().faults, 2, "duplicate pages fetch once");
+        assert_eq!(a.buffer_stats().hits, 1);
+        // Out-of-order duplicates (breaks the sorted dedup fast path).
+        let keys = [
+            PageKey::new(h.region, 3),
+            PageKey::new(h.region, 2),
+            PageKey::new(h.region, 3),
+        ];
+        a.touch_pages(t1, 0, &keys, false);
+        assert_eq!(a.stats().faults, 4, "unsorted duplicate still fetches once");
+        assert_eq!(a.buffer_stats().hits, 2);
+    }
+
+    #[test]
+    fn batched_write_span_round_trips_through_eviction() {
+        // Batched writes mark pages dirty; a tiny buffer forces the window
+        // to evict its own pages mid-walk and the data must survive.
+        let (mut a, _c) = agent_with_buffer_pages(3);
+        a.set_fetch_batch(8, true);
+        let chunk = a.chunk_bytes();
+        let pages = 8u64;
+        let (h, t0) = a.alloc(0, "x", pages * chunk, None, Placement::Default);
+        let data: Vec<u8> = (0..pages * chunk).map(|i| (i / chunk) as u8 + 1).collect();
+        let t1 = a.write_bytes(t0, 0, h.region, 0, &data);
+        assert!(a.stats().writebacks > 0, "3-page buffer must write back");
+        let t2 = a.flush(t1);
+        let mut out = vec![0u8; (pages * chunk) as usize];
+        a.read_bytes(t2, 0, h.region, 0, &mut out);
+        assert_eq!(out, data, "batched dirty spans survive eviction");
     }
 }

@@ -56,6 +56,58 @@ impl PageKey {
     }
 }
 
+/// A run of `pages` contiguous pages starting at `start` — the unit of the
+/// batched fault engine's coalesced range requests (§III task aggregation:
+/// contiguous misses travel as one multi-page request, so a k-page burst
+/// pays one request descriptor and one wire message instead of k).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageSpan {
+    pub start: PageKey,
+    pub pages: u64,
+}
+
+impl PageSpan {
+    pub fn single(key: PageKey) -> Self {
+        PageSpan { start: key, pages: 1 }
+    }
+
+    /// The `i`-th page of the span.
+    pub fn key_at(&self, i: u64) -> PageKey {
+        debug_assert!(i < self.pages);
+        PageKey::new(self.start.region, self.start.page + i)
+    }
+
+    /// Total payload bytes of the span.
+    pub fn bytes(&self, chunk_bytes: u64) -> u64 {
+        self.pages * chunk_bytes
+    }
+
+    /// Byte offset of the span within its region.
+    pub fn byte_offset(&self, chunk_bytes: u64) -> u64 {
+        self.start.byte_offset(chunk_bytes)
+    }
+
+    /// Group an ordered key list into spans. With `merge`, a key that
+    /// directly follows the previous span's last page (same region) extends
+    /// that span; otherwise every key becomes a singleton span. Order is
+    /// preserved, so the flattened span pages enumerate `keys` exactly.
+    pub fn coalesce(keys: &[PageKey], merge: bool) -> Vec<PageSpan> {
+        let mut out: Vec<PageSpan> = Vec::new();
+        for &k in keys {
+            if merge {
+                if let Some(last) = out.last_mut() {
+                    if last.start.region == k.region && k.page == last.start.page + last.pages {
+                        last.pages += 1;
+                        continue;
+                    }
+                }
+            }
+            out.push(PageSpan::single(k));
+        }
+        out
+    }
+}
+
 #[derive(Debug)]
 struct Frame {
     key: PageKey,
@@ -612,6 +664,51 @@ mod tests {
             evictions(2),
             "different cluster seeds must give independent random-eviction trials"
         );
+    }
+
+    // ---- span coalescing -----------------------------------------------
+
+    #[test]
+    fn coalesce_merges_contiguous_runs() {
+        let keys = [k(0), k(1), k(2), k(7), k(8), k(20)];
+        let spans = PageSpan::coalesce(&keys, true);
+        assert_eq!(
+            spans,
+            vec![
+                PageSpan { start: k(0), pages: 3 },
+                PageSpan { start: k(7), pages: 2 },
+                PageSpan::single(k(20)),
+            ]
+        );
+        // Flattened span pages enumerate the keys exactly.
+        let flat: Vec<PageKey> = spans
+            .iter()
+            .flat_map(|s| (0..s.pages).map(|i| s.key_at(i)))
+            .collect();
+        assert_eq!(flat, keys);
+    }
+
+    #[test]
+    fn coalesce_respects_region_boundaries() {
+        let keys = [PageKey::new(1, 5), PageKey::new(2, 6)];
+        let spans = PageSpan::coalesce(&keys, true);
+        assert_eq!(spans.len(), 2, "different regions never merge");
+    }
+
+    #[test]
+    fn coalesce_disabled_yields_singletons() {
+        let keys = [k(0), k(1), k(2)];
+        let spans = PageSpan::coalesce(&keys, false);
+        assert_eq!(spans.len(), 3);
+        assert!(spans.iter().all(|s| s.pages == 1));
+    }
+
+    #[test]
+    fn span_geometry() {
+        let s = PageSpan { start: PageKey::new(3, 10), pages: 4 };
+        assert_eq!(s.key_at(3), PageKey::new(3, 13));
+        assert_eq!(s.bytes(4096), 16384);
+        assert_eq!(s.byte_offset(4096), 40960);
     }
 
     #[test]

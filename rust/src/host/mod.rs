@@ -5,5 +5,5 @@ pub mod buffer;
 pub mod fam;
 
 pub use agent::{HostAgent, HostStats, HostTiming};
-pub use buffer::{BufferStats, EvictPolicy, EvictedPage, PageBuffer, PageKey};
+pub use buffer::{BufferStats, EvictPolicy, EvictedPage, PageBuffer, PageKey, PageSpan};
 pub use fam::{FamHandle, ObjectTable, Placement};

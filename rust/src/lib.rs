@@ -33,6 +33,41 @@
 //! `abl-cache-policy` / `abl-evict` figures and the `fig10_policies` bench
 //! sweep every policy on both layers.
 //!
+//! ## Request lifecycle (the batched fault path)
+//!
+//! A span access ([`host::HostAgent::read_bytes`] / `write_bytes` /
+//! [`host::HostAgent::touch_pages`]) flows host → QP → DPU pipeline →
+//! memory node, with batching applied at every hop:
+//!
+//! ```text
+//! host agent      ── one residency pre-scan splits the span into
+//!                    hits / zero-fills / misses; contiguous misses
+//!                    coalesce into PageSpan range requests
+//!      │
+//! QP (fabric/qp)  ── the whole miss set posts with ONE doorbell
+//!                    (QueuePair::post_batch: k WQEs, 1 MMIO ring)
+//!      │
+//! DPU rx stage    ── one SEND carries every span descriptor; task
+//!                    aggregation amortizes the memnode doorbell by the
+//!                    exact batch factor (Aggregator::explicit_batch)
+//!      │
+//! DPU cq stage    ── async two-stage pipeline (dpu/pipeline): the
+//!                    network wait holds no core, so the spans' round
+//!                    trips overlap — a k-page burst costs ~max(stage
+//!                    service) + one RTT instead of k RTTs
+//!      │
+//! memory node     ── each coalesced span is one multi-page transfer;
+//!                    bytes-on-wire equal the per-page path exactly
+//! ```
+//!
+//! Cache hits short-circuit: host-buffer hits never leave the process,
+//! DPU static regions are read one-sided from DPU DRAM, and DPU dynamic
+//! hits split a span at hit/miss boundaries so cached pages stay off the
+//! network. Knobs: `SodaConfig::max_batch_pages` (window size, `1` = the
+//! per-page Fig 11 `base` path) and `SodaConfig::coalesce_fetch` — both in
+//! `soda config` output, on the CLI (`--max-batch-pages`, `--coalesce`),
+//! and swept by the extended `fig11` breakdown and `abl-batch`.
+//!
 //! Quickstart:
 //! ```no_run
 //! use soda::prelude::*;

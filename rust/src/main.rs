@@ -6,6 +6,7 @@
 //! soda run <app> <graph> [--backend B] [--caching M] [--scale F]
 //!          [--evict-policy P] [--dpu-cache-policy P]
 //!          [--prefetch-depth N] [--prefetch-scan N]
+//!          [--max-batch-pages N] [--coalesce on|off]
 //!          [--config FILE] [--cluster-config FILE]
 //! soda config [--config FILE] [--evict-policy P] ...
 //! soda advisor [--hit-rate H]
@@ -85,6 +86,22 @@ fn soda_config_from_args(args: &Args) -> Result<SodaConfig> {
             .parse()
             .map_err(|_| anyhow::anyhow!("invalid --threads: {s}"))?;
     }
+    if let Some(s) = args.opt("max-batch-pages") {
+        let n: u64 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --max-batch-pages: {s}"))?;
+        if n == 0 {
+            bail!("--max-batch-pages must be >= 1 (1 disables batching)");
+        }
+        cfg.max_batch_pages = n;
+    }
+    if let Some(s) = args.opt("coalesce") {
+        cfg.coalesce_fetch = match s {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            _ => bail!("invalid --coalesce '{s}' (on|off)"),
+        };
+    }
     Ok(cfg)
 }
 
@@ -149,6 +166,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     wb.evict_policy = scfg.evict_policy;
     wb.dpu_cache_policy = scfg.dpu_cache_policy;
     wb.prefetch = scfg.prefetch;
+    wb.max_batch_pages = Some(scfg.max_batch_pages);
+    wb.coalesce_fetch = Some(scfg.coalesce_fetch);
     if args.opt("config").is_some() {
         // A --config file is a full SodaConfig: honor every field
         // (qp_count, numa_aware, buffer_fraction, host_timing, …), not
@@ -219,12 +238,13 @@ fn usage() -> &'static str {
      commands:\n\
        figures [--all | <id>...] [--scale F] [--threads N] [--json DIR]\n\
            regenerate paper tables/figures (table1 table2 fig3..fig11)\n\
-           plus ablations (abl-entry abl-prefetch abl-evict abl-qp abl-cache-policy)\n\
+           plus ablations (abl-entry abl-prefetch abl-evict abl-qp abl-cache-policy abl-batch)\n\
        run <app> <graph> [--backend B] [--caching M] [--scale F] [--with-bg-bfs] [--json]\n\
            [--evict-policy P] [--dpu-cache-policy P] [--prefetch-depth N] [--prefetch-scan N]\n\
-           [--config FILE] [--cluster-config FILE]\n\
+           [--max-batch-pages N] [--coalesce on|off] [--config FILE] [--cluster-config FILE]\n\
            run one application on one graph and print metrics\n\
-           (policies P: fault-fifo | access-lru | random | clock | slru)\n\
+           (policies P: fault-fifo | access-lru | random | clock | slru;\n\
+            --max-batch-pages 1 disables the batched fault engine)\n\
        config [--config FILE] [--evict-policy P] [--dpu-cache-policy P] ...\n\
            print the effective SodaConfig as JSON (the --config schema)\n\
        advisor [--hit-rate H]\n\

@@ -64,6 +64,12 @@ pub struct Workbench {
     /// `DpuConfig::prefetch`, unset fields of a `Some` keep the cluster's
     /// value for that field.
     pub prefetch: Option<crate::coordinator::config::PrefetchOverride>,
+    /// Batched-fault window override (`SodaConfig::max_batch_pages`);
+    /// `None` keeps the base config's value. `Some(1)` restores the
+    /// per-page path — the Fig 11 `base` configuration.
+    pub max_batch_pages: Option<u64>,
+    /// Range-coalescing override (`SodaConfig::coalesce_fetch`).
+    pub coalesce_fetch: Option<bool>,
     /// Full [`SodaConfig`] base for runs (e.g. a `--config` file): every
     /// field (qp_count, numa_aware, buffer_fraction, host_timing, …) is
     /// honored, with the explicit `threads`/policy/prefetch fields above
@@ -82,6 +88,8 @@ impl Workbench {
             evict_policy: crate::host::EvictPolicy::FaultFifo,
             dpu_cache_policy: None,
             prefetch: None,
+            max_batch_pages: None,
+            coalesce_fetch: None,
             soda_config_base: None,
         }
     }
@@ -172,15 +180,20 @@ impl Workbench {
             .soda_config_base
             .clone()
             .unwrap_or_else(Self::base_soda_config);
-        SodaConfig {
+        let mut cfg = SodaConfig {
             threads: self.threads,
             evict_policy: self.evict_policy,
             dpu_cache_policy: self.dpu_cache_policy,
             prefetch: self.prefetch,
             ..base
+        };
+        if let Some(b) = self.max_batch_pages {
+            cfg.max_batch_pages = b;
         }
-        .with_backend(spec.backend)
-        .with_caching(spec.caching)
+        if let Some(c) = self.coalesce_fetch {
+            cfg.coalesce_fetch = c;
+        }
+        cfg.with_backend(spec.backend).with_caching(spec.caching)
     }
 
     /// Build a service + client + FAM graph on a fresh cluster.
@@ -386,6 +399,23 @@ mod tests {
         // Explicit workbench fields still layer on top of the base.
         assert_eq!(sc.evict_policy, crate::host::EvictPolicy::Clock);
         assert_eq!(sc.backend, BackendKind::MemServer);
+    }
+
+    #[test]
+    fn batch_knobs_layer_over_the_base_config() {
+        let mut wb = quick_bench();
+        let spec = ExperimentSpec {
+            app: App::Bfs,
+            graph: "friendster",
+            backend: BackendKind::MemServer,
+            caching: CachingMode::None,
+        };
+        assert_eq!(wb.soda_config(&spec).max_batch_pages, 16, "base default");
+        wb.max_batch_pages = Some(1);
+        wb.coalesce_fetch = Some(false);
+        let sc = wb.soda_config(&spec);
+        assert_eq!(sc.max_batch_pages, 1);
+        assert!(!sc.coalesce_fetch);
     }
 
     #[test]

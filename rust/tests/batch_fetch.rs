@@ -1,0 +1,216 @@
+//! Property test for the batched fault engine: `touch_pages` (and the span
+//! reads/writes built on it) must be *observably equivalent* to the
+//! sequential per-page loop — identical output bytes, final buffer state,
+//! fault/fetch counts and data-plane bytes-on-wire — across random spans,
+//! batch sizes, hit/miss/zero-fill mixes and backends. Only completion
+//! times may improve.
+//!
+//! Dynamic DPU caching is deliberately excluded: its prefetcher races
+//! in-flight entries against request *times*, so a latency optimization
+//! legitimately shifts which later accesses hit — that is the one
+//! timing-dependent behavior the equivalence contract does not cover.
+
+use soda::backend::{DpuStore, MemServerStore, RemoteStore, SsdStore};
+use soda::coordinator::cluster::Cluster;
+use soda::coordinator::config::ClusterConfig;
+use soda::dpu::DpuOpts;
+use soda::host::{HostAgent, HostTiming, Placement};
+use soda::sim::rng::Rng;
+use soda::util::quickcheck::{forall, Config};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Backend {
+    MemServer,
+    Ssd,
+    DpuBase,
+    DpuOpt,
+}
+
+const BACKENDS: [Backend; 4] = [Backend::MemServer, Backend::Ssd, Backend::DpuBase, Backend::DpuOpt];
+
+/// One random workload: spans of reads/writes against a file-backed and an
+/// anonymous region, replayed on a sequential and a batched agent.
+#[derive(Clone, Debug)]
+struct Case {
+    buffer_pages: u64,
+    batch: u64,
+    coalesce: bool,
+    /// (use_anon_region, write, page_offset, byte_len)
+    ops: Vec<(bool, bool, u64, usize)>,
+}
+
+const REGION_PAGES: u64 = 12;
+
+fn gen_case(r: &mut Rng) -> Case {
+    let ops = (0..4 + r.index(8))
+        .map(|_| {
+            let anon = r.chance(0.4);
+            let write = r.chance(0.4);
+            let start = r.below(REGION_PAGES - 1);
+            // Byte length in pages-worth of the tiny config's 4 KB chunks;
+            // run_case clamps to the region end.
+            let len = 1 + r.index(((REGION_PAGES - start) * 4096) as usize);
+            (anon, write, start, len)
+        })
+        .collect();
+    Case {
+        buffer_pages: 3 + r.below(10),
+        batch: 2 + r.below(31),
+        coalesce: r.chance(0.5),
+        ops,
+    }
+}
+
+fn make_agent(backend: Backend, buffer_pages: u64) -> (HostAgent, Cluster) {
+    let mut cfg = ClusterConfig::tiny();
+    if let Backend::DpuBase = backend {
+        cfg.dpu.opts = DpuOpts::BASE;
+    }
+    if let Backend::DpuOpt = backend {
+        cfg.dpu.opts = DpuOpts::OPT;
+    }
+    let cluster = Cluster::build(cfg);
+    let chunk = cluster.config().chunk_bytes;
+    let store: Box<dyn RemoteStore> = match backend {
+        Backend::MemServer => Box::new(MemServerStore::new(cluster.clone())),
+        Backend::Ssd => Box::new(SsdStore::new(cluster.clone())),
+        Backend::DpuBase | Backend::DpuOpt => Box::new(DpuStore::new(cluster.clone())),
+    };
+    let agent = HostAgent::new(
+        "prop",
+        store,
+        buffer_pages * chunk,
+        chunk,
+        0.9,
+        4,
+        4,
+        2,
+        HostTiming::default(),
+    );
+    (agent, cluster)
+}
+
+/// Data-plane bytes the paper's counters would see (network + PCIe data,
+/// control-plane excluded — batching coalesces descriptors by design).
+fn data_bytes(c: &Cluster) -> u64 {
+    let s = c.network_stats();
+    s.network_bytes() + s.pcie_bytes()
+}
+
+fn run_case(case: &Case, backend: Backend) -> Result<(), String> {
+    let (mut seq, c_seq) = make_agent(backend, case.buffer_pages);
+    let (mut bat, c_bat) = make_agent(backend, case.buffer_pages);
+    seq.set_fetch_batch(1, false);
+    bat.set_fetch_batch(case.batch, case.coalesce);
+    let chunk = seq.chunk_bytes();
+    let bytes = REGION_PAGES * chunk;
+    let file: Vec<u8> = (0..bytes).map(|i| (i % 249) as u8).collect();
+    let (f1, s0) = seq.alloc(0, "file", bytes, Some(file.clone()), Placement::Default);
+    let (a1, s1) = seq.alloc(s0, "anon", bytes, None, Placement::Default);
+    let (f2, b0) = bat.alloc(0, "file", bytes, Some(file), Placement::Default);
+    let (a2, b1) = bat.alloc(b0, "anon", bytes, None, Placement::Default);
+    c_seq.reset_stats();
+    c_bat.reset_stats();
+
+    let (mut u, mut v) = (s1, b1);
+    for (i, &(anon, write, start_page, len)) in case.ops.iter().enumerate() {
+        let off = start_page * chunk;
+        let len = len.min((bytes - off) as usize).max(1);
+        let (r_seq, r_bat) = if anon { (a1.region, a2.region) } else { (f1.region, f2.region) };
+        if write {
+            let data: Vec<u8> = (0..len).map(|j| ((i * 31 + j) % 251) as u8).collect();
+            u = seq.write_bytes(u, 0, r_seq, off, &data);
+            v = bat.write_bytes(v, 0, r_bat, off, &data);
+        } else {
+            let mut o1 = vec![0u8; len];
+            let mut o2 = vec![0u8; len];
+            u = seq.read_bytes(u, 0, r_seq, off, &mut o1);
+            v = bat.read_bytes(v, 0, r_bat, off, &mut o2);
+            if o1 != o2 {
+                return Err(format!("op {i}: read bytes diverge"));
+            }
+        }
+    }
+
+    // Counter equivalence: the batched engine replays the sequential
+    // buffer-op order, so every observable counter must match exactly.
+    let (hs, hb) = (seq.stats(), bat.stats());
+    if hs.faults != hb.faults {
+        return Err(format!("faults {} vs {}", hs.faults, hb.faults));
+    }
+    if hs.zero_fills != hb.zero_fills {
+        return Err(format!("zero_fills {} vs {}", hs.zero_fills, hb.zero_fills));
+    }
+    if hs.writebacks != hb.writebacks {
+        return Err(format!("writebacks {} vs {}", hs.writebacks, hb.writebacks));
+    }
+    if hs.sources != hb.sources {
+        return Err(format!("fetch sources {:?} vs {:?}", hs.sources, hb.sources));
+    }
+    let (bs, bb) = (seq.buffer_stats(), bat.buffer_stats());
+    if (bs.hits, bs.misses) != (bb.hits, bb.misses) {
+        return Err(format!(
+            "buffer hits/misses ({}, {}) vs ({}, {})",
+            bs.hits, bs.misses, bb.hits, bb.misses
+        ));
+    }
+    // Final residency (and its engine order) must be identical.
+    if seq.buffer_stats().evictions_dirty != bat.buffer_stats().evictions_dirty {
+        return Err("dirty eviction counts diverge".into());
+    }
+    if data_bytes(&c_seq) != data_bytes(&c_bat) {
+        return Err(format!(
+            "bytes-on-wire {} vs {} (batching must not alter traffic)",
+            data_bytes(&c_seq),
+            data_bytes(&c_bat)
+        ));
+    }
+    // Only completion times may change, and only for the better.
+    if v - b1 > u - s1 {
+        return Err(format!("batched slower: {} vs {}", v - b1, u - s1));
+    }
+    // Full content read-back (covers dirty pages still in the buffer).
+    let (mut w1, mut w2) = (vec![0u8; bytes as usize], vec![0u8; bytes as usize]);
+    for (r_seq, r_bat) in [(f1.region, f2.region), (a1.region, a2.region)] {
+        u = seq.read_bytes(u, 0, r_seq, 0, &mut w1);
+        v = bat.read_bytes(v, 0, r_bat, 0, &mut w2);
+        if w1 != w2 {
+            return Err("final region contents diverge".into());
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn touch_pages_is_observably_equivalent_to_the_per_page_loop() {
+    forall(
+        Config { cases: 40, seed: 0xBA7C4 },
+        gen_case,
+        |case| {
+            for backend in BACKENDS {
+                run_case(case, backend).map_err(|e| format!("{backend:?}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Deterministic spot-check on the worst alignment: a span larger than the
+/// whole buffer forces the window to evict its own freshly fetched pages
+/// mid-walk (the fallback single-fetch path), and equivalence must hold.
+#[test]
+fn window_larger_than_buffer_stays_equivalent() {
+    let case = Case {
+        buffer_pages: 3,
+        batch: 32,
+        coalesce: true,
+        ops: vec![
+            (false, false, 0, (REGION_PAGES * 4096) as usize),
+            (true, true, 2, 6 * 4096),
+            (false, false, 1, 9 * 4096),
+        ],
+    };
+    for backend in BACKENDS {
+        run_case(&case, backend).unwrap_or_else(|e| panic!("{backend:?}: {e}"));
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench: the prefetch-policy sweep behind `abl-prefetch` — wall-clock of
+//! the simulator runs per engine (off / sequential / strided / graph-hint /
+//! adaptive) on the frontier app (BFS) and the streaming app (PageRank).
+//! The virtual-time results come from `soda figures abl-prefetch`.
+
+use soda::coordinator::config::{BackendKind, CachingMode, PrefetchOverride};
+use soda::dpu::PrefetchPolicyKind;
+use soda::graph::App;
+use soda::util::bench::Bench;
+use soda::workload::{ExperimentSpec, Workbench};
+
+fn main() {
+    let mut b = Bench::quick();
+    b.section("abl-prefetch: policy x app sweep (scale 2e-4)");
+    for app in [App::Bfs, App::PageRank] {
+        for policy in PrefetchPolicyKind::ALL {
+            b.bench(format!("{}/friendster/{}", app.name(), policy.name()), || {
+                let mut wb = Workbench::new(0.0002);
+                wb.threads = 24;
+                wb.prefetch = Some(PrefetchOverride {
+                    policy: Some(policy),
+                    ..PrefetchOverride::default()
+                });
+                wb.run(&ExperimentSpec {
+                    app,
+                    graph: "friendster",
+                    backend: BackendKind::DPU_FULL,
+                    caching: CachingMode::Dynamic,
+                })
+                .elapsed_ns
+            });
+        }
+    }
+}

@@ -12,7 +12,7 @@
 use super::{FetchSource, RemoteStore};
 use crate::coordinator::cluster::Cluster;
 use crate::dpu::Source;
-use crate::fabric::protocol::RPC_BYTES;
+use crate::fabric::protocol::{HintMessage, HintSpan, MAX_HINT_SPAN_PAGES, RPC_BYTES};
 use crate::fabric::verbs;
 use crate::host::buffer::{PageKey, PageSpan};
 use crate::memnode::RegionId;
@@ -24,12 +24,14 @@ use crate::sim::Ns;
 pub struct DpuStore {
     cluster: Cluster,
     chunk_bytes: u64,
+    /// Hint messages sent so far (stamps the superstep tag on the wire).
+    hints_sent: u32,
 }
 
 impl DpuStore {
     pub fn new(cluster: Cluster) -> Self {
         let chunk_bytes = cluster.config().chunk_bytes;
-        DpuStore { cluster, chunk_bytes }
+        DpuStore { cluster, chunk_bytes, hints_sent: 0 }
     }
 }
 
@@ -196,6 +198,54 @@ impl RemoteStore for DpuStore {
                 }
             }
             res
+        })
+    }
+
+    fn wants_prefetch_hints(&self) -> bool {
+        self.cluster.with(|inner| inner.dpu.wants_hints())
+    }
+
+    /// Frontier hints ride the host→DPU hint channel: one compact SEND per
+    /// region carrying the spans, consumed by the DPU's prefetch worker off
+    /// the critical path ([`crate::dpu::DpuAgent::handle_hint`]). Spans
+    /// wider than the 16-bit wire field are split; traffic is background
+    /// class, so hints never inflate the on-demand counters.
+    fn prefetch_hint(&mut self, now: Ns, spans: &[PageSpan], numa_node: usize) -> Option<Ns> {
+        if spans.is_empty() {
+            return None;
+        }
+        self.cluster.with(|inner| {
+            if !inner.dpu.wants_hints() {
+                return None;
+            }
+            let superstep = self.hints_sent;
+            self.hints_sent = self.hints_sent.wrapping_add(1);
+            let mut done = now;
+            let mut sent = false;
+            let mut i = 0;
+            while i < spans.len() {
+                let region = spans[i].start.region;
+                let mut msg = HintMessage { region_id: region, superstep, spans: Vec::new() };
+                while i < spans.len() && spans[i].start.region == region {
+                    let (mut page, mut left) = (spans[i].start.page, spans[i].pages);
+                    while left > 0 {
+                        let take = left.min(MAX_HINT_SPAN_PAGES);
+                        msg.spans.push(HintSpan { page, pages: take as u16 });
+                        page += take;
+                        left -= take;
+                    }
+                    i += 1;
+                }
+                let arrive =
+                    verbs::hint_message(&mut inner.fabric, now, numa_node, msg.spans.len() as u64);
+                if let Some(t) =
+                    inner.dpu.handle_hint(&mut inner.fabric, &inner.memnode.store, arrive, &msg)
+                {
+                    done = done.max(t);
+                    sent = true;
+                }
+            }
+            sent.then_some(done)
         })
     }
 
@@ -380,6 +430,41 @@ mod tests {
             twin.network_stats().network_bytes(),
             "same data-plane traffic either way"
         );
+    }
+
+    #[test]
+    fn prefetch_hint_routes_to_the_graph_hint_prefetcher() {
+        let mut cfg = ClusterConfig::tiny();
+        cfg.dpu.opts = DpuOpts::FULL;
+        cfg.dpu.prefetch.policy = crate::dpu::PrefetchPolicyKind::GraphHint;
+        let cluster = Cluster::build(cfg);
+        let mut s = DpuStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let (region, t0) = s.alloc(0, 32 * chunk, Some(vec![6u8; (32 * chunk) as usize]));
+        assert!(s.wants_prefetch_hints());
+        let spans = [PageSpan { start: PageKey::new(region, 16), pages: 8 }];
+        let done = s.prefetch_hint(t0, &spans, 2).expect("hint consumed");
+        assert!(done >= t0);
+        assert_eq!(cluster.dpu_stats().hints_received, 1);
+        assert!(cluster.dpu_stats().prefetch_entries > 0, "hinted entries staged");
+        // A demand read of a hinted page much later hits the DPU cache
+        // without any prior access warming it.
+        let mut out = vec![0u8; chunk as usize];
+        let (_, src) = s.fetch(done + 50_000_000, PageKey::new(region, 17), 2, &mut out);
+        assert_eq!(src, FetchSource::DpuCache);
+        assert!(out.iter().all(|&b| b == 6));
+    }
+
+    #[test]
+    fn prefetch_hint_is_refused_under_the_default_policy() {
+        let cluster = cluster_with(DpuOpts::FULL);
+        let mut s = DpuStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let (region, t0) = s.alloc(0, 4 * chunk, Some(vec![1u8; (4 * chunk) as usize]));
+        assert!(!s.wants_prefetch_hints(), "sequential default ignores hints");
+        let spans = [PageSpan { start: PageKey::new(region, 0), pages: 2 }];
+        assert!(s.prefetch_hint(t0, &spans, 2).is_none());
+        assert_eq!(cluster.dpu_stats().hints_received, 0);
     }
 
     #[test]

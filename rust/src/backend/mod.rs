@@ -104,6 +104,24 @@ pub trait RemoteStore {
         res
     }
 
+    /// Does the backend's prefetcher currently consume application hints?
+    /// Callers use this to skip hint translation entirely when nobody is
+    /// listening (non-DPU backends, non-hint prefetch policies).
+    fn wants_prefetch_hints(&self) -> bool {
+        false
+    }
+
+    /// Post an application prefetch hint: `spans` name the pages the
+    /// application will read next (frontier adjacency ranges). Advisory and
+    /// off the critical path — the backend stages whatever it can through
+    /// its background pipeline and never blocks the caller. Returns
+    /// `Some(absorb_time)` when a hint message was actually sent, `None`
+    /// when the backend has no prefetcher or its policy ignores hints (the
+    /// default, so hinting is free everywhere else).
+    fn prefetch_hint(&mut self, _now: Ns, _spans: &[PageSpan], _numa_node: usize) -> Option<Ns> {
+        None
+    }
+
     /// Write back a dirty page. Returns the time the *host* is released
     /// (offloaded stores release at hand-off; direct stores block until the
     /// data is durable — §III's synchronous-eviction contrast).

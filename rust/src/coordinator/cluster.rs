@@ -74,6 +74,12 @@ impl Cluster {
     pub fn dpu_hit_rate(&self) -> f64 {
         self.inner.borrow().dpu.dynamic_hit_rate()
     }
+
+    /// Dynamic cache-table statistics snapshot (incl. the exact
+    /// useful/wasted prefetch accounting).
+    pub fn dpu_cache_stats(&self) -> crate::dpu::CacheStats {
+        self.inner.borrow().dpu.table.stats()
+    }
 }
 
 #[cfg(test)]

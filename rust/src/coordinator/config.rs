@@ -11,7 +11,7 @@
 //! the hardware-side knobs.
 
 use crate::cache::PolicyKind;
-use crate::dpu::{DpuConfig, DpuOpts, PrefetchConfig};
+use crate::dpu::{DpuConfig, DpuOpts, PrefetchConfig, PrefetchPolicyKind};
 use crate::fabric::FabricConfig;
 use crate::host::agent::HostTiming;
 use crate::memnode::MemNodeConfig;
@@ -42,6 +42,12 @@ fn want_bool(v: &Json, what: &str) -> Result<bool, String> {
 fn want_policy(v: &Json, what: &str) -> Result<PolicyKind, String> {
     let s = want_str(v, what)?;
     PolicyKind::parse(s).ok_or_else(|| format!("{what}: unknown policy '{s}'"))
+}
+
+fn want_prefetch_policy(v: &Json, what: &str) -> Result<PrefetchPolicyKind, String> {
+    let s = want_str(v, what)?;
+    PrefetchPolicyKind::parse(s)
+        .ok_or_else(|| format!("{what}: unknown prefetch policy '{s}'"))
 }
 
 /// Simulated hardware description. Memory budgets default to a 1/64 scale
@@ -174,6 +180,9 @@ impl ClusterConfig {
                     self.dpu.prefetch.max_per_scan =
                         want_u64(x, "dpu.prefetch.max_per_scan")? as usize;
                 }
+                if let Some(x) = p.get("policy") {
+                    self.dpu.prefetch.policy = want_prefetch_policy(x, "dpu.prefetch.policy")?;
+                }
             }
         }
         Ok(())
@@ -277,6 +286,9 @@ impl BackendKind {
 pub struct PrefetchOverride {
     pub depth: Option<u64>,
     pub max_per_scan: Option<usize>,
+    /// Planning engine (`--prefetch-policy`): off | sequential | strided |
+    /// graph-hint | adaptive[:base].
+    pub policy: Option<PrefetchPolicyKind>,
 }
 
 impl PrefetchOverride {
@@ -285,6 +297,7 @@ impl PrefetchOverride {
         PrefetchConfig {
             depth: self.depth.unwrap_or(base.depth),
             max_per_scan: self.max_per_scan.unwrap_or(base.max_per_scan),
+            policy: self.policy.unwrap_or(base.policy),
         }
     }
 }
@@ -496,6 +509,10 @@ impl SodaConfig {
                     None | Some(Json::Null) => {}
                     Some(x) => pf.max_per_scan = Some(want_u64(x, "prefetch.max_per_scan")? as usize),
                 }
+                match p.get("policy") {
+                    None | Some(Json::Null) => {}
+                    Some(x) => pf.policy = Some(want_prefetch_policy(x, "prefetch.policy")?),
+                }
                 cfg.prefetch = Some(pf);
             }
         }
@@ -540,6 +557,10 @@ impl ToJson for SodaConfig {
                         (
                             "max_per_scan",
                             p.max_per_scan.map(Json::from).unwrap_or(Json::Null),
+                        ),
+                        (
+                            "policy",
+                            p.policy.map(|k| Json::from(k.name())).unwrap_or(Json::Null),
                         ),
                     ]),
                     None => Json::Null,
@@ -678,6 +699,7 @@ mod tests {
             prefetch: Some(PrefetchOverride {
                 depth: Some(6),
                 max_per_scan: Some(17),
+                policy: Some(PrefetchPolicyKind::GraphHint),
             }),
         };
         let text = cfg.to_json().to_string();
@@ -688,6 +710,7 @@ mod tests {
             prefetch: Some(PrefetchOverride {
                 depth: Some(4),
                 max_per_scan: None,
+                policy: None,
             }),
             ..SodaConfig::default()
         };
@@ -700,18 +723,34 @@ mod tests {
         let cluster = PrefetchConfig {
             depth: 8,
             max_per_scan: 24,
+            policy: PrefetchPolicyKind::Strided,
         };
         let depth_only = PrefetchOverride {
             depth: Some(4),
             max_per_scan: None,
+            policy: None,
         };
         assert_eq!(
             depth_only.apply(cluster),
             PrefetchConfig {
                 depth: 4,
-                max_per_scan: 24
+                max_per_scan: 24,
+                policy: PrefetchPolicyKind::Strided,
             },
             "unset fields must keep the cluster's tuning"
+        );
+        let policy_only = PrefetchOverride {
+            depth: None,
+            max_per_scan: None,
+            policy: Some(PrefetchPolicyKind::GraphHint),
+        };
+        assert_eq!(
+            policy_only.apply(cluster),
+            PrefetchConfig {
+                policy: PrefetchPolicyKind::GraphHint,
+                ..cluster
+            },
+            "--prefetch-policy alone keeps depth/scan tuning"
         );
         assert_eq!(PrefetchOverride::default().apply(cluster), cluster);
     }
@@ -743,6 +782,11 @@ mod tests {
         // default prefetch override.
         assert!(SodaConfig::from_json(&Json::parse(r#"{"prefetch": true}"#).unwrap()).is_err());
         assert!(SodaConfig::from_json(&Json::parse(r#"{"prefetch": "deep"}"#).unwrap()).is_err());
+        // Unknown prefetch policies must error, not fall back to sequential.
+        assert!(SodaConfig::from_json(
+            &Json::parse(r#"{"prefetch": {"policy": "psychic"}}"#).unwrap()
+        )
+        .is_err());
         // Batching knobs: 0 pages is meaningless (1 = disabled).
         assert!(SodaConfig::from_json(&Json::parse(r#"{"max_batch_pages": 0}"#).unwrap()).is_err());
         assert!(SodaConfig::from_json(&Json::parse(r#"{"coalesce_fetch": "yes"}"#).unwrap()).is_err());
@@ -801,7 +845,7 @@ mod tests {
                 "dpu": {
                     "cache_entry_bytes": 32768,
                     "cache_policy": "clock",
-                    "prefetch": {"depth": 5, "max_per_scan": 11}
+                    "prefetch": {"depth": 5, "max_per_scan": 11, "policy": "adaptive:strided"}
                 }
             }"#,
         )
@@ -814,9 +858,15 @@ mod tests {
         assert_eq!(c.dpu.cache_policy, PolicyKind::Clock);
         assert_eq!(c.dpu.prefetch.depth, 5);
         assert_eq!(c.dpu.prefetch.max_per_scan, 11);
-        // Bad policy errors out.
+        assert_eq!(
+            c.dpu.prefetch.policy,
+            PrefetchPolicyKind::Adaptive(crate::dpu::AdaptiveBase::Strided)
+        );
+        // Bad policies error out.
         let mut c2 = ClusterConfig::tiny();
         let bad = Json::parse(r#"{"dpu": {"cache_policy": "mru"}}"#).unwrap();
+        assert!(c2.apply_json(&bad).is_err());
+        let bad = Json::parse(r#"{"dpu": {"prefetch": {"policy": "psychic"}}}"#).unwrap();
         assert!(c2.apply_json(&bad).is_err());
     }
 }

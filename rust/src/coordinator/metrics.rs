@@ -1,6 +1,6 @@
 //! Run metrics — everything a figure needs, in one serializable snapshot.
 
-use crate::dpu::DpuStats;
+use crate::dpu::{CacheStats, DpuStats};
 use crate::fabric::stats::NetworkStats;
 use crate::host::agent::HostStats;
 use crate::host::buffer::BufferStats;
@@ -17,6 +17,9 @@ pub struct RunMetrics {
     pub buffer: BufferStats,
     pub network: NetworkStats,
     pub dpu: DpuStats,
+    /// Dynamic cache-table counters, incl. the exact useful/wasted
+    /// prefetch accounting (`abl-prefetch`, BENCH trajectories).
+    pub dpu_cache: CacheStats,
     /// Dynamic DPU-cache hit rate over the run (Fig 10).
     pub dpu_hit_rate: f64,
     /// Mean task-batch factor (aggregation effectiveness).
@@ -83,6 +86,13 @@ impl crate::util::json::ToJson for RunMetrics {
             ("dpu_static_serves", self.dpu.static_serves.into()),
             ("dpu_prefetch_entries", self.dpu.prefetch_entries.into()),
             ("dpu_prefetch_bytes", self.dpu.prefetch_bytes.into()),
+            ("prefetch_useful", self.dpu_cache.prefetch_useful.into()),
+            ("prefetch_wasted", self.dpu_cache.prefetch_wasted.into()),
+            ("prefetch_wasted_bytes", self.dpu_cache.prefetch_wasted_bytes.into()),
+            ("hint_useful", self.dpu_cache.hint_useful.into()),
+            ("hints_sent", self.host.hints_sent.into()),
+            ("hints_received", self.dpu.hints_received.into()),
+            ("hint_entries", self.dpu.hint_entries.into()),
             ("dpu_hit_rate", self.dpu_hit_rate.into()),
             ("mean_batch_factor", self.mean_batch_factor.into()),
         ])
@@ -126,6 +136,16 @@ impl std::fmt::Display for RunMetrics {
             self.dpu.static_serves,
             self.dpu.prefetch_entries,
             self.dpu_hit_rate * 100.0
+        )?;
+        writeln!(
+            f,
+            "  prefetch         : {} useful / {} wasted ({:.2} MB wasted), {} hints sent, {} hint entries ({} hint-useful)",
+            self.dpu_cache.prefetch_useful,
+            self.dpu_cache.prefetch_wasted,
+            self.dpu_cache.prefetch_wasted_bytes as f64 / 1e6,
+            self.host.hints_sent,
+            self.dpu.hint_entries,
+            self.dpu_cache.hint_useful,
         )
     }
 }

@@ -109,6 +109,7 @@ impl SodaService {
             buffer: agent.buffer_stats(),
             network: inner_stats,
             dpu: self.cluster.dpu_stats(),
+            dpu_cache: self.cluster.dpu_cache_stats(),
             dpu_hit_rate: self.cluster.dpu_hit_rate(),
             mean_batch_factor: self.cluster.with(|i| i.dpu.mean_batch_factor()),
         }
@@ -145,12 +146,19 @@ mod tests {
         cfg.prefetch = Some(crate::coordinator::config::PrefetchOverride {
             depth: Some(3),
             max_per_scan: None,
+            policy: Some(crate::dpu::PrefetchPolicyKind::GraphHint),
         });
         let _svc = SodaService::attach(&cluster, cfg);
         cluster.with(|i| {
             assert_eq!(i.dpu.cfg.cache_policy, crate::cache::PolicyKind::Clock);
             assert_eq!(i.dpu.cfg.prefetch.depth, 3);
             assert_eq!(i.dpu.cfg.prefetch.max_per_scan, cluster_scan);
+            assert_eq!(
+                i.dpu.cfg.prefetch.policy,
+                crate::dpu::PrefetchPolicyKind::GraphHint,
+                "--prefetch-policy must reach the rebuilt agent"
+            );
+            assert!(i.dpu.wants_hints(), "hint channel opens with the policy");
             assert_eq!(i.dpu.table.policy(), crate::cache::PolicyKind::Clock);
         });
     }

@@ -15,12 +15,13 @@
 //! independently, which is exactly what the Fig 11 breakdown sweeps.
 
 use super::aggregate::Aggregator;
-use super::cache_table::{CacheTable, EntryKey};
+use super::cache_table::{CacheTable, EntryKey, PrefetchOrigin};
 use super::pipeline::{ForwardMode, Forwarder};
 use super::prefetch::{PrefetchConfig, Prefetcher};
 use super::recent_list::RecentList;
 use super::static_cache::{StaticCache, StaticCacheError};
 use crate::fabric::numa::IntraOp;
+use crate::fabric::protocol::HintMessage;
 use crate::fabric::{verbs, Fabric};
 use crate::host::buffer::{PageKey, PageSpan};
 use crate::memnode::{RegionId, RegionStore};
@@ -174,6 +175,11 @@ pub struct DpuStats {
     pub prefetch_entries: u64,
     pub prefetch_bytes: u64,
     pub invalidations: u64,
+    /// Frontier-hint messages consumed from the hint channel.
+    pub hints_received: u64,
+    /// Cache entries the consumed hints covered (after span→entry
+    /// translation and queue dedup).
+    pub hint_entries: u64,
 }
 
 /// The DPU agent.
@@ -538,19 +544,82 @@ impl DpuAgent {
     /// both off the critical path (background cores).
     fn note_access(&mut self, fabric: &mut Fabric, mem: &RegionStore, now: Ns, page: PageKey) {
         self.recent.push(page);
+        self.run_prefetch_worker(fabric, mem, now);
+    }
+
+    /// One prefetch-worker wake-up: plan against the recent list (and any
+    /// queued hints) and issue the planned entry fetches in the background.
+    fn run_prefetch_worker(&mut self, fabric: &mut Fabric, mem: &RegionStore, now: Ns) {
         let ppe = self.table.pages_per_entry();
         let region_pages = &self.region_pages;
         let planned = self.prefetcher.plan(&self.recent, &self.table, |r| {
             region_pages.get(&r).map(|p| p.div_ceil(ppe)).unwrap_or(0)
         });
-        for ekey in planned {
-            self.issue_prefetch(fabric, mem, now, ekey);
+        for (ekey, origin) in planned {
+            self.issue_prefetch(fabric, mem, now, ekey, origin);
         }
+    }
+
+    /// Does the active prefetch policy consume frontier hints? (The host
+    /// routes on this so hint messages are never sent to be ignored.)
+    pub fn wants_hints(&self) -> bool {
+        self.cfg.opts.dynamic_cache && self.prefetcher.wants_hints()
+    }
+
+    /// Consume a frontier-hint message from the host→DPU hint channel:
+    /// translate its page spans into cache entries, queue them on the
+    /// prefetch engine and kick the prefetch worker — all on the
+    /// background (completion-stage) cores, off the request critical path.
+    /// Returns when the hint has been absorbed, or `None` when it was
+    /// discarded (non-hint policy, or a static-cached region — those are
+    /// served one-sided from DPU DRAM, so staging them would be pure
+    /// waste); there is never a response leg.
+    pub fn handle_hint(
+        &mut self,
+        fabric: &mut Fabric,
+        mem: &RegionStore,
+        arrive: Ns,
+        msg: &HintMessage,
+    ) -> Option<Ns> {
+        if !self.wants_hints() || self.static_cache.is_cached(msg.region_id) {
+            return None;
+        }
+        self.stats.hints_received += 1;
+        let ppe = self.table.pages_per_entry();
+        // Bounded by the hint queue's capacity: expanding more entries
+        // than the engine can possibly hold is wasted translation work.
+        let mut entries: Vec<u64> = Vec::new();
+        'spans: for s in &msg.spans {
+            let pages = u64::from(s.pages).max(1);
+            let first = s.page / ppe;
+            let last = (s.page + pages - 1) / ppe;
+            for e in first..=last {
+                // Spans arrive sorted, so consecutive dedup suffices.
+                if entries.last() != Some(&e) {
+                    if entries.len() >= super::prefetch::HINT_QUEUE_CAP {
+                        break 'spans;
+                    }
+                    entries.push(e);
+                }
+            }
+        }
+        let accepted = self.prefetcher.accept_hint(msg.region_id, &entries, msg.superstep);
+        self.stats.hint_entries += accepted;
+        let t = self.fwd.background(arrive, self.cfg.timing.prefetch_issue_ns);
+        self.run_prefetch_worker(fabric, mem, t);
+        Some(t)
     }
 
     /// Fetch a whole cache entry from the memory node in the background and
     /// stage it in the cache table (usable once the transfer completes).
-    fn issue_prefetch(&mut self, fabric: &mut Fabric, mem: &RegionStore, now: Ns, ekey: EntryKey) {
+    fn issue_prefetch(
+        &mut self,
+        fabric: &mut Fabric,
+        mem: &RegionStore,
+        now: Ns,
+        ekey: EntryKey,
+        origin: PrefetchOrigin,
+    ) {
         let t = self.cfg.timing;
         let entry_bytes = self.cfg.cache_entry_bytes;
         let region_bytes = self
@@ -571,7 +640,7 @@ impl DpuAgent {
         let t_issue = self.fwd.background(now, t.prefetch_issue_ns);
         let nic = fabric.cfg.numa.nic_node;
         let ready = fabric.net_read(t_issue, take, nic, TrafficClass::Background);
-        if self.table.insert(ekey, data, ready, &mut self.rng) {
+        if self.table.insert_tagged(ekey, data, take, origin, ready, &mut self.rng) {
             self.stats.prefetch_entries += 1;
             self.stats.prefetch_bytes += take;
         }
@@ -981,6 +1050,55 @@ mod tests {
             (0..6).map(|i| PageSpan::single(PageKey::new(1, 40 + 2 * i))).collect();
         read_batch(&mut a, &mut f, &store, 0, &spans);
         assert!((a.mean_batch_factor() - 6.0).abs() < 1e-9, "factor = batch size");
+    }
+
+    // ---- hint channel ---------------------------------------------------
+
+    fn setup_with_policy(policy: crate::dpu::PrefetchPolicyKind) -> (DpuAgent, Fabric, RegionStore) {
+        let (mut agent, fabric, store) = setup(DpuOpts::FULL);
+        let mut cfg = agent.cfg.clone();
+        cfg.prefetch.policy = policy;
+        agent = DpuAgent::new(cfg);
+        agent.register_region(1, 256 * CHUNK);
+        (agent, fabric, store)
+    }
+
+    #[test]
+    fn hint_stages_entries_that_later_hit() {
+        use crate::fabric::protocol::{HintMessage, HintSpan};
+        let (mut a, mut f, store) = setup_with_policy(crate::dpu::PrefetchPolicyKind::GraphHint);
+        assert!(a.wants_hints());
+        // Hint pages 8..=15 (entries 2 and 3) — no demand access needed.
+        let msg = HintMessage {
+            region_id: 1,
+            superstep: 1,
+            spans: vec![HintSpan { page: 8, pages: 8 }],
+        };
+        let t = a.handle_hint(&mut f, &store, 0, &msg).expect("hint consumed");
+        assert_eq!(a.stats().hints_received, 1);
+        assert_eq!(a.stats().hint_entries, 2);
+        assert!(a.stats().prefetch_entries >= 2, "hinted entries staged");
+        // Much later, a demand read of a hinted page hits the cache.
+        let mut out = vec![0u8; CHUNK as usize];
+        let r = a.handle_read(&mut f, &store, t + 10_000_000, PageKey::new(1, 9), 2, &mut out);
+        assert_eq!(r.source, Source::DpuCache);
+        assert!(out.iter().all(|&b| b == 9), "hinted entry served correct bytes");
+        assert!(a.table.stats().hint_useful >= 1, "hit resolves hint provenance");
+    }
+
+    #[test]
+    fn hints_are_ignored_under_non_hint_policies() {
+        use crate::fabric::protocol::{HintMessage, HintSpan};
+        let (mut a, mut f, store) = setup(DpuOpts::FULL);
+        assert!(!a.wants_hints(), "sequential default must not consume hints");
+        let msg = HintMessage {
+            region_id: 1,
+            superstep: 0,
+            spans: vec![HintSpan { page: 0, pages: 4 }],
+        };
+        assert!(a.handle_hint(&mut f, &store, 123, &msg).is_none(), "hint must be refused");
+        assert_eq!(a.stats().hints_received, 0);
+        assert_eq!(a.stats().prefetch_entries, 0);
     }
 
     #[test]

@@ -20,6 +20,15 @@
 //! Each slot carries a `ready_at` virtual timestamp: a prefetched entry is
 //! only usable once its background transfer has completed — a lookup that
 //! races an in-flight prefetch is a miss, exactly as on real hardware.
+//!
+//! Every entry in this table was staged by the prefetch worker, so each
+//! slot also carries *prefetch provenance*: its origin ([`PrefetchOrigin`]
+//! — recent-list scan vs frontier hint), the bytes its transfer moved, and
+//! whether a lookup ever hit it. Dropping an untouched entry resolves it as
+//! wasted (`prefetch_wasted{,_bytes}`); the first ready hit resolves it as
+//! useful — the exact useful/wasted split the adaptive prefetch throttle
+//! and the `abl-prefetch` figure feed on, with the invariant
+//! `insertions == prefetch_useful + prefetch_wasted + resident_untouched`.
 
 use crate::cache::{PolicyKind, ReplacementPolicy};
 use crate::host::buffer::PageKey;
@@ -49,6 +58,16 @@ impl EntryKey {
     }
 }
 
+/// Who decided to prefetch an entry — the provenance tag each slot carries
+/// so useful-vs-wasted accounting can be split by source.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefetchOrigin {
+    /// The prefetch worker's recent-list scan (sequential/strided engines).
+    Scan,
+    /// An application frontier hint posted over the host→DPU hint channel.
+    Hint,
+}
+
 #[derive(Debug)]
 struct Slot {
     key: EntryKey,
@@ -56,9 +75,18 @@ struct Slot {
     ready_at: Ns,
     refcount: u32,
     valid: bool,
+    /// Prefetch provenance of the resident entry.
+    origin: PrefetchOrigin,
+    /// Bytes the entry's background transfer actually moved (tail entries
+    /// fetch less than `entry_bytes`); charged to `prefetch_wasted_bytes`
+    /// if the entry is dropped untouched.
+    fetched_bytes: u64,
+    /// Did any lookup hit this entry since it was staged?
+    touched: bool,
 }
 
-/// Cache statistics (drives Fig 10 and the adaptive-disable logic).
+/// Cache statistics (drives Fig 10, the adaptive prefetch throttle and the
+/// useful-vs-wasted prefetch accounting).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CacheStats {
     pub lookups: u64,
@@ -70,6 +98,20 @@ pub struct CacheStats {
     pub evictions: u64,
     /// Insertions dropped because every candidate slot was pinned.
     pub pinned_drops: u64,
+    /// Prefetched entries that served at least one ready hit before being
+    /// dropped (counted once, at the first hit).
+    pub prefetch_useful: u64,
+    /// Prefetched entries dropped (evicted/invalidated/cleared) without a
+    /// single ready hit — pure wasted background traffic.
+    pub prefetch_wasted: u64,
+    /// Bytes the wasted entries' background transfers moved.
+    pub prefetch_wasted_bytes: u64,
+    /// `prefetch_useful` entries whose provenance was a frontier hint.
+    pub hint_useful: u64,
+    /// Gauge: resident entries that have not been hit yet. The exact-sum
+    /// invariant the accounting guarantees at every instant:
+    /// `insertions == prefetch_useful + prefetch_wasted + resident_untouched`.
+    pub resident_untouched: u64,
 }
 
 impl CacheStats {
@@ -78,6 +120,18 @@ impl CacheStats {
             0.0
         } else {
             self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    /// Fraction of *resolved* prefetches (hit-before-evict vs
+    /// evicted-untouched) that turned out useful — the adaptive engine's
+    /// feedback signal. 1.0 while nothing has resolved yet.
+    pub fn prefetch_accuracy(&self) -> f64 {
+        let resolved = self.prefetch_useful + self.prefetch_wasted;
+        if resolved == 0 {
+            1.0
+        } else {
+            self.prefetch_useful as f64 / resolved as f64
         }
     }
 }
@@ -129,9 +183,23 @@ impl CacheTable {
                 ready_at: 0,
                 refcount: 0,
                 valid: false,
+                origin: PrefetchOrigin::Scan,
+                fetched_bytes: 0,
+                touched: false,
             });
         }
         self
+    }
+
+    /// Resolve a slot that is about to leave the cache: if it was never
+    /// hit, its background transfer was pure waste.
+    fn resolve_drop(&mut self, idx: u32) {
+        let s = &self.slots[idx as usize];
+        if s.valid && !s.touched {
+            self.stats.prefetch_wasted += 1;
+            self.stats.prefetch_wasted_bytes += s.fetched_bytes;
+            self.stats.resident_untouched -= 1;
+        }
     }
 
     pub fn policy(&self) -> PolicyKind {
@@ -179,6 +247,16 @@ impl CacheTable {
                     return None;
                 }
                 self.stats.hits += 1;
+                let (was_touched, origin) = (slot.touched, slot.origin);
+                if !was_touched {
+                    // First ready hit resolves the prefetch as useful.
+                    self.stats.prefetch_useful += 1;
+                    self.stats.resident_untouched -= 1;
+                    if origin == PrefetchOrigin::Hint {
+                        self.stats.hint_useful += 1;
+                    }
+                    self.slots[idx as usize].touched = true;
+                }
                 self.engine.on_touch(idx);
                 let off = (page.page % self.pages_per_entry()) * self.chunk_bytes;
                 Some(&self.slots[idx as usize].data
@@ -224,9 +302,27 @@ impl CacheTable {
     /// `pinned_drops`) when the engine finds none — for the default
     /// `Random` policy that is the original bounded-probe behavior.
     pub fn insert(&mut self, key: EntryKey, data: Vec<u8>, ready_at: Ns, rng: &mut Rng) -> bool {
+        let bytes = data.len() as u64;
+        self.insert_tagged(key, data, bytes, PrefetchOrigin::Scan, ready_at, rng)
+    }
+
+    /// Like [`Self::insert`], carrying the entry's prefetch provenance and
+    /// the bytes its background transfer actually moved (tail entries fetch
+    /// less than `entry_bytes`; the zero-padding is free).
+    pub fn insert_tagged(
+        &mut self,
+        key: EntryKey,
+        data: Vec<u8>,
+        fetched_bytes: u64,
+        origin: PrefetchOrigin,
+        ready_at: Ns,
+        rng: &mut Rng,
+    ) -> bool {
         assert_eq!(data.len() as u64, self.entry_bytes, "entry size mismatch");
         if self.map.contains_key(&key) {
             // Refresh readiness (e.g. re-prefetch after eviction race).
+            // Provenance accounting is untouched: the entry is still one
+            // resident prefetch, resolved once.
             let idx = self.map[&key];
             let s = &mut self.slots[idx as usize];
             s.data = data.into_boxed_slice();
@@ -252,6 +348,7 @@ impl CacheTable {
             match victim {
                 Some(i) => {
                     self.engine.on_remove(i);
+                    self.resolve_drop(i);
                     let old = self.slots[i as usize].key;
                     self.map.remove(&old);
                     self.stats.evictions += 1;
@@ -269,9 +366,13 @@ impl CacheTable {
         s.ready_at = ready_at;
         s.refcount = 0;
         s.valid = true;
+        s.origin = origin;
+        s.fetched_bytes = fetched_bytes;
+        s.touched = false;
         self.engine.on_insert(idx);
         self.map.insert(key, idx);
         self.stats.insertions += 1;
+        self.stats.resident_untouched += 1;
         true
     }
 
@@ -280,6 +381,7 @@ impl CacheTable {
     /// coherence action SODA ever needs).
     pub fn invalidate(&mut self, key: EntryKey) -> bool {
         if let Some(idx) = self.map.remove(&key) {
+            self.resolve_drop(idx);
             let s = &mut self.slots[idx as usize];
             debug_assert_eq!(s.refcount, 0, "invalidating a pinned entry");
             s.valid = false;
@@ -293,6 +395,9 @@ impl CacheTable {
 
     /// Invalidate everything (cache disable / region free).
     pub fn clear(&mut self) {
+        for idx in 0..self.slots.len() as u32 {
+            self.resolve_drop(idx);
+        }
         self.map.clear();
         self.engine.clear();
         for s in &mut self.slots {
@@ -482,6 +587,85 @@ mod tests {
         assert!(t.contains(ek(0)));
         assert!(!t.contains(ek(1)), "LRU entry evicted");
         assert_eq!(t.policy(), PolicyKind::AccessLru);
+    }
+
+    // ---- prefetch provenance accounting ---------------------------------
+
+    fn assert_provenance_invariant(t: &CacheTable) {
+        let s = t.stats();
+        assert_eq!(
+            s.insertions,
+            s.prefetch_useful + s.prefetch_wasted + s.resident_untouched,
+            "useful + wasted + still-resident must sum to total prefetches"
+        );
+    }
+
+    #[test]
+    fn first_hit_resolves_entry_as_useful_once() {
+        let mut t = table(2);
+        let mut rng = Rng::new(0);
+        t.insert(ek(0), entry_data(1), 0, &mut rng);
+        assert_eq!(t.stats().resident_untouched, 1);
+        t.lookup_page(10, PageKey::new(1, 0));
+        t.lookup_page(20, PageKey::new(1, 1)); // second hit, same entry
+        let s = t.stats();
+        assert_eq!(s.prefetch_useful, 1, "useful is counted once per entry");
+        assert_eq!(s.resident_untouched, 0);
+        assert_eq!(s.prefetch_wasted, 0);
+        assert_provenance_invariant(&t);
+    }
+
+    #[test]
+    fn evicted_untouched_entry_counts_as_wasted_with_bytes() {
+        let mut t = table(2);
+        let mut rng = Rng::new(42);
+        t.insert_tagged(ek(0), entry_data(0), 4096, PrefetchOrigin::Scan, 0, &mut rng);
+        t.insert_tagged(ek(1), entry_data(1), 1000, PrefetchOrigin::Scan, 0, &mut rng);
+        t.lookup_page(10, PageKey::new(1, 0)); // entry 0 useful
+        // Force two evictions: both resident entries leave.
+        t.insert(ek(2), entry_data(2), 0, &mut rng);
+        t.insert(ek(3), entry_data(3), 0, &mut rng);
+        let s = t.stats();
+        assert_eq!(s.evictions, 2);
+        assert_eq!(s.prefetch_useful, 1);
+        // One of the two victims was the untouched entry 1 (1000 bytes);
+        // the other victim is whichever of {0, 2, 3} random picked — 0 is
+        // touched (not wasted), 2/3 are untouched 4096-byte entries.
+        assert!(s.prefetch_wasted >= 1);
+        assert!(s.prefetch_wasted_bytes >= 1000);
+        assert_provenance_invariant(&t);
+    }
+
+    #[test]
+    fn invalidate_and_clear_resolve_untouched_entries() {
+        let mut t = table(4);
+        let mut rng = Rng::new(0);
+        t.insert_tagged(ek(0), entry_data(0), 4096, PrefetchOrigin::Hint, 0, &mut rng);
+        t.insert_tagged(ek(1), entry_data(1), 4096, PrefetchOrigin::Hint, 0, &mut rng);
+        t.lookup_page(5, PageKey::new(1, 0));
+        assert_eq!(t.stats().hint_useful, 1, "hint provenance survives to the hit");
+        t.invalidate(ek(1));
+        let s = t.stats();
+        assert_eq!(s.prefetch_wasted, 1);
+        assert_eq!(s.prefetch_wasted_bytes, 4096);
+        t.insert(ek(2), entry_data(2), 0, &mut rng);
+        t.clear();
+        let s = t.stats();
+        assert_eq!(s.prefetch_wasted, 2, "clear resolves the untouched entry");
+        assert_eq!(s.resident_untouched, 0);
+        assert_provenance_invariant(&t);
+    }
+
+    #[test]
+    fn refresh_does_not_double_count_provenance() {
+        let mut t = table(2);
+        let mut rng = Rng::new(0);
+        t.insert(ek(0), entry_data(0), 100, &mut rng);
+        t.insert(ek(0), entry_data(1), 50, &mut rng); // refresh path
+        let s = t.stats();
+        assert_eq!(s.insertions, 1);
+        assert_eq!(s.resident_untouched, 1);
+        assert_provenance_invariant(&t);
     }
 
     /// The not-ready (in-flight prefetch) path must not touch the engine:

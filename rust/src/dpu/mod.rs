@@ -15,8 +15,10 @@ pub mod static_cache;
 
 pub use agent::{DpuAgent, DpuConfig, DpuOpts, DpuStats, DpuTiming, ReadOutcome, Source};
 pub use aggregate::Aggregator;
-pub use cache_table::{CacheTable, EntryKey};
+pub use cache_table::{CacheStats, CacheTable, EntryKey, PrefetchOrigin};
 pub use pipeline::{ForwardMode, Forwarder};
-pub use prefetch::{PrefetchConfig, Prefetcher};
+pub use prefetch::{
+    AdaptiveBase, PrefetchConfig, PrefetchPolicy, PrefetchPolicyKind, PrefetchStats, Prefetcher,
+};
 pub use recent_list::RecentList;
 pub use static_cache::StaticCache;

@@ -152,4 +152,38 @@ mod tests {
     fn default_capacity_matches_paper() {
         assert_eq!(RecentList::default().capacity(), 128);
     }
+
+    /// Overrun regression: a consumer whose cursor fell more than
+    /// `capacity` pushes behind must observe exactly the surviving (most
+    /// recent `capacity`) entries, oldest first, with no duplicate and no
+    /// phantom key across the ring-wrap boundary — for every overrun depth
+    /// and every cursor position inside the lost window.
+    #[test]
+    fn overrun_consumer_sees_only_survivors_in_order() {
+        for capacity in [1usize, 2, 3, 4, 7] {
+            for total in 0..4 * capacity as u64 {
+                for cursor in 0..=total {
+                    let mut r = RecentList::new(capacity);
+                    for p in 0..total {
+                        r.push(k(p));
+                    }
+                    let got = r.since(cursor);
+                    // Expected: pushes >= cursor, clamped to the survivors.
+                    let oldest_survivor = total.saturating_sub(capacity as u64);
+                    let expect: Vec<PageKey> =
+                        (cursor.max(oldest_survivor)..total).map(k).collect();
+                    assert_eq!(
+                        got, expect,
+                        "capacity {capacity}, total {total}, cursor {cursor}"
+                    );
+                    // No duplicates, no phantoms, oldest-first ordering.
+                    for w in got.windows(2) {
+                        assert!(w[0].page + 1 == w[1].page, "order across wrap: {got:?}");
+                    }
+                    assert!(got.len() <= capacity);
+                    assert!(got.iter().all(|key| key.page < total), "phantom key: {got:?}");
+                }
+            }
+        }
+    }
 }

@@ -27,6 +27,13 @@ pub const READ_REQUEST_BYTES: u64 = 24;
 pub const WRITE_HEADER_BYTES: u64 = 12;
 /// Control-plane RPC message size (QP setup, region ops).
 pub const RPC_BYTES: u64 = 64;
+/// Wire size of a prefetch-hint header: 16 (region) + 16 (span count) +
+/// 32 (superstep tag) bits = 8 bytes.
+pub const HINT_HEADER_BYTES: u64 = 8;
+/// Wire size of one hint span: 48 (page offset) + 16 (page count) bits.
+pub const HINT_SPAN_BYTES: u64 = 8;
+/// Maximum pages one hint span can encode (16-bit wire field).
+pub const MAX_HINT_SPAN_PAGES: u64 = u16::MAX as u64;
 
 /// Maximum encodable region id (16 bits).
 pub const MAX_REGION_ID: u16 = u16::MAX;
@@ -39,6 +46,9 @@ pub const MAX_PAGE_OFFSET: u64 = (1 << 48) - 1;
 pub enum RequestKind {
     Read = 1,
     Write = 2,
+    /// Prefetch hint (frontier adjacency spans) — consumed off the critical
+    /// path by the DPU prefetch worker, never acknowledged.
+    Hint = 3,
 }
 
 impl RequestKind {
@@ -46,6 +56,7 @@ impl RequestKind {
         match imm {
             1 => Some(RequestKind::Read),
             2 => Some(RequestKind::Write),
+            3 => Some(RequestKind::Hint),
             _ => None,
         }
     }
@@ -138,6 +149,75 @@ impl WriteHeader {
     }
 }
 
+/// One run of contiguous pages inside a hint message: page offset (48 bits
+/// on the wire) + page count (16 bits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HintSpan {
+    pub page: u64,
+    pub pages: u16,
+}
+
+/// A prefetch-hint message on the host→DPU hint channel: the application
+/// (the graph runner's frontier translator) tells the DPU prefetch worker
+/// which pages the next superstep will read, as compact spans. Carried as
+/// a two-sided SEND with [`RequestKind::Hint`] immediate data; the DPU
+/// never replies — hints are advisory and processed entirely off the
+/// critical path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HintMessage {
+    pub region_id: u16,
+    /// Superstep sequence tag (debugging/tracing; the prefetcher only
+    /// consumes spans in arrival order).
+    pub superstep: u32,
+    pub spans: Vec<HintSpan>,
+}
+
+impl HintMessage {
+    /// Total wire bytes: header + one 8-byte descriptor per span.
+    pub fn wire_bytes(&self) -> u64 {
+        HINT_HEADER_BYTES + self.spans.len() as u64 * HINT_SPAN_BYTES
+    }
+
+    /// Pack into the exact wire layout (little-endian fields, page offsets
+    /// truncated to their 48-bit width).
+    pub fn pack(&self) -> Vec<u8> {
+        assert!(self.spans.len() <= u16::MAX as usize, "span count exceeds 16-bit wire field");
+        let mut b = Vec::with_capacity(self.wire_bytes() as usize);
+        b.extend_from_slice(&self.region_id.to_le_bytes());
+        b.extend_from_slice(&(self.spans.len() as u16).to_le_bytes());
+        b.extend_from_slice(&self.superstep.to_le_bytes());
+        for s in &self.spans {
+            assert!(s.page <= MAX_PAGE_OFFSET, "page offset exceeds 48-bit wire field");
+            b.extend_from_slice(&s.page.to_le_bytes()[..6]);
+            b.extend_from_slice(&s.pages.to_le_bytes());
+        }
+        b
+    }
+
+    pub fn unpack(b: &[u8]) -> Option<HintMessage> {
+        if b.len() < HINT_HEADER_BYTES as usize {
+            return None;
+        }
+        let region_id = u16::from_le_bytes([b[0], b[1]]);
+        let count = u16::from_le_bytes([b[2], b[3]]) as usize;
+        let superstep = u32::from_le_bytes(b[4..8].try_into().unwrap());
+        if b.len() as u64 != HINT_HEADER_BYTES + count as u64 * HINT_SPAN_BYTES {
+            return None;
+        }
+        let mut spans = Vec::with_capacity(count);
+        for i in 0..count {
+            let off = (HINT_HEADER_BYTES + i as u64 * HINT_SPAN_BYTES) as usize;
+            let mut page = [0u8; 8];
+            page[..6].copy_from_slice(&b[off..off + 6]);
+            spans.push(HintSpan {
+                page: u64::from_le_bytes(page),
+                pages: u16::from_le_bytes([b[off + 6], b[off + 7]]),
+            });
+        }
+        Some(HintMessage { region_id, superstep, spans })
+    }
+}
+
 /// Control-plane RPC verbs (QP lifecycle, region management; §IV-B).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ControlRpc {
@@ -209,8 +289,36 @@ mod tests {
     fn immediate_data_encodes_request_kind() {
         assert_eq!(RequestKind::from_imm(1), Some(RequestKind::Read));
         assert_eq!(RequestKind::from_imm(2), Some(RequestKind::Write));
+        assert_eq!(RequestKind::from_imm(3), Some(RequestKind::Hint));
         assert_eq!(RequestKind::from_imm(99), None);
         assert_eq!(RequestKind::Read.to_imm(), 1);
+        assert_eq!(RequestKind::Hint.to_imm(), 3);
+    }
+
+    #[test]
+    fn hint_message_roundtrip_and_wire_size() {
+        let m = HintMessage {
+            region_id: 2,
+            superstep: 0xABCD_1234,
+            spans: vec![
+                HintSpan { page: 0, pages: 1 },
+                HintSpan { page: 0x1234_5678_9ABC, pages: u16::MAX },
+            ],
+        };
+        assert_eq!(m.wire_bytes(), 8 + 2 * 8);
+        let packed = m.pack();
+        assert_eq!(packed.len() as u64, m.wire_bytes());
+        assert_eq!(HintMessage::unpack(&packed), Some(m));
+        // Truncated and malformed buffers are rejected.
+        assert_eq!(HintMessage::unpack(&packed[..11]), None);
+        assert_eq!(HintMessage::unpack(&[0u8; 3]), None);
+    }
+
+    #[test]
+    fn empty_hint_message_is_header_only() {
+        let m = HintMessage { region_id: 1, superstep: 0, spans: vec![] };
+        assert_eq!(m.wire_bytes(), HINT_HEADER_BYTES);
+        assert_eq!(HintMessage::unpack(&m.pack()), Some(m));
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //!   (dynamic caching).
 
 use super::numa::IntraOp;
-use super::protocol::{READ_REQUEST_BYTES, WRITE_HEADER_BYTES};
+use super::protocol::{HINT_HEADER_BYTES, HINT_SPAN_BYTES, READ_REQUEST_BYTES, WRITE_HEADER_BYTES};
 use super::Fabric;
 use crate::sim::link::TrafficClass;
 use crate::sim::Ns;
@@ -63,6 +63,20 @@ pub fn two_sided_request_batch(fabric: &mut Fabric, now: Ns, numa_node: usize, n
         numa_node,
         READ_REQUEST_BYTES * n,
         TrafficClass::Control,
+    )
+}
+
+/// Prefetch-hint message host → DPU: one SEND carrying `spans` span
+/// descriptors ([`super::protocol::HintMessage`]). Travels on the
+/// background class — hints are advisory and must never contend with
+/// on-demand fault traffic in the counters the figures report.
+pub fn hint_message(fabric: &mut Fabric, now: Ns, numa_node: usize, spans: u64) -> Ns {
+    fabric.intra(
+        now,
+        IntraOp::HostToDpuSend,
+        numa_node,
+        HINT_HEADER_BYTES + spans * HINT_SPAN_BYTES,
+        TrafficClass::Background,
     )
 }
 
@@ -139,6 +153,15 @@ mod tests {
             "batching must not alter bytes-on-wire"
         );
         assert!(t_batch < t_seq, "one message beats eight chained sends");
+    }
+
+    #[test]
+    fn hint_message_is_small_and_background_class() {
+        let mut f = Fabric::new(FabricConfig::default());
+        let t = hint_message(&mut f, 0, 2, 4);
+        assert!(t < 3_000, "a 40-byte hint should be ~latency-bound, got {t}");
+        assert_eq!(f.pcie_h2d.stats().background_bytes, 8 + 4 * 8);
+        assert_eq!(f.pcie_h2d.stats().on_demand_bytes, 0, "hints stay off the demand class");
     }
 
     #[test]

@@ -67,10 +67,80 @@ pub fn ablation_entry_size(scale: f64, threads: usize) -> FigureReport {
     r
 }
 
+/// Prefetch-policy × app sweep — the graph-aware adaptive-prefetching
+/// story: demand-miss round trips, stall time, hit rate and *wasted*
+/// prefetch bytes per engine, for a frontier app (BFS) and a streaming app
+/// (PageRank). `off` is the baseline the CI prefetch guard measures
+/// traffic against.
+pub fn ablation_prefetch_policy(scale: f64, threads: usize) -> FigureReport {
+    use crate::coordinator::config::PrefetchOverride;
+    use crate::dpu::PrefetchPolicyKind;
+    let mut r = FigureReport::new(
+        "abl-prefetch",
+        "prefetch policy: stall/hit-rate/wasted-bytes per engine (friendster, dpu-full)",
+    );
+    r.line(format!(
+        "{:<10}{:<12}{:>12}{:>11}{:>10}{:>10}{:>11}{:>11}{:>10}",
+        "app", "policy", "runtime ms", "stall ms", "dpu hit", "fwd", "wasted KB", "net MB", "hints"
+    ));
+    let mut rows = Vec::new();
+    for app in [App::Bfs, App::PageRank] {
+        for policy in PrefetchPolicyKind::ALL {
+            let mut wb = bench(scale, threads);
+            wb.prefetch = Some(PrefetchOverride {
+                policy: Some(policy),
+                ..PrefetchOverride::default()
+            });
+            let m = wb.run(&ExperimentSpec {
+                app,
+                graph: "friendster",
+                backend: BackendKind::DPU_FULL,
+                caching: CachingMode::Dynamic,
+            });
+            r.line(format!(
+                "{:<10}{:<12}{:>12.2}{:>11.2}{:>9.1}%{:>10}{:>11.1}{:>11.2}{:>10}",
+                app.name(),
+                policy.name(),
+                m.elapsed_secs() * 1e3,
+                m.host.stall_ns as f64 / 1e6,
+                m.dpu_hit_rate * 100.0,
+                m.dpu.forwarded,
+                m.dpu_cache.prefetch_wasted_bytes as f64 / 1e3,
+                m.network_bytes() as f64 / 1e6,
+                m.host.hints_sent,
+            ));
+            rows.push(Json::obj([
+                ("app", app.name().into()),
+                ("policy", policy.name().into()),
+                ("elapsed_ns", m.elapsed_ns.into()),
+                ("stall_ns", m.host.stall_ns.into()),
+                ("hit_rate", m.dpu_hit_rate.into()),
+                // On-demand round trips the DPU forwarded to the memory
+                // node — the demand-miss count the guard compares.
+                ("demand_fetches", m.dpu.forwarded.into()),
+                ("prefetch_useful", m.dpu_cache.prefetch_useful.into()),
+                ("prefetch_wasted", m.dpu_cache.prefetch_wasted.into()),
+                ("prefetch_wasted_bytes", m.dpu_cache.prefetch_wasted_bytes.into()),
+                ("hint_useful", m.dpu_cache.hint_useful.into()),
+                ("hints_sent", m.host.hints_sent.into()),
+                ("hint_entries", m.dpu.hint_entries.into()),
+                ("on_demand", m.network.on_demand_bytes().into()),
+                ("background", m.network.background_bytes().into()),
+                ("net_bytes", m.network_bytes().into()),
+            ]));
+        }
+    }
+    r.line("-> graph-hint turns the frontier into exact prefetch spans: fewer".to_string());
+    r.line("   demand round trips on BFS at near-zero wasted bytes; adaptive".to_string());
+    r.line("   throttles blind speculation back to ~the prefetch-off traffic.".to_string());
+    r.data = Json::obj([("rows", Json::Arr(rows)), ("scale", scale.into())]);
+    r
+}
+
 /// Prefetch-depth sweep (how far ahead the dynamic cache runs).
 pub fn ablation_prefetch_depth(scale: f64, threads: usize) -> FigureReport {
     let mut r = FigureReport::new(
-        "abl-prefetch",
+        "abl-prefetch-depth",
         "prefetch depth: hit rate vs background traffic (pagerank/friendster)",
     );
     r.line(format!(
@@ -412,6 +482,42 @@ mod tests {
             // ...and batching never slows the run down.
             assert!(cell(app, 16, "elapsed_ns") <= cell(app, 1, "elapsed_ns"));
         }
+    }
+
+    #[test]
+    fn prefetch_policy_sweep_covers_all_policies_and_accounts_exactly() {
+        let r = ablation_prefetch_policy(S, 8);
+        let Some(Json::Arr(rows)) = r.data.get("rows") else {
+            panic!("no rows");
+        };
+        assert_eq!(rows.len(), 2 * crate::dpu::PrefetchPolicyKind::ALL.len());
+        let cell = |app: &str, policy: &str, field: &str| -> u64 {
+            rows.iter()
+                .find(|x| {
+                    x.get("app").unwrap().as_str() == Some(app)
+                        && x.get("policy").unwrap().as_str() == Some(policy)
+                })
+                .unwrap_or_else(|| panic!("missing {app}/{policy}"))
+                .get(field)
+                .unwrap()
+                .as_u64()
+                .unwrap()
+        };
+        // `off` must move zero prefetch traffic and waste nothing.
+        for app in ["bfs", "pagerank"] {
+            assert_eq!(cell(app, "off", "prefetch_wasted_bytes"), 0);
+            assert_eq!(cell(app, "off", "background"), 0, "{app}: off must not prefetch");
+        }
+        // Hints flow only under the graph-hint engine, and BFS posts them.
+        assert!(cell("bfs", "graph-hint", "hints_sent") > 0);
+        assert_eq!(cell("bfs", "sequential", "hints_sent"), 0);
+        // Graph-hint BFS must beat blind sequential on demand round trips
+        // (the CI prefetch guard enforces this at bench scale too).
+        assert!(
+            cell("bfs", "graph-hint", "demand_fetches")
+                < cell("bfs", "off", "demand_fetches"),
+            "hints must convert demand misses into cache hits"
+        );
     }
 
     #[test]

@@ -57,6 +57,12 @@ pub fn pagerank(r: &mut GraphRunner, g: &FamGraph, iters: u32) -> PrResult {
         // batch, so a hub's scattered offset-page misses overlap on the
         // wire instead of paying one round trip each.
         sums.fill(0.0);
+        // The pull sweep reads every vertex's adjacency in order — hint the
+        // full edge stream (collapses to a handful of merged spans) so a
+        // graph-hint prefetcher warms the iteration without speculation.
+        if r.wants_hints() {
+            r.hint_frontier_vertices(g, &all);
+        }
         let chunk = r.agent.chunk_bytes();
         r.parallel_chunks(&all, cm.grain_dense, |agent, tid, v, now| {
             let mut t =

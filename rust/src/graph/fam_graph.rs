@@ -12,8 +12,9 @@
 //! ordinary host memory, as in Ligra.
 
 use super::csr::{CsrGraph, VertexId};
-use crate::host::{FamHandle, HostAgent, Placement};
+use crate::host::{FamHandle, HostAgent, PageKey, PageSpan, Placement};
 use crate::sim::Ns;
+use std::rc::Rc;
 
 /// How the FAM objects get their content.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,6 +36,13 @@ pub struct FamGraph {
     pub offsets: FamHandle,
     /// FAM object holding `m` little-endian u32 targets (edge data).
     pub edges: FamHandle,
+    /// Read-only host-DRAM shadow of the CSR offsets, used by the
+    /// frontier-hint translator ([`Self::frontier_edge_spans`]). Vertex
+    /// *metadata* is exactly what Ligra keeps host-resident anyway
+    /// (parents/ranks/labels are all O(n) host arrays); translating hints
+    /// through the paging path instead would perturb the page buffer the
+    /// hints are supposed to be invisible to.
+    host_offsets: Rc<Vec<u64>>,
 }
 
 impl FamGraph {
@@ -51,13 +59,14 @@ impl FamGraph {
         let off_bytes = csr.offsets_bytes_le();
         let edge_bytes = csr.edges_bytes_le();
         let (off_len, edge_len) = (off_bytes.len() as u64, edge_bytes.len() as u64);
+        let host_offsets = Rc::new(csr.offsets.clone());
         match mode {
             BuildMode::FileBacked => {
                 let (offsets, t1) =
                     agent.alloc(now, "graph.offsets", off_len, Some(off_bytes), Placement::Static);
                 let (edges, t2) =
                     agent.alloc(t1, "graph.edges", edge_len, Some(edge_bytes), Placement::Default);
-                (FamGraph { n, m, offsets, edges }, t2)
+                (FamGraph { n, m, offsets, edges, host_offsets }, t2)
             }
             BuildMode::WriteThrough => {
                 let (offsets, t1) =
@@ -67,9 +76,95 @@ impl FamGraph {
                 let t3 = agent.write_bytes(t2, 0, offsets.region, 0, &off_bytes);
                 let t4 = agent.write_bytes(t3, 0, edges.region, 0, &edge_bytes);
                 let t5 = agent.flush(t4);
-                (FamGraph { n, m, offsets, edges }, t5)
+                (FamGraph { n, m, offsets, edges, host_offsets }, t5)
             }
         }
+    }
+
+    /// Translate a frontier (sorted vertex list) into the edge-data page
+    /// spans the next superstep will read: each vertex's adjacency byte
+    /// range `[offsets[v]·4, offsets[v+1]·4)` maps to pages of the edge
+    /// region; adjacent/overlapping ranges merge (CSR offsets are
+    /// monotonic, so one forward pass suffices). At most `max_spans` spans
+    /// are returned — the hint-message size cap.
+    ///
+    /// Pure host-side bookkeeping over the offsets shadow: no FAM traffic,
+    /// no paging-path side effects, fully deterministic.
+    pub fn frontier_edge_spans(
+        &self,
+        frontier: &[VertexId],
+        chunk_bytes: u64,
+        max_spans: usize,
+    ) -> Vec<PageSpan> {
+        let off = &self.host_offsets;
+        let mut spans: Vec<PageSpan> = Vec::new();
+        for &v in frontier {
+            let (s, e) = (off[v as usize], off[v as usize + 1]);
+            if s == e {
+                continue; // isolated vertex: no adjacency bytes
+            }
+            let first = s * 4 / chunk_bytes;
+            let last = (e * 4 - 1) / chunk_bytes;
+            if Self::push_page_range(&mut spans, self.edges.region, first, last, max_spans) {
+                break; // capped: the tail of a huge frontier goes unhinted
+            }
+        }
+        spans
+    }
+
+    /// Like [`Self::frontier_edge_spans`] for the *vertex* object: the
+    /// offsets pages `offset_pair` will touch for each frontier vertex
+    /// (`offsets[v]` and `offsets[v+1]`, 16 bytes at `v·8`). Only useful
+    /// when the offsets object is dynamically cached — static-pinned
+    /// regions bypass the dynamic cache entirely.
+    pub fn frontier_offset_spans(
+        &self,
+        frontier: &[VertexId],
+        chunk_bytes: u64,
+        max_spans: usize,
+    ) -> Vec<PageSpan> {
+        let mut spans: Vec<PageSpan> = Vec::new();
+        for &v in frontier {
+            let byte = v as u64 * 8;
+            let first = byte / chunk_bytes;
+            let last = (byte + 15) / chunk_bytes;
+            if Self::push_page_range(&mut spans, self.offsets.region, first, last, max_spans) {
+                break;
+            }
+        }
+        spans
+    }
+
+    /// Append `[first, last]` (inclusive pages) to a sorted span list,
+    /// merging with the previous span on overlap/adjacency. Returns `true`
+    /// once `max_spans` distinct spans exist (caller stops).
+    fn push_page_range(
+        spans: &mut Vec<PageSpan>,
+        region: crate::memnode::RegionId,
+        first: u64,
+        last: u64,
+        max_spans: usize,
+    ) -> bool {
+        debug_assert!(last >= first);
+        if let Some(prev) = spans.last_mut() {
+            let prev_end = prev.start.page + prev.pages; // exclusive
+            if first <= prev_end {
+                // Extend (ranges arrive sorted; overlap or adjacency). The
+                // saturating form also absorbs unsorted callers: a range
+                // entirely before the previous span is already covered or
+                // simply kept as-is instead of underflowing.
+                prev.pages = prev.pages.max((last + 1).saturating_sub(prev.start.page));
+                return false;
+            }
+        }
+        if spans.len() >= max_spans {
+            return true;
+        }
+        spans.push(PageSpan {
+            start: PageKey::new(region, first),
+            pages: last + 1 - first,
+        });
+        false
     }
 
     /// Total FAM footprint (sizes the page buffer at 1/3, §V).
@@ -203,6 +298,32 @@ mod tests {
         let (d3, _) = g.degree(&mut a, t1, 0, 3);
         assert_eq!(d3, 1);
         assert_eq!(g.footprint_bytes(), (10 * 8 + 16 * 4) as u64);
+    }
+
+    #[test]
+    fn frontier_spans_merge_and_respect_the_cap() {
+        let (mut a, _c) = agent();
+        // path(64): vertex v's adjacency is ~2 edges at offset ~2v.
+        let csr = crate::graph::gen::toys::path(64);
+        let (g, _) = FamGraph::build(&mut a, 0, &csr, BuildMode::FileBacked);
+        // A contiguous frontier merges into one span; chunk = 16 bytes
+        // keeps several pages in play.
+        let all: Vec<u32> = (0..64).collect();
+        let spans = g.frontier_edge_spans(&all, 16, 1024);
+        assert_eq!(spans.len(), 1, "contiguous adjacency merges: {spans:?}");
+        assert_eq!(spans[0].start.region, g.edges.region);
+        assert_eq!(spans[0].start.page, 0);
+        assert_eq!(spans[0].pages, csr.edge_bytes().div_ceil(16));
+        // A scattered frontier yields one span per vertex, capped.
+        let scattered: Vec<u32> = (0..64).step_by(16).collect();
+        let spans = g.frontier_edge_spans(&scattered, 4, 1024);
+        assert!(spans.len() > 1, "{spans:?}");
+        let capped = g.frontier_edge_spans(&scattered, 4, 2);
+        assert_eq!(capped.len(), 2, "cap bounds the hint message");
+        // Spans cover exactly the frontier's adjacency pages, in order.
+        for w in spans.windows(2) {
+            assert!(w[0].start.page + w[0].pages < w[1].start.page + w[1].pages);
+        }
     }
 
     #[test]

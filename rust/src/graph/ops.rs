@@ -65,6 +65,29 @@ pub fn edge_map(
         Direction::ForceDense => true,
         Direction::Auto => frontier.should_densify(g.n),
     };
+    // Frontier hint: the superstep's exact adjacency read set is known
+    // here — the frontier's out-edges in sparse push, the eligible
+    // (`cond`) vertices' in-edges in dense pull — so post it over the
+    // host→DPU hint channel before the sweep starts. The prefetch worker
+    // stages the spans through the background pipeline while the early
+    // grains execute. Skipped entirely (no translation work) unless the
+    // active prefetch policy consumes hints.
+    if r.wants_hints() {
+        if dense {
+            // Reuse the runner's adjacency scratch for the eligible list —
+            // no per-superstep allocation (the EdgeScratch pattern).
+            let mut verts = std::mem::take(&mut r.scratch.nbrs);
+            verts.clear();
+            verts.extend((0..g.n as VertexId).filter(|&v| cond(v)));
+            r.hint_frontier_vertices(g, &verts);
+            r.scratch.nbrs = verts;
+        } else {
+            match frontier {
+                VertexSubset::Sparse(vs) => r.hint_frontier_vertices(g, vs),
+                _ => r.hint_frontier_vertices(g, &frontier.to_sparse()),
+            }
+        }
+    }
     if dense {
         edge_map_dense(r, g, frontier, &mut update, &cond, opts.early_exit)
     } else {

@@ -9,9 +9,14 @@
 //! that overlaps with paging.
 
 use super::csr::VertexId;
+use super::fam_graph::FamGraph;
 use crate::host::HostAgent;
 use crate::sim::threads::ThreadSet;
 use crate::sim::Ns;
+
+/// Cap on hint spans per frontier message (bounds the wire size; the tail
+/// of an enormous scattered frontier simply goes unhinted).
+pub const MAX_HINT_SPANS: usize = 512;
 
 /// Reusable adjacency scratch shared across `edge_map` supersteps: the raw
 /// neighbor-list bytes and their decoded vertex ids. Living on the runner,
@@ -69,6 +74,10 @@ pub struct GraphRunner {
     /// Reusable adjacency scratch (`std::mem::take` it around a
     /// `parallel_chunks` call and put it back after).
     pub scratch: EdgeScratch,
+    /// Post frontier hints over the host→DPU hint channel at superstep
+    /// boundaries (no-op unless the backend's prefetch policy consumes
+    /// them; see [`Self::hint_frontier_vertices`]).
+    pub frontier_hints: bool,
 }
 
 impl GraphRunner {
@@ -80,6 +89,39 @@ impl GraphRunner {
             clock: start,
             injector: None,
             scratch: EdgeScratch::default(),
+            frontier_hints: true,
+        }
+    }
+
+    /// Will frontier hints actually reach a prefetcher? Checked before any
+    /// translation work so non-hint runs pay nothing.
+    pub fn wants_hints(&self) -> bool {
+        self.frontier_hints && self.agent.wants_prefetch_hints()
+    }
+
+    /// Translate `verts`' read set into page spans and post them over the
+    /// hint channel: their adjacency ranges in the edge object, plus their
+    /// `offset_pair` pages in the vertex object when it is not
+    /// static-pinned (static regions bypass the dynamic cache). The
+    /// application already knows the next superstep's read set (the
+    /// frontier it just computed), so this is application-semantic
+    /// prefetching: exact, no speculation. Off the critical path — the
+    /// runner's clock does not advance; the wire and DPU staging costs are
+    /// charged on the background class inside the store.
+    pub fn hint_frontier_vertices(&mut self, g: &FamGraph, verts: &[VertexId]) {
+        if verts.is_empty() || !self.wants_hints() {
+            return;
+        }
+        let chunk = self.agent.chunk_bytes();
+        let mut spans = if self.agent.is_static(g.offsets.region) {
+            Vec::new()
+        } else {
+            g.frontier_offset_spans(verts, chunk, MAX_HINT_SPANS)
+        };
+        spans.extend(g.frontier_edge_spans(verts, chunk, MAX_HINT_SPANS));
+        if !spans.is_empty() {
+            let now = self.clock;
+            self.agent.prefetch_hint(now, &spans);
         }
     }
 

@@ -78,6 +78,9 @@ pub struct HostStats {
     /// Doorbells rung — `qp_posted / qp_doorbells` is the realized
     /// doorbell-batching factor the `abl-batch` ablation reports.
     pub qp_doorbells: u64,
+    /// Frontier-hint messages posted over the host→DPU hint channel
+    /// (only counted when the backend's prefetcher actually consumed one).
+    pub hints_sent: u64,
 }
 
 impl HostStats {
@@ -653,6 +656,90 @@ impl HostAgent {
         })
     }
 
+    /// Does the backend's prefetcher consume application hints right now?
+    /// (Lets callers skip frontier→span translation when nobody listens.)
+    pub fn wants_prefetch_hints(&self) -> bool {
+        self.store.wants_prefetch_hints()
+    }
+
+    /// Is the region pinned in the DPU static cache? (Static regions are
+    /// served one-sided and bypass the dynamic cache — hinting them is
+    /// pointless.)
+    pub fn is_static(&self, region: RegionId) -> bool {
+        self.store.is_static(region)
+    }
+
+    /// Post an application prefetch hint naming the page spans the next
+    /// phase will read. Advisory and off the critical path: the caller's
+    /// clock is not advanced — the wire transfer and DPU-side staging are
+    /// charged inside the store on the background class. Pages already
+    /// resident in the local buffer are filtered out first (they generate
+    /// no demand, so staging them remotely would be pure waste). Returns
+    /// whether a hint message was actually sent.
+    pub fn prefetch_hint(&mut self, now: Ns, spans: &[PageSpan]) -> bool {
+        if spans.is_empty() || !self.store.wants_prefetch_hints() {
+            return false;
+        }
+        // The filter walk is O(hinted pages); when the hinted set dwarfs
+        // the buffer (which holds every page the filter could remove),
+        // filtering can trim under ~25% — skip the walk and let the
+        // DPU-side residency dedup absorb the overlap instead. This keeps
+        // whole-stream hints (PageRank's full edge array, every iteration)
+        // off the host's hot loop.
+        let hinted_pages: u64 = spans.iter().map(|s| s.pages).sum();
+        if hinted_pages > 4 * (self.buffer.resident_pages() as u64).max(1) {
+            let numa = self.numa_node;
+            if self.store.prefetch_hint(now, spans, numa).is_some() {
+                self.stats.hints_sent += 1;
+                return true;
+            }
+            return false;
+        }
+        // Split each span at locally-resident pages, keeping the miss runs.
+        // Residency splitting can fragment heavily, so the result is capped:
+        // the tail simply goes unhinted (and faults on demand as usual).
+        const MAX_FILTERED_SPANS: usize = 2048;
+        let mut filtered: Vec<PageSpan> = Vec::new();
+        'spans: for s in spans {
+            let mut run_start: Option<u64> = None;
+            for i in 0..s.pages {
+                let key = s.key_at(i);
+                if self.buffer.is_resident(key) {
+                    if let Some(first) = run_start.take() {
+                        filtered.push(PageSpan {
+                            start: PageKey::new(s.start.region, first),
+                            pages: s.start.page + i - first,
+                        });
+                        if filtered.len() >= MAX_FILTERED_SPANS {
+                            break 'spans;
+                        }
+                    }
+                } else if run_start.is_none() {
+                    run_start = Some(s.start.page + i);
+                }
+            }
+            if let Some(first) = run_start {
+                filtered.push(PageSpan {
+                    start: PageKey::new(s.start.region, first),
+                    pages: s.start.page + s.pages - first,
+                });
+                if filtered.len() >= MAX_FILTERED_SPANS {
+                    break 'spans;
+                }
+            }
+        }
+        if filtered.is_empty() {
+            return false;
+        }
+        let numa = self.numa_node;
+        if self.store.prefetch_hint(now, &filtered, numa).is_some() {
+            self.stats.hints_sent += 1;
+            true
+        } else {
+            false
+        }
+    }
+
     /// Flush all dirty pages to the store (barrier / pre-pin sync).
     pub fn flush(&mut self, now: Ns) -> Ns {
         let mut t = now;
@@ -882,6 +969,58 @@ mod tests {
             (t2 - t1) - 3 * 100,
             "stall must exclude the 3 hits' service time"
         );
+    }
+
+    // ---- hint channel ---------------------------------------------------
+
+    #[test]
+    fn prefetch_hint_filters_resident_pages_and_counts_sends() {
+        use crate::backend::DpuStore;
+        use crate::host::PageSpan;
+        let mut ccfg = ClusterConfig::tiny();
+        ccfg.dpu.prefetch.policy = crate::dpu::PrefetchPolicyKind::GraphHint;
+        let cluster = Cluster::build(ccfg);
+        let chunk = cluster.config().chunk_bytes;
+        let mut a = HostAgent::new(
+            "p0",
+            Box::new(DpuStore::new(cluster.clone())),
+            48 * chunk, // roomy: the warm read must stay fully resident
+            chunk,
+            1.0,
+            4,
+            4,
+            2,
+            HostTiming::default(),
+        );
+        let ppe = cluster.config().dpu.cache_entry_bytes / chunk;
+        let pages = 4 * ppe;
+        let (h, t0) = a.alloc(
+            0,
+            "f",
+            pages * chunk,
+            Some(vec![3; (pages * chunk) as usize]),
+            Placement::Default,
+        );
+        assert!(a.wants_prefetch_hints());
+        assert!(!a.is_static(h.region));
+        // Make the first entry's pages host-resident: hinting the whole
+        // region must stage only the remaining entries.
+        let mut warm = vec![0u8; (ppe * chunk) as usize];
+        let t1 = a.read_bytes(t0, 0, h.region, 0, &mut warm);
+        let staged_before = cluster.dpu_stats().prefetch_entries;
+        assert!(a.prefetch_hint(t1, &[PageSpan { start: PageKey::new(h.region, 0), pages }]));
+        assert_eq!(a.stats().hints_sent, 1);
+        let hinted = cluster.dpu_stats().hint_entries;
+        assert!(hinted >= 1, "non-resident tail must be hinted");
+        assert!(
+            hinted <= 3,
+            "host-resident first entry must be filtered out ({hinted} entries hinted)"
+        );
+        assert!(cluster.dpu_stats().prefetch_entries > staged_before);
+        // Empty and all-resident hints send nothing.
+        assert!(!a.prefetch_hint(t1, &[]));
+        assert!(!a.prefetch_hint(t1, &[PageSpan { start: PageKey::new(h.region, 0), pages: 1 }]));
+        assert_eq!(a.stats().hints_sent, 1);
     }
 
     // ---- batched fault engine ------------------------------------------

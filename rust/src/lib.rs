@@ -28,10 +28,54 @@
 //!
 //! From JSON: a [`coordinator::config::SodaConfig`] file (see `soda config`
 //! for the schema) carries `evict_policy`, `dpu_cache_policy` and the
-//! prefetcher's `{depth, max_per_scan}`; `ClusterConfig::apply_json`
+//! prefetcher's `{depth, max_per_scan, policy}`; `ClusterConfig::apply_json`
 //! accepts the same knobs under `dpu.*` for cluster-wide defaults. The
 //! `abl-cache-policy` / `abl-evict` figures and the `fig10_policies` bench
 //! sweep every policy on both layers.
+//!
+//! ## Prefetch subsystem & the hint channel
+//!
+//! The DPU's prefetch planner is the third pluggable seam
+//! ([`dpu::prefetch`]): a [`dpu::PrefetchPolicy`] engine behind the
+//! [`dpu::Prefetcher`] shell, selected by [`dpu::PrefetchPolicyKind`]
+//! (`off` | `sequential` — seed-identical default | `strided` |
+//! `graph-hint` | `adaptive[:base]`) via `DpuConfig::prefetch.policy`,
+//! `SodaConfig::prefetch.policy`, or `soda run --prefetch-policy`.
+//!
+//! The `graph-hint` engine closes an application→hardware feedback loop
+//! over a dedicated **host→DPU hint channel**:
+//!
+//! ```text
+//! GraphRunner       ── edge_map knows the superstep's exact read set
+//!  (graph/ops)         (sparse: frontier out-edges; dense: cond-eligible
+//!      │                in-edges); FamGraph::frontier_edge_spans turns it
+//!      │                into merged edge-page spans via a host-resident
+//!      │                CSR-offsets shadow (no paging-path side effects)
+//! HostAgent         ── prefetch_hint posts the spans iff the backend's
+//!  (host/agent)        policy listens (RemoteStore::wants_prefetch_hints)
+//!      │
+//! hint channel      ── one background-class SEND per region carrying a
+//!  (fabric)            HintMessage (8 B header + 8 B/span, Table I style;
+//!                      RequestKind::Hint immediate data) — never touches
+//!                      the on-demand counters, never gets a response leg
+//!      │
+//! DpuAgent          ── handle_hint translates spans→cache entries on the
+//!  (dpu/agent)         background cores, queues them on the engine and
+//!                      kicks the prefetch worker; entries stage through
+//!                      the existing async pipeline off the critical path
+//!      │
+//! CacheTable        ── every slot carries prefetch provenance (origin,
+//!  (dpu/cache_table)   fetched bytes, touched) so useful vs wasted
+//!                      prefetches are counted exactly: insertions ==
+//!                      useful + wasted + resident_untouched
+//! ```
+//!
+//! The `adaptive` wrapper reads that exact accounting and throttles its
+//! base engine with two deterministic gates (a net-traffic budget and
+//! accuracy tiers), which is what keeps its total traffic within ~10 % of
+//! prefetch-off — the bound the CI "Prefetch guard" enforces via the
+//! `abl-prefetch` figure (policy × app sweep: stall time, hit rate,
+//! demand round trips, wasted prefetch bytes).
 //!
 //! ## Request lifecycle (the batched fault path)
 //!

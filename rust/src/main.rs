@@ -5,7 +5,7 @@
 //! soda figures fig6 fig10 abl-cache-policy ...
 //! soda run <app> <graph> [--backend B] [--caching M] [--scale F]
 //!          [--evict-policy P] [--dpu-cache-policy P]
-//!          [--prefetch-depth N] [--prefetch-scan N]
+//!          [--prefetch-policy Q] [--prefetch-depth N] [--prefetch-scan N]
 //!          [--max-batch-pages N] [--coalesce on|off]
 //!          [--config FILE] [--cluster-config FILE]
 //! soda config [--config FILE] [--evict-policy P] ...
@@ -71,13 +71,24 @@ fn soda_config_from_args(args: &Args) -> Result<SodaConfig> {
     }
     // Partial prefetch override: each flag sets only its own field; the
     // cluster's tuning fills whatever stays unset (merged at attach time).
-    if args.opt("prefetch-depth").is_some() || args.opt("prefetch-scan").is_some() {
+    if args.opt("prefetch-depth").is_some()
+        || args.opt("prefetch-scan").is_some()
+        || args.opt("prefetch-policy").is_some()
+    {
         let mut pf = cfg.prefetch.unwrap_or_default();
         if args.opt("prefetch-depth").is_some() {
             pf.depth = Some(args.opt_u64("prefetch-depth", 0));
         }
         if args.opt("prefetch-scan").is_some() {
             pf.max_per_scan = Some(args.opt_usize("prefetch-scan", 0));
+        }
+        if let Some(s) = args.opt("prefetch-policy") {
+            pf.policy = Some(soda::dpu::PrefetchPolicyKind::parse(s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown prefetch policy '{s}' \
+                     (off|sequential|strided|graph-hint|adaptive[:sequential|:strided|:graph-hint])"
+                )
+            })?);
         }
         cfg.prefetch = Some(pf);
     }
@@ -238,12 +249,15 @@ fn usage() -> &'static str {
      commands:\n\
        figures [--all | <id>...] [--scale F] [--threads N] [--json DIR]\n\
            regenerate paper tables/figures (table1 table2 fig3..fig11)\n\
-           plus ablations (abl-entry abl-prefetch abl-evict abl-qp abl-cache-policy abl-batch)\n\
+           plus ablations (abl-entry abl-prefetch abl-prefetch-depth abl-evict abl-qp\n\
+           abl-cache-policy abl-batch)\n\
        run <app> <graph> [--backend B] [--caching M] [--scale F] [--with-bg-bfs] [--json]\n\
-           [--evict-policy P] [--dpu-cache-policy P] [--prefetch-depth N] [--prefetch-scan N]\n\
+           [--evict-policy P] [--dpu-cache-policy P] [--prefetch-policy Q]\n\
+           [--prefetch-depth N] [--prefetch-scan N]\n\
            [--max-batch-pages N] [--coalesce on|off] [--config FILE] [--cluster-config FILE]\n\
            run one application on one graph and print metrics\n\
            (policies P: fault-fifo | access-lru | random | clock | slru;\n\
+            prefetch Q: off | sequential | strided | graph-hint | adaptive[:base];\n\
             --max-batch-pages 1 disables the batched fault engine)\n\
        config [--config FILE] [--evict-policy P] [--dpu-cache-policy P] ...\n\
            print the effective SodaConfig as JSON (the --config schema)\n\

@@ -62,6 +62,9 @@ pub type FxBuild = BuildHasherDefault<FxHasher>;
 /// `HashMap` with FxHash.
 pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuild>;
 
+/// `HashSet` with FxHash.
+pub type FxHashSet<T> = std::collections::HashSet<T, FxBuild>;
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -133,6 +133,10 @@ impl Workbench {
         cfg.dpu.prefetch = crate::dpu::PrefetchConfig {
             depth: 8,
             max_per_scan: 24,
+            // The cluster-wide default engine stays `sequential` (the
+            // paper's planner); runs opt into strided/graph-hint/adaptive
+            // via `SodaConfig::prefetch.policy` / `--prefetch-policy`.
+            policy: crate::dpu::PrefetchPolicyKind::Sequential,
         };
         cfg.dpu.timing = crate::dpu::DpuTiming {
             rx_ns: 120,

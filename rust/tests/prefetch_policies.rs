@@ -1,0 +1,256 @@
+//! Property test for the pluggable prefetch subsystem: prefetching is a
+//! *pure latency optimization* — for random workloads, every policy must
+//! leave all observable results identical to prefetch-off:
+//!
+//! * the bytes every read returns,
+//! * the final region contents,
+//! * the fault-visible ordering (the page-key sequence of the fault trace),
+//! * the host buffer's residency behavior (hits/misses/faults/zero-fills).
+//!
+//! Only stall/traffic/hit-rate counters may differ. On top of that, the
+//! cache table's prefetch accounting must sum exactly:
+//! `useful + wasted + still_resident == total prefetched entries`, at any
+//! point and under every engine.
+
+use soda::backend::{DpuStore, RemoteStore};
+use soda::coordinator::cluster::Cluster;
+use soda::coordinator::config::ClusterConfig;
+use soda::dpu::{DpuOpts, PrefetchPolicyKind};
+use soda::host::{HostAgent, HostTiming, PageKey, PageSpan, Placement};
+use soda::sim::rng::Rng;
+use soda::util::quickcheck::{forall, Config};
+
+const REGION_PAGES: u64 = 24;
+
+/// One random workload: interleaved span reads/writes over a file-backed
+/// and an anonymous region, with hint injections sprinkled in.
+#[derive(Clone, Debug)]
+struct Case {
+    buffer_pages: u64,
+    /// (use_anon_region, write, page_offset, byte_len)
+    ops: Vec<(bool, bool, u64, usize)>,
+    /// After which ops to inject a frontier hint, and its (start, pages).
+    hints: Vec<(usize, u64, u64)>,
+}
+
+fn gen_case(r: &mut Rng) -> Case {
+    let n_ops = 4 + r.index(10);
+    let ops = (0..n_ops)
+        .map(|_| {
+            let anon = r.chance(0.3);
+            let write = r.chance(0.3);
+            let start = r.below(REGION_PAGES - 1);
+            let len = 1 + r.index(((REGION_PAGES - start) * 4096) as usize);
+            (anon, write, start, len)
+        })
+        .collect();
+    let hints = (0..r.index(4))
+        .map(|_| {
+            let start = r.below(REGION_PAGES - 1);
+            (r.index(n_ops), start, 1 + r.below(REGION_PAGES - start))
+        })
+        .collect();
+    Case {
+        buffer_pages: 3 + r.below(12),
+        ops,
+        hints,
+    }
+}
+
+fn make_agent(policy: PrefetchPolicyKind, buffer_pages: u64) -> (HostAgent, Cluster) {
+    let mut cfg = ClusterConfig::tiny();
+    cfg.dpu.opts = DpuOpts::FULL;
+    cfg.dpu.prefetch.policy = policy;
+    let cluster = Cluster::build(cfg);
+    let chunk = cluster.config().chunk_bytes;
+    let store: Box<dyn RemoteStore> = Box::new(DpuStore::new(cluster.clone()));
+    let mut agent = HostAgent::new(
+        "prop",
+        store,
+        buffer_pages * chunk,
+        chunk,
+        0.9,
+        4,
+        4,
+        2,
+        HostTiming::default(),
+    );
+    agent.enable_trace();
+    (agent, cluster)
+}
+
+struct Observed {
+    outputs: Vec<Vec<u8>>,
+    trace_pages: Vec<PageKey>,
+    faults: u64,
+    zero_fills: u64,
+    writebacks: u64,
+    buf_hits: u64,
+    buf_misses: u64,
+    final_contents: Vec<Vec<u8>>,
+}
+
+fn run_case(case: &Case, policy: PrefetchPolicyKind) -> Observed {
+    let (mut a, cluster) = make_agent(policy, case.buffer_pages);
+    let chunk = a.chunk_bytes();
+    let bytes = REGION_PAGES * chunk;
+    let file: Vec<u8> = (0..bytes).map(|i| (i % 241) as u8).collect();
+    let (f, t0) = a.alloc(0, "file", bytes, Some(file), Placement::Default);
+    let (anon, t1) = a.alloc(t0, "anon", bytes, None, Placement::Default);
+    let mut t = t1;
+    let mut outputs = Vec::new();
+    for (i, &(use_anon, write, start_page, len)) in case.ops.iter().enumerate() {
+        let region = if use_anon { anon.region } else { f.region };
+        let off = start_page * chunk;
+        let len = len.min((bytes - off) as usize).max(1);
+        if write {
+            let data: Vec<u8> = (0..len).map(|j| ((i * 37 + j) % 239) as u8).collect();
+            t = a.write_bytes(t, 0, region, off, &data);
+        } else {
+            let mut out = vec![0u8; len];
+            t = a.read_bytes(t, 0, region, off, &mut out);
+            outputs.push(out);
+        }
+        for &(after, hstart, hpages) in &case.hints {
+            if after == i {
+                // Hints are advisory: posting one must never change any
+                // observable below, listening policy or not.
+                a.prefetch_hint(
+                    t,
+                    &[PageSpan {
+                        start: PageKey::new(f.region, hstart),
+                        pages: hpages,
+                    }],
+                );
+            }
+        }
+    }
+    let stats = a.stats();
+    let buf = a.buffer_stats();
+    // Cache-table accounting must sum exactly at any observation point.
+    let cs = cluster.dpu_cache_stats();
+    assert_eq!(
+        cs.insertions,
+        cs.prefetch_useful + cs.prefetch_wasted + cs.resident_untouched,
+        "{policy:?}: useful+wasted+resident must equal total prefetched entries"
+    );
+    // Full read-back of both regions (far in the future so everything in
+    // flight has landed).
+    let mut final_contents = Vec::new();
+    let mut t_end = t + 1_000_000_000;
+    for region in [f.region, anon.region] {
+        let mut all = vec![0u8; bytes as usize];
+        t_end = a.read_bytes(t_end, 0, region, 0, &mut all);
+        final_contents.push(all);
+    }
+    Observed {
+        outputs,
+        trace_pages: a.take_trace().into_iter().map(|(_, k)| k).collect(),
+        faults: stats.faults,
+        zero_fills: stats.zero_fills,
+        writebacks: stats.writebacks,
+        buf_hits: buf.hits,
+        buf_misses: buf.misses,
+        final_contents,
+    }
+}
+
+#[test]
+fn prefetching_never_changes_observable_results() {
+    forall(
+        Config { cases: 30, seed: 0x9F37C4 },
+        gen_case,
+        |case| {
+            let base = run_case(case, PrefetchPolicyKind::Off);
+            for policy in PrefetchPolicyKind::ALL {
+                let got = run_case(case, policy);
+                if got.outputs != base.outputs {
+                    return Err(format!("{policy:?}: read bytes diverged from prefetch-off"));
+                }
+                if got.final_contents != base.final_contents {
+                    return Err(format!("{policy:?}: final region contents diverged"));
+                }
+                if got.trace_pages != base.trace_pages {
+                    return Err(format!(
+                        "{policy:?}: fault-visible ordering diverged ({} vs {} faults)",
+                        got.trace_pages.len(),
+                        base.trace_pages.len()
+                    ));
+                }
+                if (got.faults, got.zero_fills, got.writebacks)
+                    != (base.faults, base.zero_fills, base.writebacks)
+                {
+                    return Err(format!("{policy:?}: host fault counters diverged"));
+                }
+                if (got.buf_hits, got.buf_misses) != (base.buf_hits, base.buf_misses) {
+                    return Err(format!("{policy:?}: buffer hit/miss counts diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The adaptive wrapped forms go through the same equivalence check (they
+/// share the throttling code path, which truncates issue lists and must
+/// never touch request handling).
+#[test]
+fn adaptive_wrapped_engines_are_observably_equivalent_too() {
+    use soda::dpu::AdaptiveBase;
+    forall(
+        Config { cases: 10, seed: 0xADA7 },
+        gen_case,
+        |case| {
+            let base = run_case(case, PrefetchPolicyKind::Off);
+            for policy in [
+                PrefetchPolicyKind::Adaptive(AdaptiveBase::Strided),
+                PrefetchPolicyKind::Adaptive(AdaptiveBase::GraphHint),
+            ] {
+                let got = run_case(case, policy);
+                if got.outputs != base.outputs || got.final_contents != base.final_contents {
+                    return Err(format!("{policy:?}: data diverged from prefetch-off"));
+                }
+                if got.trace_pages != base.trace_pages {
+                    return Err(format!("{policy:?}: fault ordering diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Graph-level determinism: the same BFS run twice on identical clusters
+/// (graph-hint policy, hints flowing) must produce bit-identical metrics —
+/// no wall-clock or RNG leakage into plans.
+#[test]
+fn graph_hint_runs_are_deterministic() {
+    use soda::coordinator::config::{BackendKind, CachingMode, PrefetchOverride};
+    use soda::graph::App;
+    use soda::workload::{ExperimentSpec, Workbench};
+    let run = || {
+        let mut wb = Workbench::new(0.0001);
+        wb.threads = 8;
+        wb.prefetch = Some(PrefetchOverride {
+            policy: Some(PrefetchPolicyKind::GraphHint),
+            ..PrefetchOverride::default()
+        });
+        let m = wb.run(&ExperimentSpec {
+            app: App::Bfs,
+            graph: "friendster",
+            backend: BackendKind::DPU_FULL,
+            caching: CachingMode::Dynamic,
+        });
+        (
+            m.elapsed_ns,
+            m.host.faults,
+            m.host.stall_ns,
+            m.host.hints_sent,
+            m.dpu.hint_entries,
+            m.dpu.dynamic_hits,
+            m.network_bytes(),
+            m.dpu_cache.prefetch_useful,
+            m.dpu_cache.prefetch_wasted_bytes,
+        )
+    };
+    assert_eq!(run(), run(), "identical runs must be bit-identical");
+}

@@ -10,12 +10,15 @@
 //! is what the multi-process experiments (§VI-B) exercise.
 
 use super::{FetchSource, RemoteStore};
-use crate::coordinator::cluster::Cluster;
+use crate::coordinator::cluster::{Cluster, ClusterInner};
 use crate::dpu::Source;
-use crate::fabric::protocol::{HintMessage, HintSpan, MAX_HINT_SPAN_PAGES, RPC_BYTES};
+use crate::fabric::protocol::{
+    HintMessage, HintSpan, MAX_HINT_SPAN_PAGES, RELIABILITY_HEADER_BYTES, RPC_BYTES,
+};
+use crate::fabric::reliable::{reliable_op, RetryExhausted, RETRY_BUDGET};
 use crate::fabric::verbs;
 use crate::host::buffer::{PageKey, PageSpan};
-use crate::memnode::RegionId;
+use crate::memnode::{MemError, RegionId};
 use crate::sim::link::TrafficClass;
 use crate::sim::Ns;
 
@@ -33,6 +36,73 @@ impl DpuStore {
         let chunk_bytes = cluster.config().chunk_bytes;
         DpuStore { cluster, chunk_bytes, hints_sent: 0 }
     }
+
+    /// One fetch under the reliability protocol. `budget = None` retries
+    /// until it completes (the standalone store must always serve);
+    /// `Some(n)` is the bounded path whose exhaustion trips the failover
+    /// circuit breaker. With faults disabled both collapse to the plain
+    /// single-attempt path at zero cost.
+    fn reliable_fetch(
+        &mut self,
+        now: Ns,
+        key: PageKey,
+        numa_node: usize,
+        out: &mut [u8],
+        budget: Option<u32>,
+    ) -> Result<(Ns, FetchSource), RetryExhausted> {
+        let chunk = self.chunk_bytes;
+        self.cluster.with(|inner| {
+            let ClusterInner { fabric, memnode, dpu, faults, .. } = &mut *inner;
+            // Static-cached region: host metadata routes a one-sided read
+            // directly against DPU DRAM (no request message, no DPU core).
+            // Local to the compute node, so memory-node faults cannot
+            // touch it.
+            if dpu.is_static(key.region) {
+                let off = key.byte_offset(chunk);
+                let done = dpu
+                    .static_read(fabric, now, key.region, off, numa_node, out)
+                    .expect("static region pinned");
+                return Ok((done, FetchSource::DpuStatic));
+            }
+            // Two-sided protocol: request lands in the DPU's shared RQ.
+            // The receiver dedups replays by sequence number, so retrying
+            // the whole request is safe.
+            let mut src = FetchSource::MemNode;
+            let done = reliable_op(faults, now, chunk + RELIABILITY_HEADER_BYTES, budget, |t| {
+                let arrive = verbs::two_sided_request(fabric, t, numa_node);
+                let outcome = dpu.handle_read(fabric, &memnode.store, arrive, key, numa_node, out);
+                src = match outcome.source {
+                    Source::DpuCache => FetchSource::DpuCache,
+                    Source::StaticCache => FetchSource::DpuStatic,
+                    Source::MemNode => FetchSource::MemNode,
+                };
+                outcome.host_done
+            })?;
+            Ok((done, src))
+        })
+    }
+
+    /// One writeback hand-off under the reliability protocol; a same-data
+    /// replay is idempotent on the memory node.
+    fn reliable_writeback(
+        &mut self,
+        now: Ns,
+        key: PageKey,
+        data: &[u8],
+        budget: Option<u32>,
+    ) -> Result<Ns, RetryExhausted> {
+        self.cluster.with(|inner| {
+            let ClusterInner { fabric, memnode, dpu, faults, .. } = &mut *inner;
+            reliable_op(faults, now, data.len() as u64 + RELIABILITY_HEADER_BYTES, budget, |t| {
+                // Host pushes header + data over PCIe and returns
+                // immediately; the DPU forwards to the memory node off the
+                // host's critical path (§III).
+                let arrive = verbs::two_sided_write_request(fabric, t, 2, data.len() as u64);
+                let _durable = dpu.handle_write(fabric, &mut memnode.store, arrive, key, data);
+                arrive
+            })
+        })
+    }
 }
 
 impl RemoteStore for DpuStore {
@@ -40,7 +110,12 @@ impl RemoteStore for DpuStore {
         "dpu"
     }
 
-    fn alloc(&mut self, now: Ns, bytes: u64, init: Option<Vec<u8>>) -> (RegionId, Ns) {
+    fn try_alloc(
+        &mut self,
+        now: Ns,
+        bytes: u64,
+        init: Option<Vec<u8>>,
+    ) -> Result<(RegionId, Ns), MemError> {
         self.cluster.with(|inner| {
             let t_rpc = inner.fabric.net_rpc(
                 now,
@@ -57,16 +132,15 @@ impl RemoteStore for DpuStore {
                     inner.memnode.reserve_file(t_rpc, data)
                 }
                 None => inner.memnode.reserve(t_rpc, padded),
-            }
-            .expect("memory node capacity");
+            }?;
             // The DPU agent mirrors the region metadata so it can compose
             // memory-node operations without asking the host.
             inner.dpu.register_region(region, padded);
-            (region, t_reserved)
+            Ok((region, t_reserved))
         })
     }
 
-    fn free(&mut self, now: Ns, region: RegionId) -> Ns {
+    fn try_free(&mut self, now: Ns, region: RegionId) -> Result<Ns, MemError> {
         self.cluster.with(|inner| {
             inner.dpu.unregister_region(region);
             let t_rpc = inner.fabric.net_rpc(
@@ -76,7 +150,7 @@ impl RemoteStore for DpuStore {
                 RPC_BYTES,
                 TrafficClass::Control,
             );
-            inner.memnode.free(t_rpc, region).expect("region exists")
+            inner.memnode.free(t_rpc, region)
         })
     }
 
@@ -87,34 +161,18 @@ impl RemoteStore for DpuStore {
         numa_node: usize,
         out: &mut [u8],
     ) -> (Ns, FetchSource) {
-        self.cluster.with(|inner| {
-            // Static-cached region: host metadata routes a one-sided read
-            // directly against DPU DRAM (no request message, no DPU core).
-            if inner.dpu.is_static(key.region) {
-                let off = key.byte_offset(self.chunk_bytes);
-                let done = inner
-                    .dpu
-                    .static_read(&mut inner.fabric, now, key.region, off, numa_node, out)
-                    .expect("static region pinned");
-                return (done, FetchSource::DpuStatic);
-            }
-            // Two-sided protocol: request lands in the DPU's shared RQ.
-            let arrive = verbs::two_sided_request(&mut inner.fabric, now, numa_node);
-            let outcome = inner.dpu.handle_read(
-                &mut inner.fabric,
-                &inner.memnode.store,
-                arrive,
-                key,
-                numa_node,
-                out,
-            );
-            let source = match outcome.source {
-                Source::DpuCache => FetchSource::DpuCache,
-                Source::StaticCache => FetchSource::DpuStatic,
-                Source::MemNode => FetchSource::MemNode,
-            };
-            (outcome.host_done, source)
-        })
+        self.reliable_fetch(now, key, numa_node, out, None)
+            .expect("unbounded retry always completes")
+    }
+
+    fn try_fetch(
+        &mut self,
+        now: Ns,
+        key: PageKey,
+        numa_node: usize,
+        out: &mut [u8],
+    ) -> Result<(Ns, FetchSource), RetryExhausted> {
+        self.reliable_fetch(now, key, numa_node, out, Some(RETRY_BUDGET))
     }
 
     /// Batched two-sided path: all span descriptors travel to the DPU as
@@ -131,6 +189,24 @@ impl RemoteStore for DpuStore {
     ) -> Vec<(Ns, FetchSource)> {
         let chunk = self.chunk_bytes;
         let total: u64 = spans.iter().map(|s| s.pages).sum();
+        if self.cluster.with(|i| i.faults.enabled()) {
+            // Under fault injection each page transfer must be its own
+            // retry unit — a lost span completion would otherwise replay
+            // the whole batch — so chaos runs chain the per-page path.
+            let mut res = Vec::with_capacity(total as usize);
+            let mut t = now;
+            let mut off = 0usize;
+            for s in spans {
+                for i in 0..s.pages {
+                    let (done, src) =
+                        self.fetch(t, s.key_at(i), numa_node, &mut out[off..off + chunk as usize]);
+                    t = done;
+                    off += chunk as usize;
+                    res.push((done, src));
+                }
+            }
+            return res;
+        }
         self.cluster.with(|inner| {
             let mut res: Vec<(Ns, FetchSource)> =
                 vec![(now, FetchSource::MemNode); total as usize];
@@ -250,18 +326,12 @@ impl RemoteStore for DpuStore {
     }
 
     fn writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Ns {
-        self.cluster.with(|inner| {
-            // Host pushes header + data over PCIe and returns immediately;
-            // the DPU forwards to the memory node off the host's critical
-            // path (§III).
-            let arrive =
-                verbs::two_sided_write_request(&mut inner.fabric, now, 2, data.len() as u64);
-            let _durable =
-                inner
-                    .dpu
-                    .handle_write(&mut inner.fabric, &mut inner.memnode.store, arrive, key, data);
-            arrive
-        })
+        self.reliable_writeback(now, key, data, None)
+            .expect("unbounded retry always completes")
+    }
+
+    fn try_writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Result<Ns, RetryExhausted> {
+        self.reliable_writeback(now, key, data, Some(RETRY_BUDGET))
     }
 
     fn pin_static(&mut self, now: Ns, region: RegionId) -> Option<Ns> {

@@ -1,0 +1,291 @@
+//! Memory-node failover — a circuit breaker over the DPU path.
+//!
+//! Chaos runs wrap [`DpuStore`] in this store: every fetch/writeback first
+//! tries the DPU path with a *bounded* retry budget
+//! ([`crate::fabric::reliable::RETRY_BUDGET`]). Exhausting the budget —
+//! persistent drops or a memory-node crash window — trips the breaker and
+//! the request fails over to the direct memory-server path, which retries
+//! without a budget (slower, never wrong). While the breaker is open,
+//! requests skip the doomed DPU attempts entirely; after [`REPROBE_NS`]
+//! the next request probes the DPU path again and, on success, closes the
+//! breaker.
+//!
+//! Static-cached regions always route to the DPU: they are served from
+//! DPU DRAM on the *compute* node, so a memory-node fault cannot touch
+//! them and failing them over would only add network traffic.
+
+use super::{FetchSource, RemoteStore};
+use crate::backend::{DpuStore, MemServerStore};
+use crate::coordinator::cluster::Cluster;
+use crate::fabric::reliable::RetryExhausted;
+use crate::host::buffer::{PageKey, PageSpan};
+use crate::memnode::{MemError, RegionId};
+use crate::sim::Ns;
+
+/// How long the breaker stays open before the next request re-probes the
+/// DPU path (virtual ns). Long enough to skip a typical fault burst,
+/// short against any crash window worth failing over for.
+pub const REPROBE_NS: Ns = 1_000_000;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Breaker {
+    /// DPU path healthy; requests go primary-first.
+    Closed,
+    /// DPU path failed; serve from the fallback until `until`, then probe.
+    Open { until: Ns },
+}
+
+/// DPU-primary store with direct-path failover.
+#[derive(Clone, Debug)]
+pub struct FailoverStore {
+    primary: DpuStore,
+    fallback: MemServerStore,
+    cluster: Cluster,
+    state: Breaker,
+}
+
+impl FailoverStore {
+    pub fn new(cluster: Cluster) -> Self {
+        FailoverStore {
+            primary: DpuStore::new(cluster.clone()),
+            fallback: MemServerStore::new(cluster.clone()),
+            cluster,
+            state: Breaker::Closed,
+        }
+    }
+
+    /// Is the breaker currently open (requests routed to the fallback)?
+    pub fn is_open(&self) -> bool {
+        matches!(self.state, Breaker::Open { .. })
+    }
+
+    /// Should this request skip the primary without probing it?
+    fn bypass_primary(&self, now: Ns) -> bool {
+        matches!(self.state, Breaker::Open { until } if now < until)
+    }
+
+    fn trip(&mut self, now: Ns) {
+        self.cluster.with(|i| i.faults.stats.failovers += 1);
+        self.state = Breaker::Open { until: now + REPROBE_NS };
+    }
+
+    fn note_primary_ok(&mut self) {
+        if self.is_open() {
+            self.cluster.with(|i| i.faults.stats.recoveries += 1);
+            self.state = Breaker::Closed;
+        }
+    }
+}
+
+impl RemoteStore for FailoverStore {
+    fn name(&self) -> &'static str {
+        "dpu+failover"
+    }
+
+    fn try_alloc(
+        &mut self,
+        now: Ns,
+        bytes: u64,
+        init: Option<Vec<u8>>,
+    ) -> Result<(RegionId, Ns), MemError> {
+        // Control plane goes through the primary so the DPU mirrors the
+        // region metadata; the fallback reads the same memory-node store.
+        self.primary.try_alloc(now, bytes, init)
+    }
+
+    fn try_free(&mut self, now: Ns, region: RegionId) -> Result<Ns, MemError> {
+        self.primary.try_free(now, region)
+    }
+
+    fn fetch(
+        &mut self,
+        now: Ns,
+        key: PageKey,
+        numa_node: usize,
+        out: &mut [u8],
+    ) -> (Ns, FetchSource) {
+        if self.primary.is_static(key.region) {
+            return self.primary.fetch(now, key, numa_node, out);
+        }
+        if self.bypass_primary(now) {
+            return self.fallback.fetch(now, key, numa_node, out);
+        }
+        match self.primary.try_fetch(now, key, numa_node, out) {
+            Ok(r) => {
+                self.note_primary_ok();
+                r
+            }
+            Err(RetryExhausted) => {
+                self.trip(now);
+                self.fallback.fetch(now, key, numa_node, out)
+            }
+        }
+    }
+
+    /// Chaos batches chain the per-request failover path so every page
+    /// gets the breaker's routing decision individually.
+    fn fetch_batch(
+        &mut self,
+        now: Ns,
+        spans: &[PageSpan],
+        numa_node: usize,
+        out: &mut [u8],
+    ) -> Vec<(Ns, FetchSource)> {
+        let total: u64 = spans.iter().map(|s| s.pages).sum();
+        assert!(total > 0, "empty fetch batch");
+        let chunk = (out.len() as u64 / total) as usize;
+        let mut res = Vec::with_capacity(total as usize);
+        let mut t = now;
+        let mut off = 0usize;
+        for s in spans {
+            for i in 0..s.pages {
+                let (done, src) = self.fetch(t, s.key_at(i), numa_node, &mut out[off..off + chunk]);
+                t = done;
+                off += chunk;
+                res.push((done, src));
+            }
+        }
+        res
+    }
+
+    fn wants_prefetch_hints(&self) -> bool {
+        self.primary.wants_prefetch_hints()
+    }
+
+    fn prefetch_hint(&mut self, now: Ns, spans: &[PageSpan], numa_node: usize) -> Option<Ns> {
+        if self.is_open() {
+            // No point staging pages into a cache nobody is reading from.
+            return None;
+        }
+        self.primary.prefetch_hint(now, spans, numa_node)
+    }
+
+    fn writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Ns {
+        if self.bypass_primary(now) {
+            return self.fallback.writeback(now, key, data);
+        }
+        match self.primary.try_writeback(now, key, data) {
+            Ok(t) => {
+                self.note_primary_ok();
+                t
+            }
+            Err(RetryExhausted) => {
+                self.trip(now);
+                self.fallback.writeback(now, key, data)
+            }
+        }
+    }
+
+    fn pin_static(&mut self, now: Ns, region: RegionId) -> Option<Ns> {
+        self.primary.pin_static(now, region)
+    }
+
+    fn is_static(&self, region: RegionId) -> bool {
+        self.primary.is_static(region)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::ClusterConfig;
+    use crate::sim::fault::FaultConfig;
+
+    fn crashy_cluster(crash_len_ns: Ns) -> Cluster {
+        let mut cfg = ClusterConfig::tiny();
+        cfg.fault = FaultConfig {
+            crash_start_ns: 0,
+            crash_len_ns,
+            seed: 42,
+            ..FaultConfig::default()
+        };
+        Cluster::build(cfg)
+    }
+
+    #[test]
+    fn crash_window_trips_breaker_then_recovers() {
+        // One-shot crash window long enough to exhaust the DPU budget.
+        let cluster = crashy_cluster(400_000);
+        let mut s = FailoverStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let (region, _) = s.alloc(0, 4 * chunk, Some(vec![7u8; (4 * chunk) as usize]));
+        let mut out = vec![0u8; chunk as usize];
+        // Fetch lands inside the crash window: DPU budget exhausts, the
+        // breaker trips, and the direct path waits the window out.
+        let (done, src) = s.fetch(0, PageKey::new(region, 1), 2, &mut out);
+        assert_eq!(src, FetchSource::MemNode);
+        assert!(out.iter().all(|&b| b == 7), "failover must serve correct data");
+        assert!(done > 400_000, "direct path had to wait out the crash");
+        assert!(s.is_open());
+        let st = cluster.fault_stats();
+        assert_eq!(st.failovers, 1);
+        assert_eq!(st.exhaustions, 1);
+        assert!(st.crash_rejections > 0);
+        // Well past the reprobe interval the primary is probed, succeeds,
+        // and the breaker closes.
+        let (_, _) = s.fetch(done + REPROBE_NS, PageKey::new(region, 2), 2, &mut out);
+        assert!(!s.is_open());
+        assert_eq!(cluster.fault_stats().recoveries, 1);
+    }
+
+    #[test]
+    fn open_breaker_bypasses_primary_until_reprobe() {
+        let cluster = crashy_cluster(400_000);
+        let mut s = FailoverStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let (region, _) = s.alloc(0, 4 * chunk, Some(vec![1u8; (4 * chunk) as usize]));
+        let mut out = vec![0u8; chunk as usize];
+        let (done, _) = s.fetch(0, PageKey::new(region, 0), 2, &mut out);
+        assert!(s.is_open());
+        let dpu_reads = cluster.dpu_stats().reads;
+        // Inside the open window the DPU is never asked.
+        let probe_at = done + 1; // still < done + REPROBE_NS
+        s.fetch(probe_at, PageKey::new(region, 1), 2, &mut out);
+        assert_eq!(cluster.dpu_stats().reads, dpu_reads, "open breaker skips the DPU");
+        assert_eq!(cluster.fault_stats().failovers, 1, "no second trip while open");
+    }
+
+    #[test]
+    fn static_regions_ride_out_memory_node_crashes() {
+        let cluster = crashy_cluster(50_000_000);
+        let mut s = FailoverStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let (region, t0) = s.alloc(0, 4 * chunk, Some(vec![9u8; (4 * chunk) as usize]));
+        let t_pin = s.pin_static(t0, region).expect("fits in static cache");
+        let mut out = vec![0u8; chunk as usize];
+        // Deep inside the crash window, DPU DRAM still serves instantly.
+        let (done, src) = s.fetch(t_pin, PageKey::new(region, 1), 2, &mut out);
+        assert_eq!(src, FetchSource::DpuStatic);
+        assert!(out.iter().all(|&b| b == 9));
+        assert!(done < t_pin + 1_000_000, "static serve must not stall on the crash");
+        assert!(!s.is_open(), "static traffic never trips the breaker");
+    }
+
+    #[test]
+    fn writeback_fails_over_and_stays_durable() {
+        let cluster = crashy_cluster(400_000);
+        let mut s = FailoverStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let (region, _) = s.alloc(0, 2 * chunk, None);
+        let data = vec![0xCD; chunk as usize];
+        let released = s.writeback(0, PageKey::new(region, 0), &data);
+        assert!(s.is_open());
+        assert_eq!(cluster.fault_stats().failovers, 1);
+        let mut out = vec![0u8; chunk as usize];
+        let (_, _) = s.fetch(released + 10 * REPROBE_NS, PageKey::new(region, 0), 2, &mut out);
+        assert!(out.iter().all(|&b| b == 0xCD), "data survived the failover");
+    }
+
+    #[test]
+    fn fault_free_cluster_never_trips() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let mut s = FailoverStore::new(cluster.clone());
+        let chunk = cluster.config().chunk_bytes;
+        let (region, t0) = s.alloc(0, 2 * chunk, Some(vec![4u8; (2 * chunk) as usize]));
+        let mut out = vec![0u8; chunk as usize];
+        let (_, src) = s.fetch(t0, PageKey::new(region, 0), 2, &mut out);
+        assert_eq!(src, FetchSource::MemNode);
+        assert!(!s.is_open());
+        assert_eq!(cluster.fault_stats().injected(), 0);
+    }
+}

@@ -8,10 +8,11 @@
 //! offload.
 
 use super::{FetchSource, RemoteStore};
-use crate::coordinator::cluster::Cluster;
-use crate::fabric::protocol::RPC_BYTES;
+use crate::coordinator::cluster::{Cluster, ClusterInner};
+use crate::fabric::protocol::{RELIABILITY_HEADER_BYTES, RPC_BYTES};
+use crate::fabric::reliable::reliable_op;
 use crate::host::buffer::{PageKey, PageSpan};
-use crate::memnode::RegionId;
+use crate::memnode::{MemError, RegionId};
 use crate::sim::link::TrafficClass;
 use crate::sim::Ns;
 
@@ -34,32 +35,36 @@ impl RemoteStore for MemServerStore {
         "memserver"
     }
 
-    fn alloc(&mut self, now: Ns, bytes: u64, init: Option<Vec<u8>>) -> (RegionId, Ns) {
+    fn try_alloc(
+        &mut self,
+        now: Ns,
+        bytes: u64,
+        init: Option<Vec<u8>>,
+    ) -> Result<(RegionId, Ns), MemError> {
         self.cluster.with(|inner| {
-            // Control-plane RPC to the memory agent.
+            // Control-plane RPC to the memory agent. Charged even when the
+            // node refuses: the round trip happened either way.
             let t_rpc = inner
                 .fabric
                 .net_rpc(now, RPC_BYTES, inner.memnode.cfg.rpc_service_ns, RPC_BYTES, TrafficClass::Control);
             // Regions are chunk-aligned so every page fetch is full-sized.
             let padded = bytes.div_ceil(self.chunk_bytes) * self.chunk_bytes;
-            let (region, t_reserved) = match init {
+            match init {
                 Some(mut data) => {
                     data.resize(padded as usize, 0);
                     inner.memnode.reserve_file(t_rpc, data)
                 }
                 None => inner.memnode.reserve(t_rpc, padded),
             }
-            .expect("memory node capacity");
-            (region, t_reserved)
         })
     }
 
-    fn free(&mut self, now: Ns, region: RegionId) -> Ns {
+    fn try_free(&mut self, now: Ns, region: RegionId) -> Result<Ns, MemError> {
         self.cluster.with(|inner| {
             let t_rpc = inner
                 .fabric
                 .net_rpc(now, RPC_BYTES, inner.memnode.cfg.rpc_service_ns, RPC_BYTES, TrafficClass::Control);
-            inner.memnode.free(t_rpc, region).expect("region exists")
+            inner.memnode.free(t_rpc, region)
         })
     }
 
@@ -71,16 +76,20 @@ impl RemoteStore for MemServerStore {
         out: &mut [u8],
     ) -> (Ns, FetchSource) {
         let off = key.byte_offset(self.chunk_bytes);
+        let bytes = out.len() as u64;
         let done = self.cluster.with(|inner| {
-            inner
-                .memnode
+            let ClusterInner { fabric, memnode, faults, .. } = &mut *inner;
+            memnode
                 .store
                 .read(key.region, off, out)
                 .expect("page within region");
-            // One-sided READ: memory node CPU is not involved.
-            inner
-                .fabric
-                .net_read(now, out.len() as u64, numa_node, TrafficClass::OnDemand)
+            // One-sided READ: memory node CPU is not involved. Idempotent,
+            // so the reliability layer may replay it without a budget —
+            // this is the last-resort path and must always complete.
+            reliable_op(faults, now, bytes + RELIABILITY_HEADER_BYTES, None, |t| {
+                fabric.net_read(t, bytes, numa_node, TrafficClass::OnDemand)
+            })
+            .expect("unbounded retry always completes")
         });
         (done, FetchSource::MemNode)
     }
@@ -98,19 +107,22 @@ impl RemoteStore for MemServerStore {
     ) -> Vec<(Ns, FetchSource)> {
         let chunk = self.chunk_bytes;
         self.cluster.with(|inner| {
+            let ClusterInner { fabric, memnode, faults, .. } = &mut *inner;
             let mut res = Vec::new();
             let mut off = 0usize;
             for s in spans {
                 let bytes = s.bytes(chunk) as usize;
-                inner
-                    .memnode
+                memnode
                     .store
                     .read(s.start.region, s.byte_offset(chunk), &mut out[off..off + bytes])
                     .expect("span within region");
+                // Each coalesced span is one wire message, so it is the
+                // unit the fault plan drops/corrupts and the unit retried.
                 let done =
-                    inner
-                        .fabric
-                        .net_read(now, bytes as u64, numa_node, TrafficClass::OnDemand);
+                    reliable_op(faults, now, bytes as u64 + RELIABILITY_HEADER_BYTES, None, |t| {
+                        fabric.net_read(t, bytes as u64, numa_node, TrafficClass::OnDemand)
+                    })
+                    .expect("unbounded retry always completes");
                 res.extend(std::iter::repeat((done, FetchSource::MemNode)).take(s.pages as usize));
                 off += bytes;
             }
@@ -120,16 +132,18 @@ impl RemoteStore for MemServerStore {
 
     fn writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Ns {
         let off = key.byte_offset(self.chunk_bytes);
-        // Synchronous until the data reaches the memory node (§III).
+        // Synchronous until the data reaches the memory node (§III). A
+        // same-data replay is idempotent, so unbounded retry is safe.
         self.cluster.with(|inner| {
-            inner
-                .memnode
+            let ClusterInner { fabric, memnode, faults, .. } = &mut *inner;
+            memnode
                 .store
                 .write(key.region, off, data)
                 .expect("page within region");
-            inner
-                .fabric
-                .net_write(now, data.len() as u64, 2, TrafficClass::Writeback)
+            reliable_op(faults, now, data.len() as u64 + RELIABILITY_HEADER_BYTES, None, |t| {
+                fabric.net_write(t, data.len() as u64, 2, TrafficClass::Writeback)
+            })
+            .expect("unbounded retry always completes")
         })
     }
 }

@@ -14,15 +14,18 @@
 //! with buffer management into the fault path.
 
 pub mod dpu_store;
+pub mod failover;
 pub mod memserver;
 pub mod ssd_store;
 
 pub use dpu_store::DpuStore;
+pub use failover::FailoverStore;
 pub use memserver::MemServerStore;
 pub use ssd_store::SsdStore;
 
+use crate::fabric::reliable::RetryExhausted;
 use crate::host::buffer::{PageKey, PageSpan};
-use crate::memnode::RegionId;
+use crate::memnode::{MemError, RegionId};
 use crate::sim::Ns;
 
 /// Where a fetched page was served from (metrics / figure accounting).
@@ -56,16 +59,50 @@ pub trait RemoteStore {
     fn name(&self) -> &'static str;
 
     /// Reserve a region of `bytes`, optionally pre-loaded with `init` data
-    /// (the file-backed `SODA_alloc` mode). Returns `(region, completion)`.
-    fn alloc(&mut self, now: Ns, bytes: u64, init: Option<Vec<u8>>) -> (RegionId, Ns);
+    /// (the file-backed `SODA_alloc` mode). Returns `(region, completion)`
+    /// or the memory node's structured refusal (e.g.
+    /// [`MemError::OutOfCapacity`]) — never panics on a full node.
+    fn try_alloc(
+        &mut self,
+        now: Ns,
+        bytes: u64,
+        init: Option<Vec<u8>>,
+    ) -> Result<(RegionId, Ns), MemError>;
 
-    /// Release a region.
-    fn free(&mut self, now: Ns, region: RegionId) -> Ns;
+    /// Infallible convenience wrapper around [`Self::try_alloc`] for
+    /// callers that treat allocation failure as a programming error.
+    fn alloc(&mut self, now: Ns, bytes: u64, init: Option<Vec<u8>>) -> (RegionId, Ns) {
+        self.try_alloc(now, bytes, init).expect("region allocation")
+    }
+
+    /// Release a region; [`MemError::NoSuchRegion`] on a stale handle.
+    fn try_free(&mut self, now: Ns, region: RegionId) -> Result<Ns, MemError>;
+
+    /// Infallible convenience wrapper around [`Self::try_free`].
+    fn free(&mut self, now: Ns, region: RegionId) -> Ns {
+        self.try_free(now, region).expect("region exists")
+    }
 
     /// Fetch the page into `out` (len = chunk size), host buffer on NUMA
     /// node `numa_node`. Returns `(data-available time, source)`.
     fn fetch(&mut self, now: Ns, key: PageKey, numa_node: usize, out: &mut [u8])
         -> (Ns, FetchSource);
+
+    /// Fetch with a *bounded* retry budget under fault injection.
+    /// `Err(RetryExhausted)` means the budget ran out and the page was not
+    /// served — the caller (the failover circuit breaker) must route the
+    /// request elsewhere. Backends without a bounded path (direct stores,
+    /// SSD) never exhaust, so the default simply delegates to
+    /// [`Self::fetch`].
+    fn try_fetch(
+        &mut self,
+        now: Ns,
+        key: PageKey,
+        numa_node: usize,
+        out: &mut [u8],
+    ) -> Result<(Ns, FetchSource), RetryExhausted> {
+        Ok(self.fetch(now, key, numa_node, out))
+    }
 
     /// Batched fetch: the host posted every span at `now` with a single
     /// doorbell, so the backend may overlap the spans' round trips and
@@ -126,6 +163,15 @@ pub trait RemoteStore {
     /// (offloaded stores release at hand-off; direct stores block until the
     /// data is durable — §III's synchronous-eviction contrast).
     fn writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Ns;
+
+    /// Writeback with a *bounded* retry budget under fault injection.
+    /// `Err(RetryExhausted)` means the page is **not** durable — the host
+    /// must re-mark it dirty and requeue it rather than drop the data.
+    /// Defaults to the infallible path for backends without a bounded
+    /// budget.
+    fn try_writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Result<Ns, RetryExhausted> {
+        Ok(self.writeback(now, key, data))
+    }
 
     /// Ask to pin a region in the DPU static cache; `None` if this backend
     /// has no DPU. Returns load completion time on success.

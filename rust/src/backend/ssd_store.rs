@@ -9,7 +9,7 @@
 use super::{FetchSource, RemoteStore};
 use crate::coordinator::cluster::Cluster;
 use crate::host::buffer::{PageKey, PageSpan};
-use crate::memnode::RegionId;
+use crate::memnode::{MemError, RegionId};
 use crate::sim::Ns;
 
 /// SSD-backed remote store.
@@ -31,7 +31,12 @@ impl RemoteStore for SsdStore {
         "ssd"
     }
 
-    fn alloc(&mut self, now: Ns, bytes: u64, init: Option<Vec<u8>>) -> (RegionId, Ns) {
+    fn try_alloc(
+        &mut self,
+        now: Ns,
+        bytes: u64,
+        init: Option<Vec<u8>>,
+    ) -> Result<(RegionId, Ns), MemError> {
         // Regions are chunk-aligned so every page fetch is full-sized.
         let padded = bytes.div_ceil(self.chunk_bytes) * self.chunk_bytes;
         self.cluster.with(|inner| {
@@ -41,17 +46,16 @@ impl RemoteStore for SsdStore {
                     inner.ssd.create_region_with_data(data)
                 }
                 None => inner.ssd.create_region(padded),
-            }
-            .expect("ssd capacity");
+            }?;
             // Creating the backing file costs a metadata write.
-            (region, now + inner.ssd.cfg.write_latency_ns)
+            Ok((region, now + inner.ssd.cfg.write_latency_ns))
         })
     }
 
-    fn free(&mut self, now: Ns, region: RegionId) -> Ns {
+    fn try_free(&mut self, now: Ns, region: RegionId) -> Result<Ns, MemError> {
         self.cluster.with(|inner| {
-            inner.ssd.store.free(region).expect("region exists");
-            now
+            inner.ssd.store.free(region)?;
+            Ok(now)
         })
     }
 

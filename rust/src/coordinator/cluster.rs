@@ -11,6 +11,7 @@ use super::config::ClusterConfig;
 use crate::dpu::DpuAgent;
 use crate::fabric::Fabric;
 use crate::memnode::MemoryNode;
+use crate::sim::fault::{FaultPlan, FaultStats};
 use crate::ssd::SsdDevice;
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -22,6 +23,9 @@ pub struct ClusterInner {
     pub memnode: MemoryNode,
     pub dpu: DpuAgent,
     pub ssd: SsdDevice,
+    /// Seeded fault-injection stream + event ledger shared by every agent
+    /// attached to this cluster (disabled by default).
+    pub faults: FaultPlan,
 }
 
 /// Handle to the simulated cluster (cheaply cloneable).
@@ -39,6 +43,7 @@ impl Cluster {
             memnode: MemoryNode::new(cfg.memnode.clone()),
             dpu: DpuAgent::new(cfg.dpu.clone()),
             ssd: SsdDevice::new(cfg.ssd.clone()),
+            faults: FaultPlan::from_config(cfg.fault),
         };
         Cluster {
             inner: Rc::new(RefCell::new(inner)),
@@ -63,6 +68,13 @@ impl Cluster {
     /// Reset all traffic counters (between experiment phases).
     pub fn reset_stats(&self) {
         self.inner.borrow_mut().fabric.reset_stats();
+    }
+
+    /// Fault-injection ledger snapshot. Deliberately *not* cleared by
+    /// [`Self::reset_stats`]: the chaos balance invariants must hold over
+    /// the whole run, graph-staging phase included.
+    pub fn fault_stats(&self) -> FaultStats {
+        self.inner.borrow().faults.stats
     }
 
     /// DPU statistics snapshot.

@@ -15,6 +15,7 @@ use crate::dpu::{DpuConfig, DpuOpts, PrefetchConfig, PrefetchPolicyKind};
 use crate::fabric::FabricConfig;
 use crate::host::agent::HostTiming;
 use crate::memnode::MemNodeConfig;
+use crate::sim::fault::FaultConfig;
 use crate::ssd::SsdConfig;
 use crate::util::json::{Json, ToJson};
 
@@ -50,6 +51,65 @@ fn want_prefetch_policy(v: &Json, what: &str) -> Result<PrefetchPolicyKind, Stri
         .ok_or_else(|| format!("{what}: unknown prefetch policy '{s}'"))
 }
 
+fn want_rate(v: &Json, what: &str) -> Result<f64, String> {
+    let r = want_f64(v, what)?;
+    if !(0.0..=1.0).contains(&r) {
+        return Err(format!("{what} must be within 0.0..=1.0, got {r}"));
+    }
+    Ok(r)
+}
+
+/// Apply a JSON fault block onto `f`. Shared by the cluster-side
+/// `ClusterConfig::apply_json` and the run-side `SodaConfig` override so
+/// both speak the same schema.
+fn apply_fault_json(f: &mut FaultConfig, v: &Json, prefix: &str) -> Result<(), String> {
+    if !matches!(v, Json::Obj(_)) {
+        return Err(format!("{prefix} must be an object (see `soda config`) or null"));
+    }
+    if let Some(x) = v.get("drop_rate") {
+        f.drop_rate = want_rate(x, &format!("{prefix}.drop_rate"))?;
+    }
+    if let Some(x) = v.get("corrupt_rate") {
+        f.corrupt_rate = want_rate(x, &format!("{prefix}.corrupt_rate"))?;
+    }
+    if let Some(x) = v.get("dup_rate") {
+        f.dup_rate = want_rate(x, &format!("{prefix}.dup_rate"))?;
+    }
+    if let Some(x) = v.get("spike_rate") {
+        f.spike_rate = want_rate(x, &format!("{prefix}.spike_rate"))?;
+    }
+    if let Some(x) = v.get("spike_ns") {
+        f.spike_ns = want_u64(x, &format!("{prefix}.spike_ns"))?;
+    }
+    if let Some(x) = v.get("crash_start_ns") {
+        f.crash_start_ns = want_u64(x, &format!("{prefix}.crash_start_ns"))?;
+    }
+    if let Some(x) = v.get("crash_len_ns") {
+        f.crash_len_ns = want_u64(x, &format!("{prefix}.crash_len_ns"))?;
+    }
+    if let Some(x) = v.get("crash_every_ns") {
+        f.crash_every_ns = want_u64(x, &format!("{prefix}.crash_every_ns"))?;
+    }
+    if let Some(x) = v.get("seed") {
+        f.seed = want_u64(x, &format!("{prefix}.seed"))?;
+    }
+    Ok(())
+}
+
+fn fault_to_json(f: &FaultConfig) -> Json {
+    Json::obj([
+        ("drop_rate", f.drop_rate.into()),
+        ("corrupt_rate", f.corrupt_rate.into()),
+        ("dup_rate", f.dup_rate.into()),
+        ("spike_rate", f.spike_rate.into()),
+        ("spike_ns", f.spike_ns.into()),
+        ("crash_start_ns", f.crash_start_ns.into()),
+        ("crash_len_ns", f.crash_len_ns.into()),
+        ("crash_every_ns", f.crash_every_ns.into()),
+        ("seed", f.seed.into()),
+    ])
+}
+
 /// Simulated hardware description. Memory budgets default to a 1/64 scale
 /// of the testbed (256 GB memory node, 16 GB host cgroup, 16 GB DPU with
 /// 1 GB cache budget) to keep simulated workloads laptop-sized while
@@ -66,6 +126,8 @@ pub struct ClusterConfig {
     pub chunk_bytes: u64,
     /// Deterministic seed for all stochastic components.
     pub seed: u64,
+    /// Fault-injection plan (chaos testing; all-zero = disabled).
+    pub fault: FaultConfig,
 }
 
 impl Default for ClusterConfig {
@@ -88,6 +150,7 @@ impl Default for ClusterConfig {
             host_mem_bytes: 256 << 20, // 16 GB / 64
             chunk_bytes,
             seed: 0x50DA_2024,
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -134,7 +197,10 @@ impl ClusterConfig {
     /// `chunk_bytes`, `host_mem_bytes`, `seed`, and under `dpu`:
     /// `dynamic_cache_bytes`, `cache_entry_bytes`, `static_cache_bytes`,
     /// `cores`, `max_batch`, `cache_policy`, `prefetch.{depth,
-    /// max_per_scan}`. Call [`Self::normalized`] afterwards.
+    /// max_per_scan}`, plus a `fault` block (`drop_rate`, `corrupt_rate`,
+    /// `dup_rate`, `spike_rate`, `spike_ns`, `crash_start_ns`,
+    /// `crash_len_ns`, `crash_every_ns`, `seed`). Call
+    /// [`Self::normalized`] afterwards.
     pub fn apply_json(&mut self, v: &Json) -> Result<(), String> {
         if let Some(x) = v.get("chunk_bytes") {
             let bytes = want_u64(x, "chunk_bytes")?;
@@ -184,6 +250,9 @@ impl ClusterConfig {
                     self.dpu.prefetch.policy = want_prefetch_policy(x, "dpu.prefetch.policy")?;
                 }
             }
+        }
+        if let Some(x) = v.get("fault") {
+            apply_fault_json(&mut self.fault, x, "fault")?;
         }
         Ok(())
     }
@@ -366,6 +435,9 @@ pub struct SodaConfig {
     /// `DpuConfig::prefetch`, and unset fields of a `Some` keep the
     /// cluster's value for that field.
     pub prefetch: Option<PrefetchOverride>,
+    /// Fault-injection override applied to the cluster at attach time
+    /// (`--fault-*` flags); `None` keeps the cluster's `fault` plan.
+    pub fault: Option<FaultConfig>,
 }
 
 impl Default for SodaConfig {
@@ -384,6 +456,7 @@ impl Default for SodaConfig {
             evict_policy: PolicyKind::FaultFifo,
             dpu_cache_policy: None,
             prefetch: None,
+            fault: None,
         }
     }
 }
@@ -516,6 +589,14 @@ impl SodaConfig {
                 cfg.prefetch = Some(pf);
             }
         }
+        match v.get("fault") {
+            None | Some(Json::Null) => {}
+            Some(x) => {
+                let mut f = cfg.fault.unwrap_or_default();
+                apply_fault_json(&mut f, x, "fault")?;
+                cfg.fault = Some(f);
+            }
+        }
         Ok(cfg)
     }
 }
@@ -563,6 +644,13 @@ impl ToJson for SodaConfig {
                             p.policy.map(|k| Json::from(k.name())).unwrap_or(Json::Null),
                         ),
                     ]),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "fault",
+                match &self.fault {
+                    Some(f) => fault_to_json(f),
                     None => Json::Null,
                 },
             ),
@@ -701,6 +789,17 @@ mod tests {
                 max_per_scan: Some(17),
                 policy: Some(PrefetchPolicyKind::GraphHint),
             }),
+            fault: Some(FaultConfig {
+                drop_rate: 0.02,
+                corrupt_rate: 0.01,
+                dup_rate: 0.005,
+                spike_rate: 0.1,
+                spike_ns: 40_000,
+                crash_start_ns: 1_000_000,
+                crash_len_ns: 250_000,
+                crash_every_ns: 10_000_000,
+                seed: 77,
+            }),
         };
         let text = cfg.to_json().to_string();
         let back = SodaConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -764,6 +863,50 @@ mod tests {
         assert_eq!(cfg.backend, SodaConfig::default().backend);
         assert_eq!(cfg.dpu_cache_policy, None);
         assert_eq!(cfg.prefetch, None);
+        assert_eq!(cfg.fault, None);
+    }
+
+    #[test]
+    fn fault_block_parses_validates_and_round_trips() {
+        let v = Json::parse(r#"{"fault": {"drop_rate": 0.05, "crash_len_ns": 100000}}"#).unwrap();
+        let cfg = SodaConfig::from_json(&v).unwrap();
+        let f = cfg.fault.expect("fault block must be set");
+        assert_eq!(f.drop_rate, 0.05);
+        assert_eq!(f.crash_len_ns, 100_000);
+        assert_eq!(f.corrupt_rate, 0.0, "unset knobs keep their defaults");
+        assert!(f.enabled());
+        // Rates outside [0, 1] and non-object blocks are rejected.
+        for bad in [
+            r#"{"fault": {"drop_rate": 1.5}}"#,
+            r#"{"fault": {"corrupt_rate": -0.1}}"#,
+            r#"{"fault": {"spike_ns": -5}}"#,
+            r#"{"fault": true}"#,
+        ] {
+            assert!(
+                SodaConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "must reject {bad}"
+            );
+        }
+        // An explicit null keeps the cluster's plan.
+        let v = Json::parse(r#"{"fault": null}"#).unwrap();
+        assert_eq!(SodaConfig::from_json(&v).unwrap().fault, None);
+    }
+
+    #[test]
+    fn cluster_config_applies_fault_json() {
+        let mut c = ClusterConfig::tiny();
+        assert!(!c.fault.enabled(), "faults must default off");
+        let v = Json::parse(
+            r#"{"fault": {"drop_rate": 0.01, "crash_start_ns": 500, "crash_len_ns": 100, "seed": 3}}"#,
+        )
+        .unwrap();
+        c.apply_json(&v).unwrap();
+        assert!(c.fault.enabled());
+        assert_eq!(c.fault.drop_rate, 0.01);
+        assert_eq!(c.fault.crash_start_ns, 500);
+        assert_eq!(c.fault.seed, 3);
+        let bad = Json::parse(r#"{"fault": {"dup_rate": 2}}"#).unwrap();
+        assert!(c.apply_json(&bad).is_err());
     }
 
     #[test]

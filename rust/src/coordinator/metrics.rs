@@ -4,6 +4,7 @@ use crate::dpu::{CacheStats, DpuStats};
 use crate::fabric::stats::NetworkStats;
 use crate::host::agent::HostStats;
 use crate::host::buffer::BufferStats;
+use crate::sim::fault::FaultStats;
 use crate::sim::{ns_to_secs, Ns};
 
 /// Metrics of one application run on one backend configuration.
@@ -24,6 +25,8 @@ pub struct RunMetrics {
     pub dpu_hit_rate: f64,
     /// Mean task-batch factor (aggregation effectiveness).
     pub mean_batch_factor: f64,
+    /// Fault-injection ledger (all-zero for fault-free runs).
+    pub fault: FaultStats,
 }
 
 impl RunMetrics {
@@ -95,6 +98,22 @@ impl crate::util::json::ToJson for RunMetrics {
             ("hint_entries", self.dpu.hint_entries.into()),
             ("dpu_hit_rate", self.dpu_hit_rate.into()),
             ("mean_batch_factor", self.mean_batch_factor.into()),
+            ("writeback_requeues", self.host.writeback_requeues.into()),
+            ("qp_over_completions", self.host.qp_over_completions.into()),
+            ("fault_injected_drops", self.fault.injected_drops.into()),
+            ("fault_injected_corruptions", self.fault.injected_corruptions.into()),
+            ("fault_injected_dups", self.fault.injected_dups.into()),
+            ("fault_injected_spikes", self.fault.injected_spikes.into()),
+            ("fault_crash_rejections", self.fault.crash_rejections.into()),
+            ("fault_detected_corruptions", self.fault.detected_corruptions.into()),
+            ("fault_detected_dups", self.fault.detected_dups.into()),
+            ("fault_timeouts", self.fault.timeouts.into()),
+            ("fault_retries", self.fault.retries.into()),
+            ("fault_exhaustions", self.fault.exhaustions.into()),
+            ("fault_retry_bytes", self.fault.retry_bytes.into()),
+            ("fault_backoff_ns", self.fault.backoff_ns.into()),
+            ("fault_failovers", self.fault.failovers.into()),
+            ("fault_recoveries", self.fault.recoveries.into()),
         ])
     }
 }
@@ -146,7 +165,31 @@ impl std::fmt::Display for RunMetrics {
             self.host.hints_sent,
             self.dpu.hint_entries,
             self.dpu_cache.hint_useful,
-        )
+        )?;
+        if self.fault.injected() > 0 || self.fault.failovers > 0 {
+            writeln!(
+                f,
+                "  faults injected  : {} ({} drops, {} corruptions, {} dups, {} spikes, {} crash-rejected)",
+                self.fault.injected(),
+                self.fault.injected_drops,
+                self.fault.injected_corruptions,
+                self.fault.injected_dups,
+                self.fault.injected_spikes,
+                self.fault.crash_rejections,
+            )?;
+            writeln!(
+                f,
+                "  fault recovery   : {} timeouts, {} retries ({:.2} MB retry traffic, {:.3} ms backoff), {} failovers / {} recoveries, {} writeback requeues",
+                self.fault.timeouts,
+                self.fault.retries,
+                self.fault.retry_bytes as f64 / 1e6,
+                self.fault.backoff_ns as f64 / 1e6,
+                self.fault.failovers,
+                self.fault.recoveries,
+                self.host.writeback_requeues,
+            )?;
+        }
+        Ok(())
     }
 }
 

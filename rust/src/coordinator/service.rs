@@ -8,7 +8,7 @@
 use super::cluster::Cluster;
 use super::config::{BackendKind, SodaConfig};
 use super::metrics::RunMetrics;
-use crate::backend::{DpuStore, MemServerStore, RemoteStore, SsdStore};
+use crate::backend::{DpuStore, FailoverStore, MemServerStore, RemoteStore, SsdStore};
 use crate::dpu::DpuAgent;
 use crate::host::HostAgent;
 use crate::sim::Ns;
@@ -40,6 +40,14 @@ impl SodaService {
                 inner.dpu = DpuAgent::new(dcfg);
             });
         }
+        if let Some(f) = cfg.fault {
+            // Per-run chaos override: reseed the cluster's fault plan. The
+            // ledger restarts with it, so a run's balance invariants are
+            // self-contained.
+            cluster.with(|inner| {
+                inner.faults = crate::sim::fault::FaultPlan::from_config(f);
+            });
+        }
         SodaService {
             cluster: cluster.clone(),
             cfg,
@@ -67,7 +75,17 @@ impl SodaService {
         match self.cfg.backend {
             BackendKind::Ssd => Box::new(SsdStore::new(self.cluster.clone())),
             BackendKind::MemServer => Box::new(MemServerStore::new(self.cluster.clone())),
-            BackendKind::Dpu(_) => Box::new(DpuStore::new(self.cluster.clone())),
+            BackendKind::Dpu(_) => {
+                if self.cluster.with(|i| i.faults.enabled()) {
+                    // Chaos runs wrap the DPU path in the circuit breaker:
+                    // retry-budget exhaustion fails over to the direct
+                    // memory-server path instead of stalling forever.
+                    // Fault-free runs keep the plain store (zero cost).
+                    Box::new(FailoverStore::new(self.cluster.clone()))
+                } else {
+                    Box::new(DpuStore::new(self.cluster.clone()))
+                }
+            }
         }
     }
 
@@ -112,6 +130,7 @@ impl SodaService {
             dpu_cache: self.cluster.dpu_cache_stats(),
             dpu_hit_rate: self.cluster.dpu_hit_rate(),
             mean_batch_factor: self.cluster.with(|i| i.dpu.mean_batch_factor()),
+            fault: self.cluster.fault_stats(),
         }
     }
 }
@@ -212,6 +231,64 @@ mod tests {
         let m = svc.collect("test", t1, &client);
         assert!(m.network_bytes() > 0);
         assert_eq!(m.host.faults, 1);
+    }
+
+    /// Satellite: `MemError` surfaces as a structured error through the
+    /// service instead of a panic, and the client stays usable after a
+    /// refused allocation.
+    #[test]
+    fn alloc_refusal_is_a_structured_error() {
+        use crate::memnode::MemError;
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let svc = SodaService::attach(
+            &cluster,
+            SodaConfig::default().with_backend(BackendKind::MemServer),
+        );
+        let mut client = svc.client_with_buffer("p0", 64 << 10);
+        let err = client
+            .try_alloc(0, "huge", 1 << 40, None, Placement::Default)
+            .unwrap_err();
+        assert!(matches!(err, MemError::OutOfCapacity { .. }), "got {err:?}");
+        let chunk = client.chunk_bytes();
+        let (h, t0) = client.alloc(0, "ok", chunk, Some(vec![5; chunk as usize]), Placement::Default);
+        let mut out = vec![0u8; 8];
+        client.read_bytes(t0, 0, h.region, 0, &mut out);
+        assert!(out.iter().all(|&b| b == 5), "service survives the refusal");
+    }
+
+    /// A per-run fault override re-arms the cluster's fault plan, selects
+    /// the failover store on the DPU backend, and the chaos run still
+    /// produces correct data with a balanced fault ledger.
+    #[test]
+    fn fault_override_selects_failover_and_reaches_cluster() {
+        use crate::sim::fault::FaultConfig;
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let mut cfg = SodaConfig::default().with_backend(BackendKind::DPU_FULL);
+        cfg.fault = Some(FaultConfig { drop_rate: 0.5, seed: 9, ..FaultConfig::default() });
+        let svc = SodaService::attach(&cluster, cfg);
+        assert!(cluster.with(|i| i.faults.enabled()));
+        let mut client = svc.client_with_buffer("p0", 256 << 10);
+        assert_eq!(client.store_name(), "dpu+failover");
+        let chunk = client.chunk_bytes();
+        let pages = 32u64;
+        let (h, t0) = client.alloc(
+            0,
+            "x",
+            pages * chunk,
+            Some(vec![6; (pages * chunk) as usize]),
+            Placement::Default,
+        );
+        let mut out = vec![0u8; (pages * chunk) as usize];
+        let t1 = client.read_bytes(t0, 0, h.region, 0, &mut out);
+        assert!(out.iter().all(|&b| b == 6), "chaos must not corrupt data");
+        let m = svc.collect("chaos", t1, &client);
+        assert!(m.fault.injected_drops > 0, "0.5 drop rate must fire in 32 fetches");
+        assert_eq!(m.fault.timeouts, m.fault.injected_drops + m.fault.crash_rejections);
+        assert_eq!(
+            m.fault.timeouts + m.fault.detected_corruptions,
+            m.fault.retries + m.fault.exhaustions,
+            "every failed attempt is retried or exhausts"
+        );
     }
 
     #[test]

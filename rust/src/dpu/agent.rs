@@ -180,6 +180,9 @@ pub struct DpuStats {
     /// Cache entries the consumed hints covered (after span→entry
     /// translation and queue dedup).
     pub hint_entries: u64,
+    /// Entries re-queued for prefetch after a write-back invalidated them
+    /// (the dirty page threw out `ppe − 1` still-valid sibling pages).
+    pub rehints: u64,
 }
 
 /// The DPU agent.
@@ -669,10 +672,19 @@ impl DpuAgent {
         let doorbell = Aggregator::amortize(t.doorbell_ns, factor);
         // Coherence: the single-writer restriction means our only duty is to
         // drop a (now stale) cached entry for this page.
+        let mut rehint_key = None;
         if self.cfg.opts.dynamic_cache {
-            let ekey = EntryKey::containing(page, self.table.pages_per_entry());
+            let ppe = self.table.pages_per_entry();
+            let ekey = EntryKey::containing(page, ppe);
             if self.table.invalidate(ekey) {
                 self.stats.invalidations += 1;
+                // The invalidation threw out ppe−1 sibling pages that are
+                // still valid and likely still hot. Hint-driven policies
+                // re-queue the entry so the worker re-stages it — with the
+                // fresh bytes — off the critical path.
+                if ppe > 1 && self.prefetcher.wants_hints() {
+                    rehint_key = Some(ekey);
+                }
             }
         }
         debug_assert!(
@@ -687,6 +699,12 @@ impl DpuAgent {
         let durable = fabric.net_write(t_proc, data.len() as u64, nic, TrafficClass::Writeback);
         if self.cfg.opts.aggregation {
             self.agg.record_completion(durable);
+        }
+        if let Some(ekey) = rehint_key {
+            if self.prefetcher.rehint(ekey) {
+                self.stats.rehints += 1;
+                self.run_prefetch_worker(fabric, mem, durable);
+            }
         }
         durable
     }
@@ -1084,6 +1102,45 @@ mod tests {
         assert_eq!(r.source, Source::DpuCache);
         assert!(out.iter().all(|&b| b == 9), "hinted entry served correct bytes");
         assert!(a.table.stats().hint_useful >= 1, "hit resolves hint provenance");
+    }
+
+    /// Satellite of the reliability PR: a write-back invalidates the whole
+    /// multi-page entry for one dirty page; hint policies re-queue it so
+    /// the surviving sibling pages come back without a demand miss — and
+    /// the re-staged entry carries the freshly written bytes.
+    #[test]
+    fn writeback_rehints_surviving_entry_pages() {
+        use crate::fabric::protocol::{HintMessage, HintSpan};
+        let (mut a, mut f, mut store) = setup_with_policy(crate::dpu::PrefetchPolicyKind::GraphHint);
+        let mut out = vec![0u8; CHUNK as usize];
+        // Warm entry 0 (pages 0-3) via an explicit frontier hint.
+        let msg = HintMessage {
+            region_id: 1,
+            superstep: 0,
+            spans: vec![HintSpan { page: 0, pages: 4 }],
+        };
+        let t = a.handle_hint(&mut f, &store, 0, &msg).expect("hint consumed");
+        let later = t + 10_000_000;
+        let r = a.handle_read(&mut f, &store, later, PageKey::new(1, 2), 2, &mut out);
+        assert_eq!(r.source, Source::DpuCache, "warm before the write");
+        // Dirty page 1: the whole 4-page entry is invalidated...
+        let new_data = vec![0xEE; CHUNK as usize];
+        let durable = a.handle_write(&mut f, &mut store, later + 1_000, PageKey::new(1, 1), &new_data);
+        assert_eq!(a.stats().invalidations, 1);
+        assert_eq!(a.stats().rehints, 1, "hint policy re-queues the entry");
+        // ...but the re-hint re-stages it in the background: much later the
+        // sibling page still hits, and the dirtied page serves fresh bytes.
+        let much_later = durable + 10_000_000;
+        let r2 = a.handle_read(&mut f, &store, much_later, PageKey::new(1, 2), 2, &mut out);
+        assert_eq!(r2.source, Source::DpuCache, "sibling page re-staged");
+        assert!(out.iter().all(|&b| b == 2));
+        let r3 = a.handle_read(&mut f, &store, much_later + 1_000_000, PageKey::new(1, 1), 2, &mut out);
+        assert_eq!(r3.source, Source::DpuCache);
+        assert!(out.iter().all(|&b| b == 0xEE), "re-staged entry carries the written bytes");
+        // Sequential policies decline: same write flow, no rehint counted.
+        let (mut b, mut f2, mut store2) = setup(DpuOpts::FULL);
+        b.handle_write(&mut f2, &mut store2, 0, PageKey::new(1, 1), &new_data);
+        assert_eq!(b.stats().rehints, 0);
     }
 
     #[test]

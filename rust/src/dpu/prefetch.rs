@@ -204,6 +204,16 @@ pub trait PrefetchPolicy: std::fmt::Debug {
     /// driven candidates need nothing — they self-heal on the next access.
     fn unplan(&mut self, _key: EntryKey, _origin: PrefetchOrigin) {}
 
+    /// Re-queue an entry the DPU just invalidated on a write-back: one
+    /// dirty page forced the whole multi-page entry out, and the surviving
+    /// `ppe − 1` sibling pages are likely still hot. Returns `true` when
+    /// the engine queued it. Cursor-driven engines decline — their next
+    /// demand access re-warms the entry anyway, so re-staging it eagerly
+    /// would just be blind speculation.
+    fn rehint(&mut self, _key: EntryKey) -> bool {
+        false
+    }
+
     fn stats(&self) -> PrefetchStats;
 }
 
@@ -453,6 +463,24 @@ impl PrefetchPolicy for GraphHintPolicy {
         accepted
     }
 
+    fn rehint(&mut self, key: EntryKey) -> bool {
+        // Deliberately leaves the superstep tag alone: a write-back
+        // re-hint is not a new frontier, just a refresh of the current
+        // one, so it must survive same-superstep hint batches and be
+        // cleared with them when the superstep really advances.
+        if self.queued.contains(&key) {
+            return true;
+        }
+        if self.queue.len() >= HINT_QUEUE_CAP {
+            self.stats.hints_dropped += 1;
+            return false;
+        }
+        self.queue.push_back(key);
+        self.queued.insert(key);
+        self.stats.hints_accepted += 1;
+        true
+    }
+
     fn unplan(&mut self, key: EntryKey, origin: PrefetchOrigin) {
         // A throttled hint goes back to the *front* of the queue (it was
         // next in line) so the wrapper's truncation never loses it.
@@ -543,6 +571,12 @@ const ADAPTIVE_ACC_LOW: f64 = 0.25;
 /// Scan period of the low-accuracy probe trickle (one entry every N scans,
 /// so the engine keeps sampling whether the phase changed).
 const ADAPTIVE_PROBE_PERIOD: u64 = 8;
+/// Scans the accuracy window spans. Gate 2 judges the useful/wasted delta
+/// over the last `ADAPTIVE_ACC_WINDOW` scans instead of the whole run, so
+/// an access-phase change (or a fault-induced accuracy dip) recovers
+/// within one window instead of having to repay the entire historical
+/// deficit.
+const ADAPTIVE_ACC_WINDOW: usize = 32;
 
 /// `adaptive` — wraps a base engine with accuracy-driven throttling. Two
 /// gates, both deterministic functions of the cache table's exact
@@ -555,16 +589,23 @@ const ADAPTIVE_PROBE_PERIOD: u64 = 8;
 ///    Since every hit is a demand page the baseline would have fetched,
 ///    total traffic stays ≤ ~1.05× prefetch-off by construction — inside
 ///    the 10 % bound the CI prefetch guard enforces;
-/// 2. **accuracy tiers** — high accuracy runs the base plan in full, mid
-///    accuracy truncates to a quarter of `max_per_scan`, low accuracy keeps
-///    a 1-entry probe every [`ADAPTIVE_PROBE_PERIOD`] scans so recovery is
-///    possible when the access phase changes.
+/// 2. **accuracy tiers** — measured over a *sliding window* of the last
+///    [`ADAPTIVE_ACC_WINDOW`] scans (cumulative counters sampled per scan,
+///    deltas taken against the oldest sample): high accuracy runs the base
+///    plan in full, mid accuracy truncates to a quarter of `max_per_scan`,
+///    low accuracy keeps a 1-entry probe every [`ADAPTIVE_PROBE_PERIOD`]
+///    scans. The window is what makes recovery fast: after a phase change
+///    the old phase's waste ages out in one window instead of dragging the
+///    lifetime average down forever.
 #[derive(Debug)]
 pub struct AdaptivePolicy {
     base: AdaptiveBase,
     inner: Box<dyn PrefetchPolicy>,
     scans: u64,
     throttled: u64,
+    /// Per-scan snapshots of the table's cumulative (useful, wasted)
+    /// counters; Gate 2 reads the delta against the oldest snapshot.
+    acc_window: VecDeque<(u64, u64)>,
 }
 
 impl AdaptivePolicy {
@@ -574,6 +615,7 @@ impl AdaptivePolicy {
             inner,
             scans: 0,
             throttled: 0,
+            acc_window: VecDeque::new(),
         }
     }
 }
@@ -587,23 +629,42 @@ impl PrefetchPolicy for AdaptivePolicy {
         self.inner.accept_hint(region, entries, superstep)
     }
 
+    fn rehint(&mut self, key: EntryKey) -> bool {
+        self.inner.rehint(key)
+    }
+
     fn plan(&mut self, ctx: &PlanCtx<'_>, out: &mut Vec<(EntryKey, PrefetchOrigin)>) {
         self.scans += 1;
+        let s = ctx.table.stats();
+        // Slide the accuracy window on every scan — including empty ones —
+        // so stale history keeps aging out while the engine idles.
+        let (win_useful0, win_wasted0) = *self.acc_window.front().unwrap_or(&(0, 0));
+        self.acc_window.push_back((s.prefetch_useful, s.prefetch_wasted));
+        if self.acc_window.len() > ADAPTIVE_ACC_WINDOW {
+            self.acc_window.pop_front();
+        }
         // The inner plan always runs so its cursor keeps consuming the
         // recent list; the throttle truncates the issue list afterwards.
         self.inner.plan(ctx, out);
         if out.is_empty() {
             return;
         }
-        let s = ctx.table.stats();
         let ppe = ctx.table.pages_per_entry().max(1);
-        // Gate 1 — exact entry headroom of the net-traffic budget.
+        // Gate 1 — exact entry headroom of the net-traffic budget. This
+        // gate stays cumulative on purpose: the ≤ ~1.05× traffic bound is
+        // a whole-run invariant, not a windowed one.
         let spent_pages = s.insertions * ppe;
         let credit_pages = s.hits + s.misses / 20 + ADAPTIVE_BOOTSTRAP_INSERTS * ppe;
         let headroom = (credit_pages.saturating_sub(spent_pages) / ppe) as usize;
-        // Gate 2 — accuracy tier.
-        let resolved = s.prefetch_useful + s.prefetch_wasted;
-        let acc = s.prefetch_accuracy();
+        // Gate 2 — accuracy tier over the sliding window.
+        let useful = s.prefetch_useful - win_useful0;
+        let wasted = s.prefetch_wasted - win_wasted0;
+        let resolved = useful + wasted;
+        let acc = if resolved == 0 {
+            0.0
+        } else {
+            useful as f64 / resolved as f64
+        };
         let tier = if resolved < ADAPTIVE_MIN_RESOLVED || acc >= ADAPTIVE_ACC_HIGH {
             out.len()
         } else if acc >= ADAPTIVE_ACC_LOW {
@@ -675,6 +736,13 @@ impl Prefetcher {
     /// leftovers from the previous batch.
     pub fn accept_hint(&mut self, region: RegionId, entries: &[u64], superstep: u32) -> u64 {
         self.engine.accept_hint(region, entries, superstep)
+    }
+
+    /// Re-queue an entry a write-back just invalidated (its surviving
+    /// sibling pages are still hot). Hint engines queue it; cursor-driven
+    /// engines decline. Returns whether the entry was queued.
+    pub fn rehint(&mut self, key: EntryKey) -> bool {
+        self.engine.rehint(key)
     }
 
     /// Scan new recent-list entries (and queued hints) and plan entry
@@ -954,6 +1022,26 @@ mod tests {
     }
 
     #[test]
+    fn graph_hint_rehint_requeues_invalidated_entry() {
+        let t = table();
+        let mut p = prefetcher(PrefetchPolicyKind::GraphHint);
+        p.accept_hint(1, &[3], 0);
+        let r = RecentList::new(8);
+        assert_eq!(p.plan(&r, &t, |_| 1_000).len(), 1);
+        // A write-back invalidation re-queues the entry without touching
+        // the superstep tag: the next same-superstep hint batch must not
+        // clear it.
+        assert!(p.rehint(EntryKey { region: 1, entry: 3 }));
+        p.accept_hint(1, &[5], 0);
+        let planned: Vec<u64> =
+            p.plan(&r, &t, |_| 1_000).iter().map(|(e, _)| e.entry).collect();
+        assert_eq!(planned, vec![3, 5], "rehint drains ahead of newer hints");
+        // Cursor-driven engines decline rehints (demand access self-heals).
+        let mut seq = Prefetcher::default();
+        assert!(!seq.rehint(EntryKey { region: 1, entry: 3 }));
+    }
+
+    #[test]
     fn graph_hint_still_warms_accessed_entry() {
         let t = table();
         let mut p = prefetcher(PrefetchPolicyKind::GraphHint);
@@ -1060,6 +1148,69 @@ mod tests {
         got.sort_unstable();
         got.dedup();
         assert_eq!(got, hinted, "no hinted entry may be lost to throttling");
+    }
+
+    /// Accuracy is judged over a sliding window, not a lifetime average: a
+    /// workload that prefetched garbage for a long phase and then turns
+    /// sequential must see the throttle reopen within ~one window of good
+    /// outcomes instead of repaying the whole historical deficit first.
+    #[test]
+    fn adaptive_accuracy_window_recovers_after_phase_change() {
+        let mut t = table();
+        let mut rng = Rng::new(11);
+        let mut p = Prefetcher::new(PrefetchConfig {
+            depth: 1,
+            max_per_scan: 8,
+            policy: PrefetchPolicyKind::Adaptive(AdaptiveBase::Sequential),
+        });
+        let mut r = RecentList::new(128);
+        // Phase 1: scattered accesses. One pinned hot entry keeps the
+        // traffic budget earning (plenty of repeat hits) while every other
+        // staged entry rots unread — it is *accuracy* that collapses here,
+        // not the byte budget.
+        let mut hot: Option<EntryKey> = None;
+        for i in 0..200u64 {
+            r.push(PageKey::new(1, (i * 16) % 4096));
+            for (e, _) in p.plan(&r, &t, |_| 1 << 20) {
+                t.insert(e, vec![0; 4096], 0, &mut rng);
+                if hot.is_none() {
+                    t.pin(e);
+                    hot = Some(e);
+                }
+            }
+            if let Some(h) = hot {
+                for pg in 0..4u64 {
+                    t.lookup_page(10, PageKey::new(1, h.entry * 4 + pg));
+                }
+            }
+        }
+        assert!(p.stats().throttled > 0, "waste phase must throttle");
+        // Phase 2: perfectly sequential and fully consumed. The window
+        // forgets the waste phase after ~ADAPTIVE_ACC_WINDOW scans; a
+        // cumulative average would stay pinned low and trickle on.
+        let mut staged: Vec<EntryKey> = Vec::new();
+        let mut issued_late = 0u64;
+        for i in 0..120u64 {
+            r.push(PageKey::new(1, 8192 + i));
+            for (e, _) in p.plan(&r, &t, |_| 1 << 20) {
+                t.insert(e, vec![0; 4096], 0, &mut rng);
+                staged.push(e);
+                if i >= 60 {
+                    issued_late += 1;
+                }
+            }
+            // First touches resolve "useful"; repeat hits earn traffic
+            // budget back.
+            for e in staged.clone() {
+                for pg in 0..4u64 {
+                    t.lookup_page(10, PageKey::new(e.region, e.entry * 4 + pg));
+                }
+            }
+        }
+        assert!(
+            issued_late >= 10,
+            "windowed accuracy must reopen the throttle after the phase change ({issued_late})"
+        );
     }
 
     #[test]

@@ -22,6 +22,7 @@
 pub mod numa;
 pub mod protocol;
 pub mod qp;
+pub mod reliable;
 pub mod stats;
 pub mod verbs;
 

@@ -28,6 +28,7 @@ pub struct QueuePair {
     posted: u64,
     completed: u64,
     doorbells: u64,
+    over_completions: u64,
 }
 
 impl QueuePair {
@@ -37,6 +38,7 @@ impl QueuePair {
             posted: 0,
             completed: 0,
             doorbells: 0,
+            over_completions: 0,
         }
     }
 
@@ -60,14 +62,23 @@ impl QueuePair {
         n * (WQE_BUILD_NS + DOORBELL_NS)
     }
 
-    /// Mark `n` completions polled from the CQ.
+    /// Mark `n` completions polled from the CQ. A duplicated CQE — which
+    /// fault injection can deliver — must not push `completed` past
+    /// `posted`: that would wrap `outstanding()` in release builds.
+    /// Saturate and count the excess instead.
     pub fn complete(&mut self, n: u64) {
-        self.completed += n;
-        debug_assert!(self.completed <= self.posted, "completed more than posted");
+        let take = n.min(self.posted - self.completed);
+        self.completed += take;
+        self.over_completions += n - take;
     }
 
     pub fn outstanding(&self) -> u64 {
         self.posted - self.completed
+    }
+
+    /// Completions received beyond what was posted (duplicate CQEs).
+    pub fn over_completions(&self) -> u64 {
+        self.over_completions
     }
 
     pub fn posted(&self) -> u64 {
@@ -126,6 +137,10 @@ impl QpPool {
     pub fn total_doorbells(&self) -> u64 {
         self.qps.iter().map(|q| q.doorbells()).sum()
     }
+
+    pub fn total_over_completions(&self) -> u64 {
+        self.qps.iter().map(|q| q.over_completions()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +166,30 @@ mod tests {
         assert_eq!(q.outstanding(), 4);
         q.complete(3);
         assert_eq!(q.outstanding(), 1);
+    }
+
+    #[test]
+    fn duplicate_completions_saturate_and_are_counted() {
+        let mut q = QueuePair::new(0);
+        q.post_batch(4);
+        q.complete(3);
+        // A duplicated CQE delivers 3 more completions than remain.
+        q.complete(4);
+        assert_eq!(q.outstanding(), 0, "outstanding must not wrap");
+        assert_eq!(q.over_completions(), 3);
+        // Further duplicates keep accumulating in the counter only.
+        q.complete(2);
+        assert_eq!(q.outstanding(), 0);
+        assert_eq!(q.over_completions(), 5);
+        assert_eq!(q.posted(), 4);
+    }
+
+    #[test]
+    fn pool_reports_over_completions() {
+        let mut p = QpPool::new(2);
+        p.for_thread(0).post_batch(1);
+        p.for_thread(0).complete(3);
+        assert_eq!(p.total_over_completions(), 2);
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Fabric reliability layer: completion timeouts, bounded exponential
+//! backoff, checksum-failure retries, and dedup of duplicated completions.
+//!
+//! Every data-plane request that can be lost goes through [`reliable_op`]:
+//! the caller supplies a closure that performs the *plain* (fault-free)
+//! transfer starting at a given virtual time, and the layer wraps it with
+//! the recovery protocol:
+//!
+//! * **drop / crash window** → the completion never arrives; the sender
+//!   waits out [`TIMEOUT_NS`], backs off exponentially, and re-issues.
+//!   One-sided READs are idempotent so replay is safe; two-sided requests
+//!   are deduplicated on the receiver by the per-request sequence number
+//!   ([`crate::fabric::protocol::ReliabilityHeader`]).
+//! * **corruption** → the transfer completes on the wire but the CRC-32
+//!   payload checksum fails on arrival; the payload is discarded and the
+//!   request re-issued. The wasted wire bytes are charged to
+//!   `FaultStats::retry_bytes`.
+//! * **duplicated completion** → suppressed by sequence-number dedup and
+//!   counted; the request still completes exactly once.
+//!
+//! Callers choose between a *bounded* retry budget (`Some(RETRY_BUDGET)`,
+//! the DPU path — exhaustion trips the backend circuit breaker and fails
+//! the request over to the direct memory-server path) and an *unbounded*
+//! one (`None`, the last-resort direct path — capped backoff plus finite
+//! crash windows guarantee termination).
+//!
+//! With fault injection disabled the wrapper is provably zero-cost: it
+//! short-circuits to the plain closure without drawing from the RNG or
+//! touching any counter, so fault-free traffic and timing are
+//! byte-identical to a build without this layer.
+
+use crate::sim::fault::{Delivery, FaultPlan};
+use crate::sim::Ns;
+
+/// Completion timeout: how long the sender waits before declaring a
+/// message lost (~10x the one-way network latency).
+pub const TIMEOUT_NS: Ns = 20_000;
+/// First retry backoff; doubles per attempt.
+pub const BACKOFF_BASE_NS: Ns = 8_000;
+/// Backoff ceiling — keeps crash-window retry loops polynomial.
+pub const BACKOFF_CAP_NS: Ns = 1_000_000;
+/// Bounded retry budget for the DPU path; exhausting it trips the
+/// backend circuit breaker.
+pub const RETRY_BUDGET: u32 = 4;
+
+/// A bounded retry budget ran out — the request was *not* served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryExhausted;
+
+/// Capped exponential backoff after `attempt` failed attempts (1-based).
+pub fn backoff_ns(attempt: u32) -> Ns {
+    (BACKOFF_BASE_NS << (attempt.saturating_sub(1)).min(7)).min(BACKOFF_CAP_NS)
+}
+
+/// Run one reliable request. `op(t)` performs the plain transfer starting
+/// at `t` and returns its completion time; `attempt_bytes` is the wire
+/// cost of one full attempt (charged to retry-traffic accounting when an
+/// attempt is wasted). `max_attempts = None` retries forever.
+pub fn reliable_op(
+    faults: &mut FaultPlan,
+    now: Ns,
+    attempt_bytes: u64,
+    max_attempts: Option<u32>,
+    mut op: impl FnMut(Ns) -> Ns,
+) -> Result<Ns, RetryExhausted> {
+    if !faults.enabled() {
+        // Zero-cost path: no RNG draw, no sequence number, no counters.
+        return Ok(op(now));
+    }
+    let mut t = now;
+    let mut attempt = 0u32;
+    loop {
+        attempt += 1;
+        let _seq = faults.next_seq();
+        match faults.draw(t) {
+            Delivery::Ok { spike_ns, duplicated } => {
+                if duplicated {
+                    // The second CQE for this seq is recognized and
+                    // suppressed; the request completes exactly once.
+                    faults.stats.detected_dups += 1;
+                }
+                return Ok(op(t) + spike_ns);
+            }
+            Delivery::Dropped => {
+                // Request or completion lost (or the memory node is in a
+                // crash window): only a timeout tells us.
+                faults.stats.timeouts += 1;
+                faults.stats.retry_bytes += crate::fabric::protocol::READ_REQUEST_BYTES;
+                t += TIMEOUT_NS;
+            }
+            Delivery::Corrupted => {
+                // Full transfer happens, checksum fails on arrival, the
+                // payload is discarded and re-fetched.
+                t = op(t);
+                faults.stats.detected_corruptions += 1;
+                faults.stats.retry_bytes += attempt_bytes;
+            }
+        }
+        if let Some(max) = max_attempts {
+            if attempt >= max {
+                faults.stats.exhaustions += 1;
+                return Err(RetryExhausted);
+            }
+        }
+        faults.stats.retries += 1;
+        let backoff = backoff_ns(attempt);
+        faults.stats.backoff_ns += backoff;
+        t += backoff;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fault::FaultConfig;
+
+    fn plan(cfg: FaultConfig) -> FaultPlan {
+        FaultPlan::from_config(cfg)
+    }
+
+    #[test]
+    fn disabled_plan_is_zero_cost_passthrough() {
+        let mut p = FaultPlan::disabled();
+        let mut calls = 0;
+        let done = reliable_op(&mut p, 1_000, 4096, Some(1), |t| {
+            calls += 1;
+            assert_eq!(t, 1_000, "op must start exactly at now");
+            t + 500
+        })
+        .unwrap();
+        assert_eq!(done, 1_500);
+        assert_eq!(calls, 1);
+        let s = p.stats;
+        assert_eq!(s.injected() + s.timeouts + s.retries + s.retry_bytes, 0);
+    }
+
+    #[test]
+    fn all_drops_exhaust_a_bounded_budget() {
+        let mut p = plan(FaultConfig {
+            drop_rate: 1.0,
+            seed: 1,
+            ..FaultConfig::default()
+        });
+        let mut calls = 0;
+        let err = reliable_op(&mut p, 0, 4096, Some(RETRY_BUDGET), |t| {
+            calls += 1;
+            t
+        });
+        assert_eq!(err, Err(RetryExhausted));
+        assert_eq!(calls, 0, "dropped attempts never reach the wire op");
+        assert_eq!(p.stats.timeouts, RETRY_BUDGET as u64);
+        assert_eq!(p.stats.injected_drops, RETRY_BUDGET as u64);
+        assert_eq!(p.stats.retries, RETRY_BUDGET as u64 - 1);
+        assert_eq!(p.stats.exhaustions, 1);
+        assert!(p.stats.backoff_ns > 0);
+    }
+
+    #[test]
+    fn unbounded_retries_eventually_succeed() {
+        let mut p = plan(FaultConfig {
+            drop_rate: 0.5,
+            seed: 7,
+            ..FaultConfig::default()
+        });
+        for i in 0..200u64 {
+            let done = reliable_op(&mut p, i * 1_000_000, 4096, None, |t| t + 100).unwrap();
+            assert!(done >= i * 1_000_000 + 100);
+        }
+        // Books balance: every failed attempt was retried (no budget).
+        assert_eq!(
+            p.stats.retries,
+            p.stats.timeouts + p.stats.detected_corruptions
+        );
+        assert_eq!(p.stats.exhaustions, 0);
+        assert!(p.stats.timeouts > 0, "0.5 drop rate must fire in 200 ops");
+    }
+
+    #[test]
+    fn corruption_charges_the_wire_then_retries() {
+        let mut p = plan(FaultConfig {
+            corrupt_rate: 1.0,
+            seed: 3,
+            ..FaultConfig::default()
+        });
+        let mut calls = 0;
+        let err = reliable_op(&mut p, 0, 4096, Some(3), |t| {
+            calls += 1;
+            t + 1_000
+        });
+        assert_eq!(err, Err(RetryExhausted));
+        assert_eq!(calls, 3, "corrupted attempts occupy the wire");
+        assert_eq!(p.stats.detected_corruptions, 3);
+        assert_eq!(p.stats.injected_corruptions, 3);
+        assert_eq!(p.stats.retry_bytes, 3 * 4096);
+    }
+
+    #[test]
+    fn crash_window_stalls_until_it_clears() {
+        let mut p = plan(FaultConfig {
+            crash_start_ns: 0,
+            crash_len_ns: 100_000,
+            seed: 5,
+            ..FaultConfig::default()
+        });
+        let done = reliable_op(&mut p, 0, 4096, None, |t| t + 100).unwrap();
+        assert!(done > 100_000, "must wait out the crash window ({done})");
+        assert!(p.stats.crash_rejections > 0);
+        assert_eq!(p.stats.timeouts, p.stats.crash_rejections);
+    }
+
+    #[test]
+    fn duplicated_completions_are_deduped_not_retried() {
+        let mut p = plan(FaultConfig {
+            dup_rate: 1.0,
+            seed: 9,
+            ..FaultConfig::default()
+        });
+        let done = reliable_op(&mut p, 0, 4096, Some(1), |t| t + 10).unwrap();
+        assert_eq!(done, 10);
+        assert_eq!(p.stats.detected_dups, 1);
+        assert_eq!(p.stats.injected_dups, 1);
+        assert_eq!(p.stats.retries, 0);
+    }
+
+    #[test]
+    fn latency_spikes_delay_completion() {
+        let mut p = plan(FaultConfig {
+            spike_rate: 1.0,
+            spike_ns: 50_000,
+            seed: 2,
+            ..FaultConfig::default()
+        });
+        let done = reliable_op(&mut p, 0, 4096, Some(1), |t| t + 10).unwrap();
+        assert_eq!(done, 50_010);
+        assert_eq!(p.stats.injected_spikes, 1);
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        assert_eq!(backoff_ns(1), BACKOFF_BASE_NS);
+        assert_eq!(backoff_ns(2), 2 * BACKOFF_BASE_NS);
+        assert_eq!(backoff_ns(3), 4 * BACKOFF_BASE_NS);
+        let mut prev = 0;
+        for a in 1..40 {
+            let b = backoff_ns(a);
+            assert!(b >= prev);
+            assert!(b <= BACKOFF_CAP_NS);
+            prev = b;
+        }
+        assert_eq!(backoff_ns(39), BACKOFF_CAP_NS);
+    }
+
+    #[test]
+    fn checksum_catches_an_injected_flip_end_to_end() {
+        use crate::fabric::protocol::ReliabilityHeader;
+        let mut p = plan(FaultConfig {
+            corrupt_rate: 1.0,
+            seed: 11,
+            ..FaultConfig::default()
+        });
+        let payload: Vec<u8> = (0..200u8).collect();
+        let hdr = ReliabilityHeader::for_payload(p.next_seq(), &payload);
+        let mut on_wire = payload.clone();
+        p.flip_bit(&mut on_wire);
+        assert!(!hdr.verify(&on_wire), "flip must fail the checksum");
+        assert!(hdr.verify(&payload), "clean replay must pass");
+    }
+}

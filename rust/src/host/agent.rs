@@ -32,7 +32,7 @@ use super::buffer::{BufferStats, PageBuffer, PageKey, PageSpan};
 use super::fam::{FamHandle, ObjectTable, Placement};
 use crate::backend::{FetchSource, RemoteStore};
 use crate::fabric::qp::QpPool;
-use crate::memnode::RegionId;
+use crate::memnode::{MemError, RegionId};
 use crate::sim::Ns;
 use crate::util::fxhash::FxHashMap;
 
@@ -81,6 +81,12 @@ pub struct HostStats {
     /// Frontier-hint messages posted over the host→DPU hint channel
     /// (only counted when the backend's prefetcher actually consumed one).
     pub hints_sent: u64,
+    /// Dirty pages whose bounded writeback attempt failed and were parked
+    /// for a later retry instead of being dropped (fault injection only).
+    pub writeback_requeues: u64,
+    /// Duplicated completions absorbed by the QPs' saturating counters
+    /// (snapshot at [`HostAgent::stats`]; fault injection only).
+    pub qp_over_completions: u64,
 }
 
 impl HostStats {
@@ -124,6 +130,11 @@ pub struct HostAgent {
     miss_keys: Vec<PageKey>,
     /// Reused per-window consumed-slot marks (parallel to `miss_keys`).
     miss_used: Vec<bool>,
+    /// Dirty pages whose bounded writeback failed: the *only* copy of the
+    /// data until a retry lands. Consulted on every fault so a parked page
+    /// is restored locally, never re-fetched stale from the store. Always
+    /// empty when fault injection is off.
+    pending_writebacks: Vec<(PageKey, Box<[u8]>)>,
 }
 
 impl HostAgent {
@@ -198,6 +209,7 @@ impl HostAgent {
             span_keys: Vec::new(),
             miss_keys: Vec::new(),
             miss_used: Vec::new(),
+            pending_writebacks: Vec::new(),
         }
     }
 
@@ -240,6 +252,7 @@ impl HostAgent {
         let mut s = self.stats;
         s.qp_posted = self.qp.total_posted();
         s.qp_doorbells = self.qp.total_doorbells();
+        s.qp_over_completions = self.qp.total_over_completions();
         s
     }
 
@@ -277,17 +290,20 @@ impl HostAgent {
 
     /// `SODA_alloc`: create a FAM-backed object. `file` pre-loads server-side
     /// data (its pages are immediately materialized); anonymous objects
-    /// zero-fill on first touch. Returns the handle and completion time.
-    pub fn alloc(
+    /// zero-fill on first touch. Returns the handle and completion time, or
+    /// the memory node's structured refusal (e.g.
+    /// [`MemError::OutOfCapacity`]) — the agent stays fully usable after a
+    /// refused allocation.
+    pub fn try_alloc(
         &mut self,
         now: Ns,
         name: impl Into<String>,
         bytes: u64,
         file: Option<Vec<u8>>,
         placement: Placement,
-    ) -> (FamHandle, Ns) {
+    ) -> Result<(FamHandle, Ns), MemError> {
         let file_backed = file.is_some();
-        let (region, done) = self.store.alloc(now, bytes, file);
+        let (region, done) = self.store.try_alloc(now, bytes, file)?;
         let handle = FamHandle {
             region,
             bytes,
@@ -298,7 +314,21 @@ impl HostAgent {
             self.mark_region_materialized(region, handle.pages(self.chunk_bytes));
         }
         self.objects.insert(name, handle);
-        (handle, done)
+        Ok((handle, done))
+    }
+
+    /// Infallible convenience wrapper around [`Self::try_alloc`] for
+    /// callers that treat allocation failure as a programming error.
+    pub fn alloc(
+        &mut self,
+        now: Ns,
+        name: impl Into<String>,
+        bytes: u64,
+        file: Option<Vec<u8>>,
+        placement: Placement,
+    ) -> (FamHandle, Ns) {
+        self.try_alloc(now, name, bytes, file, placement)
+            .expect("region allocation")
     }
 
     /// Map an object another process allocated (read-only sharing; §III
@@ -325,14 +355,67 @@ impl HostAgent {
             let Some(ev) = self.buffer.evict_lru() else { break };
             t += self.timing.evict_mgmt_ns;
             if ev.dirty {
-                let released = self.store.writeback(t, ev.key, &ev.data);
-                self.mark_materialized(ev.key);
-                self.stats.writebacks += 1;
-                t = released;
+                match self.store.try_writeback(t, ev.key, &ev.data) {
+                    Ok(released) => {
+                        self.mark_materialized(ev.key);
+                        self.stats.writebacks += 1;
+                        t = released;
+                    }
+                    Err(_) => {
+                        // Durability: the store did NOT take the page. Park
+                        // the bytes for a later retry instead of silently
+                        // losing the write.
+                        self.stats.writeback_requeues += 1;
+                        self.pending_writebacks.push((ev.key, ev.data));
+                        continue;
+                    }
+                }
             }
             self.buffer.recycle(ev.data);
         }
+        self.drain_pending(t)
+    }
+
+    /// Retry parked writebacks with the bounded budget; pages that fail
+    /// again go back to the queue (the flush barrier clears them for
+    /// certain). No-op when nothing is parked — the fault-free fast path.
+    fn drain_pending(&mut self, mut t: Ns) -> Ns {
+        if self.pending_writebacks.is_empty() {
+            return t;
+        }
+        let pending = std::mem::take(&mut self.pending_writebacks);
+        for (key, data) in pending {
+            match self.store.try_writeback(t, key, &data) {
+                Ok(released) => {
+                    self.mark_materialized(key);
+                    self.stats.writebacks += 1;
+                    t = released;
+                    self.buffer.recycle(data);
+                }
+                Err(_) => {
+                    self.stats.writeback_requeues += 1;
+                    self.pending_writebacks.push((key, data));
+                }
+            }
+        }
         t
+    }
+
+    /// Index of `key` in the parked-writeback queue, if present.
+    fn pending_index(&self, key: PageKey) -> Option<usize> {
+        if self.pending_writebacks.is_empty() {
+            return None;
+        }
+        self.pending_writebacks.iter().position(|(k, _)| *k == key)
+    }
+
+    /// Restore a parked page into the buffer: its freshest bytes live only
+    /// in the requeue, so a fault must serve from there (still dirty — the
+    /// data has never reached durability), never re-fetch stale state.
+    fn restore_pending(&mut self, idx: usize, key: PageKey) {
+        let (_, data) = self.pending_writebacks.swap_remove(idx);
+        self.buffer.insert_with(key, true, |d| d.copy_from_slice(&data));
+        self.buffer.recycle(data);
     }
 
     /// The non-resident half of the per-page fault path: trap, evict as
@@ -346,6 +429,14 @@ impl HostAgent {
         }
         let mut t = now + self.timing.fault_trap_ns;
         t = self.evict_for_insert(t);
+        if let Some(idx) = self.pending_index(key) {
+            // Parked after a failed writeback: restore locally (the store
+            // holds stale bytes), at local-copy cost, still dirty.
+            self.restore_pending(idx, key);
+            let done = t + self.timing.zero_fill_ns;
+            self.stats.stall_ns += done.saturating_sub(now);
+            return done;
+        }
         if self.is_materialized(key) {
             // Post the request on this thread's QP and fetch.
             t += self.qp.post_cost_ns(tid, self.threads, 1);
@@ -425,7 +516,10 @@ impl HostAgent {
         // linear scan only runs for out-of-order `touch_pages` callers.
         let mut ascending = true;
         for &k in keys {
-            if !self.buffer.is_resident(k) && self.is_materialized(k) {
+            if !self.buffer.is_resident(k)
+                && self.is_materialized(k)
+                && self.pending_index(k).is_none()
+            {
                 let dup = match miss.last() {
                     None => false,
                     Some(&m) if m == k => true,
@@ -548,6 +642,13 @@ impl HostAgent {
                 let frame = self.buffer.insert_with(key, write, |d| d.copy_from_slice(data));
                 self.stats.count(src);
                 t_data = t_data.max(done);
+                sink(base_idx + i, frame);
+            } else if let Some(idx) = self.pending_index(key) {
+                // Parked after a failed writeback: restore locally (the
+                // store holds stale bytes), still dirty.
+                self.restore_pending(idx, key);
+                t_wall += self.timing.zero_fill_ns;
+                let frame = self.buffer.peek(key).expect("just restored");
                 sink(base_idx + i, frame);
             } else if self.is_materialized(key) {
                 // Resident at the pre-scan (or already consumed) but missing
@@ -740,9 +841,18 @@ impl HostAgent {
         }
     }
 
-    /// Flush all dirty pages to the store (barrier / pre-pin sync).
+    /// Flush all dirty pages to the store (barrier / pre-pin sync). Parked
+    /// writebacks go out first on the *infallible* path — a flush is a
+    /// durability barrier, so it may not leave requeued pages behind.
     pub fn flush(&mut self, now: Ns) -> Ns {
         let mut t = now;
+        for (key, data) in std::mem::take(&mut self.pending_writebacks) {
+            let released = self.store.writeback(t, key, &data);
+            self.mark_materialized(key);
+            self.stats.writebacks += 1;
+            t = released;
+            self.buffer.recycle(data);
+        }
         for ev in self.buffer.drain_dirty() {
             let released = self.store.writeback(t, ev.key, &ev.data);
             self.mark_materialized(ev.key);
@@ -1114,6 +1224,55 @@ mod tests {
         a.touch_pages(t1, 0, &keys, false);
         assert_eq!(a.stats().faults, 4, "unsorted duplicate still fetches once");
         assert_eq!(a.buffer_stats().hits, 2);
+    }
+
+    /// Writeback durability under fault injection: a bounded writeback that
+    /// exhausts its budget parks the page (requeue) instead of losing it,
+    /// faults on the parked page restore the fresh bytes locally, and the
+    /// flush barrier lands everything once the fault clears.
+    #[test]
+    fn failed_writeback_requeues_and_restores_locally() {
+        use crate::backend::DpuStore;
+        use crate::sim::fault::FaultConfig;
+        let mut ccfg = ClusterConfig::tiny();
+        ccfg.fault = FaultConfig {
+            crash_start_ns: 0,
+            crash_len_ns: 2_000_000,
+            seed: 13,
+            ..FaultConfig::default()
+        };
+        let cluster = Cluster::build(ccfg);
+        let chunk = cluster.config().chunk_bytes;
+        let mut a = HostAgent::new(
+            "p0",
+            Box::new(DpuStore::new(cluster.clone())),
+            2 * chunk, // tiny buffer forces dirty eviction mid-crash
+            chunk,
+            1.0,
+            4,
+            4,
+            2,
+            HostTiming::default(),
+        );
+        let (h, t0) = a.alloc(0, "x", 4 * chunk, None, Placement::Default);
+        let mut t = t0;
+        for p in 0..3u64 {
+            let data = vec![p as u8 + 1; chunk as usize];
+            t = a.write_bytes(t, 0, h.region, p * chunk, &data);
+        }
+        assert!(a.stats().writeback_requeues > 0, "crash window must park pages");
+        assert_eq!(a.stats().writebacks, 0, "nothing reached the store yet");
+        // Faulting a parked page restores its bytes locally — the store
+        // holds nothing for it, so a refetch would return stale zeros.
+        let mut out = vec![0u8; chunk as usize];
+        t = a.read_bytes(t, 0, h.region, 0, &mut out);
+        assert!(out.iter().all(|&b| b == 1), "parked page restores its bytes");
+        let t_flush = a.flush(t);
+        assert!(t_flush > 2_000_000, "flush had to wait out the crash window");
+        let t_inv = a.invalidate_buffer(t_flush);
+        let mut back = vec![0u8; chunk as usize];
+        a.read_bytes(t_inv, 0, h.region, 2 * chunk, &mut back);
+        assert!(back.iter().all(|&b| b == 3), "requeued page became durable");
     }
 
     #[test]

@@ -112,6 +112,32 @@
 //! `soda config` output, on the CLI (`--max-batch-pages`, `--coalesce`),
 //! and swept by the extended `fig11` breakdown and `abl-batch`.
 //!
+//! ## Fault injection & the reliable fabric layer
+//!
+//! Every data-plane message can be subjected to a seeded, bit-reproducible
+//! [`sim::fault`] plan — drops, payload corruption, duplicate completions,
+//! latency spikes and scheduled memory-node crash windows — armed via
+//! `ClusterConfig::fault`, `SodaConfig::fault` or the CLI `--fault-*`
+//! flags. The reliability layer keeps faulted runs *correct, merely
+//! slower*:
+//!
+//! * [`fabric::protocol::ReliabilityHeader`] — per-request sequence
+//!   numbers plus a CRC-32 payload checksum: corruption is detected on
+//!   arrival, duplicate completions are deduplicated by sequence.
+//! * [`fabric::reliable::reliable_op`] — completion timeouts with bounded
+//!   exponential backoff; lost messages surface as timeouts and retry.
+//!   Writebacks that still fail re-mark their pages dirty and requeue in
+//!   the host buffer — dirty data is never silently dropped.
+//! * [`backend::FailoverStore`] — a circuit breaker over the DPU path:
+//!   when a crash window outlasts the retry budget it fails over to the
+//!   direct memserver path and re-probes until the DPU side recovers.
+//!
+//! Every event lands in [`sim::fault::FaultStats`] (surfaced through
+//! `RunMetrics` JSON and the `abl-faults` sweep). `tests/chaos.rs` — the
+//! CI "Chaos guard" — proves any plan below the retry budget leaves all
+//! five apps bit-identical to a fault-free run, that the fault ledger
+//! balances exactly, and that a disabled plan is zero-cost.
+//!
 //! Quickstart:
 //! ```no_run
 //! use soda::prelude::*;

@@ -113,6 +113,37 @@ fn soda_config_from_args(args: &Args) -> Result<SodaConfig> {
             _ => bail!("invalid --coalesce '{s}' (on|off)"),
         };
     }
+    // Fault-injection flags: any `--fault-*` flag enables the plan (the
+    // config file's `fault` block, when present, is the base it edits).
+    let fault_flags = [
+        "fault-drop-rate",
+        "fault-corrupt-rate",
+        "fault-dup-rate",
+        "fault-spike-rate",
+        "fault-spike-ns",
+        "fault-crash-start-ns",
+        "fault-crash-len-ns",
+        "fault-crash-every-ns",
+        "fault-seed",
+    ];
+    if fault_flags.iter().any(|f| args.opt(f).is_some()) {
+        let mut fc = cfg.fault.unwrap_or_default();
+        fc.drop_rate = args.opt_f64("fault-drop-rate", fc.drop_rate);
+        fc.corrupt_rate = args.opt_f64("fault-corrupt-rate", fc.corrupt_rate);
+        fc.dup_rate = args.opt_f64("fault-dup-rate", fc.dup_rate);
+        fc.spike_rate = args.opt_f64("fault-spike-rate", fc.spike_rate);
+        fc.spike_ns = args.opt_u64("fault-spike-ns", fc.spike_ns);
+        fc.crash_start_ns = args.opt_u64("fault-crash-start-ns", fc.crash_start_ns);
+        fc.crash_len_ns = args.opt_u64("fault-crash-len-ns", fc.crash_len_ns);
+        fc.crash_every_ns = args.opt_u64("fault-crash-every-ns", fc.crash_every_ns);
+        fc.seed = args.opt_u64("fault-seed", fc.seed);
+        for r in [fc.drop_rate, fc.corrupt_rate, fc.dup_rate, fc.spike_rate] {
+            if !(0.0..=1.0).contains(&r) {
+                bail!("fault rates must be within [0, 1] (got {r})");
+            }
+        }
+        cfg.fault = Some(fc);
+    }
     Ok(cfg)
 }
 
@@ -179,6 +210,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     wb.prefetch = scfg.prefetch;
     wb.max_batch_pages = Some(scfg.max_batch_pages);
     wb.coalesce_fetch = Some(scfg.coalesce_fetch);
+    wb.fault = scfg.fault;
     if args.opt("config").is_some() {
         // A --config file is a full SodaConfig: honor every field
         // (qp_count, numa_aware, buffer_fraction, host_timing, …), not
@@ -250,15 +282,20 @@ fn usage() -> &'static str {
        figures [--all | <id>...] [--scale F] [--threads N] [--json DIR]\n\
            regenerate paper tables/figures (table1 table2 fig3..fig11)\n\
            plus ablations (abl-entry abl-prefetch abl-prefetch-depth abl-evict abl-qp\n\
-           abl-cache-policy abl-batch)\n\
+           abl-cache-policy abl-batch abl-faults)\n\
        run <app> <graph> [--backend B] [--caching M] [--scale F] [--with-bg-bfs] [--json]\n\
            [--evict-policy P] [--dpu-cache-policy P] [--prefetch-policy Q]\n\
            [--prefetch-depth N] [--prefetch-scan N]\n\
            [--max-batch-pages N] [--coalesce on|off] [--config FILE] [--cluster-config FILE]\n\
+           [--fault-drop-rate R] [--fault-corrupt-rate R] [--fault-dup-rate R]\n\
+           [--fault-spike-rate R] [--fault-spike-ns T] [--fault-crash-start-ns T]\n\
+           [--fault-crash-len-ns T] [--fault-crash-every-ns T] [--fault-seed S]\n\
            run one application on one graph and print metrics\n\
            (policies P: fault-fifo | access-lru | random | clock | slru;\n\
             prefetch Q: off | sequential | strided | graph-hint | adaptive[:base];\n\
-            --max-batch-pages 1 disables the batched fault engine)\n\
+            --max-batch-pages 1 disables the batched fault engine;\n\
+            any --fault-* flag arms seeded fault injection + the reliable\n\
+            fabric layer — retries, checksums, memory-node failover)\n\
        config [--config FILE] [--evict-policy P] [--dpu-cache-policy P] ...\n\
            print the effective SodaConfig as JSON (the --config schema)\n\
        advisor [--hit-rate H]\n\

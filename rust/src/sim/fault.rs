@@ -1,0 +1,356 @@
+//! Deterministic fault injection — the chaos substrate for the fabric.
+//!
+//! A [`FaultPlan`] draws per-message delivery verdicts (drop, payload
+//! corruption, duplicated completion, latency spike) from the repo-wide
+//! seeded [`Rng`], plus scheduled memory-node crash/restart windows in
+//! virtual time. Every chaos run is therefore bit-reproducible: the same
+//! [`FaultConfig`] seed yields the same fault sequence on every machine.
+//!
+//! The plan itself only *injects*; detection and recovery live in the
+//! fabric reliability layer (`fabric::reliable`), which consults the plan
+//! once per network message (the simulator's unit of loss — a message and
+//! its completion), and in the backend failover store. Every injected and
+//! detected event is counted in [`FaultStats`] so the chaos property test
+//! can check the books balance: no injection goes unnoticed.
+//!
+//! With an all-zero (default) config the plan is disabled: no RNG state is
+//! consumed, no headers grow, and callers short-circuit to their plain
+//! paths, so the layer is provably zero-cost for fault-free runs.
+
+use super::rng::Rng;
+use super::Ns;
+
+/// Fault-injection knobs. All-zero (the `Default`) means disabled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Probability a message (request or completion) is silently lost.
+    pub drop_rate: f64,
+    /// Probability a delivered payload has a bit flipped in flight.
+    pub corrupt_rate: f64,
+    /// Probability a completion is delivered twice (dedup-by-seq target).
+    pub dup_rate: f64,
+    /// Probability a delivery suffers an added latency spike.
+    pub spike_rate: f64,
+    /// Size of an injected latency spike.
+    pub spike_ns: Ns,
+    /// Virtual time at which the first memory-node crash window opens.
+    pub crash_start_ns: Ns,
+    /// Length of each crash window (0 = no crashes).
+    pub crash_len_ns: Ns,
+    /// Crash period: a window reopens every this many ns after
+    /// `crash_start_ns` (0 = a single one-shot window).
+    pub crash_every_ns: Ns,
+    /// Seed for the fault stream (independent of the workload seed).
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            drop_rate: 0.0,
+            corrupt_rate: 0.0,
+            dup_rate: 0.0,
+            spike_rate: 0.0,
+            spike_ns: 0,
+            crash_start_ns: 0,
+            crash_len_ns: 0,
+            crash_every_ns: 0,
+            seed: 0xFA17,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when any fault class can fire. Disabled plans must be
+    /// zero-cost: callers check this before drawing.
+    pub fn enabled(&self) -> bool {
+        self.drop_rate > 0.0
+            || self.corrupt_rate > 0.0
+            || self.dup_rate > 0.0
+            || self.spike_rate > 0.0
+            || self.crash_len_ns > 0
+    }
+}
+
+/// Event counters: the left side of the ledger (`injected_*`,
+/// `crash_rejections`) is written by [`FaultPlan::draw`]; the right side
+/// (`detected_*`, `timeouts`, `retries`, …) by the reliability layer and
+/// the failover store. The chaos test asserts the two sides balance.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultStats {
+    pub injected_drops: u64,
+    pub injected_corruptions: u64,
+    pub injected_dups: u64,
+    pub injected_spikes: u64,
+    /// Messages rejected because they fell inside a crash window.
+    pub crash_rejections: u64,
+    /// Corruptions caught by the payload checksum on arrival.
+    pub detected_corruptions: u64,
+    /// Duplicate completions suppressed by sequence-number dedup.
+    pub detected_dups: u64,
+    /// Completion timeouts (every lost message surfaces as one).
+    pub timeouts: u64,
+    /// Re-issued requests after a timeout or checksum failure.
+    pub retries: u64,
+    /// Attempts abandoned because a bounded retry budget ran out
+    /// (handed to the circuit breaker / failover path).
+    pub exhaustions: u64,
+    /// Wire bytes spent on failed attempts (the retry-traffic figure).
+    pub retry_bytes: u64,
+    /// Virtual time spent in exponential backoff.
+    pub backoff_ns: Ns,
+    /// Circuit-breaker trips: DPU path abandoned for the direct path.
+    pub failovers: u64,
+    /// Successful re-probes: DPU path restored after a failover.
+    pub recoveries: u64,
+}
+
+impl FaultStats {
+    /// Total injected events (for balance checks and reporting).
+    pub fn injected(&self) -> u64 {
+        self.injected_drops
+            + self.injected_corruptions
+            + self.injected_dups
+            + self.injected_spikes
+            + self.crash_rejections
+    }
+}
+
+/// Per-message verdict drawn from the plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Delivery {
+    /// Delivered; possibly late and/or with a duplicated completion.
+    Ok { spike_ns: Ns, duplicated: bool },
+    /// Lost in flight — the sender sees only a completion timeout.
+    Dropped,
+    /// Delivered with a flipped payload bit — caught by checksum.
+    Corrupted,
+}
+
+/// Seeded fault stream + event ledger. Lives in the cluster next to the
+/// fabric; the reliability layer borrows it per message.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub cfg: FaultConfig,
+    pub stats: FaultStats,
+    rng: Rng,
+    next_seq: u64,
+}
+
+impl FaultPlan {
+    pub fn from_config(cfg: FaultConfig) -> Self {
+        FaultPlan {
+            rng: Rng::new(cfg.seed),
+            cfg,
+            stats: FaultStats::default(),
+            next_seq: 0,
+        }
+    }
+
+    /// A plan that never fires (the default for every cluster).
+    pub fn disabled() -> Self {
+        Self::from_config(FaultConfig::default())
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// Next per-request sequence number (dedup + replay identity).
+    pub fn next_seq(&mut self) -> u64 {
+        self.next_seq += 1;
+        self.next_seq
+    }
+
+    /// Is the memory node inside a crash window at `now`?
+    pub fn crashed(&self, now: Ns) -> bool {
+        if self.cfg.crash_len_ns == 0 || now < self.cfg.crash_start_ns {
+            return false;
+        }
+        let since = now - self.cfg.crash_start_ns;
+        let phase = if self.cfg.crash_every_ns > 0 {
+            since % self.cfg.crash_every_ns
+        } else {
+            since
+        };
+        phase < self.cfg.crash_len_ns
+    }
+
+    /// Earliest time at or after `now` outside any crash window — what a
+    /// retry loop waits for once it has diagnosed a dead memory node.
+    pub fn crash_clears_at(&self, now: Ns) -> Ns {
+        if !self.crashed(now) {
+            return now;
+        }
+        let since = now - self.cfg.crash_start_ns;
+        let phase = if self.cfg.crash_every_ns > 0 {
+            since % self.cfg.crash_every_ns
+        } else {
+            since
+        };
+        now + (self.cfg.crash_len_ns - phase)
+    }
+
+    /// Draw the delivery verdict for one message sent at `now`.
+    /// Fixed draw order (crash, drop, corrupt, spike, dup) keeps the
+    /// stream bit-reproducible for a given config.
+    pub fn draw(&mut self, now: Ns) -> Delivery {
+        if self.crashed(now) {
+            self.stats.crash_rejections += 1;
+            return Delivery::Dropped;
+        }
+        if self.cfg.drop_rate > 0.0 && self.rng.chance(self.cfg.drop_rate) {
+            self.stats.injected_drops += 1;
+            return Delivery::Dropped;
+        }
+        if self.cfg.corrupt_rate > 0.0 && self.rng.chance(self.cfg.corrupt_rate) {
+            self.stats.injected_corruptions += 1;
+            return Delivery::Corrupted;
+        }
+        let spike_ns = if self.cfg.spike_rate > 0.0 && self.rng.chance(self.cfg.spike_rate) {
+            self.stats.injected_spikes += 1;
+            self.cfg.spike_ns
+        } else {
+            0
+        };
+        let duplicated = self.cfg.dup_rate > 0.0 && self.rng.chance(self.cfg.dup_rate);
+        if duplicated {
+            self.stats.injected_dups += 1;
+        }
+        Delivery::Ok { spike_ns, duplicated }
+    }
+
+    /// Flip one random bit of `data` (the payload corruption model).
+    /// Returns the (byte, bit) flipped so a test can flip it back.
+    pub fn flip_bit(&mut self, data: &mut [u8]) -> (usize, u32) {
+        if data.is_empty() {
+            return (0, 0);
+        }
+        let byte = self.rng.index(data.len());
+        let bit = (self.rng.next_u64() % 8) as u32;
+        data[byte] ^= 1 << bit;
+        (byte, bit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chaos_cfg() -> FaultConfig {
+        FaultConfig {
+            drop_rate: 0.1,
+            corrupt_rate: 0.05,
+            dup_rate: 0.05,
+            spike_rate: 0.1,
+            spike_ns: 5_000,
+            seed: 42,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn default_config_is_disabled() {
+        let cfg = FaultConfig::default();
+        assert!(!cfg.enabled());
+        let mut plan = FaultPlan::disabled();
+        assert!(!plan.enabled());
+        for t in [0, 1_000, 1_000_000] {
+            assert_eq!(
+                plan.draw(t),
+                Delivery::Ok { spike_ns: 0, duplicated: false }
+            );
+        }
+        assert_eq!(plan.stats.injected(), 0);
+    }
+
+    #[test]
+    fn draws_are_bit_reproducible() {
+        let mut a = FaultPlan::from_config(chaos_cfg());
+        let mut b = FaultPlan::from_config(chaos_cfg());
+        for t in 0..10_000u64 {
+            assert_eq!(a.draw(t), b.draw(t));
+        }
+        assert_eq!(a.stats.injected(), b.stats.injected());
+        assert!(a.stats.injected() > 0, "chaos config must fire");
+    }
+
+    #[test]
+    fn rates_are_roughly_honored() {
+        let mut plan = FaultPlan::from_config(chaos_cfg());
+        let n = 100_000u64;
+        for t in 0..n {
+            plan.draw(t);
+        }
+        let drops = plan.stats.injected_drops as f64 / n as f64;
+        assert!((drops - 0.1).abs() < 0.01, "drop rate {drops}");
+        // Corruption fires only on non-dropped messages.
+        let corr = plan.stats.injected_corruptions as f64 / n as f64;
+        assert!((corr - 0.045).abs() < 0.01, "corrupt rate {corr}");
+    }
+
+    #[test]
+    fn one_shot_crash_window() {
+        let plan = FaultPlan::from_config(FaultConfig {
+            crash_start_ns: 1_000,
+            crash_len_ns: 500,
+            seed: 1,
+            ..FaultConfig::default()
+        });
+        assert!(!plan.crashed(999));
+        assert!(plan.crashed(1_000));
+        assert!(plan.crashed(1_499));
+        assert!(!plan.crashed(1_500));
+        assert!(!plan.crashed(1_000_000), "one-shot window must not reopen");
+        assert_eq!(plan.crash_clears_at(1_200), 1_500);
+        assert_eq!(plan.crash_clears_at(2_000), 2_000);
+    }
+
+    #[test]
+    fn periodic_crash_window_reopens() {
+        let plan = FaultPlan::from_config(FaultConfig {
+            crash_start_ns: 1_000,
+            crash_len_ns: 100,
+            crash_every_ns: 1_000,
+            seed: 1,
+            ..FaultConfig::default()
+        });
+        assert!(plan.crashed(1_050));
+        assert!(!plan.crashed(1_100));
+        assert!(plan.crashed(2_050));
+        assert!(plan.crashed(9_001_050));
+        assert_eq!(plan.crash_clears_at(2_050), 2_100);
+    }
+
+    #[test]
+    fn crash_rejections_are_counted_and_bypass_rng() {
+        let mut plan = FaultPlan::from_config(FaultConfig {
+            crash_start_ns: 0,
+            crash_len_ns: 100,
+            seed: 9,
+            ..FaultConfig::default()
+        });
+        assert_eq!(plan.draw(50), Delivery::Dropped);
+        assert_eq!(plan.stats.crash_rejections, 1);
+        assert_eq!(plan.stats.injected_drops, 0);
+    }
+
+    #[test]
+    fn flip_bit_changes_exactly_one_bit() {
+        let mut plan = FaultPlan::from_config(chaos_cfg());
+        let orig = vec![0xA5u8; 64];
+        let mut data = orig.clone();
+        let (byte, bit) = plan.flip_bit(&mut data);
+        assert_ne!(data, orig);
+        data[byte] ^= 1 << bit;
+        assert_eq!(data, orig, "flipping back must restore the payload");
+    }
+
+    #[test]
+    fn sequence_numbers_are_unique_and_monotone() {
+        let mut plan = FaultPlan::from_config(chaos_cfg());
+        let a = plan.next_seq();
+        let b = plan.next_seq();
+        assert!(b > a);
+    }
+}

@@ -14,6 +14,7 @@
 //! [`threads::ThreadSet`] time-ordered merge.
 
 pub mod engine;
+pub mod fault;
 pub mod link;
 pub mod rng;
 pub mod server;

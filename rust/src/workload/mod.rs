@@ -70,6 +70,10 @@ pub struct Workbench {
     pub max_batch_pages: Option<u64>,
     /// Range-coalescing override (`SodaConfig::coalesce_fetch`).
     pub coalesce_fetch: Option<bool>,
+    /// Fault-injection override (`SodaConfig::fault`); `None` keeps the
+    /// base config's plan — faults off unless a `--config` file says
+    /// otherwise.
+    pub fault: Option<crate::sim::fault::FaultConfig>,
     /// Full [`SodaConfig`] base for runs (e.g. a `--config` file): every
     /// field (qp_count, numa_aware, buffer_fraction, host_timing, …) is
     /// honored, with the explicit `threads`/policy/prefetch fields above
@@ -90,6 +94,7 @@ impl Workbench {
             prefetch: None,
             max_batch_pages: None,
             coalesce_fetch: None,
+            fault: None,
             soda_config_base: None,
         }
     }
@@ -196,6 +201,9 @@ impl Workbench {
         }
         if let Some(c) = self.coalesce_fetch {
             cfg.coalesce_fetch = c;
+        }
+        if let Some(f) = self.fault {
+            cfg.fault = Some(f);
         }
         cfg.with_backend(spec.backend).with_caching(spec.caching)
     }
@@ -420,6 +428,26 @@ mod tests {
         let sc = wb.soda_config(&spec);
         assert_eq!(sc.max_batch_pages, 1);
         assert!(!sc.coalesce_fetch);
+    }
+
+    #[test]
+    fn fault_override_layers_over_the_base_config() {
+        let mut wb = quick_bench();
+        let spec = ExperimentSpec {
+            app: App::Bfs,
+            graph: "friendster",
+            backend: BackendKind::MemServer,
+            caching: CachingMode::None,
+        };
+        assert_eq!(wb.soda_config(&spec).fault, None, "faults default off");
+        wb.fault = Some(crate::sim::fault::FaultConfig {
+            drop_rate: 0.02,
+            seed: 7,
+            ..Default::default()
+        });
+        let f = wb.soda_config(&spec).fault.expect("override must land");
+        assert_eq!(f.drop_rate, 0.02);
+        assert_eq!(f.seed, 7);
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Chaos property suite for the fault-injection engine + reliable fabric
+//! layer: under any seeded `FaultPlan` whose faults stay below the retry
+//! budget (drops ≤ 5%, finite crash windows), every application must
+//! produce **bit-identical** results to a fault-free run — degradation is
+//! time and retry traffic, never wrong answers. On top of that:
+//!
+//! * the fault ledger balances: every injected corruption/dup is detected,
+//!   every drop/crash-rejection times out, and every timeout is either
+//!   retried or handed to failover as an exhaustion;
+//! * retry traffic stays bounded (well under the goodput);
+//! * with faults disabled the whole layer is zero-cost: identical virtual
+//!   time and network bytes regardless of the configured seed, and an
+//!   all-zero `FaultStats`.
+//!
+//! CI runs this as the "Chaos guard" step.
+
+use soda::backend::{DpuStore, FailoverStore, RemoteStore};
+use soda::coordinator::cluster::Cluster;
+use soda::coordinator::config::ClusterConfig;
+use soda::dpu::DpuOpts;
+use soda::graph::apps::{bc, bfs, cc, pagerank, radii};
+use soda::graph::{gen, BuildMode, CsrGraph, FamGraph, GraphRunner};
+use soda::host::{HostAgent, HostTiming};
+use soda::sim::fault::{FaultConfig, FaultStats};
+
+/// Small-but-real graph: enough pages that a 24-page buffer keeps the
+/// remote path (and its faults) busy through every app.
+fn chaos_graph() -> CsrGraph {
+    gen::rmat(256, 2048, 0.57, 0.19, 0.19, 7)
+}
+
+/// Build a runner over a DPU_FULL cluster carrying `fault`. With faults
+/// armed the host uses the failover store (DPU primary, direct-memserver
+/// fallback), exactly as `SodaService` selects it; disabled plans keep the
+/// plain DPU path so the zero-cost guard compares like with like.
+fn runner_with(fault: FaultConfig, csr: &CsrGraph) -> (GraphRunner, FamGraph, Cluster) {
+    let mut cfg = ClusterConfig::tiny();
+    cfg.dpu.opts = DpuOpts::FULL;
+    cfg.fault = fault;
+    let cluster = Cluster::build(cfg);
+    let chunk = cluster.config().chunk_bytes;
+    let store: Box<dyn RemoteStore> = if cluster.config().fault.enabled() {
+        Box::new(FailoverStore::new(cluster.clone()))
+    } else {
+        Box::new(DpuStore::new(cluster.clone()))
+    };
+    let agent = HostAgent::new(
+        "chaos",
+        store,
+        24 * chunk,
+        chunk,
+        0.9,
+        4,
+        4,
+        2,
+        HostTiming::default(),
+    );
+    let mut r = GraphRunner::new(agent, 4, 0);
+    let (g, t) = FamGraph::build(&mut r.agent, 0, csr, BuildMode::FileBacked);
+    r.set_clock(t);
+    (r, g, cluster)
+}
+
+/// Every fault the plan injects must be accounted for downstream: nothing
+/// slips through undetected and nothing is detected out of thin air.
+fn assert_ledger_balances(s: &FaultStats, ctx: &str) {
+    assert_eq!(
+        s.detected_corruptions, s.injected_corruptions,
+        "{ctx}: every injected corruption must be caught by the checksum"
+    );
+    assert_eq!(
+        s.detected_dups, s.injected_dups,
+        "{ctx}: every injected duplicate completion must be deduplicated"
+    );
+    assert_eq!(
+        s.timeouts,
+        s.injected_drops + s.crash_rejections,
+        "{ctx}: drops and crash rejections are the only timeout sources"
+    );
+    assert_eq!(
+        s.timeouts + s.detected_corruptions,
+        s.retries + s.exhaustions,
+        "{ctx}: every failed attempt is either retried or exhausted"
+    );
+}
+
+struct AppRun {
+    digest: String,
+    fault: FaultStats,
+    net_bytes: u64,
+    elapsed_ns: u64,
+}
+
+/// Run all five apps, each on a fresh cluster carrying `fault`, and record
+/// an output digest (exact bit-patterns via `{:?}`) plus the fault ledger.
+fn run_all(fault: FaultConfig, csr: &CsrGraph) -> Vec<AppRun> {
+    let mut runs = Vec::new();
+    let mut record = |digest: String, cluster: &Cluster, r: &GraphRunner| {
+        runs.push(AppRun {
+            digest,
+            fault: cluster.fault_stats(),
+            net_bytes: cluster.network_stats().network_bytes(),
+            elapsed_ns: r.now(),
+        });
+    };
+    {
+        let (mut r, g, cluster) = runner_with(fault, csr);
+        let out = bfs(&mut r, &g, 0);
+        record(
+            format!("bfs {:?} {:?} {}", out.levels, out.parents, out.rounds),
+            &cluster,
+            &r,
+        );
+    }
+    {
+        let (mut r, g, cluster) = runner_with(fault, csr);
+        let out = pagerank(&mut r, &g, 10);
+        record(
+            format!("pagerank {:?} {}", out.ranks, out.last_delta),
+            &cluster,
+            &r,
+        );
+    }
+    {
+        let (mut r, g, cluster) = runner_with(fault, csr);
+        let out = cc(&mut r, &g);
+        record(
+            format!("cc {:?} {}", out.labels, out.components),
+            &cluster,
+            &r,
+        );
+    }
+    {
+        let (mut r, g, cluster) = runner_with(fault, csr);
+        let out = bc(&mut r, &g, 0);
+        record(
+            format!("bc {:?} {:?} {:?}", out.scores, out.levels, out.sigma),
+            &cluster,
+            &r,
+        );
+    }
+    {
+        let (mut r, g, cluster) = runner_with(fault, csr);
+        let out = radii(&mut r, &g, 0xAD11);
+        record(
+            format!("radii {:?} {:?}", out.radii, out.sources),
+            &cluster,
+            &r,
+        );
+    }
+    runs
+}
+
+/// A plan that exercises every injector at once: drops, corruption, dup
+/// completions, latency spikes and periodic memory-node crash windows that
+/// outlast the DPU path's retry budget (forcing real failovers).
+fn chaos_cfg(seed: u64) -> FaultConfig {
+    FaultConfig {
+        drop_rate: 0.04,
+        corrupt_rate: 0.01,
+        dup_rate: 0.01,
+        spike_rate: 0.02,
+        spike_ns: 40_000,
+        crash_start_ns: 50_000,
+        crash_len_ns: 250_000,
+        crash_every_ns: 1_500_000,
+        seed,
+    }
+}
+
+#[test]
+fn chaos_runs_are_bit_identical_to_fault_free() {
+    let csr = chaos_graph();
+    let clean = run_all(FaultConfig::default(), &csr);
+    for s in &clean {
+        assert_eq!(s.fault.injected(), 0, "clean run must inject nothing");
+    }
+    for seed in [1u64, 0xC0FFEE] {
+        let chaos = run_all(chaos_cfg(seed), &csr);
+        let mut injected = 0;
+        let mut failovers = 0;
+        for (c, f) in clean.iter().zip(&chaos) {
+            let app = f.digest.split(' ').next().unwrap_or("?");
+            assert_eq!(
+                c.digest, f.digest,
+                "seed {seed:#x}: {app} diverged from the fault-free run"
+            );
+            assert_ledger_balances(&f.fault, &format!("seed {seed:#x} {app}"));
+            // Retry traffic stays a small fraction of the goodput.
+            assert!(
+                f.fault.retry_bytes <= f.net_bytes / 4,
+                "seed {seed:#x} {app}: retry bytes {} vs net {}",
+                f.fault.retry_bytes,
+                f.net_bytes
+            );
+            // Degradation only ever costs time.
+            assert!(
+                f.elapsed_ns >= c.elapsed_ns,
+                "seed {seed:#x} {app}: chaos run finished faster than clean"
+            );
+            injected += f.fault.injected();
+            failovers += f.fault.failovers;
+        }
+        assert!(injected > 0, "seed {seed:#x}: the plan never fired");
+        assert!(
+            failovers > 0,
+            "seed {seed:#x}: crash windows beyond the retry budget must trip failover"
+        );
+    }
+}
+
+#[test]
+fn disabled_faults_are_zero_cost_whatever_the_seed() {
+    let csr = chaos_graph();
+    // Same all-zero rates, wildly different seeds: if the disabled plan
+    // consulted its RNG anywhere on the data path, these would diverge.
+    let a = run_all(FaultConfig::default(), &csr);
+    let b = run_all(
+        FaultConfig {
+            seed: 0xDEAD_BEEF,
+            ..FaultConfig::default()
+        },
+        &csr,
+    );
+    for (x, y) in a.iter().zip(&b) {
+        let app = x.digest.split(' ').next().unwrap_or("?");
+        assert_eq!(x.digest, y.digest, "{app}: outputs must match");
+        assert_eq!(x.elapsed_ns, y.elapsed_ns, "{app}: timing must match");
+        assert_eq!(x.net_bytes, y.net_bytes, "{app}: traffic must match");
+        for s in [&x.fault, &y.fault] {
+            assert_eq!(s.injected(), 0, "{app}: nothing injected");
+            assert_eq!(s.retries + s.exhaustions + s.timeouts, 0, "{app}: no retry activity");
+            assert_eq!(s.retry_bytes + s.backoff_ns, 0, "{app}: no retry cost");
+            assert_eq!(s.failovers + s.recoveries, 0, "{app}: no breaker activity");
+        }
+    }
+}
+
+#[test]
+fn corruption_alone_is_always_caught_and_corrected() {
+    let csr = chaos_graph();
+    let clean = run_all(FaultConfig::default(), &csr);
+    let corrupt = run_all(
+        FaultConfig {
+            corrupt_rate: 0.03,
+            seed: 11,
+            ..FaultConfig::default()
+        },
+        &csr,
+    );
+    let mut caught = 0;
+    for (c, f) in clean.iter().zip(&corrupt) {
+        assert_eq!(c.digest, f.digest, "corruption must never reach the app");
+        assert_ledger_balances(&f.fault, "corrupt-only");
+        caught += f.fault.detected_corruptions;
+    }
+    assert!(caught > 0, "a 3% corruption rate must fire at least once");
+}

@@ -1,0 +1,59 @@
+//! Bench: the memory-fleet sweep behind `abl-fleet` — wall-clock of the
+//! simulator runs per topology (single node / 2-node striped / 4-node
+//! contiguous / 4-node striped / 4-node striped + replica & crash
+//! windows) on the streaming app (PageRank). The virtual-time results
+//! come from `soda figures abl-fleet`; set `BENCH_JSON=<path>` to also
+//! dump these wall-clock stats as a `BENCH_fleet.json` trajectory record.
+
+use soda::coordinator::config::{BackendKind, CachingMode};
+use soda::fleet::FleetConfig;
+use soda::graph::App;
+use soda::sim::fault::FaultConfig;
+use soda::util::bench::Bench;
+use soda::workload::{ExperimentSpec, Workbench};
+
+fn main() {
+    let mut b = Bench::quick();
+    b.section("abl-fleet: nodes x placement x crash windows (scale 2e-4)");
+    // (mem_nodes, stripe_pages, replicas, crash_len_ns) — the abl-fleet cells.
+    let cells: [(usize, u64, usize, u64); 5] = [
+        (1, 0, 0, 0),
+        (2, 1, 0, 0),
+        (4, 0, 0, 0),
+        (4, 1, 0, 0),
+        (4, 1, 1, 250_000),
+    ];
+    for (nodes, stripe, replicas, crash_len) in cells {
+        let fleet = FleetConfig { mem_nodes: nodes, stripe_pages: stripe, replicas };
+        let placement = if nodes == 1 { "single" } else { fleet.placement().name() };
+        let tag = if crash_len > 0 { "+crash" } else { "" };
+        b.bench(
+            format!("pagerank/friendster/{nodes}x-{placement}-r{replicas}{tag}"),
+            || {
+                let mut wb = Workbench::new(0.0002);
+                wb.threads = 24;
+                wb.fleet = Some(fleet);
+                if crash_len > 0 {
+                    wb.fault = Some(FaultConfig {
+                        crash_start_ns: 50_000,
+                        crash_len_ns: crash_len,
+                        crash_every_ns: 1_500_000,
+                        seed: 0xF1EE7,
+                        ..FaultConfig::default()
+                    });
+                }
+                wb.run(&ExperimentSpec {
+                    app: App::PageRank,
+                    graph: "friendster",
+                    backend: BackendKind::MemServer,
+                    caching: CachingMode::None,
+                })
+                .elapsed_ns
+            },
+        );
+    }
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        b.write_json(&path, "fig_fleet").expect("write BENCH_JSON");
+        println!("wrote {path}");
+    }
+}

@@ -5,24 +5,137 @@
 //! buffer sits in front; only fetch/writeback timing (and the absence of
 //! network traffic) differ. Evictions are synchronous — there is no DPU to
 //! hand dirty pages to.
+//!
+//! For fairness against the DPU path (which prefetches into DPU DRAM) the
+//! store can run a host-RAM *readahead* in front of the device, reusing
+//! the same `sequential`/`strided` planners the DPU prefetch worker uses
+//! ([`crate::dpu::prefetch`]) — the lookahead an OS readahead would give a
+//! real mmap-over-NVMe baseline. [`SsdStore::new`] stays readahead-free
+//! and timing-identical to the seed; [`SsdStore::with_prefetch`] arms it
+//! when the effective prefetch policy is sequential or strided.
 
 use super::{FetchSource, RemoteStore};
 use crate::coordinator::cluster::Cluster;
+use crate::dpu::cache_table::CacheTable;
+use crate::dpu::prefetch::{PrefetchConfig, Prefetcher, PrefetchPolicyKind};
+use crate::dpu::recent_list::RecentList;
 use crate::host::buffer::{PageKey, PageSpan};
 use crate::memnode::{MemError, RegionId};
-use crate::sim::Ns;
+use crate::sim::rng::Rng;
+use crate::sim::{ser_ns, Ns};
+use crate::util::fxhash::FxHashMap;
+
+/// Staging-table capacity in entries — a modest, OS-readahead-sized
+/// window, not a second page cache.
+const RA_ENTRIES: u64 = 8;
+
+/// Staged entries issued to the device per readahead step; bounds how much
+/// background occupancy a single demand miss can add to the NVMe channels.
+const RA_ISSUE_PER_STEP: usize = 2;
+
+/// Host-DRAM copy bandwidth for serving a staged page (GB/s) — the only
+/// cost of a readahead hit; the 80 µs device access was already paid in
+/// the background.
+const HOST_COPY_GBPS: f64 = 20.0;
+
+/// Host-RAM readahead state (behind `Option`: `None` = seed behavior).
+#[derive(Debug)]
+struct Readahead {
+    /// Staged entries (reuses the DPU cache table: per-page staleness,
+    /// ready-at gating for in-flight stages, useful/wasted accounting).
+    table: CacheTable,
+    recent: RecentList,
+    prefetcher: Prefetcher,
+    rng: Rng,
+    /// region → pages, mirrored at alloc time (plan bound).
+    region_pages: FxHashMap<RegionId, u64>,
+}
 
 /// SSD-backed remote store.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct SsdStore {
     cluster: Cluster,
     chunk_bytes: u64,
+    readahead: Option<Box<Readahead>>,
 }
 
 impl SsdStore {
     pub fn new(cluster: Cluster) -> Self {
         let chunk_bytes = cluster.config().chunk_bytes;
-        SsdStore { cluster, chunk_bytes }
+        SsdStore { cluster, chunk_bytes, readahead: None }
+    }
+
+    /// Like [`Self::new`] with readahead armed when `pf.policy` is a
+    /// planner the device can drive without a hint channel (`sequential`
+    /// or `strided`); any other policy — `off`, `graph-hint`, `adaptive`
+    /// — leaves the store readahead-free.
+    pub fn with_prefetch(cluster: Cluster, pf: PrefetchConfig) -> Self {
+        let mut s = SsdStore::new(cluster);
+        if !matches!(
+            pf.policy,
+            PrefetchPolicyKind::Sequential | PrefetchPolicyKind::Strided
+        ) {
+            return s;
+        }
+        let ccfg = s.cluster.config();
+        let chunk = s.chunk_bytes;
+        let e = ccfg.dpu.cache_entry_bytes;
+        // Same entry granularity as the DPU cache when compatible with the
+        // cluster's page size.
+        let entry_bytes = if e >= chunk && e % chunk == 0 { e } else { 4 * chunk };
+        s.readahead = Some(Box::new(Readahead {
+            table: CacheTable::new(RA_ENTRIES * entry_bytes, entry_bytes, chunk),
+            recent: RecentList::new(ccfg.dpu.recent_list_capacity),
+            prefetcher: Prefetcher::new(pf),
+            rng: Rng::new(ccfg.seed ^ 0x55D0_AEAD),
+            region_pages: FxHashMap::default(),
+        }));
+        s
+    }
+
+    /// Serve `page` from the staging table if resident, ready and not
+    /// staled; pays only the host-DRAM copy.
+    fn readahead_lookup(&mut self, now: Ns, page: PageKey, out: &mut [u8]) -> Option<Ns> {
+        let ra = self.readahead.as_mut()?;
+        let bytes = ra.table.lookup_page(now, page)?;
+        out.copy_from_slice(bytes);
+        Some(now + ser_ns(out.len() as u64, HOST_COPY_GBPS))
+    }
+
+    /// One readahead step after a demand access: note the page, plan with
+    /// the shared prefetch engine and issue up to [`RA_ISSUE_PER_STEP`]
+    /// staged entry reads on the device starting at `now` (they occupy
+    /// real NVMe channels, so background staging contends with demand I/O
+    /// exactly as on hardware).
+    fn readahead_step(&mut self, now: Ns, accessed: &[PageKey]) {
+        let chunk = self.chunk_bytes;
+        let Some(ra) = self.readahead.as_mut() else { return };
+        for &p in accessed {
+            ra.recent.push(p);
+        }
+        let ppe = ra.table.pages_per_entry();
+        let region_pages = &ra.region_pages;
+        let mut planned = ra.prefetcher.plan(&ra.recent, &ra.table, |r| {
+            region_pages.get(&r).map(|p| p.div_ceil(ppe)).unwrap_or(0)
+        });
+        planned.truncate(RA_ISSUE_PER_STEP);
+        for (ekey, origin) in planned {
+            let pages = ra.region_pages.get(&ekey.region).copied().unwrap_or(0);
+            let first = ekey.first_page(ppe);
+            if first >= pages {
+                continue;
+            }
+            let take = (ppe.min(pages - first)) * chunk;
+            let entry_bytes = ra.table.entry_bytes();
+            let mut data = vec![0u8; entry_bytes as usize];
+            let done = self.cluster.with(|inner| {
+                inner
+                    .ssd
+                    .read(now, ekey.region, first * chunk, &mut data[..take as usize])
+            });
+            let Ok(ready) = done else { continue };
+            ra.table.insert_tagged(ekey, data, take, crate::dpu::PrefetchOrigin::Scan, ready, &mut ra.rng);
+        }
     }
 }
 
@@ -39,7 +152,7 @@ impl RemoteStore for SsdStore {
     ) -> Result<(RegionId, Ns), MemError> {
         // Regions are chunk-aligned so every page fetch is full-sized.
         let padded = bytes.div_ceil(self.chunk_bytes) * self.chunk_bytes;
-        self.cluster.with(|inner| {
+        let res = self.cluster.with(|inner| {
             let region = match init {
                 Some(mut data) => {
                     data.resize(padded as usize, 0);
@@ -49,14 +162,22 @@ impl RemoteStore for SsdStore {
             }?;
             // Creating the backing file costs a metadata write.
             Ok((region, now + inner.ssd.cfg.write_latency_ns))
-        })
+        });
+        if let (Ok((region, _)), Some(ra)) = (&res, self.readahead.as_mut()) {
+            ra.region_pages.insert(*region, padded / self.chunk_bytes);
+        }
+        res
     }
 
     fn try_free(&mut self, now: Ns, region: RegionId) -> Result<Ns, MemError> {
-        self.cluster.with(|inner| {
+        let res = self.cluster.with(|inner| {
             inner.ssd.store.free(region)?;
             Ok(now)
-        })
+        });
+        if let (Ok(_), Some(ra)) = (&res, self.readahead.as_mut()) {
+            ra.region_pages.remove(&region);
+        }
+        res
     }
 
     fn fetch(
@@ -66,6 +187,12 @@ impl RemoteStore for SsdStore {
         _numa_node: usize,
         out: &mut [u8],
     ) -> (Ns, FetchSource) {
+        // A readahead hit skips the device entirely — the background stage
+        // already paid the access latency.
+        if let Some(done) = self.readahead_lookup(now, key, out) {
+            self.readahead_step(done, &[key]);
+            return (done, FetchSource::Ssd);
+        }
         let off = key.byte_offset(self.chunk_bytes);
         let done = self.cluster.with(|inner| {
             inner
@@ -73,6 +200,7 @@ impl RemoteStore for SsdStore {
                 .read(now, key.region, off, out)
                 .expect("ssd read within region")
         });
+        self.readahead_step(done, &[key]);
         (done, FetchSource::Ssd)
     }
 
@@ -88,23 +216,77 @@ impl RemoteStore for SsdStore {
         out: &mut [u8],
     ) -> Vec<(Ns, FetchSource)> {
         let chunk = self.chunk_bytes;
-        self.cluster.with(|inner| {
-            let mut res = Vec::new();
-            let mut off = 0usize;
-            for s in spans {
-                let bytes = s.bytes(chunk) as usize;
-                let done = inner
-                    .ssd
-                    .read(now, s.start.region, s.byte_offset(chunk), &mut out[off..off + bytes])
-                    .expect("ssd span within region");
-                res.extend(std::iter::repeat((done, FetchSource::Ssd)).take(s.pages as usize));
-                off += bytes;
+        if self.readahead.is_none() {
+            return self.cluster.with(|inner| {
+                let mut res = Vec::new();
+                let mut off = 0usize;
+                for s in spans {
+                    let bytes = s.bytes(chunk) as usize;
+                    let done = inner
+                        .ssd
+                        .read(now, s.start.region, s.byte_offset(chunk), &mut out[off..off + bytes])
+                        .expect("ssd span within region");
+                    res.extend(std::iter::repeat((done, FetchSource::Ssd)).take(s.pages as usize));
+                    off += bytes;
+                }
+                res
+            });
+        }
+        // Readahead armed: split each span at staged/unstaged boundaries so
+        // staged pages never touch the device; unstaged runs stay coalesced
+        // single I/Os, all posted at `now` (one SQ doorbell).
+        let mut res: Vec<(Ns, FetchSource)> = Vec::new();
+        let mut accessed: Vec<PageKey> = Vec::new();
+        let mut off = 0usize;
+        for s in spans {
+            // (first_page_index, len, staged) runs in span order.
+            let mut runs: Vec<(u64, u64, bool)> = Vec::new();
+            for i in 0..s.pages {
+                let page = s.key_at(i);
+                accessed.push(page);
+                let lo = off + (i * chunk) as usize;
+                let staged = self
+                    .readahead_lookup(now, page, &mut out[lo..lo + chunk as usize])
+                    .is_some();
+                match runs.last_mut() {
+                    Some((_, len, h)) if *h == staged => *len += 1,
+                    _ => runs.push((i, 1, staged)),
+                }
             }
-            res
-        })
+            for &(first, len, staged) in &runs {
+                let bytes = len * chunk;
+                let done = if staged {
+                    now + ser_ns(bytes, HOST_COPY_GBPS)
+                } else {
+                    let lo = off + (first * chunk) as usize;
+                    self.cluster.with(|inner| {
+                        inner
+                            .ssd
+                            .read(
+                                now,
+                                s.start.region,
+                                s.key_at(first).byte_offset(chunk),
+                                &mut out[lo..lo + bytes as usize],
+                            )
+                            .expect("ssd span within region")
+                    })
+                };
+                res.extend(std::iter::repeat((done, FetchSource::Ssd)).take(len as usize));
+            }
+            off += s.bytes(chunk) as usize;
+        }
+        // One readahead step off the batch's tail.
+        let t = res.iter().map(|r| r.0).max().unwrap_or(now);
+        self.readahead_step(t, &accessed);
+        res
     }
 
     fn writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Ns {
+        // Coherence for the staging table: stale only the written page —
+        // its staged siblings keep serving.
+        if let Some(ra) = self.readahead.as_mut() {
+            ra.table.invalidate_page(key);
+        }
         let off = key.byte_offset(self.chunk_bytes);
         // Synchronous: the host thread waits for durability.
         self.cluster.with(|inner| {
@@ -169,6 +351,110 @@ mod tests {
             t = seq.fetch(t, PageKey::new(r2, p), 2, &mut one).0;
         }
         assert!(batch_done < t, "coalesced I/O ({batch_done}) must beat chained ({t})");
+    }
+
+    // ---- host-RAM readahead (shared prefetch planners) ------------------
+
+    fn tagged_region(s: &mut SsdStore, chunk: u64, pages: u64) -> RegionId {
+        let mut init = vec![0u8; (pages * chunk) as usize];
+        for p in 0..pages {
+            init[(p * chunk) as usize..((p + 1) * chunk) as usize].fill((p % 251) as u8);
+        }
+        let (region, _) = s.alloc(0, pages * chunk, Some(init));
+        region
+    }
+
+    #[test]
+    fn readahead_serves_staged_pages_from_host_ram() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let mut s = SsdStore::with_prefetch(cluster.clone(), PrefetchConfig::default());
+        let chunk = cluster.config().chunk_bytes;
+        let lat = cluster.config().ssd.read_latency_ns;
+        let region = tagged_region(&mut s, chunk, 64);
+        let mut out = vec![0u8; chunk as usize];
+        // Demand miss pays the device access…
+        let (t0, _) = s.fetch(0, PageKey::new(region, 0), 2, &mut out);
+        assert!(t0 >= lat);
+        // …and stages its entry: a later sibling read is a host-RAM copy,
+        // orders of magnitude below the device access latency.
+        let later = t0 + 10_000_000;
+        let (t1, src) = s.fetch(later, PageKey::new(region, 3), 2, &mut out);
+        assert_eq!(src, FetchSource::Ssd);
+        assert!(out.iter().all(|&b| b == 3), "staged bytes are correct");
+        assert!(t1 - later < lat, "staged hit skips the device ({})", t1 - later);
+        // The seed-identical plain store pays the device again instead.
+        let c2 = Cluster::build(ClusterConfig::tiny());
+        let mut plain = SsdStore::new(c2);
+        let r2 = tagged_region(&mut plain, chunk, 64);
+        let (p0, _) = plain.fetch(0, PageKey::new(r2, 0), 2, &mut out);
+        assert_eq!(p0, t0, "first demand fetch is timing-identical");
+        let (p1, _) = plain.fetch(later, PageKey::new(r2, 3), 2, &mut out);
+        assert!(p1 - later >= lat);
+    }
+
+    #[test]
+    fn writeback_stales_only_the_written_staged_page() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let mut s = SsdStore::with_prefetch(cluster.clone(), PrefetchConfig::default());
+        let chunk = cluster.config().chunk_bytes;
+        let lat = cluster.config().ssd.read_latency_ns;
+        let region = tagged_region(&mut s, chunk, 64);
+        let mut out = vec![0u8; chunk as usize];
+        let (t0, _) = s.fetch(0, PageKey::new(region, 0), 2, &mut out);
+        let later = t0 + 10_000_000;
+        let durable = s.writeback(later, PageKey::new(region, 1), &vec![0xEE; chunk as usize]);
+        // The staged sibling still serves from host RAM…
+        let (t2, _) = s.fetch(durable, PageKey::new(region, 2), 2, &mut out);
+        assert!(t2 - durable < lat, "sibling survived the write");
+        assert!(out.iter().all(|&b| b == 2));
+        // …while the written page pays the device and returns fresh bytes.
+        let (t3, _) = s.fetch(t2 + 1, PageKey::new(region, 1), 2, &mut out);
+        assert!(out.iter().all(|&b| b == 0xEE), "no stale bytes after a write");
+        assert!(t3 - (t2 + 1) >= lat, "dirty page goes back to the device");
+    }
+
+    #[test]
+    fn batched_fetch_splits_staged_and_device_runs() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let mut s = SsdStore::with_prefetch(cluster.clone(), PrefetchConfig::default());
+        let chunk = cluster.config().chunk_bytes;
+        let lat = cluster.config().ssd.read_latency_ns;
+        let region = tagged_region(&mut s, chunk, 64);
+        let mut out = vec![0u8; chunk as usize];
+        let (t0, _) = s.fetch(0, PageKey::new(region, 0), 2, &mut out);
+        let later = t0 + 10_000_000;
+        // Pages 1-2 are staged (entry 0); page 40 is not.
+        let spans = [
+            PageSpan { start: PageKey::new(region, 1), pages: 2 },
+            PageSpan { start: PageKey::new(region, 40), pages: 1 },
+        ];
+        let mut buf = vec![0u8; 3 * chunk as usize];
+        let res = s.fetch_batch(later, &spans, 2, &mut buf);
+        assert!(res[0].0 - later < lat && res[1].0 - later < lat, "staged run");
+        assert!(res[2].0 - later >= lat, "unstaged span pays the device");
+        assert!(buf[..chunk as usize].iter().all(|&b| b == 1));
+        assert!(buf[chunk as usize..2 * chunk as usize].iter().all(|&b| b == 2));
+        assert!(buf[2 * chunk as usize..].iter().all(|&b| b == 40));
+    }
+
+    #[test]
+    fn non_sequential_policies_leave_the_store_readahead_free() {
+        for policy in [PrefetchPolicyKind::Off, PrefetchPolicyKind::GraphHint] {
+            let cluster = Cluster::build(ClusterConfig::tiny());
+            let mut s = SsdStore::with_prefetch(
+                cluster.clone(),
+                PrefetchConfig { policy, ..Default::default() },
+            );
+            let chunk = cluster.config().chunk_bytes;
+            let region = tagged_region(&mut s, chunk, 32);
+            let mut out = vec![0u8; chunk as usize];
+            let (t0, _) = s.fetch(0, PageKey::new(region, 0), 2, &mut out);
+            let (t1, _) = s.fetch(t0 + 10_000_000, PageKey::new(region, 1), 2, &mut out);
+            assert!(
+                t1 - (t0 + 10_000_000) >= cluster.config().ssd.read_latency_ns,
+                "no staging under {policy:?}"
+            );
+        }
     }
 
     #[test]

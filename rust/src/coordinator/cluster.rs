@@ -10,6 +10,7 @@
 use super::config::ClusterConfig;
 use crate::dpu::DpuAgent;
 use crate::fabric::Fabric;
+use crate::fleet::{FleetNodeStats, MemFleet};
 use crate::memnode::MemoryNode;
 use crate::sim::fault::{FaultPlan, FaultStats};
 use crate::ssd::SsdDevice;
@@ -26,6 +27,10 @@ pub struct ClusterInner {
     /// Seeded fault-injection stream + event ledger shared by every agent
     /// attached to this cluster (disabled by default).
     pub faults: FaultPlan,
+    /// Sharded memory-node fleet; `Some` iff `ClusterConfig::fleet` asks
+    /// for more than one memory node. While armed, the fleet replaces
+    /// `memnode` as the remote-memory backend (`FleetStore`).
+    pub fleet: Option<MemFleet>,
 }
 
 /// Handle to the simulated cluster (cheaply cloneable).
@@ -44,6 +49,11 @@ impl Cluster {
             dpu: DpuAgent::new(cfg.dpu.clone()),
             ssd: SsdDevice::new(cfg.ssd.clone()),
             faults: FaultPlan::from_config(cfg.fault),
+            fleet: if cfg.fleet.enabled() {
+                Some(MemFleet::build(cfg.fleet, &cfg, cfg.fault))
+            } else {
+                None
+            },
         };
         Cluster {
             inner: Rc::new(RefCell::new(inner)),
@@ -60,21 +70,51 @@ impl Cluster {
         f(&mut self.inner.borrow_mut())
     }
 
-    /// Network traffic snapshot (the memory-server port counters).
+    /// Network traffic snapshot (the memory-server port counters). With a
+    /// fleet armed, every node's link counters fold into tx/rx so the
+    /// traffic figures keep reporting total bytes on the network.
     pub fn network_stats(&self) -> crate::fabric::stats::NetworkStats {
-        self.inner.borrow().fabric.network_stats()
+        let inner = self.inner.borrow();
+        let mut stats = inner.fabric.network_stats();
+        if let Some(fleet) = &inner.fleet {
+            let (ftx, frx) = fleet.merged_link_stats();
+            stats.tx.merge(&ftx);
+            stats.rx.merge(&frx);
+        }
+        stats
     }
 
     /// Reset all traffic counters (between experiment phases).
     pub fn reset_stats(&self) {
-        self.inner.borrow_mut().fabric.reset_stats();
+        let mut inner = self.inner.borrow_mut();
+        inner.fabric.reset_stats();
+        if let Some(fleet) = &mut inner.fleet {
+            fleet.reset_stats();
+        }
     }
 
     /// Fault-injection ledger snapshot. Deliberately *not* cleared by
     /// [`Self::reset_stats`]: the chaos balance invariants must hold over
-    /// the whole run, graph-staging phase included.
+    /// the whole run, graph-staging phase included. With a fleet armed
+    /// the per-node ledgers sum into the aggregate (the balance
+    /// equations survive summation).
     pub fn fault_stats(&self) -> FaultStats {
-        self.inner.borrow().faults.stats
+        let inner = self.inner.borrow();
+        let mut stats = inner.faults.stats;
+        if let Some(fleet) = &inner.fleet {
+            stats.merge(&fleet.fault_stats_sum());
+        }
+        stats
+    }
+
+    /// Per-node fleet counters for `RunMetrics`; empty without a fleet.
+    pub fn fleet_node_stats(&self) -> Vec<FleetNodeStats> {
+        self.inner
+            .borrow()
+            .fleet
+            .as_ref()
+            .map(|f| f.node_stats())
+            .unwrap_or_default()
     }
 
     /// DPU statistics snapshot.
@@ -122,6 +162,22 @@ mod tests {
         assert!(c.network_stats().network_bytes() > 0);
         c.reset_stats();
         assert_eq!(c.network_stats().network_bytes(), 0);
+    }
+
+    #[test]
+    fn fleet_is_built_only_when_asked() {
+        let c = Cluster::build(ClusterConfig::tiny());
+        c.with(|inner| assert!(inner.fleet.is_none()));
+        assert!(c.fleet_node_stats().is_empty());
+
+        let mut cfg = ClusterConfig::tiny();
+        cfg.fleet.mem_nodes = 4;
+        cfg.fleet.stripe_pages = 2;
+        let c = Cluster::build(cfg);
+        c.with(|inner| {
+            assert_eq!(inner.fleet.as_ref().unwrap().nodes.len(), 4);
+        });
+        assert_eq!(c.fleet_node_stats().len(), 4);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 use crate::cache::PolicyKind;
 use crate::dpu::{DpuConfig, DpuOpts, PrefetchConfig, PrefetchPolicyKind};
 use crate::fabric::FabricConfig;
+use crate::fleet::FleetConfig;
 use crate::host::agent::HostTiming;
 use crate::memnode::MemNodeConfig;
 use crate::sim::fault::FaultConfig;
@@ -96,6 +97,33 @@ fn apply_fault_json(f: &mut FaultConfig, v: &Json, prefix: &str) -> Result<(), S
     Ok(())
 }
 
+/// Apply a JSON fleet block onto `f`. Shared by the cluster-side
+/// `ClusterConfig::apply_json` and the run-side `SodaConfig` override so
+/// both speak the same schema; callers validate afterwards.
+fn apply_fleet_json(f: &mut FleetConfig, v: &Json, prefix: &str) -> Result<(), String> {
+    if !matches!(v, Json::Obj(_)) {
+        return Err(format!("{prefix} must be an object (see `soda config`) or null"));
+    }
+    if let Some(x) = v.get("mem_nodes") {
+        f.mem_nodes = want_u64(x, &format!("{prefix}.mem_nodes"))? as usize;
+    }
+    if let Some(x) = v.get("stripe_pages") {
+        f.stripe_pages = want_u64(x, &format!("{prefix}.stripe_pages"))?;
+    }
+    if let Some(x) = v.get("replicas") {
+        f.replicas = want_u64(x, &format!("{prefix}.replicas"))? as usize;
+    }
+    f.validate()
+}
+
+fn fleet_to_json(f: &FleetConfig) -> Json {
+    Json::obj([
+        ("mem_nodes", f.mem_nodes.into()),
+        ("stripe_pages", f.stripe_pages.into()),
+        ("replicas", f.replicas.into()),
+    ])
+}
+
 fn fault_to_json(f: &FaultConfig) -> Json {
     Json::obj([
         ("drop_rate", f.drop_rate.into()),
@@ -128,6 +156,9 @@ pub struct ClusterConfig {
     pub seed: u64,
     /// Fault-injection plan (chaos testing; all-zero = disabled).
     pub fault: FaultConfig,
+    /// Memory-node fleet topology (`mem_nodes = 1` keeps the paper's
+    /// single-memory-node wiring; `> 1` arms the sharded fleet).
+    pub fleet: FleetConfig,
 }
 
 impl Default for ClusterConfig {
@@ -151,6 +182,7 @@ impl Default for ClusterConfig {
             chunk_bytes,
             seed: 0x50DA_2024,
             fault: FaultConfig::default(),
+            fleet: FleetConfig::default(),
         }
     }
 }
@@ -199,7 +231,8 @@ impl ClusterConfig {
     /// `cores`, `max_batch`, `cache_policy`, `prefetch.{depth,
     /// max_per_scan}`, plus a `fault` block (`drop_rate`, `corrupt_rate`,
     /// `dup_rate`, `spike_rate`, `spike_ns`, `crash_start_ns`,
-    /// `crash_len_ns`, `crash_every_ns`, `seed`). Call
+    /// `crash_len_ns`, `crash_every_ns`, `seed`), and a `fleet` block
+    /// (`mem_nodes`, `stripe_pages`, `replicas`). Call
     /// [`Self::normalized`] afterwards.
     pub fn apply_json(&mut self, v: &Json) -> Result<(), String> {
         if let Some(x) = v.get("chunk_bytes") {
@@ -253,6 +286,9 @@ impl ClusterConfig {
         }
         if let Some(x) = v.get("fault") {
             apply_fault_json(&mut self.fault, x, "fault")?;
+        }
+        if let Some(x) = v.get("fleet") {
+            apply_fleet_json(&mut self.fleet, x, "fleet")?;
         }
         Ok(())
     }
@@ -438,6 +474,10 @@ pub struct SodaConfig {
     /// Fault-injection override applied to the cluster at attach time
     /// (`--fault-*` flags); `None` keeps the cluster's `fault` plan.
     pub fault: Option<FaultConfig>,
+    /// Fleet-topology override applied to the cluster at attach time
+    /// (`--mem-nodes`/`--stripe-pages`/`--replicas`); `None` keeps the
+    /// cluster's `fleet` topology.
+    pub fleet: Option<FleetConfig>,
 }
 
 impl Default for SodaConfig {
@@ -457,6 +497,7 @@ impl Default for SodaConfig {
             dpu_cache_policy: None,
             prefetch: None,
             fault: None,
+            fleet: None,
         }
     }
 }
@@ -597,6 +638,14 @@ impl SodaConfig {
                 cfg.fault = Some(f);
             }
         }
+        match v.get("fleet") {
+            None | Some(Json::Null) => {}
+            Some(x) => {
+                let mut f = cfg.fleet.unwrap_or_default();
+                apply_fleet_json(&mut f, x, "fleet")?;
+                cfg.fleet = Some(f);
+            }
+        }
         Ok(cfg)
     }
 }
@@ -651,6 +700,13 @@ impl ToJson for SodaConfig {
                 "fault",
                 match &self.fault {
                     Some(f) => fault_to_json(f),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "fleet",
+                match &self.fleet {
+                    Some(f) => fleet_to_json(f),
                     None => Json::Null,
                 },
             ),
@@ -800,6 +856,11 @@ mod tests {
                 crash_every_ns: 10_000_000,
                 seed: 77,
             }),
+            fleet: Some(FleetConfig {
+                mem_nodes: 4,
+                stripe_pages: 8,
+                replicas: 1,
+            }),
         };
         let text = cfg.to_json().to_string();
         let back = SodaConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -864,6 +925,7 @@ mod tests {
         assert_eq!(cfg.dpu_cache_policy, None);
         assert_eq!(cfg.prefetch, None);
         assert_eq!(cfg.fault, None);
+        assert_eq!(cfg.fleet, None);
     }
 
     #[test]
@@ -890,6 +952,47 @@ mod tests {
         // An explicit null keeps the cluster's plan.
         let v = Json::parse(r#"{"fault": null}"#).unwrap();
         assert_eq!(SodaConfig::from_json(&v).unwrap().fault, None);
+    }
+
+    #[test]
+    fn fleet_block_parses_validates_and_round_trips() {
+        let v = Json::parse(r#"{"fleet": {"mem_nodes": 4, "stripe_pages": 2, "replicas": 1}}"#)
+            .unwrap();
+        let cfg = SodaConfig::from_json(&v).unwrap();
+        let f = cfg.fleet.expect("fleet block must be set");
+        assert_eq!(f.mem_nodes, 4);
+        assert_eq!(f.stripe_pages, 2);
+        assert_eq!(f.replicas, 1);
+        assert!(f.enabled());
+        // Partial blocks keep the defaults for unset knobs.
+        let v = Json::parse(r#"{"fleet": {"mem_nodes": 2}}"#).unwrap();
+        let f = SodaConfig::from_json(&v).unwrap().fleet.unwrap();
+        assert_eq!(f.stripe_pages, 0, "unset knobs keep their defaults");
+        assert_eq!(f.replicas, 0);
+        // Degenerate topologies and non-object blocks are rejected.
+        for bad in [
+            r#"{"fleet": {"mem_nodes": 0}}"#,
+            r#"{"fleet": {"mem_nodes": 2, "replicas": 2}}"#,
+            r#"{"fleet": {"mem_nodes": -3}}"#,
+            r#"{"fleet": true}"#,
+        ] {
+            assert!(
+                SodaConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "must reject {bad}"
+            );
+        }
+        // An explicit null keeps the cluster's topology.
+        let v = Json::parse(r#"{"fleet": null}"#).unwrap();
+        assert_eq!(SodaConfig::from_json(&v).unwrap().fleet, None);
+        // The cluster-side override speaks the same schema.
+        let mut c = ClusterConfig::tiny();
+        assert!(!c.fleet.enabled(), "fleet must default off");
+        c.apply_json(&Json::parse(r#"{"fleet": {"mem_nodes": 4, "stripe_pages": 1}}"#).unwrap())
+            .unwrap();
+        assert!(c.fleet.enabled());
+        assert_eq!(c.fleet.mem_nodes, 4);
+        let bad = Json::parse(r#"{"fleet": {"replicas": 9}}"#).unwrap();
+        assert!(c.apply_json(&bad).is_err());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 use crate::dpu::{CacheStats, DpuStats};
 use crate::fabric::stats::NetworkStats;
+use crate::fleet::FleetNodeStats;
 use crate::host::agent::HostStats;
 use crate::host::buffer::BufferStats;
 use crate::sim::fault::FaultStats;
@@ -27,6 +28,9 @@ pub struct RunMetrics {
     pub mean_batch_factor: f64,
     /// Fault-injection ledger (all-zero for fault-free runs).
     pub fault: FaultStats,
+    /// Per-memory-node traffic and failover counters; empty unless a
+    /// fleet is armed (`--mem-nodes > 1`).
+    pub fleet: Vec<FleetNodeStats>,
 }
 
 impl RunMetrics {
@@ -114,6 +118,29 @@ impl crate::util::json::ToJson for RunMetrics {
             ("fault_backoff_ns", self.fault.backoff_ns.into()),
             ("fault_failovers", self.fault.failovers.into()),
             ("fault_recoveries", self.fault.recoveries.into()),
+            (
+                "fleet_nodes",
+                Json::Arr(
+                    self.fleet
+                        .iter()
+                        .map(|n| {
+                            Json::obj([
+                                ("node", n.node.into()),
+                                ("net_bytes", n.net_bytes.into()),
+                                ("data_bytes", n.data_bytes.into()),
+                                ("on_demand_bytes", n.on_demand_bytes.into()),
+                                ("writeback_bytes", n.writeback_bytes.into()),
+                                ("posted", n.posted.into()),
+                                ("doorbells", n.doorbells.into()),
+                                ("timeouts", n.timeouts.into()),
+                                ("crash_rejections", n.crash_rejections.into()),
+                                ("failovers", n.failovers.into()),
+                                ("recoveries", n.recoveries.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -189,6 +216,23 @@ impl std::fmt::Display for RunMetrics {
                 self.host.writeback_requeues,
             )?;
         }
+        if !self.fleet.is_empty() {
+            writeln!(f, "  fleet            : {} memory nodes", self.fleet.len())?;
+            for n in &self.fleet {
+                writeln!(
+                    f,
+                    "    node {:>2}        : {:.2} MB data ({:.2} MB demand, {:.2} MB writeback), {} posted / {} doorbells, {} failovers / {} recoveries",
+                    n.node,
+                    n.data_bytes as f64 / 1e6,
+                    n.on_demand_bytes as f64 / 1e6,
+                    n.writeback_bytes as f64 / 1e6,
+                    n.posted,
+                    n.doorbells,
+                    n.failovers,
+                    n.recoveries,
+                )?;
+            }
+        }
         Ok(())
     }
 }
@@ -238,5 +282,33 @@ mod tests {
         let s = format!("{}", metric(2_000_000_000, 1 << 20));
         assert!(s.contains("elapsed"));
         assert!(s.contains("network"));
+        assert!(!s.contains("fleet"), "fleet section hidden without nodes");
+    }
+
+    #[test]
+    fn fleet_nodes_serialize_and_display() {
+        use crate::fleet::FleetNodeStats;
+        let mut m = metric(10, 0);
+        m.fleet = vec![
+            FleetNodeStats { node: 0, data_bytes: 4096, doorbells: 2, ..Default::default() },
+            FleetNodeStats { node: 1, failovers: 1, recoveries: 1, ..Default::default() },
+        ];
+        let j = m.to_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        match v.get("fleet_nodes").unwrap() {
+            crate::util::json::Json::Arr(items) => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[0].get("data_bytes").unwrap().as_u64(), Some(4096));
+                assert_eq!(items[1].get("failovers").unwrap().as_u64(), Some(1));
+            }
+            other => panic!("fleet_nodes must be an array, got {other:?}"),
+        }
+        let s = format!("{m}");
+        assert!(s.contains("fleet"));
+        assert!(s.contains("node  1"));
+        // Fleet-free runs keep an empty array for schema stability.
+        let empty = metric(1, 0).to_json().to_string();
+        let v = crate::util::json::Json::parse(&empty).unwrap();
+        assert!(matches!(v.get("fleet_nodes"), Some(crate::util::json::Json::Arr(a)) if a.is_empty()));
     }
 }

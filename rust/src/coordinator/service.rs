@@ -48,6 +48,23 @@ impl SodaService {
                 inner.faults = crate::sim::fault::FaultPlan::from_config(f);
             });
         }
+        // Per-run fleet override: retopologize the memory side. A fault
+        // override also rebuilds an armed fleet so the per-node plans
+        // derive from the run's seeds, not the cluster's stale ones.
+        let fleet_cfg = cfg.fleet.unwrap_or(cluster.config().fleet);
+        if cfg.fleet.is_some() || (cfg.fault.is_some() && fleet_cfg.enabled()) {
+            cluster.with(|inner| {
+                inner.fleet = if fleet_cfg.enabled() {
+                    Some(crate::fleet::MemFleet::build(
+                        fleet_cfg,
+                        cluster.config(),
+                        inner.faults.cfg,
+                    ))
+                } else {
+                    None // an explicit --mem-nodes 1 disarms the fleet
+                };
+            });
+        }
         SodaService {
             cluster: cluster.clone(),
             cfg,
@@ -72,8 +89,27 @@ impl SodaService {
     }
 
     fn make_store(&self) -> Box<dyn RemoteStore> {
+        // An armed fleet replaces the remote-memory backend wholesale:
+        // reads and writebacks route through the directory + lease layer.
+        // The DPU offload path is bypassed (future work); the local-SSD
+        // backend keeps its node-local path.
+        if !matches!(self.cfg.backend, BackendKind::Ssd)
+            && self.cluster.with(|i| i.fleet.is_some())
+        {
+            return Box::new(crate::fleet::FleetStore::new(self.cluster.clone()));
+        }
         match self.cfg.backend {
-            BackendKind::Ssd => Box::new(SsdStore::new(self.cluster.clone())),
+            BackendKind::Ssd => {
+                // The SSD baseline gets the same sequential/strided
+                // lookahead the DPU prefetch worker gives SODA (Fig 6
+                // fairness): the run's prefetch override layered over the
+                // cluster's tuning, exactly as the DPU attach path does.
+                let mut pf = self.cluster.with(|i| i.dpu.cfg.prefetch);
+                if let Some(ovr) = self.cfg.prefetch {
+                    pf = ovr.apply(pf);
+                }
+                Box::new(SsdStore::with_prefetch(self.cluster.clone(), pf))
+            }
             BackendKind::MemServer => Box::new(MemServerStore::new(self.cluster.clone())),
             BackendKind::Dpu(_) => {
                 if self.cluster.with(|i| i.faults.enabled()) {
@@ -131,6 +167,7 @@ impl SodaService {
             dpu_hit_rate: self.cluster.dpu_hit_rate(),
             mean_batch_factor: self.cluster.with(|i| i.dpu.mean_batch_factor()),
             fault: self.cluster.fault_stats(),
+            fleet: self.cluster.fleet_node_stats(),
         }
     }
 }
@@ -289,6 +326,46 @@ mod tests {
             m.fault.retries + m.fault.exhaustions,
             "every failed attempt is retried or exhausts"
         );
+    }
+
+    /// A per-run fleet override arms the fleet, routes clients through the
+    /// fleet store, spreads traffic across the nodes, and `--mem-nodes 1`
+    /// disarms it again.
+    #[test]
+    fn fleet_override_arms_and_disarms_through_service() {
+        use crate::fleet::FleetConfig;
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let mut cfg = SodaConfig::default().with_backend(BackendKind::MemServer);
+        cfg.fleet = Some(FleetConfig { mem_nodes: 4, stripe_pages: 1, replicas: 0 });
+        let svc = SodaService::attach(&cluster, cfg);
+        let mut client = svc.client_with_buffer("p0", 64 << 10);
+        assert_eq!(client.store_name(), "fleet");
+        let chunk = client.chunk_bytes();
+        let pages = 16u64;
+        let (h, t0) = client.alloc(
+            0,
+            "x",
+            pages * chunk,
+            Some(vec![9; (pages * chunk) as usize]),
+            Placement::Default,
+        );
+        let mut out = vec![0u8; (pages * chunk) as usize];
+        let t1 = client.read_bytes(t0, 0, h.region, 0, &mut out);
+        assert!(out.iter().all(|&b| b == 9), "fleet read returns the data");
+        let m = svc.collect("fleet", t1, &client);
+        assert_eq!(m.fleet.len(), 4);
+        assert!(
+            m.fleet.iter().all(|n| n.on_demand_bytes > 0),
+            "stripe-1 placement must touch every node: {:?}",
+            m.fleet
+        );
+        // Explicit single-node override disarms the fleet again.
+        let mut cfg1 = SodaConfig::default().with_backend(BackendKind::MemServer);
+        cfg1.fleet = Some(FleetConfig::default());
+        let svc1 = SodaService::attach(&cluster, cfg1);
+        let client1 = svc1.client_with_buffer("p1", 64 << 10);
+        assert_eq!(client1.store_name(), "memserver");
+        assert!(svc1.cluster().fleet_node_stats().is_empty());
     }
 
     #[test]

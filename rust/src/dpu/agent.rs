@@ -180,8 +180,9 @@ pub struct DpuStats {
     /// Cache entries the consumed hints covered (after span→entry
     /// translation and queue dedup).
     pub hint_entries: u64,
-    /// Entries re-queued for prefetch after a write-back invalidated them
-    /// (the dirty page threw out `ppe − 1` still-valid sibling pages).
+    /// Entries re-queued for prefetch after a write-back staled one of
+    /// their pages (the siblings keep serving; the re-stage heals the
+    /// dirty page with fresh bytes).
     pub rehints: u64,
 }
 
@@ -671,19 +672,27 @@ impl DpuAgent {
         let agg_delay = if self.cfg.opts.aggregation { t.agg_step_ns } else { 0 };
         let doorbell = Aggregator::amortize(t.doorbell_ns, factor);
         // Coherence: the single-writer restriction means our only duty is to
-        // drop a (now stale) cached entry for this page.
+        // stale the written page's cached copy. Only that page's slot is
+        // invalidated — the entry's sibling pages keep serving hits instead
+        // of being thrown out with it (the whole-entry invalidate the seed
+        // inherited from the paper's coarse coherence).
         let mut rehint_key = None;
         if self.cfg.opts.dynamic_cache {
-            let ppe = self.table.pages_per_entry();
-            let ekey = EntryKey::containing(page, ppe);
-            if self.table.invalidate(ekey) {
-                self.stats.invalidations += 1;
-                // The invalidation threw out ppe−1 sibling pages that are
-                // still valid and likely still hot. Hint-driven policies
-                // re-queue the entry so the worker re-stages it — with the
-                // fresh bytes — off the critical path.
-                if ppe > 1 && self.prefetcher.wants_hints() {
-                    rehint_key = Some(ekey);
+            let ekey = EntryKey::containing(page, self.table.pages_per_entry());
+            match self.table.invalidate_page(page) {
+                super::cache_table::PageInvalidate::Absent => {}
+                outcome => {
+                    self.stats.invalidations += 1;
+                    // Hint-driven policies re-queue a partially-staled entry
+                    // so the worker re-stages it — healing the dirty page
+                    // with the fresh bytes — off the critical path. A
+                    // dropped entry has no survivors to protect; the next
+                    // demand miss restages it.
+                    if outcome == super::cache_table::PageInvalidate::Partial
+                        && self.prefetcher.wants_hints()
+                    {
+                        rehint_key = Some(ekey);
+                    }
                 }
             }
         }
@@ -869,7 +878,7 @@ mod tests {
         let mut check = vec![0u8; CHUNK as usize];
         store.read(1, CHUNK, &mut check).unwrap();
         assert!(check.iter().all(|&b| b == 0xEE));
-        // Next read of that entry misses (stale entry was dropped).
+        // Next read of the written page misses (its slot was staled).
         let r1 = a.handle_read(
             &mut f,
             &store,
@@ -1104,10 +1113,9 @@ mod tests {
         assert!(a.table.stats().hint_useful >= 1, "hit resolves hint provenance");
     }
 
-    /// Satellite of the reliability PR: a write-back invalidates the whole
-    /// multi-page entry for one dirty page; hint policies re-queue it so
-    /// the surviving sibling pages come back without a demand miss — and
-    /// the re-staged entry carries the freshly written bytes.
+    /// A write-back stales only the dirty page's slot; hint policies still
+    /// re-queue the entry so the background re-stage heals that page with
+    /// the freshly written bytes while the sibling pages keep serving.
     #[test]
     fn writeback_rehints_surviving_entry_pages() {
         use crate::fabric::protocol::{HintMessage, HintSpan};
@@ -1123,12 +1131,12 @@ mod tests {
         let later = t + 10_000_000;
         let r = a.handle_read(&mut f, &store, later, PageKey::new(1, 2), 2, &mut out);
         assert_eq!(r.source, Source::DpuCache, "warm before the write");
-        // Dirty page 1: the whole 4-page entry is invalidated...
+        // Dirty page 1: only its slot is staled (Partial)...
         let new_data = vec![0xEE; CHUNK as usize];
         let durable = a.handle_write(&mut f, &mut store, later + 1_000, PageKey::new(1, 1), &new_data);
         assert_eq!(a.stats().invalidations, 1);
         assert_eq!(a.stats().rehints, 1, "hint policy re-queues the entry");
-        // ...but the re-hint re-stages it in the background: much later the
+        // ...and the re-hint re-stages it in the background: much later the
         // sibling page still hits, and the dirtied page serves fresh bytes.
         let much_later = durable + 10_000_000;
         let r2 = a.handle_read(&mut f, &store, much_later, PageKey::new(1, 2), 2, &mut out);
@@ -1141,6 +1149,34 @@ mod tests {
         let (mut b, mut f2, mut store2) = setup(DpuOpts::FULL);
         b.handle_write(&mut f2, &mut store2, 0, PageKey::new(1, 1), &new_data);
         assert_eq!(b.stats().rehints, 0);
+    }
+
+    /// The per-page invalidation itself (no rehint needed): under the
+    /// sequential default, a write-back leaves the entry's sibling pages
+    /// serving hits — the seed's whole-entry invalidate would have forced
+    /// all of them back to the memory node.
+    #[test]
+    fn writeback_keeps_sibling_pages_hot() {
+        let (mut a, mut f, mut store) = setup(DpuOpts::FULL);
+        let mut out = vec![0u8; CHUNK as usize];
+        // Warm entry 0 (pages 0-3) via a demand miss + its prefetch.
+        let r0 = a.handle_read(&mut f, &store, 0, PageKey::new(1, 0), 2, &mut out);
+        let later = r0.host_done + 10_000_000;
+        let r1 = a.handle_read(&mut f, &store, later, PageKey::new(1, 2), 2, &mut out);
+        assert_eq!(r1.source, Source::DpuCache, "entry warm before the write");
+        let new_data = vec![0xEE; CHUNK as usize];
+        let durable = a.handle_write(&mut f, &mut store, later + 1_000, PageKey::new(1, 1), &new_data);
+        assert_eq!(a.stats().invalidations, 1);
+        // Immediately after the write — before any background re-stage can
+        // complete — the sibling page still hits from DPU DRAM…
+        let r2 = a.handle_read(&mut f, &store, durable + 1, PageKey::new(1, 3), 2, &mut out);
+        assert_eq!(r2.source, Source::DpuCache, "sibling survived the write");
+        assert!(out.iter().all(|&b| b == 3));
+        // …while the written page itself misses with fresh bytes.
+        let r3 = a.handle_read(&mut f, &store, durable + 2, PageKey::new(1, 1), 2, &mut out);
+        assert_eq!(r3.source, Source::MemNode, "dirty page misses");
+        assert!(out.iter().all(|&b| b == 0xEE));
+        assert!(a.table.stats().stale_misses >= 1);
     }
 
     #[test]

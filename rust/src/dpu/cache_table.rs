@@ -68,6 +68,18 @@ pub enum PrefetchOrigin {
     Hint,
 }
 
+/// Outcome of a single-page invalidation ([`CacheTable::invalidate_page`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageInvalidate {
+    /// The page's entry was not resident — nothing to do.
+    Absent,
+    /// The page was marked stale; its sibling pages keep serving hits.
+    Partial,
+    /// The page was the entry's only (remaining) valid page — the whole
+    /// entry left the cache.
+    Dropped,
+}
+
 #[derive(Debug)]
 struct Slot {
     key: EntryKey,
@@ -83,6 +95,11 @@ struct Slot {
     fetched_bytes: u64,
     /// Did any lookup hit this entry since it was staged?
     touched: bool,
+    /// Per-page stale bitmask, lazily allocated on the first single-page
+    /// invalidation (empty ⇔ every resident page is valid). A set bit
+    /// means a write-back dirtied that page: lookups of it miss while the
+    /// sibling pages keep serving hits.
+    stale: Vec<u64>,
 }
 
 /// Cache statistics (drives Fig 10, the adaptive prefetch throttle and the
@@ -94,6 +111,9 @@ pub struct CacheStats {
     pub misses: u64,
     /// Misses that raced an in-flight prefetch of the same entry.
     pub not_ready: u64,
+    /// Misses on a resident entry whose *requested page* a write-back had
+    /// staled (the sibling pages were still serving hits).
+    pub stale_misses: u64,
     pub insertions: u64,
     pub evictions: u64,
     /// Insertions dropped because every candidate slot was pinned.
@@ -186,6 +206,7 @@ impl CacheTable {
                 origin: PrefetchOrigin::Scan,
                 fetched_bytes: 0,
                 touched: false,
+                stale: Vec::new(),
             });
         }
         self
@@ -237,12 +258,24 @@ impl CacheTable {
     /// Counts hit/miss/not-ready.
     pub fn lookup_page(&mut self, now: Ns, page: PageKey) -> Option<&[u8]> {
         self.stats.lookups += 1;
-        let ekey = EntryKey::containing(page, self.pages_per_entry());
+        let ppe = self.pages_per_entry();
+        let ekey = EntryKey::containing(page, ppe);
         match self.map.get(&ekey).copied() {
             Some(idx) => {
                 let slot = &self.slots[idx as usize];
                 if slot.ready_at > now {
                     self.stats.not_ready += 1;
+                    self.stats.misses += 1;
+                    return None;
+                }
+                // A staled page misses without refreshing recency or
+                // resolving provenance — its siblings are still good, but
+                // these bytes were overtaken by a write-back.
+                let bit = page.page % ppe;
+                if !slot.stale.is_empty()
+                    && slot.stale[(bit / 64) as usize] >> (bit % 64) & 1 != 0
+                {
+                    self.stats.stale_misses += 1;
                     self.stats.misses += 1;
                     return None;
                 }
@@ -327,6 +360,9 @@ impl CacheTable {
             let s = &mut self.slots[idx as usize];
             s.data = data.into_boxed_slice();
             s.ready_at = ready_at;
+            // The re-staged bytes are a fresh memory-node snapshot, so any
+            // write-back staleness is healed with them.
+            s.stale = Vec::new();
             return true;
         }
         // Find a slot: first an invalid one, else ask the engine.
@@ -369,6 +405,7 @@ impl CacheTable {
         s.origin = origin;
         s.fetched_bytes = fetched_bytes;
         s.touched = false;
+        s.stale = Vec::new();
         self.engine.on_insert(idx);
         self.map.insert(key, idx);
         self.stats.insertions += 1;
@@ -386,11 +423,53 @@ impl CacheTable {
             debug_assert_eq!(s.refcount, 0, "invalidating a pinned entry");
             s.valid = false;
             s.data = Box::from(&[][..]);
+            s.stale = Vec::new();
             self.engine.on_remove(idx);
             true
         } else {
             false
         }
+    }
+
+    /// Invalidate a *single page* of a resident entry (coherence for
+    /// write-backs): the written page's slot is marked stale — its lookups
+    /// miss — while the `ppe − 1` sibling pages keep serving hits instead
+    /// of being thrown out with it. When the page was the entry's only
+    /// (remaining) valid page the whole entry leaves the cache, exactly
+    /// like [`Self::invalidate`].
+    pub fn invalidate_page(&mut self, page: PageKey) -> PageInvalidate {
+        let ppe = self.pages_per_entry();
+        let ekey = EntryKey::containing(page, ppe);
+        let Some(&idx) = self.map.get(&ekey) else {
+            return PageInvalidate::Absent;
+        };
+        if ppe == 1 {
+            self.invalidate(ekey);
+            return PageInvalidate::Dropped;
+        }
+        let s = &mut self.slots[idx as usize];
+        if s.stale.is_empty() {
+            s.stale = vec![0u64; ppe.div_ceil(64) as usize];
+        }
+        let bit = page.page % ppe;
+        s.stale[(bit / 64) as usize] |= 1u64 << (bit % 64);
+        let staled: u64 = s.stale.iter().map(|w| u64::from(w.count_ones())).sum();
+        if staled >= ppe {
+            self.invalidate(ekey);
+            return PageInvalidate::Dropped;
+        }
+        PageInvalidate::Partial
+    }
+
+    /// Does the resident entry carry pages a write-back staled? The
+    /// prefetch planner's dedup treats such entries as absent, so the
+    /// worker re-stages them — healing the stale pages with fresh bytes
+    /// off the critical path.
+    pub fn has_stale_pages(&self, key: EntryKey) -> bool {
+        self.map
+            .get(&key)
+            .map(|&i| !self.slots[i as usize].stale.is_empty())
+            .unwrap_or(false)
     }
 
     /// Invalidate everything (cache disable / region free).
@@ -404,6 +483,7 @@ impl CacheTable {
             s.valid = false;
             s.refcount = 0;
             s.data = Box::from(&[][..]);
+            s.stale = Vec::new();
         }
     }
 }
@@ -666,6 +746,56 @@ mod tests {
         assert_eq!(s.insertions, 1);
         assert_eq!(s.resident_untouched, 1);
         assert_provenance_invariant(&t);
+    }
+
+    // ---- per-page invalidation -----------------------------------------
+
+    #[test]
+    fn page_invalidate_keeps_sibling_pages_serving() {
+        let mut t = table(2);
+        let mut rng = Rng::new(0);
+        let mut data = entry_data(0);
+        for p in 0..4 {
+            data[p * 1024..(p + 1) * 1024].fill(p as u8 + 1);
+        }
+        t.insert(ek(1), data, 0, &mut rng);
+        assert_eq!(t.invalidate_page(PageKey::new(1, 5)), PageInvalidate::Partial);
+        assert!(t.has_stale_pages(ek(1)));
+        // The written page misses without resolving the entry's provenance…
+        assert!(t.lookup_page(10, PageKey::new(1, 5)).is_none());
+        assert_eq!(t.stats().stale_misses, 1);
+        assert_eq!(t.stats().prefetch_useful, 0, "stale miss is not a touch");
+        // …while its siblings still hit.
+        let p = t.lookup_page(10, PageKey::new(1, 6)).expect("sibling hit");
+        assert!(p.iter().all(|&b| b == 3));
+        assert_provenance_invariant(&t);
+        // A re-stage (refresh path) heals the staleness with fresh bytes.
+        t.insert(ek(1), entry_data(9), 20, &mut rng);
+        assert!(!t.has_stale_pages(ek(1)));
+        let p = t.lookup_page(30, PageKey::new(1, 5)).expect("healed");
+        assert!(p.iter().all(|&b| b == 9));
+    }
+
+    #[test]
+    fn page_invalidate_drops_entry_when_last_valid_page_goes() {
+        let mut t = table(2);
+        let mut rng = Rng::new(0);
+        t.insert(ek(0), entry_data(0), 0, &mut rng);
+        assert_eq!(t.invalidate_page(PageKey::new(1, 9)), PageInvalidate::Absent);
+        for p in 0..3 {
+            assert_eq!(t.invalidate_page(PageKey::new(1, p)), PageInvalidate::Partial);
+        }
+        assert_eq!(t.invalidate_page(PageKey::new(1, 3)), PageInvalidate::Dropped);
+        assert!(!t.contains(ek(0)), "fully-staled entry leaves the cache");
+        assert!(!t.has_stale_pages(ek(0)));
+        let s = t.stats();
+        assert_eq!(s.prefetch_wasted, 1, "dropped untouched entry resolves wasted");
+        assert_provenance_invariant(&t);
+        // Single-page entries degenerate to a whole-entry invalidate.
+        let mut one = CacheTable::new(2 * 1024, 1024, 1024);
+        one.insert(ek(7), vec![1; 1024], 0, &mut rng);
+        assert_eq!(one.invalidate_page(PageKey::new(1, 7)), PageInvalidate::Dropped);
+        assert!(!one.contains(ek(7)));
     }
 
     /// The not-ready (in-flight prefetch) path must not touch the engine:

@@ -15,7 +15,7 @@ pub mod static_cache;
 
 pub use agent::{DpuAgent, DpuConfig, DpuOpts, DpuStats, DpuTiming, ReadOutcome, Source};
 pub use aggregate::Aggregator;
-pub use cache_table::{CacheStats, CacheTable, EntryKey, PrefetchOrigin};
+pub use cache_table::{CacheStats, CacheTable, EntryKey, PageInvalidate, PrefetchOrigin};
 pub use pipeline::{ForwardMode, Forwarder};
 pub use prefetch::{
     AdaptiveBase, PrefetchConfig, PrefetchPolicy, PrefetchPolicyKind, PrefetchStats, Prefetcher,

@@ -227,7 +227,10 @@ fn push_candidate(
     stats: &mut PrefetchStats,
     out: &mut Vec<(EntryKey, PrefetchOrigin)>,
 ) -> bool {
-    if ctx.table.contains(e) || seen.contains(&e) {
+    // A resident entry with write-back-staled pages is *not* deduped: the
+    // worker re-stages it (refresh path), healing the stale pages with
+    // fresh bytes while the siblings keep serving.
+    if (ctx.table.contains(e) && !ctx.table.has_stale_pages(e)) || seen.contains(&e) {
         stats.deduped += 1;
         return false;
     }
@@ -800,6 +803,22 @@ mod tests {
         // Page 5 -> entry 1; plan entries 1 and 2.
         assert_eq!(plan_for(&[5], &t, &mut p), vec![1, 2]);
         assert_eq!(p.policy(), PrefetchPolicyKind::Sequential);
+    }
+
+    #[test]
+    fn stale_entries_bypass_residency_dedup() {
+        let mut t = table();
+        let mut rng = Rng::new(0);
+        t.insert(EntryKey { region: 1, entry: 1 }, vec![0; 4096], 0, &mut rng);
+        t.insert(EntryKey { region: 1, entry: 2 }, vec![0; 4096], 0, &mut rng);
+        let mut p = Prefetcher::default();
+        assert!(plan_for(&[5], &t, &mut p).is_empty(), "resident entries dedup");
+        assert_eq!(p.stats().deduped, 2);
+        // A write-back stales page 5: its entry re-plans (refresh heals the
+        // dirty page); the clean adjacent entry still dedups.
+        t.invalidate_page(PageKey::new(1, 5));
+        let mut p2 = Prefetcher::default();
+        assert_eq!(plan_for(&[5], &t, &mut p2), vec![1], "stale entry re-planned");
     }
 
     #[test]

@@ -1,0 +1,340 @@
+//! Region directory: the fleet's control-plane map.
+//!
+//! A fleet region keeps one app-visible [`RegionId`] (what `HostAgent`
+//! and the buffer layer see) and N per-owner *shard* ids — one per
+//! memory node that owns part of the range. Every holder of a shard
+//! (primary and replicas) reserves it under the **same** shard id, which
+//! works because each node's `RegionStore` is an independent id space;
+//! allocating globals and shards from one monotone counter keeps the two
+//! kinds of id from ever colliding.
+//!
+//! Placement maps a region-global page index `p` of a `P`-page region
+//! across `N` nodes:
+//!
+//! * **Contiguous** (`stripe_pages == 0`): node `i` owns one extent of
+//!   `ppn = ceil(P/N)` pages — `owner = p / ppn`, `local = p % ppn`.
+//! * **Striped** (`stripe_pages = S >= 1`): stripe `s = p / S` goes to
+//!   `owner = s % N` at `local = (s / N) * S + p % S`. Consecutive
+//!   stripes land on different nodes, so a coalesced multi-page span
+//!   splits into pieces that different nodes serve **in parallel** —
+//!   that is the bandwidth-aggregation mode.
+//!
+//! [`RegionDirectory::split_span`] turns a global page span into
+//! per-owner [`ShardPiece`]s (maximal runs that are contiguous in one
+//! node's local space), which is exactly the fan-out unit
+//! `FleetStore::fetch_batch` overlaps across nodes.
+
+use std::collections::HashMap;
+
+use crate::fleet::PlacementMode;
+use crate::memnode::{MemError, RegionId};
+
+/// One node-local contiguous run of a global page span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPiece {
+    /// Node that owns (is primary for) these pages.
+    pub owner: usize,
+    /// First page in the owner's local shard space.
+    pub local_start: u64,
+    /// Run length in pages.
+    pub pages: u64,
+    /// Offset of this piece's first page within the *requested span*
+    /// (in pages) — lets the caller scatter results back in order.
+    pub out_page_offset: u64,
+}
+
+/// Directory entry for one fleet region.
+#[derive(Clone, Debug)]
+pub struct FleetRegion {
+    /// Total pages in the app-visible region.
+    pub total_pages: u64,
+    /// Per-owner shard ids; `shard_ids[i]` is node i's shard of this
+    /// region (same id on every holder of that shard).
+    pub shard_ids: Vec<RegionId>,
+}
+
+/// Maps fleet regions' page ranges onto N memory nodes.
+#[derive(Clone, Debug)]
+pub struct RegionDirectory {
+    nodes: usize,
+    stripe_pages: u64,
+    next_id: RegionId,
+    regions: HashMap<RegionId, FleetRegion>,
+}
+
+impl RegionDirectory {
+    pub fn new(nodes: usize, stripe_pages: u64) -> Self {
+        assert!(nodes >= 1, "directory needs at least one node");
+        RegionDirectory {
+            nodes,
+            stripe_pages,
+            next_id: 1,
+            regions: HashMap::new(),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn placement(&self) -> PlacementMode {
+        if self.stripe_pages > 0 {
+            PlacementMode::Striped
+        } else {
+            PlacementMode::Contiguous
+        }
+    }
+
+    pub fn region_count(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// Allocate the app-visible id plus one shard id per node and
+    /// register the region. Ids come from a single monotone counter so
+    /// globals and shards never collide.
+    pub fn alloc_ids(&mut self, total_pages: u64) -> (RegionId, Vec<RegionId>) {
+        let global = self.next_id;
+        self.next_id += 1;
+        let shard_ids: Vec<RegionId> = (0..self.nodes)
+            .map(|_| {
+                let id = self.next_id;
+                self.next_id += 1;
+                id
+            })
+            .collect();
+        self.regions.insert(
+            global,
+            FleetRegion {
+                total_pages,
+                shard_ids: shard_ids.clone(),
+            },
+        );
+        (global, shard_ids)
+    }
+
+    /// Remove a region from the directory, returning its entry so the
+    /// caller can free the shards on each holder.
+    pub fn remove(&mut self, region: RegionId) -> Result<FleetRegion, MemError> {
+        self.regions
+            .remove(&region)
+            .ok_or(MemError::NoSuchRegion(region))
+    }
+
+    pub fn get(&self, region: RegionId) -> Result<&FleetRegion, MemError> {
+        self.regions
+            .get(&region)
+            .ok_or(MemError::NoSuchRegion(region))
+    }
+
+    /// Map a region-global page to `(owner node, local page)`.
+    pub fn locate(&self, region: RegionId, page: u64) -> Result<(usize, u64), MemError> {
+        let r = self.get(region)?;
+        if page >= r.total_pages {
+            return Err(MemError::OutOfBounds {
+                region,
+                offset: page,
+                len: 1,
+                size: r.total_pages,
+            });
+        }
+        Ok(self.map_page(r.total_pages, page))
+    }
+
+    /// Pure placement function: global page -> (owner, local page).
+    pub fn map_page(&self, total_pages: u64, page: u64) -> (usize, u64) {
+        let n = self.nodes as u64;
+        if self.stripe_pages > 0 {
+            let s = self.stripe_pages;
+            let stripe = page / s;
+            let owner = (stripe % n) as usize;
+            let local = (stripe / n) * s + page % s;
+            (owner, local)
+        } else {
+            let ppn = total_pages.div_ceil(n).max(1);
+            let owner = (page / ppn) as usize;
+            let local = page % ppn;
+            (owner, local)
+        }
+    }
+
+    /// Number of pages node `owner` holds of a `total_pages`-page region.
+    pub fn local_pages(&self, total_pages: u64, owner: usize) -> u64 {
+        let n = self.nodes as u64;
+        let o = owner as u64;
+        if self.stripe_pages > 0 {
+            let s = self.stripe_pages;
+            let stripes = total_pages.div_ceil(s);
+            if stripes == 0 {
+                return 0;
+            }
+            // Full stripes round-robin; the last stripe may be partial.
+            let mut count = stripes / n * s;
+            if stripes % n > o {
+                count += s;
+            }
+            if (stripes - 1) % n == o {
+                // This owner got the last stripe at full width above;
+                // trim it down to the region's actual tail.
+                count -= stripes * s - total_pages;
+            }
+            count
+        } else {
+            let ppn = total_pages.div_ceil(n).max(1);
+            total_pages.saturating_sub(o * ppn).min(ppn)
+        }
+    }
+
+    /// Split `[start_page, start_page + pages)` of a region into
+    /// per-owner local runs, in span order.
+    pub fn split_span(
+        &self,
+        region: RegionId,
+        start_page: u64,
+        pages: u64,
+    ) -> Result<Vec<ShardPiece>, MemError> {
+        let r = self.get(region)?;
+        if pages == 0 || start_page + pages > r.total_pages {
+            return Err(MemError::OutOfBounds {
+                region,
+                offset: start_page,
+                len: pages,
+                size: r.total_pages,
+            });
+        }
+        let total = r.total_pages;
+        let mut out: Vec<ShardPiece> = Vec::new();
+        for i in 0..pages {
+            let (owner, local) = self.map_page(total, start_page + i);
+            match out.last_mut() {
+                Some(p) if p.owner == owner && p.local_start + p.pages == local => {
+                    p.pages += 1;
+                }
+                _ => out.push(ShardPiece {
+                    owner,
+                    local_start: local,
+                    pages: 1,
+                    out_page_offset: i,
+                }),
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn brute_local_pages(d: &RegionDirectory, total: u64, owner: usize) -> u64 {
+        (0..total).filter(|&p| d.map_page(total, p).0 == owner).count() as u64
+    }
+
+    #[test]
+    fn contiguous_mapping_partitions_every_page_once() {
+        for nodes in 1..=5 {
+            for total in [1u64, 7, 16, 33] {
+                let d = RegionDirectory::new(nodes, 0);
+                let mut seen = vec![std::collections::HashSet::new(); nodes];
+                for p in 0..total {
+                    let (o, l) = d.map_page(total, p);
+                    assert!(o < nodes, "owner in range");
+                    assert!(seen[o].insert(l), "local page unique per owner");
+                }
+                for o in 0..nodes {
+                    assert_eq!(
+                        d.local_pages(total, o),
+                        brute_local_pages(&d, total, o),
+                        "closed-form local_pages (contiguous, n={nodes}, P={total}, o={o})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn striped_mapping_matches_brute_force_and_round_robins() {
+        for nodes in 1..=4 {
+            for stripe in [1u64, 2, 3, 4] {
+                for total in [1u64, 5, 8, 17, 32] {
+                    let d = RegionDirectory::new(nodes, stripe);
+                    let mut per_owner: Vec<Vec<u64>> = vec![Vec::new(); nodes];
+                    for p in 0..total {
+                        let (o, l) = d.map_page(total, p);
+                        per_owner[o].push(l);
+                    }
+                    for (o, locals) in per_owner.iter().enumerate() {
+                        // Locals appear densely, in order, starting at 0.
+                        let expect: Vec<u64> = (0..locals.len() as u64).collect();
+                        assert_eq!(locals, &expect, "dense locals n={nodes} S={stripe} P={total} o={o}");
+                        assert_eq!(
+                            d.local_pages(total, o),
+                            locals.len() as u64,
+                            "closed-form local_pages (striped, n={nodes}, S={stripe}, P={total}, o={o})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn striped_consecutive_stripes_hit_different_nodes() {
+        let d = RegionDirectory::new(4, 2);
+        // pages 0,1 -> node 0; 2,3 -> node 1; 4,5 -> node 2; 6,7 -> node 3; 8 wraps to node 0.
+        assert_eq!(d.map_page(16, 0), (0, 0));
+        assert_eq!(d.map_page(16, 1), (0, 1));
+        assert_eq!(d.map_page(16, 2), (1, 0));
+        assert_eq!(d.map_page(16, 7), (3, 1));
+        assert_eq!(d.map_page(16, 8), (0, 2));
+    }
+
+    #[test]
+    fn split_span_covers_in_order_and_parallelizes_stripes() {
+        let mut d = RegionDirectory::new(4, 2);
+        let (region, _) = d.alloc_ids(32);
+        let pieces = d.split_span(region, 1, 9).unwrap();
+        // Pages 1..10 over S=2/N=4: runs [1],[2,3],[4,5],[6,7],[8,9].
+        assert_eq!(pieces.len(), 5);
+        let covered: u64 = pieces.iter().map(|p| p.pages).sum();
+        assert_eq!(covered, 9);
+        assert_eq!(pieces[0], ShardPiece { owner: 0, local_start: 1, pages: 1, out_page_offset: 0 });
+        assert_eq!(pieces[1], ShardPiece { owner: 1, local_start: 0, pages: 2, out_page_offset: 1 });
+        assert_eq!(pieces[4], ShardPiece { owner: 0, local_start: 2, pages: 2, out_page_offset: 7 });
+        // Distinct owners within one stripe period -> parallel service.
+        let owners: std::collections::HashSet<usize> =
+            pieces.iter().map(|p| p.owner).collect();
+        assert_eq!(owners.len(), 4);
+    }
+
+    #[test]
+    fn split_span_contiguous_is_one_piece_per_extent() {
+        let mut d = RegionDirectory::new(4, 0);
+        let (region, _) = d.alloc_ids(16); // ppn = 4
+        let pieces = d.split_span(region, 2, 8).unwrap();
+        assert_eq!(
+            pieces,
+            vec![
+                ShardPiece { owner: 0, local_start: 2, pages: 2, out_page_offset: 0 },
+                ShardPiece { owner: 1, local_start: 0, pages: 4, out_page_offset: 2 },
+                ShardPiece { owner: 2, local_start: 0, pages: 2, out_page_offset: 6 },
+            ]
+        );
+    }
+
+    #[test]
+    fn ids_never_collide_and_remove_round_trips() {
+        let mut d = RegionDirectory::new(3, 0);
+        let (g1, s1) = d.alloc_ids(8);
+        let (g2, s2) = d.alloc_ids(8);
+        let mut all: Vec<RegionId> = vec![g1, g2];
+        all.extend(&s1);
+        all.extend(&s2);
+        let uniq: std::collections::HashSet<RegionId> = all.iter().copied().collect();
+        assert_eq!(uniq.len(), all.len(), "global and shard ids all distinct");
+        let r = d.remove(g1).unwrap();
+        assert_eq!(r.shard_ids, s1);
+        assert!(matches!(d.locate(g1, 0), Err(MemError::NoSuchRegion(_))));
+        assert!(d.locate(g2, 7).is_ok());
+        assert!(d.locate(g2, 8).is_err(), "out-of-range page rejected");
+    }
+}

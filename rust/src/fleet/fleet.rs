@@ -1,0 +1,681 @@
+//! Fleet data plane: per-node state, lease failover, replica coherence.
+//!
+//! Each [`FleetNode`] bundles what the single-node cluster keeps in four
+//! separate places: a `MemoryNode` region store, a tx/rx network link
+//! pair with the fabric's NUMA-derated bandwidth model, a `QueuePair`
+//! with its own doorbell accounting, and a node-local `FaultPlan`
+//! derived from the cluster's plan (distinct RNG seed per node; crash
+//! windows staggered by one window length per node so that a shard's
+//! primary and its ring replica are never down at the same instant).
+//!
+//! [`MemFleet`] layers the lease protocol on top. Every owner has a
+//! holder chain `(owner + j) % N, j = 0..=R`; the lease starts on the
+//! primary (`offset 0`). Reads and writeback releases try the current
+//! lease holder under the fabric's bounded [`RETRY_BUDGET`]; exhaustion
+//! (a crash window outlasting the budget) moves the lease one step down
+//! the chain and counts a `failover` against the abandoned node. A moved
+//! lease re-probes the primary at most every [`REPROBE_NS`] and counts a
+//! `recovery` when it moves back. Shard bytes are written through to
+//! *every* holder synchronously (with an overlapped wire charge for the
+//! replica fan-out), so whichever holder serves a later read returns the
+//! same bytes — fleet outputs are bit-identical to single-node runs by
+//! construction, which the multi-node chaos test pins.
+
+use crate::fabric::protocol::{
+    READ_REQUEST_BYTES, RELIABILITY_HEADER_BYTES, RPC_BYTES, WRITE_HEADER_BYTES,
+};
+use crate::fabric::qp::QueuePair;
+use crate::fabric::reliable::{backoff_ns, reliable_op, RetryExhausted, RETRY_BUDGET, TIMEOUT_NS};
+use crate::fleet::{FleetConfig, RegionDirectory};
+use crate::memnode::{MemError, MemoryNode, RegionId};
+use crate::sim::fault::{FaultConfig, FaultPlan, FaultStats};
+use crate::sim::link::{Link, LinkStats, TrafficClass};
+use crate::sim::Ns;
+
+/// A moved lease re-probes its primary at most this often (same cadence
+/// as the `FailoverStore` circuit breaker).
+pub const REPROBE_NS: Ns = 1_000_000;
+
+/// Per-node traffic / failover counters surfaced in `RunMetrics`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FleetNodeStats {
+    pub node: usize,
+    /// All wire bytes (tx + rx, control included).
+    pub net_bytes: u64,
+    /// Data-plane bytes (what the paper's traffic figures count).
+    pub data_bytes: u64,
+    pub on_demand_bytes: u64,
+    pub writeback_bytes: u64,
+    /// WQEs posted / doorbells rung on this node's queue pair.
+    pub posted: u64,
+    pub doorbells: u64,
+    pub timeouts: u64,
+    pub crash_rejections: u64,
+    pub failovers: u64,
+    pub recoveries: u64,
+}
+
+/// Lease state for one owner's range: which holder-chain slot currently
+/// serves it, and when a moved lease may next re-probe the primary.
+#[derive(Clone, Copy, Debug, Default)]
+struct Lease {
+    offset: usize,
+    reprobe_at: Ns,
+}
+
+/// One memory node of the fleet.
+#[derive(Debug)]
+pub struct FleetNode {
+    pub id: usize,
+    pub mem: MemoryNode,
+    pub faults: FaultPlan,
+    pub qp: QueuePair,
+    tx: Link,
+    rx: Link,
+    /// Extra one-way latency charged for a write's ACK (mirrors
+    /// `Fabric::net_write`).
+    ack_latency_ns: Ns,
+    posted_base: u64,
+    doorbells_base: u64,
+}
+
+/// Per-node fault plan: distinct RNG stream, crash windows staggered by
+/// one window length per node index.
+fn derive_node_fault(base: &FaultConfig, id: usize) -> FaultConfig {
+    let mut f = *base;
+    f.seed = base.seed.wrapping_add(id as u64 * 0x9E37_79B9_7F4A_7C15);
+    if f.crash_len_ns > 0 {
+        f.crash_start_ns += id as Ns * f.crash_len_ns;
+    }
+    f
+}
+
+/// Virtual time a bounded retry loop burns before exhausting: one
+/// timeout per attempt plus the inter-attempt backoffs (the all-drops
+/// shape, which is what a crash window produces).
+fn exhausted_attempts_ns(budget: u32) -> Ns {
+    let mut t = 0;
+    for attempt in 1..=budget {
+        t += TIMEOUT_NS;
+        if attempt < budget {
+            t += backoff_ns(attempt);
+        }
+    }
+    t
+}
+
+impl FleetNode {
+    fn new(
+        id: usize,
+        fabric: &crate::fabric::FabricConfig,
+        memcfg: crate::memnode::MemNodeConfig,
+        base_fault: &FaultConfig,
+    ) -> Self {
+        FleetNode {
+            id,
+            mem: MemoryNode::new(memcfg),
+            faults: FaultPlan::from_config(derive_node_fault(base_fault, id)),
+            qp: QueuePair::new(id as u32),
+            tx: Link::new(
+                format!("fleet{id}.net.tx"),
+                fabric.net_gbps,
+                fabric.net_latency_ns,
+                fabric.net_per_op_ns,
+            ),
+            rx: Link::new(
+                format!("fleet{id}.net.rx"),
+                fabric.net_gbps,
+                fabric.net_latency_ns,
+                fabric.net_per_op_ns,
+            ),
+            ack_latency_ns: fabric.net_latency_ns,
+            posted_base: 0,
+            doorbells_base: 0,
+        }
+    }
+
+    pub fn tx_stats(&self) -> &LinkStats {
+        self.tx.stats()
+    }
+
+    pub fn rx_stats(&self) -> &LinkStats {
+        self.rx.stats()
+    }
+
+    /// One-sided READ from this node under the reliability layer:
+    /// request on tx (control), payload on rx at the NUMA-derated rate.
+    fn read_wire(
+        &mut self,
+        now: Ns,
+        bytes: u64,
+        gbps: f64,
+        budget: Option<u32>,
+        class: TrafficClass,
+    ) -> Result<Ns, RetryExhausted> {
+        let FleetNode { faults, tx, rx, .. } = self;
+        reliable_op(faults, now, bytes + RELIABILITY_HEADER_BYTES, budget, |t| {
+            let t_req = tx.transfer(t, READ_REQUEST_BYTES, TrafficClass::Control);
+            rx.transfer_at(t_req, bytes, gbps, class)
+        })
+    }
+
+    /// One-sided WRITE to this node under the reliability layer.
+    fn write_wire(
+        &mut self,
+        now: Ns,
+        bytes: u64,
+        gbps: f64,
+        budget: Option<u32>,
+        class: TrafficClass,
+    ) -> Result<Ns, RetryExhausted> {
+        let ack = self.ack_latency_ns;
+        let FleetNode { faults, tx, .. } = self;
+        reliable_op(faults, now, bytes + RELIABILITY_HEADER_BYTES, budget, |t| {
+            tx.transfer_at(t, bytes + WRITE_HEADER_BYTES, gbps, class) + ack
+        })
+    }
+
+    /// Cheap liveness ping: a single-attempt control round trip.
+    fn probe(&mut self, now: Ns) -> bool {
+        let FleetNode { faults, tx, .. } = self;
+        reliable_op(faults, now, READ_REQUEST_BYTES, Some(1), |t| {
+            tx.transfer(t, READ_REQUEST_BYTES, TrafficClass::Control)
+        })
+        .is_ok()
+    }
+
+    /// Control-plane RPC (alloc/free bookkeeping) — fault-free, like the
+    /// single-node memserver's alloc path.
+    fn rpc(&mut self, now: Ns, service_ns: Ns) -> Ns {
+        let t_req = self.tx.transfer(now, RPC_BYTES, TrafficClass::Control);
+        self.rx.transfer(t_req + service_ns, RPC_BYTES, TrafficClass::Control)
+    }
+}
+
+/// The memory-node fleet: N [`FleetNode`]s behind a [`RegionDirectory`],
+/// with lease-based replica failover.
+#[derive(Debug)]
+pub struct MemFleet {
+    pub cfg: FleetConfig,
+    pub directory: RegionDirectory,
+    pub nodes: Vec<FleetNode>,
+    leases: Vec<Lease>,
+    net_gbps: f64,
+    numa: crate::fabric::numa::NumaModel,
+}
+
+impl MemFleet {
+    /// Build the fleet from the cluster's fabric/memnode templates and
+    /// its (possibly per-run overridden) base fault plan.
+    pub fn build(
+        fleet: FleetConfig,
+        cfg: &crate::coordinator::config::ClusterConfig,
+        base_fault: FaultConfig,
+    ) -> Self {
+        fleet.validate().expect("fleet config validated upstream");
+        let n = fleet.mem_nodes;
+        let nodes: Vec<FleetNode> = (0..n)
+            .map(|i| FleetNode::new(i, &cfg.fabric, cfg.memnode.clone(), &base_fault))
+            .collect();
+        MemFleet {
+            directory: RegionDirectory::new(n, fleet.stripe_pages),
+            nodes,
+            leases: vec![Lease::default(); n],
+            net_gbps: cfg.fabric.net_gbps,
+            numa: cfg.fabric.numa.clone(),
+            cfg: fleet,
+        }
+    }
+
+    fn gbps_at(&self, numa_node: usize) -> f64 {
+        self.net_gbps * self.numa.rdma_factor[numa_node % self.numa.nodes]
+    }
+
+    /// Holder chain for an owner's shard: the primary plus the next R
+    /// ring nodes (all distinct because `replicas < mem_nodes`).
+    pub fn holder_chain(&self, owner: usize) -> Vec<usize> {
+        let n = self.nodes.len();
+        (0..=self.cfg.replicas).map(|j| (owner + j) % n).collect()
+    }
+
+    /// Which holder-chain slot currently holds the lease (0 = primary).
+    pub fn lease_offset(&self, owner: usize) -> usize {
+        self.leases[owner].offset
+    }
+
+    /// Try to move a displaced lease back to the primary (rate-limited).
+    fn reprobe_primary(&mut self, owner: usize, chain: &[usize], now: Ns) {
+        let lease = self.leases[owner];
+        if lease.offset == 0 || now < lease.reprobe_at {
+            return;
+        }
+        let primary = chain[0];
+        if self.nodes[primary].probe(now) {
+            self.nodes[primary].faults.stats.recoveries += 1;
+            self.leases[owner].offset = 0;
+        } else {
+            self.leases[owner].reprobe_at = now + REPROBE_NS;
+        }
+    }
+
+    /// Serve a read of `bytes` from owner `owner`'s current lease
+    /// holder, failing over down the chain when a holder's crash window
+    /// outlasts the bounded retry budget.
+    pub fn lease_read(
+        &mut self,
+        owner: usize,
+        now: Ns,
+        bytes: u64,
+        numa_node: usize,
+        class: TrafficClass,
+    ) -> Ns {
+        let gbps = self.gbps_at(numa_node);
+        let chain = self.holder_chain(owner);
+        if chain.len() == 1 {
+            // No replica to fail over to: wait out faults unbounded,
+            // exactly like the single-node memserver path.
+            return self.nodes[owner]
+                .read_wire(now, bytes, gbps, None, class)
+                .expect("unbounded retry always completes");
+        }
+        self.reprobe_primary(owner, &chain, now);
+        let mut t = now;
+        let mut off = self.leases[owner].offset;
+        for _ in 0..chain.len() {
+            let h = chain[off];
+            match self.nodes[h].read_wire(t, bytes, gbps, Some(RETRY_BUDGET), class) {
+                Ok(done) => {
+                    self.leases[owner].offset = off;
+                    return done;
+                }
+                Err(RetryExhausted) => {
+                    self.nodes[h].faults.stats.failovers += 1;
+                    t += exhausted_attempts_ns(RETRY_BUDGET);
+                    off = (off + 1) % chain.len();
+                }
+            }
+        }
+        // Every holder is inside a crash window: park on the holder the
+        // lease ended up at and wait it out (windows are finite).
+        self.leases[owner].offset = off;
+        self.nodes[chain[off]]
+            .read_wire(t, bytes, gbps, None, class)
+            .expect("unbounded retry always completes")
+    }
+
+    /// Writeback release through the lease holder, plus an overlapped
+    /// coherence fan-out to every other holder. Returns the release
+    /// completion (the fan-out does not gate the host).
+    pub fn lease_write(&mut self, owner: usize, now: Ns, bytes: u64, numa_node: usize) -> Ns {
+        let gbps = self.gbps_at(numa_node);
+        let chain = self.holder_chain(owner);
+        let (release, served) = if chain.len() == 1 {
+            let done = self.nodes[owner]
+                .write_wire(now, bytes, gbps, None, TrafficClass::Writeback)
+                .expect("unbounded retry always completes");
+            (done, owner)
+        } else {
+            self.reprobe_primary(owner, &chain, now);
+            let mut t = now;
+            let mut off = self.leases[owner].offset;
+            let mut served = None;
+            for _ in 0..chain.len() {
+                let h = chain[off];
+                match self.nodes[h].write_wire(t, bytes, gbps, Some(RETRY_BUDGET), TrafficClass::Writeback)
+                {
+                    Ok(done) => {
+                        self.leases[owner].offset = off;
+                        served = Some((done, h));
+                        break;
+                    }
+                    Err(RetryExhausted) => {
+                        self.nodes[h].faults.stats.failovers += 1;
+                        t += exhausted_attempts_ns(RETRY_BUDGET);
+                        off = (off + 1) % chain.len();
+                    }
+                }
+            }
+            served.unwrap_or_else(|| {
+                self.leases[owner].offset = off;
+                let h = chain[off];
+                let done = self.nodes[h]
+                    .write_wire(t, bytes, gbps, None, TrafficClass::Writeback)
+                    .expect("unbounded retry always completes");
+                (done, h)
+            })
+        };
+        for &h in chain.iter().filter(|&&h| h != served) {
+            // Replica coherence traffic; charged on the replica's own
+            // link, overlapped at `now`, waits out crashes unbounded.
+            let _ = self.nodes[h].write_wire(now, bytes, gbps, None, TrafficClass::Writeback);
+        }
+        release
+    }
+
+    /// Allocate a fleet region: carve the page range into per-owner
+    /// shard images, reserve each shard on its whole holder chain (same
+    /// shard id everywhere), and charge one overlapped control RPC per
+    /// node. Rolls back cleanly on capacity failure.
+    pub fn alloc(
+        &mut self,
+        now: Ns,
+        bytes: u64,
+        chunk_bytes: u64,
+        init: Option<Vec<u8>>,
+    ) -> Result<(RegionId, Ns), MemError> {
+        let padded = bytes.div_ceil(chunk_bytes).max(1) * chunk_bytes;
+        let total_pages = padded / chunk_bytes;
+        let n = self.nodes.len();
+        let mut shards: Vec<Vec<u8>> = (0..n)
+            .map(|o| {
+                Vec::with_capacity((self.directory.local_pages(total_pages, o) * chunk_bytes) as usize)
+            })
+            .collect();
+        match init {
+            Some(mut data) => {
+                data.resize(padded as usize, 0);
+                let c = chunk_bytes as usize;
+                for p in 0..total_pages {
+                    // Global page order visits each owner's local pages
+                    // in increasing order, so plain appends land right.
+                    let (o, _) = self.directory.map_page(total_pages, p);
+                    let a = p as usize * c;
+                    shards[o].extend_from_slice(&data[a..a + c]);
+                }
+            }
+            None => {
+                for (o, shard) in shards.iter_mut().enumerate() {
+                    *shard =
+                        vec![0u8; (self.directory.local_pages(total_pages, o) * chunk_bytes) as usize];
+                }
+            }
+        }
+        let (region, shard_ids) = self.directory.alloc_ids(total_pages);
+        let mut reserved: Vec<(usize, RegionId)> = Vec::new();
+        for owner in 0..n {
+            let sid = shard_ids[owner];
+            for h in self.holder_chain(owner) {
+                if let Err(e) = self.nodes[h].mem.store.reserve_with_data(sid, shards[owner].clone())
+                {
+                    for &(rn, rid) in &reserved {
+                        let _ = self.nodes[rn].mem.store.free(rid);
+                    }
+                    let _ = self.directory.remove(region);
+                    return Err(e);
+                }
+                reserved.push((h, sid));
+            }
+        }
+        let mut done = now;
+        for i in 0..n {
+            // RPC handling plus region setup on the node CPU.
+            let svc = self.nodes[i].mem.cfg.rpc_service_ns * 2;
+            done = done.max(self.nodes[i].rpc(now, svc));
+        }
+        Ok((region, done))
+    }
+
+    /// Free a fleet region on every holder; overlapped control RPCs.
+    pub fn free(&mut self, now: Ns, region: RegionId) -> Result<Ns, MemError> {
+        let r = self.directory.remove(region)?;
+        let n = self.nodes.len();
+        for owner in 0..n {
+            let sid = r.shard_ids[owner];
+            for h in self.holder_chain(owner) {
+                let _ = self.nodes[h].mem.store.free(sid);
+            }
+        }
+        let mut done = now;
+        for i in 0..n {
+            let svc = self.nodes[i].mem.cfg.rpc_service_ns;
+            done = done.max(self.nodes[i].rpc(now, svc));
+        }
+        Ok(done)
+    }
+
+    /// Demand-fetch one page: map, copy the bytes from the owner's shard
+    /// (all holders are coherent), charge the wire on the lease path.
+    pub fn fetch_page(
+        &mut self,
+        now: Ns,
+        region: RegionId,
+        page: u64,
+        chunk_bytes: u64,
+        numa_node: usize,
+        out: &mut [u8],
+    ) -> Result<Ns, MemError> {
+        let (owner, local) = self.directory.locate(region, page)?;
+        let sid = self.directory.get(region)?.shard_ids[owner];
+        self.nodes[owner].mem.store.read(sid, local * chunk_bytes, out)?;
+        let post = self.nodes[owner].qp.post_batch(1);
+        Ok(self.lease_read(owner, now + post, out.len() as u64, numa_node, TrafficClass::OnDemand))
+    }
+
+    /// Write one page through to every holder's store, charging the
+    /// release on the lease path and the fan-out overlapped.
+    pub fn writeback_page(
+        &mut self,
+        now: Ns,
+        region: RegionId,
+        page: u64,
+        chunk_bytes: u64,
+        numa_node: usize,
+        data: &[u8],
+    ) -> Result<Ns, MemError> {
+        let (owner, local) = self.directory.locate(region, page)?;
+        let sid = self.directory.get(region)?.shard_ids[owner];
+        for h in self.holder_chain(owner) {
+            self.nodes[h].mem.store.write(sid, local * chunk_bytes, data)?;
+        }
+        let post = self.nodes[owner].qp.post_batch(1);
+        Ok(self.lease_write(owner, now + post, data.len() as u64, numa_node))
+    }
+
+    /// Per-node counters for `RunMetrics` (QP counters are deltas since
+    /// the last `reset_stats`, matching run-scoped link stats).
+    pub fn node_stats(&self) -> Vec<FleetNodeStats> {
+        self.nodes
+            .iter()
+            .map(|nd| {
+                let tx = nd.tx.stats();
+                let rx = nd.rx.stats();
+                FleetNodeStats {
+                    node: nd.id,
+                    net_bytes: tx.total_bytes() + rx.total_bytes(),
+                    data_bytes: tx.data_bytes() + rx.data_bytes(),
+                    on_demand_bytes: tx.on_demand_bytes + rx.on_demand_bytes,
+                    writeback_bytes: tx.writeback_bytes + rx.writeback_bytes,
+                    posted: nd.qp.posted() - nd.posted_base,
+                    doorbells: nd.qp.doorbells() - nd.doorbells_base,
+                    timeouts: nd.faults.stats.timeouts,
+                    crash_rejections: nd.faults.stats.crash_rejections,
+                    failovers: nd.faults.stats.failovers,
+                    recoveries: nd.faults.stats.recoveries,
+                }
+            })
+            .collect()
+    }
+
+    /// Fleet links merged into one (tx, rx) pair for `NetworkStats`.
+    pub fn merged_link_stats(&self) -> (LinkStats, LinkStats) {
+        let mut tx = LinkStats::default();
+        let mut rx = LinkStats::default();
+        for nd in &self.nodes {
+            tx.merge(nd.tx.stats());
+            rx.merge(nd.rx.stats());
+        }
+        (tx, rx)
+    }
+
+    /// Sum of every node's fault ledger (the chaos test balances this
+    /// aggregate the same way it balances a single plan's).
+    pub fn fault_stats_sum(&self) -> FaultStats {
+        let mut s = FaultStats::default();
+        for nd in &self.nodes {
+            s.merge(&nd.faults.stats);
+        }
+        s
+    }
+
+    /// True when any node's fault plan can fire.
+    pub fn faults_enabled(&self) -> bool {
+        self.nodes.iter().any(|nd| nd.faults.enabled())
+    }
+
+    /// Clear run-scoped traffic counters (fault ledgers persist, same as
+    /// the single-node cluster).
+    pub fn reset_stats(&mut self) {
+        for nd in &mut self.nodes {
+            nd.tx.reset_stats();
+            nd.rx.reset_stats();
+            nd.posted_base = nd.qp.posted();
+            nd.doorbells_base = nd.qp.doorbells();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::ClusterConfig;
+
+    fn fleet(nodes: usize, stripe: u64, replicas: usize, fault: FaultConfig) -> MemFleet {
+        let cfg = ClusterConfig::tiny();
+        MemFleet::build(
+            FleetConfig { mem_nodes: nodes, stripe_pages: stripe, replicas },
+            &cfg,
+            fault,
+        )
+    }
+
+    fn chunk() -> u64 {
+        ClusterConfig::tiny().chunk_bytes
+    }
+
+    #[test]
+    fn alloc_scatter_fetch_gather_round_trips_under_striping() {
+        let c = chunk();
+        let mut f = fleet(4, 1, 1, FaultConfig::default());
+        let pages = 11u64;
+        let data: Vec<u8> = (0..pages * c).map(|i| (i % 251) as u8).collect();
+        let (region, _) = f.alloc(0, pages * c, c, Some(data.clone())).unwrap();
+        let mut out = vec![0u8; c as usize];
+        for p in 0..pages {
+            f.fetch_page(0, region, p, c, 2, &mut out).unwrap();
+            assert_eq!(
+                &out[..],
+                &data[(p * c) as usize..((p + 1) * c) as usize],
+                "page {p} survives scatter/gather"
+            );
+        }
+        // Every node saw traffic: stripe 1 round-robins pages 0..11
+        // across all 4 nodes.
+        for s in f.node_stats() {
+            assert!(s.net_bytes > 0, "node {} idle", s.node);
+        }
+        f.free(0, region).unwrap();
+        for nd in &f.nodes {
+            assert_eq!(nd.mem.store.region_count(), 0, "free reached node {}", nd.id);
+        }
+    }
+
+    #[test]
+    fn replicas_hold_coherent_shards_after_writeback() {
+        let c = chunk();
+        let mut f = fleet(3, 2, 2, FaultConfig::default());
+        let pages = 6u64;
+        let (region, _) = f.alloc(0, pages * c, c, None).unwrap();
+        let new = vec![0xABu8; c as usize];
+        f.writeback_page(0, region, 3, c, 2, &new).unwrap();
+        let (owner, local) = f.directory.locate(region, 3).unwrap();
+        let sid = f.directory.get(region).unwrap().shard_ids[owner];
+        for h in f.holder_chain(owner) {
+            let got = f.nodes[h].mem.store.slice(sid, local * c, c).unwrap();
+            assert_eq!(got, &new[..], "holder {h} coherent");
+        }
+    }
+
+    #[test]
+    fn crashed_primary_fails_over_to_replica_and_recovers() {
+        let c = chunk();
+        // Node 0 crashes over [0, 1_000_000); staggering puts node 1's
+        // window at [1_000_000, 2_000_000), so the replica is up while
+        // the bounded retries on node 0 (~136 µs) burn out.
+        let fault = FaultConfig {
+            crash_start_ns: 0,
+            crash_len_ns: 1_000_000,
+            ..Default::default()
+        };
+        let mut f = fleet(2, 0, 1, fault);
+        let (region, _) = f.alloc(0, 4 * c, c, None).unwrap();
+        // Page 0 is owned by node 0 (contiguous, ppn = 2).
+        let mut out = vec![0u8; c as usize];
+        let t0 = 1_000;
+        let done = f.fetch_page(t0, region, 0, c, 2, &mut out).unwrap();
+        assert_eq!(f.lease_offset(0), 1, "lease moved to the replica");
+        assert_eq!(f.nodes[0].faults.stats.failovers, 1);
+        assert!(
+            done < f.nodes[0].faults.crash_clears_at(t0),
+            "replica served the read without waiting out the crash window"
+        );
+        // Well after both windows clear, a re-probe restores the primary.
+        let t1 = 2_500_000;
+        f.fetch_page(t1, region, 0, c, 2, &mut out).unwrap();
+        assert_eq!(f.lease_offset(0), 0, "lease recovered to the primary");
+        assert_eq!(f.nodes[0].faults.stats.recoveries, 1);
+        // Ledger balances per node and in aggregate.
+        let s = f.fault_stats_sum();
+        assert_eq!(s.timeouts, s.injected_drops + s.crash_rejections);
+        assert_eq!(s.timeouts + s.detected_corruptions, s.retries + s.exhaustions);
+    }
+
+    #[test]
+    fn striped_fanout_beats_single_node_at_equal_data_bytes() {
+        let c = chunk();
+        let pages = 16u64;
+        // 4-node stripe-1 fan-out of a 16-page span...
+        let mut f4 = fleet(4, 1, 0, FaultConfig::default());
+        let (r4, _) = f4.alloc(0, pages * c, c, None).unwrap();
+        let pieces = f4.directory.split_span(r4, 0, pages).unwrap();
+        let mut done4 = 0;
+        for p in &pieces {
+            let d = f4.lease_read(p.owner, 0, p.pages * c, 2, TrafficClass::OnDemand);
+            done4 = done4.max(d);
+        }
+        // ...vs the same pages serialized on one node.
+        let mut f1 = fleet(1, 0, 0, FaultConfig::default());
+        let (r1, _) = f1.alloc(0, pages * c, c, None).unwrap();
+        let done1 = f1.lease_read(0, 0, pages * c, 2, TrafficClass::OnDemand);
+        assert!(
+            done4 < done1,
+            "striped fan-out ({done4} ns) should beat one node ({done1} ns)"
+        );
+        let (tx4, rx4) = f4.merged_link_stats();
+        let (tx1, rx1) = f1.merged_link_stats();
+        // Payload bytes identical; only per-piece control requests differ.
+        assert_eq!(rx4.data_bytes() + tx4.data_bytes(), rx1.data_bytes() + tx1.data_bytes());
+        let _ = r4;
+        let _ = r1;
+    }
+
+    #[test]
+    fn reset_clears_traffic_but_keeps_fault_ledger() {
+        let c = chunk();
+        let fault = FaultConfig { drop_rate: 0.95, ..Default::default() };
+        let mut f = fleet(2, 1, 0, fault);
+        let (region, _) = f.alloc(0, 4 * c, c, None).unwrap();
+        let mut out = vec![0u8; c as usize];
+        for p in 0..4 {
+            f.fetch_page(0, region, p, c, 2, &mut out).unwrap();
+        }
+        let before = f.fault_stats_sum();
+        assert!(before.injected_drops > 0, "seeded drops fired");
+        f.reset_stats();
+        let after = f.fault_stats_sum();
+        assert_eq!(after.injected_drops, before.injected_drops, "ledger persists");
+        for s in f.node_stats() {
+            assert_eq!(s.net_bytes, 0, "traffic cleared on node {}", s.node);
+            assert_eq!(s.posted, 0, "qp deltas cleared on node {}", s.node);
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Memory-node fleet — the scale-out layer (ROADMAP item 1).
+//!
+//! The paper wires one compute node to one network-attached memory node;
+//! this module generalizes the memory side into a **fleet of N nodes
+//! behind a region directory**, the directory-style range partitioning
+//! MIND (arXiv:2107.00164) demonstrates in-network:
+//!
+//! * [`RegionDirectory`] maps every fleet region's global page index to an
+//!   `(owner node, local page)` pair under two placement modes —
+//!   [`PlacementMode::Contiguous`] (each node owns one big extent) and
+//!   [`PlacementMode::Striped`] (round-robin stripes of `stripe_pages`
+//!   pages for bandwidth aggregation across the nodes' independent links).
+//! * [`MemFleet`] owns one [`FleetNode`] per memory node: its own
+//!   [`crate::memnode::MemoryNode`] region store, its own tx/rx network
+//!   [`crate::sim::link::Link`] pair (so per-node bandwidth actually
+//!   aggregates), an independent [`crate::fabric::qp::QueuePair`] with its
+//!   own doorbells, and a **per-node** [`crate::sim::fault::FaultPlan`]
+//!   derived from the cluster's plan (distinct seed per node, crash
+//!   windows staggered so a primary and its replica are never down
+//!   together).
+//! * [`FleetStore`] is the [`crate::backend::RemoteStore`] that fans the
+//!   host's coalesced `fetch_batch` spans out across the owning nodes and
+//!   overlaps the per-node round trips — a k-node striped read costs
+//!   ~max(per-node piece) instead of the single-node sum.
+//! * **Lease-based replication**: each owner's shard is mirrored onto the
+//!   next `replicas` nodes in ring order. Reads and writeback releases go
+//!   to the current lease holder under a *bounded* retry budget; when the
+//!   holder's crash window outlasts the budget the lease moves down the
+//!   holder chain (`failovers`) and the range is served from a replica.
+//!   A moved lease re-probes the primary every [`fleet::REPROBE_NS`] and
+//!   restores it on success (`recoveries`). Writebacks fan out to every
+//!   holder so replicas stay coherent — which is what makes faulted fleet
+//!   runs bit-identical to fault-free single-node runs (the multi-node
+//!   chaos property test in `tests/chaos.rs`).
+//!
+//! Armed by `ClusterConfig::fleet` / `SodaConfig::fleet` / the CLI
+//! (`--mem-nodes`, `--stripe-pages`, `--replicas`); per-node traffic and
+//! failover counters surface as [`FleetNodeStats`] in `RunMetrics`, and
+//! the `abl-fleet` figure sweeps nodes × placement × crash windows.
+//!
+//! [`fleet::REPROBE_NS`]: crate::fleet::REPROBE_NS
+
+pub mod directory;
+#[allow(clippy::module_inception)]
+pub mod fleet;
+pub mod store;
+
+pub use directory::{FleetRegion, RegionDirectory, ShardPiece};
+pub use fleet::{FleetNode, FleetNodeStats, MemFleet, REPROBE_NS};
+pub use store::FleetStore;
+
+/// Fleet topology knobs. `mem_nodes = 1` (the default) means no fleet:
+/// the cluster keeps the paper's single-memory-node wiring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FleetConfig {
+    /// Number of memory nodes behind the directory.
+    pub mem_nodes: usize,
+    /// Stripe width in pages; `0` selects contiguous placement.
+    pub stripe_pages: u64,
+    /// Replicas per range (primary + R copies on the next R ring nodes).
+    pub replicas: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            mem_nodes: 1,
+            stripe_pages: 0,
+            replicas: 0,
+        }
+    }
+}
+
+/// How a region's pages are laid out across the fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementMode {
+    /// Each node owns one contiguous extent of `ceil(P/N)` pages.
+    Contiguous,
+    /// Round-robin stripes of `stripe_pages` pages (bandwidth aggregation).
+    Striped,
+}
+
+impl PlacementMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementMode::Contiguous => "contiguous",
+            PlacementMode::Striped => "striped",
+        }
+    }
+}
+
+impl FleetConfig {
+    /// True when the cluster actually builds a fleet.
+    pub fn enabled(&self) -> bool {
+        self.mem_nodes > 1
+    }
+
+    pub fn placement(&self) -> PlacementMode {
+        if self.stripe_pages > 0 {
+            PlacementMode::Striped
+        } else {
+            PlacementMode::Contiguous
+        }
+    }
+
+    /// Structural validation (shared by JSON parsing and the CLI).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mem_nodes == 0 {
+            return Err("fleet.mem_nodes must be >= 1".into());
+        }
+        if self.replicas >= self.mem_nodes {
+            return Err(format!(
+                "fleet.replicas must be < mem_nodes (got {} replicas on {} nodes)",
+                self.replicas, self.mem_nodes
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_single_node_and_disabled() {
+        let f = FleetConfig::default();
+        assert!(!f.enabled());
+        assert_eq!(f.placement(), PlacementMode::Contiguous);
+        assert!(f.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_topologies() {
+        let mut f = FleetConfig { mem_nodes: 0, ..Default::default() };
+        assert!(f.validate().is_err());
+        f.mem_nodes = 2;
+        f.replicas = 2;
+        assert!(f.validate().is_err(), "replicas must leave a distinct primary");
+        f.replicas = 1;
+        assert!(f.validate().is_ok());
+        assert!(f.enabled());
+    }
+
+    #[test]
+    fn stripe_width_selects_placement() {
+        let f = FleetConfig { mem_nodes: 4, stripe_pages: 8, replicas: 0 };
+        assert_eq!(f.placement(), PlacementMode::Striped);
+        assert_eq!(f.placement().name(), "striped");
+    }
+}

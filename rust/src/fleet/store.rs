@@ -1,0 +1,311 @@
+//! `FleetStore`: the fleet-backed [`RemoteStore`].
+//!
+//! The host side is unchanged — `HostAgent` coalesces faults into
+//! `PageSpan`s exactly as for the single-node backends. This store then
+//! 1. splits each span into owner-local [`ShardPiece`]s via the
+//!    directory,
+//! 2. copies the payload bytes out of the owning shard (every holder is
+//!    coherent, so bytes never depend on which holder serves the wire),
+//! 3. posts each owner's pieces on that node's own queue pair (host-side
+//!    posting is serial; one doorbell per owner group), and
+//! 4. issues the wire transfers per piece at the group's post time —
+//!    each node's link FIFO serializes its own pieces while different
+//!    nodes proceed **in parallel**, which is where striped placement
+//!    turns N links into aggregated bandwidth.
+//!
+//! Reads and writeback releases route through the lease layer
+//! (`MemFleet::lease_read` / `lease_write`), so replica failover is
+//! transparent here. The DPU cache/offload path is bypassed when a
+//! fleet is armed (DPU-offload over the fleet is future work); the
+//! batching contract still holds: data-plane bytes equal the per-page
+//! fetch loop exactly, only completion times improve.
+
+use crate::backend::{FetchSource, RemoteStore};
+use crate::coordinator::cluster::Cluster;
+use crate::host::buffer::{PageKey, PageSpan};
+use crate::memnode::{MemError, RegionId};
+use crate::sim::link::TrafficClass;
+use crate::sim::Ns;
+
+/// Fan-out backend over the cluster's `MemFleet`.
+pub struct FleetStore {
+    cluster: Cluster,
+    chunk_bytes: u64,
+}
+
+impl FleetStore {
+    pub fn new(cluster: Cluster) -> Self {
+        let chunk_bytes = cluster.config().chunk_bytes;
+        FleetStore { cluster, chunk_bytes }
+    }
+}
+
+/// A span fragment bound for one node, with its absolute position in
+/// the batch's output buffer.
+struct BatchPiece {
+    owner: usize,
+    local_start: u64,
+    pages: u64,
+    out_page: u64,
+    region: RegionId,
+}
+
+impl RemoteStore for FleetStore {
+    fn name(&self) -> &'static str {
+        "fleet"
+    }
+
+    fn try_alloc(
+        &mut self,
+        now: Ns,
+        bytes: u64,
+        init: Option<Vec<u8>>,
+    ) -> Result<(RegionId, Ns), MemError> {
+        let chunk = self.chunk_bytes;
+        self.cluster.with(|inner| {
+            inner
+                .fleet
+                .as_mut()
+                .expect("FleetStore requires an armed fleet")
+                .alloc(now, bytes, chunk, init)
+        })
+    }
+
+    fn try_free(&mut self, now: Ns, region: RegionId) -> Result<Ns, MemError> {
+        self.cluster.with(|inner| {
+            inner
+                .fleet
+                .as_mut()
+                .expect("FleetStore requires an armed fleet")
+                .free(now, region)
+        })
+    }
+
+    fn fetch(
+        &mut self,
+        now: Ns,
+        key: PageKey,
+        numa_node: usize,
+        out: &mut [u8],
+    ) -> (Ns, FetchSource) {
+        let chunk = self.chunk_bytes;
+        self.cluster.with(|inner| {
+            let fleet = inner.fleet.as_mut().expect("FleetStore requires an armed fleet");
+            let done = fleet
+                .fetch_page(now, key.region, key.page, chunk, numa_node, out)
+                .expect("fetched page in range");
+            (done, FetchSource::MemNode)
+        })
+    }
+
+    fn fetch_batch(
+        &mut self,
+        now: Ns,
+        spans: &[PageSpan],
+        numa_node: usize,
+        out: &mut [u8],
+    ) -> Vec<(Ns, FetchSource)> {
+        let total: u64 = spans.iter().map(|s| s.pages).sum();
+        assert!(total > 0, "empty fetch batch");
+        let chunk_bytes = self.chunk_bytes;
+        let chunk = chunk_bytes as usize;
+        debug_assert_eq!(out.len(), total as usize * chunk);
+        self.cluster.with(|inner| {
+            let fleet = inner.fleet.as_mut().expect("FleetStore requires an armed fleet");
+            // Split every span into owner-local runs.
+            let mut pieces: Vec<BatchPiece> = Vec::new();
+            let mut base = 0u64;
+            for s in spans {
+                for p in fleet
+                    .directory
+                    .split_span(s.start.region, s.start.page, s.pages)
+                    .expect("batched span in range")
+                {
+                    pieces.push(BatchPiece {
+                        owner: p.owner,
+                        local_start: p.local_start,
+                        pages: p.pages,
+                        out_page: base + p.out_page_offset,
+                        region: s.start.region,
+                    });
+                }
+                base += s.pages;
+            }
+            // Payload bytes come from the owning shard (holders are
+            // coherent; data never depends on the failover path).
+            for p in &pieces {
+                let sid = fleet.directory.get(p.region).expect("batched region").shard_ids[p.owner];
+                let a = p.out_page as usize * chunk;
+                let b = a + p.pages as usize * chunk;
+                fleet.nodes[p.owner]
+                    .mem
+                    .store
+                    .read(sid, p.local_start * chunk_bytes, &mut out[a..b])
+                    .expect("shard read in range");
+            }
+            // Serial host-side posting, one doorbell per owner group;
+            // group k's wire work starts after groups 0..k are posted.
+            let n = fleet.nodes.len();
+            let mut order: Vec<usize> = Vec::new();
+            let mut counts: Vec<u64> = vec![0; n];
+            for p in &pieces {
+                if counts[p.owner] == 0 {
+                    order.push(p.owner);
+                }
+                counts[p.owner] += 1;
+            }
+            let mut start_at: Vec<Ns> = vec![now; n];
+            let mut t_post = now;
+            for &o in &order {
+                t_post += fleet.nodes[o].qp.post_batch(counts[o]);
+                start_at[o] = t_post;
+            }
+            // Fan the pieces out: per-node FIFO, cross-node overlap.
+            let mut res = vec![(now, FetchSource::MemNode); total as usize];
+            for p in &pieces {
+                let done = fleet.lease_read(
+                    p.owner,
+                    start_at[p.owner],
+                    p.pages * chunk_bytes,
+                    numa_node,
+                    TrafficClass::OnDemand,
+                );
+                for i in 0..p.pages {
+                    res[(p.out_page + i) as usize] = (done, FetchSource::MemNode);
+                }
+            }
+            res
+        })
+    }
+
+    fn writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Ns {
+        let chunk = self.chunk_bytes;
+        self.cluster.with(|inner| {
+            inner
+                .fleet
+                .as_mut()
+                .expect("FleetStore requires an armed fleet")
+                // NIC-attached NUMA node, matching the memserver path.
+                .writeback_page(now, key.region, key.page, chunk, 2, data)
+                .expect("written page in range")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::ClusterConfig;
+    use crate::fleet::FleetConfig;
+
+    fn fleet_cluster(nodes: usize, stripe: u64, replicas: usize) -> Cluster {
+        let mut cfg = ClusterConfig::tiny();
+        cfg.fleet = FleetConfig { mem_nodes: nodes, stripe_pages: stripe, replicas };
+        Cluster::build(cfg)
+    }
+
+    fn fleet_data_bytes(cluster: &Cluster) -> u64 {
+        cluster.with(|inner| {
+            let (tx, rx) = inner.fleet.as_ref().unwrap().merged_link_stats();
+            tx.data_bytes() + rx.data_bytes()
+        })
+    }
+
+    #[test]
+    fn batched_fanout_matches_per_page_loop_bytes_and_data() {
+        let chunk = ClusterConfig::tiny().chunk_bytes;
+        let pages = 24u64;
+        let data: Vec<u8> = (0..pages * chunk).map(|i| (i * 7 % 253) as u8).collect();
+        let spans_of = |region: RegionId| {
+            vec![
+                PageSpan { start: PageKey::new(region, 2), pages: 8 },
+                PageSpan { start: PageKey::new(region, 13), pages: 5 },
+                PageSpan { start: PageKey::new(region, 21), pages: 1 },
+            ]
+        };
+
+        // Batched fan-out on one cluster...
+        let ca = fleet_cluster(4, 2, 0);
+        let mut sa = FleetStore::new(ca.clone());
+        let (ra, _) = sa.try_alloc(0, pages * chunk, Some(data.clone())).unwrap();
+        let spans = spans_of(ra);
+        let total: u64 = spans.iter().map(|s| s.pages).sum();
+        let mut out_a = vec![0u8; (total * chunk) as usize];
+        let res_a = sa.fetch_batch(0, &spans, 2, &mut out_a);
+
+        // ...vs the default sequential per-page loop on a fresh twin.
+        let cb = fleet_cluster(4, 2, 0);
+        let mut sb = FleetStore::new(cb.clone());
+        let (rb, _) = sb.try_alloc(0, pages * chunk, Some(data.clone())).unwrap();
+        let spans_b = spans_of(rb);
+        let mut out_b = vec![0u8; (total * chunk) as usize];
+        let mut t = 0;
+        let mut res_b = Vec::new();
+        let mut off = 0usize;
+        for s in &spans_b {
+            for i in 0..s.pages {
+                let (done, src) =
+                    sb.fetch(t, s.key_at(i), 2, &mut out_b[off..off + chunk as usize]);
+                t = done;
+                off += chunk as usize;
+                res_b.push((done, src));
+            }
+        }
+
+        assert_eq!(out_a, out_b, "payload bytes identical");
+        // Output matches the source data for every requested page.
+        let mut expect = Vec::new();
+        for s in &spans {
+            let a = (s.start.page * chunk) as usize;
+            expect.extend_from_slice(&data[a..a + (s.pages * chunk) as usize]);
+        }
+        assert_eq!(out_a, expect, "pages gathered from the right stripes");
+        // Batching contract: identical data-plane traffic, never slower.
+        assert_eq!(fleet_data_bytes(&ca), fleet_data_bytes(&cb));
+        let last_a = res_a.iter().map(|(d, _)| *d).max().unwrap();
+        let last_b = res_b.iter().map(|(d, _)| *d).max().unwrap();
+        assert!(last_a <= last_b, "batched ({last_a}) never slower than loop ({last_b})");
+    }
+
+    #[test]
+    fn traffic_spreads_across_all_nodes_under_striping() {
+        let chunk = ClusterConfig::tiny().chunk_bytes;
+        let cluster = fleet_cluster(4, 1, 0);
+        let mut store = FleetStore::new(cluster.clone());
+        let (region, _) = store.alloc(0, 32 * chunk, None);
+        let spans = vec![PageSpan { start: PageKey::new(region, 0), pages: 32 }];
+        let mut out = vec![0u8; (32 * chunk) as usize];
+        store.fetch_batch(0, &spans, 2, &mut out);
+        let stats = cluster.with(|inner| inner.fleet.as_ref().unwrap().node_stats());
+        assert_eq!(stats.len(), 4);
+        for s in &stats {
+            assert!(s.on_demand_bytes >= 8 * chunk, "node {} starved", s.node);
+            assert!(s.doorbells >= 1, "node {} never rung", s.node);
+        }
+        store.free(1_000_000, region);
+    }
+
+    #[test]
+    fn writeback_release_and_replica_coherence_through_store() {
+        let chunk = ClusterConfig::tiny().chunk_bytes;
+        let cluster = fleet_cluster(3, 0, 1);
+        let mut store = FleetStore::new(cluster.clone());
+        let (region, _) = store.alloc(0, 9 * chunk, None);
+        let page = 4u64; // owner 1 under contiguous ppn=3
+        let dirty = vec![0x5Au8; chunk as usize];
+        let release = store.writeback(100, PageKey::new(region, page), &dirty);
+        assert!(release > 100);
+        let mut back = vec![0u8; chunk as usize];
+        store.fetch(release, PageKey::new(region, page), 2, &mut back);
+        assert_eq!(back, dirty, "writeback visible to a later fetch");
+        cluster.with(|inner| {
+            let fleet = inner.fleet.as_ref().unwrap();
+            let (owner, local) = fleet.directory.locate(region, page).unwrap();
+            let sid = fleet.directory.get(region).unwrap().shard_ids[owner];
+            for h in fleet.holder_chain(owner) {
+                let got = fleet.nodes[h].mem.store.slice(sid, local * chunk, chunk).unwrap();
+                assert_eq!(got, &dirty[..], "holder {h} coherent");
+            }
+        });
+    }
+}

@@ -138,6 +138,42 @@
 //! five apps bit-identical to a fault-free run, that the fault ledger
 //! balances exactly, and that a disabled plan is zero-cost.
 //!
+//! ## Fleet / directory / replication (scale-out layer)
+//!
+//! `--mem-nodes N` (N > 1) swaps the single memory node for a sharded
+//! **fleet** ([`fleet`]) behind a region directory:
+//!
+//! ```text
+//! HostAgent          ── unchanged: faults coalesce into PageSpans
+//!      │
+//! FleetStore         ── splits each span into owner-local pieces via
+//!  (fleet/store)        RegionDirectory (contiguous extents, or striped
+//!      │                round-robin for bandwidth aggregation); posts
+//!      │                each owner group on that node's own QueuePair
+//! MemFleet           ── lease layer: reads/writeback releases go to the
+//!  (fleet/fleet)        range's current lease holder under the bounded
+//!      │                retry budget; a crash window that outlasts it
+//!      │                moves the lease to the next ring replica
+//!      │                (failover) and re-probes the primary every
+//!      │                REPROBE_NS (recovery); writebacks fan out to
+//!      │                every holder so replicas stay coherent
+//! FleetNode × N      ── per node: its own MemoryNode region store,
+//!  (fleet/fleet)        tx/rx links (NUMA-derated), QueuePair with
+//!                       independent doorbells, and a FaultPlan derived
+//!                       from the cluster plan (distinct seed, crash
+//!                       windows staggered so primary + replica never
+//!                       overlap)
+//! ```
+//!
+//! Knobs: `ClusterConfig::fleet` / `SodaConfig::fleet` / CLI
+//! `--mem-nodes`, `--stripe-pages`, `--replicas`. Per-node traffic and
+//! failover counters surface as `fleet_nodes` in `RunMetrics` JSON; the
+//! `abl-fleet` figure sweeps nodes × placement × crash windows, and the
+//! multi-node half of `tests/chaos.rs` pins bit-identical outputs plus a
+//! balanced aggregate ledger under per-node crash plans with replicas.
+//! The DPU offload path is bypassed while a fleet is armed (DPU offload
+//! over the fleet is future work).
+//!
 //! Quickstart:
 //! ```no_run
 //! use soda::prelude::*;
@@ -158,6 +194,7 @@ pub mod coordinator;
 pub mod dpu;
 pub mod fabric;
 pub mod figures;
+pub mod fleet;
 pub mod graph;
 pub mod host;
 pub mod memnode;

@@ -144,6 +144,17 @@ fn soda_config_from_args(args: &Args) -> Result<SodaConfig> {
         }
         cfg.fault = Some(fc);
     }
+    // Fleet flags: any one of them arms a topology override (the config
+    // file's `fleet` block, when present, is the base it edits).
+    let fleet_flags = ["mem-nodes", "stripe-pages", "replicas"];
+    if fleet_flags.iter().any(|f| args.opt(f).is_some()) {
+        let mut fl = cfg.fleet.unwrap_or_default();
+        fl.mem_nodes = args.opt_usize("mem-nodes", fl.mem_nodes);
+        fl.stripe_pages = args.opt_u64("stripe-pages", fl.stripe_pages);
+        fl.replicas = args.opt_usize("replicas", fl.replicas);
+        fl.validate().map_err(|e| anyhow::anyhow!(e))?;
+        cfg.fleet = Some(fl);
+    }
     Ok(cfg)
 }
 
@@ -211,6 +222,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     wb.max_batch_pages = Some(scfg.max_batch_pages);
     wb.coalesce_fetch = Some(scfg.coalesce_fetch);
     wb.fault = scfg.fault;
+    wb.fleet = scfg.fleet;
     if args.opt("config").is_some() {
         // A --config file is a full SodaConfig: honor every field
         // (qp_count, numa_aware, buffer_fraction, host_timing, …), not
@@ -282,7 +294,7 @@ fn usage() -> &'static str {
        figures [--all | <id>...] [--scale F] [--threads N] [--json DIR]\n\
            regenerate paper tables/figures (table1 table2 fig3..fig11)\n\
            plus ablations (abl-entry abl-prefetch abl-prefetch-depth abl-evict abl-qp\n\
-           abl-cache-policy abl-batch abl-faults)\n\
+           abl-cache-policy abl-batch abl-faults abl-fleet)\n\
        run <app> <graph> [--backend B] [--caching M] [--scale F] [--with-bg-bfs] [--json]\n\
            [--evict-policy P] [--dpu-cache-policy P] [--prefetch-policy Q]\n\
            [--prefetch-depth N] [--prefetch-scan N]\n\
@@ -290,12 +302,17 @@ fn usage() -> &'static str {
            [--fault-drop-rate R] [--fault-corrupt-rate R] [--fault-dup-rate R]\n\
            [--fault-spike-rate R] [--fault-spike-ns T] [--fault-crash-start-ns T]\n\
            [--fault-crash-len-ns T] [--fault-crash-every-ns T] [--fault-seed S]\n\
+           [--mem-nodes N] [--stripe-pages S] [--replicas R]\n\
            run one application on one graph and print metrics\n\
            (policies P: fault-fifo | access-lru | random | clock | slru;\n\
             prefetch Q: off | sequential | strided | graph-hint | adaptive[:base];\n\
             --max-batch-pages 1 disables the batched fault engine;\n\
             any --fault-* flag arms seeded fault injection + the reliable\n\
-            fabric layer — retries, checksums, memory-node failover)\n\
+            fabric layer — retries, checksums, memory-node failover;\n\
+            --mem-nodes N>1 shards remote memory across a fleet of N nodes\n\
+            behind a region directory — --stripe-pages 0 = contiguous\n\
+            extents, S>0 = round-robin stripes; --replicas R mirrors each\n\
+            range onto R ring replicas with lease-based failover)\n\
        config [--config FILE] [--evict-policy P] [--dpu-cache-policy P] ...\n\
            print the effective SodaConfig as JSON (the --config schema)\n\
        advisor [--hit-rate H]\n\

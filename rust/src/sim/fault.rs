@@ -114,6 +114,26 @@ impl FaultStats {
             + self.injected_spikes
             + self.crash_rejections
     }
+
+    /// Fold another ledger in (aggregating the fleet's per-node plans).
+    /// Every field sums, so the chaos balance equations that hold per
+    /// plan also hold for the merged ledger.
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.injected_drops += other.injected_drops;
+        self.injected_corruptions += other.injected_corruptions;
+        self.injected_dups += other.injected_dups;
+        self.injected_spikes += other.injected_spikes;
+        self.crash_rejections += other.crash_rejections;
+        self.detected_corruptions += other.detected_corruptions;
+        self.detected_dups += other.detected_dups;
+        self.timeouts += other.timeouts;
+        self.retries += other.retries;
+        self.exhaustions += other.exhaustions;
+        self.retry_bytes += other.retry_bytes;
+        self.backoff_ns += other.backoff_ns;
+        self.failovers += other.failovers;
+        self.recoveries += other.recoveries;
+    }
 }
 
 /// Per-message verdict drawn from the plan.

@@ -146,6 +146,34 @@ impl Bench {
     pub fn results(&self) -> &[Stats] {
         &self.results
     }
+
+    /// Dump the collected stats as a `BENCH_*.json` trajectory record so
+    /// cross-PR perf tracking has machine-readable datapoints, not just
+    /// CI guard pass/fail bits. Wall-clock numbers are machine-relative;
+    /// compare within one runner, not across.
+    pub fn write_json(&self, path: &str, label: &str) -> std::io::Result<()> {
+        let mut rows = String::new();
+        for (i, s) in self.results.iter().enumerate() {
+            if i > 0 {
+                rows.push_str(",\n");
+            }
+            rows.push_str(&format!(
+                "    {{\"name\": \"{}\", \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \
+                 \"stddev_ns\": {:.1}, \"min_ns\": {:.1}, \"samples\": {}}}",
+                s.name.replace('"', "'"),
+                s.median(),
+                s.mean(),
+                s.stddev(),
+                s.min(),
+                s.samples.len(),
+            ));
+        }
+        let json = format!(
+            "{{\n  \"bench\": \"{label}\",\n  \"unit\": \"wall_ns_per_iter\",\n  \
+             \"results\": [\n{rows}\n  ]\n}}\n"
+        );
+        std::fs::write(path, json)
+    }
 }
 
 #[cfg(test)]
@@ -170,6 +198,29 @@ mod tests {
             samples: vec![1.0, 2.0, 3.0, 4.0],
         };
         assert_eq!(s.median(), 2.5);
+    }
+
+    #[test]
+    fn write_json_emits_parseable_trajectory() {
+        let mut b = Bench {
+            samples: 2,
+            min_sample_time: Duration::from_micros(50),
+            warmup: Duration::from_micros(50),
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.bench("cell/a", || {
+            acc = acc.wrapping_add(3);
+            acc
+        });
+        let path = std::env::temp_dir().join("soda_bench_test.json");
+        let path = path.to_str().unwrap();
+        b.write_json(path, "unit-test").unwrap();
+        let body = std::fs::read_to_string(path).unwrap();
+        std::fs::remove_file(path).ok();
+        assert!(body.contains("\"bench\": \"unit-test\""), "{body}");
+        assert!(body.contains("\"name\": \"cell/a\""), "{body}");
+        assert!(body.contains("\"median_ns\""), "{body}");
     }
 
     #[test]

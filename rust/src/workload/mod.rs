@@ -74,6 +74,10 @@ pub struct Workbench {
     /// base config's plan — faults off unless a `--config` file says
     /// otherwise.
     pub fault: Option<crate::sim::fault::FaultConfig>,
+    /// Fleet-topology override (`SodaConfig::fleet`); `None` keeps the
+    /// base config's topology — single memory node unless a `--config`
+    /// file says otherwise.
+    pub fleet: Option<crate::fleet::FleetConfig>,
     /// Full [`SodaConfig`] base for runs (e.g. a `--config` file): every
     /// field (qp_count, numa_aware, buffer_fraction, host_timing, …) is
     /// honored, with the explicit `threads`/policy/prefetch fields above
@@ -95,6 +99,7 @@ impl Workbench {
             max_batch_pages: None,
             coalesce_fetch: None,
             fault: None,
+            fleet: None,
             soda_config_base: None,
         }
     }
@@ -204,6 +209,9 @@ impl Workbench {
         }
         if let Some(f) = self.fault {
             cfg.fault = Some(f);
+        }
+        if let Some(fl) = self.fleet {
+            cfg.fleet = Some(fl);
         }
         cfg.with_backend(spec.backend).with_caching(spec.caching)
     }
@@ -448,6 +456,34 @@ mod tests {
         let f = wb.soda_config(&spec).fault.expect("override must land");
         assert_eq!(f.drop_rate, 0.02);
         assert_eq!(f.seed, 7);
+    }
+
+    #[test]
+    fn fleet_override_layers_and_runs_end_to_end() {
+        let mut wb = quick_bench();
+        let spec = ExperimentSpec {
+            app: App::Bfs,
+            graph: "friendster",
+            backend: BackendKind::MemServer,
+            caching: CachingMode::None,
+        };
+        assert_eq!(wb.soda_config(&spec).fleet, None, "fleet defaults off");
+        let solo = wb.run(&spec);
+        wb.fleet = Some(crate::fleet::FleetConfig {
+            mem_nodes: 4,
+            stripe_pages: 1,
+            replicas: 0,
+        });
+        assert!(wb.soda_config(&spec).fleet.unwrap().enabled());
+        let fleet = wb.run(&spec);
+        assert_eq!(fleet.fleet.len(), 4, "per-node counters surface");
+        assert!(
+            fleet.fleet.iter().all(|n| n.data_bytes > 0),
+            "striping must spread traffic: {:?}",
+            fleet.fleet
+        );
+        assert!(fleet.network_bytes() > 0);
+        assert_eq!(solo.fleet.len(), 0, "single-node runs stay fleet-free");
     }
 
     #[test]

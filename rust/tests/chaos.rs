@@ -10,7 +10,11 @@
 //! * retry traffic stays bounded (well under the goodput);
 //! * with faults disabled the whole layer is zero-cost: identical virtual
 //!   time and network bytes regardless of the configured seed, and an
-//!   all-zero `FaultStats`.
+//!   all-zero `FaultStats`;
+//! * the same holds **multi-node**: under any seeded per-node crash plan
+//!   with R ≥ 1 replicas, a sharded fleet run stays bit-identical to the
+//!   fault-free single-node run, the aggregate failover ledger balances,
+//!   and traffic reaches every node.
 //!
 //! CI runs this as the "Chaos guard" step.
 
@@ -18,6 +22,7 @@ use soda::backend::{DpuStore, FailoverStore, RemoteStore};
 use soda::coordinator::cluster::Cluster;
 use soda::coordinator::config::ClusterConfig;
 use soda::dpu::DpuOpts;
+use soda::fleet::{FleetConfig, FleetNodeStats, FleetStore};
 use soda::graph::apps::{bc, bfs, cc, pagerank, radii};
 use soda::graph::{gen, BuildMode, CsrGraph, FamGraph, GraphRunner};
 use soda::host::{HostAgent, HostTiming};
@@ -151,6 +156,107 @@ fn run_all(fault: FaultConfig, csr: &CsrGraph) -> Vec<AppRun> {
     runs
 }
 
+/// Build a runner over a fleet-armed cluster: N memory nodes behind the
+/// region directory with the `FleetStore` backend, exactly as
+/// `SodaService` selects it when `--mem-nodes > 1`. The cluster derives
+/// a per-node fault plan from `fault` (distinct RNG seed per node, crash
+/// windows staggered by one window length), so a shard's primary and its
+/// ring replica are never down at the same instant.
+fn fleet_runner_with(
+    fault: FaultConfig,
+    fleet: FleetConfig,
+    csr: &CsrGraph,
+) -> (GraphRunner, FamGraph, Cluster) {
+    let mut cfg = ClusterConfig::tiny();
+    cfg.fault = fault;
+    cfg.fleet = fleet;
+    let cluster = Cluster::build(cfg);
+    let chunk = cluster.config().chunk_bytes;
+    let store: Box<dyn RemoteStore> = Box::new(FleetStore::new(cluster.clone()));
+    let agent = HostAgent::new(
+        "chaos",
+        store,
+        24 * chunk,
+        chunk,
+        0.9,
+        4,
+        4,
+        2,
+        HostTiming::default(),
+    );
+    let mut r = GraphRunner::new(agent, 4, 0);
+    let (g, t) = FamGraph::build(&mut r.agent, 0, csr, BuildMode::FileBacked);
+    r.set_clock(t);
+    (r, g, cluster)
+}
+
+/// Fleet twin of [`run_all`]: all five apps, each on a fresh fleet
+/// cluster, recording the same digests plus the per-node fleet counters.
+fn run_all_fleet(
+    fault: FaultConfig,
+    fleet: FleetConfig,
+    csr: &CsrGraph,
+) -> Vec<(AppRun, Vec<FleetNodeStats>)> {
+    let mut runs = Vec::new();
+    let mut record = |digest: String, cluster: &Cluster, r: &GraphRunner| {
+        runs.push((
+            AppRun {
+                digest,
+                fault: cluster.fault_stats(),
+                net_bytes: cluster.network_stats().network_bytes(),
+                elapsed_ns: r.now(),
+            },
+            cluster.fleet_node_stats(),
+        ));
+    };
+    {
+        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, csr);
+        let out = bfs(&mut r, &g, 0);
+        record(
+            format!("bfs {:?} {:?} {}", out.levels, out.parents, out.rounds),
+            &cluster,
+            &r,
+        );
+    }
+    {
+        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, csr);
+        let out = pagerank(&mut r, &g, 10);
+        record(
+            format!("pagerank {:?} {}", out.ranks, out.last_delta),
+            &cluster,
+            &r,
+        );
+    }
+    {
+        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, csr);
+        let out = cc(&mut r, &g);
+        record(
+            format!("cc {:?} {}", out.labels, out.components),
+            &cluster,
+            &r,
+        );
+    }
+    {
+        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, csr);
+        let out = bc(&mut r, &g, 0);
+        record(
+            format!("bc {:?} {:?} {:?}", out.scores, out.levels, out.sigma),
+            &cluster,
+            &r,
+        );
+    }
+    {
+        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, csr);
+        let out = radii(&mut r, &g, 0xAD11);
+        record(
+            format!("radii {:?} {:?}", out.radii, out.sources),
+            &cluster,
+            &r,
+        );
+    }
+    runs
+}
+
 /// A plan that exercises every injector at once: drops, corruption, dup
 /// completions, latency spikes and periodic memory-node crash windows that
 /// outlast the DPU path's retry budget (forcing real failovers).
@@ -255,4 +361,64 @@ fn corruption_alone_is_always_caught_and_corrected() {
         caught += f.fault.detected_corruptions;
     }
     assert!(caught > 0, "a 3% corruption rate must fire at least once");
+}
+
+#[test]
+fn fleet_chaos_stays_bit_identical_to_single_node_fault_free() {
+    let csr = chaos_graph();
+    // Reference: the fault-free *single-node* DPU run. Sharding the data
+    // across a fleet — with or without per-node faults — must never
+    // change a single output bit.
+    let clean = run_all(FaultConfig::default(), &csr);
+    let fleet = FleetConfig {
+        mem_nodes: 4,
+        stripe_pages: 2,
+        replicas: 1,
+    };
+
+    // Fault-free fleet: same answers, and striping genuinely spreads the
+    // traffic across every node.
+    for (c, (f, nodes)) in clean.iter().zip(&run_all_fleet(FaultConfig::default(), fleet, &csr)) {
+        let app = f.digest.split(' ').next().unwrap_or("?");
+        assert_eq!(c.digest, f.digest, "fleet (clean): {app} diverged from single-node");
+        assert_eq!(f.fault.injected(), 0, "fleet (clean) {app}: nothing injected");
+        assert_eq!(nodes.len(), 4, "{app}: one stat row per node");
+        for n in nodes {
+            assert!(n.net_bytes > 0, "fleet (clean) {app}: node {} idle", n.node);
+        }
+    }
+
+    // Seeded per-node crash plans (plus the full injector mix) with one
+    // replica per range: every app still matches bit-for-bit, the
+    // aggregate ledger balances, and crash windows outlasting the retry
+    // budget actually move leases.
+    let mut recoveries = 0;
+    for seed in [3u64, 0xFEE7] {
+        let chaos = run_all_fleet(chaos_cfg(seed), fleet, &csr);
+        let mut injected = 0;
+        let mut failovers = 0;
+        for (c, (f, nodes)) in clean.iter().zip(&chaos) {
+            let app = f.digest.split(' ').next().unwrap_or("?");
+            assert_eq!(
+                c.digest, f.digest,
+                "fleet seed {seed:#x}: {app} diverged from the fault-free single-node run"
+            );
+            assert_ledger_balances(&f.fault, &format!("fleet seed {seed:#x} {app}"));
+            for n in nodes {
+                assert!(n.net_bytes > 0, "fleet seed {seed:#x} {app}: node {} idle", n.node);
+            }
+            injected += f.fault.injected();
+            failovers += f.fault.failovers;
+            recoveries += f.fault.recoveries;
+        }
+        assert!(injected > 0, "fleet seed {seed:#x}: the plan never fired");
+        assert!(
+            failovers > 0,
+            "fleet seed {seed:#x}: staggered crash windows must move at least one lease"
+        );
+    }
+    assert!(
+        recoveries > 0,
+        "a re-probe after the crash windows clear must hand some lease back to its primary"
+    );
 }

@@ -1,0 +1,37 @@
+//! Bench: the worker-lane sweep behind `abl-scaling` — wall-clock of the
+//! simulator runs per (app, host workers) cell on the fault-heavy
+//! `dpu-opt` path, buffer shards tracking the lane count. The virtual-time
+//! scaling results come from `soda figures abl-scaling`; set
+//! `BENCH_JSON=<path>` to also dump these wall-clock stats as a
+//! `BENCH_scaling_wallclock.json` trajectory record.
+
+use soda::coordinator::config::{BackendKind, CachingMode};
+use soda::graph::App;
+use soda::util::bench::Bench;
+use soda::workload::{ExperimentSpec, Workbench};
+
+fn main() {
+    let mut b = Bench::quick();
+    b.section("abl-scaling: host workers x app, dpu-opt (scale 2e-4)");
+    for app in [App::Bfs, App::PageRank] {
+        for workers in [1usize, 2, 4, 8] {
+            b.bench(format!("{}/friendster/w{workers}", app.name()), || {
+                let mut wb = Workbench::new(0.0002);
+                wb.threads = 24;
+                wb.host_workers = Some(workers);
+                wb.buffer_shards = Some(workers);
+                wb.run(&ExperimentSpec {
+                    app,
+                    graph: "friendster",
+                    backend: BackendKind::DPU_OPT,
+                    caching: CachingMode::None,
+                })
+                .elapsed_ns
+            });
+        }
+    }
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        b.write_json(&path, "fig_scaling").expect("write BENCH_JSON");
+        println!("wrote {path}");
+    }
+}

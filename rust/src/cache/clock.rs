@@ -82,6 +82,14 @@ impl ReplacementPolicy for ClockPolicy {
         None
     }
 
+    fn on_demote(&mut self, slot: u32) {
+        // Hard demotion: revoke the second chance and park at the cold end.
+        if self.list.contains(slot) {
+            self.set_ref(slot, false);
+            self.list.move_to_back(slot);
+        }
+    }
+
     fn order(&self) -> Vec<u32> {
         self.list.iter_order()
     }
@@ -134,6 +142,20 @@ mod tests {
         }
         assert_eq!(p.victim(&mut rng, &|_| false), None);
         assert_eq!(p.len(), 3, "nothing lost while rotating");
+    }
+
+    #[test]
+    fn demote_revokes_second_chance() {
+        let mut p = ClockPolicy::new();
+        let mut rng = Rng::new(0);
+        for s in 0..3 {
+            p.on_insert(s);
+        }
+        p.on_touch(2); // referenced, would survive a sweep
+        p.on_demote(2); // bit cleared + parked cold: next victim
+        assert_eq!(p.victim(&mut rng, &|_| true), Some(2));
+        p.on_demote(9); // untracked: no-op
+        assert_eq!(p.len(), 3);
     }
 
     #[test]

@@ -50,6 +50,15 @@ impl ReplacementPolicy for FaultFifoPolicy {
         self.list.rfind(evictable)
     }
 
+    fn peek_victim(&self, evictable: &dyn Fn(u32) -> bool) -> Option<u32> {
+        // victim() is already non-mutating for this policy.
+        self.list.rfind(evictable)
+    }
+
+    fn on_demote(&mut self, slot: u32) {
+        self.list.move_to_back(slot);
+    }
+
     fn order(&self) -> Vec<u32> {
         self.list.iter_order()
     }
@@ -91,6 +100,29 @@ mod tests {
             out.push(v);
         }
         assert_eq!(out, vec![4, 1, 9]);
+    }
+
+    #[test]
+    fn peek_matches_victim_without_mutation() {
+        let mut p = FaultFifoPolicy::new();
+        let mut rng = Rng::new(0);
+        for s in 0..3 {
+            p.on_insert(s);
+        }
+        assert_eq!(p.peek_victim(&|_| true), Some(0));
+        assert_eq!(p.peek_victim(&|s| s != 0), Some(1));
+        assert_eq!(p.victim(&mut rng, &|_| true), Some(0));
+    }
+
+    #[test]
+    fn demote_moves_to_eviction_end() {
+        let mut p = FaultFifoPolicy::new();
+        for s in 0..3 {
+            p.on_insert(s);
+        }
+        p.on_demote(2); // youngest fault becomes the next victim
+        assert_eq!(p.peek_victim(&|_| true), Some(2));
+        assert_eq!(p.order(), vec![1, 0, 2]);
     }
 
     #[test]

@@ -120,6 +120,35 @@ impl IndexList {
         }
     }
 
+    /// Link `slot` at the back (least-recent end; next in eviction order).
+    pub fn push_back(&mut self, slot: u32) {
+        self.ensure(slot);
+        debug_assert!(!self.nodes[slot as usize].linked, "slot {slot} already linked");
+        let old_tail = self.tail;
+        {
+            let n = &mut self.nodes[slot as usize];
+            n.prev = old_tail;
+            n.next = NIL;
+            n.linked = true;
+        }
+        if old_tail != NIL {
+            self.nodes[old_tail as usize].next = slot;
+        } else {
+            self.head = slot;
+        }
+        self.tail = slot;
+        self.len += 1;
+    }
+
+    /// Move a linked slot to the back (no-op if not linked) — hard
+    /// demotion to the eviction end.
+    pub fn move_to_back(&mut self, slot: u32) {
+        if self.contains(slot) {
+            self.unlink(slot);
+            self.push_back(slot);
+        }
+    }
+
     /// The back (least-recent) slot.
     pub fn back(&self) -> Option<u32> {
         (self.tail != NIL).then_some(self.tail)
@@ -210,6 +239,36 @@ mod tests {
         assert_eq!(l.back(), None);
         l.push_front(7);
         assert_eq!(l.iter_order(), vec![7]);
+    }
+
+    #[test]
+    fn push_back_appends_at_eviction_end() {
+        let mut l = IndexList::new();
+        l.push_front(1);
+        l.push_front(2);
+        l.push_back(0);
+        assert_eq!(l.iter_order(), vec![2, 1, 0]);
+        assert_eq!(l.back(), Some(0));
+        // push_back onto an empty list sets both ends.
+        let mut e = IndexList::new();
+        e.push_back(9);
+        assert_eq!(e.iter_order(), vec![9]);
+        assert_eq!(e.back(), Some(9));
+    }
+
+    #[test]
+    fn move_to_back_demotes() {
+        let mut l = IndexList::new();
+        for s in 0..4 {
+            l.push_front(s);
+        }
+        l.move_to_back(3); // head → tail
+        assert_eq!(l.iter_order(), vec![2, 1, 0, 3]);
+        assert_eq!(l.back(), Some(3));
+        l.move_to_back(3); // already at the back: stable
+        assert_eq!(l.back(), Some(3));
+        l.move_to_back(7); // unlinked: no-op
+        assert_eq!(l.len(), 4);
     }
 
     #[test]

@@ -44,6 +44,15 @@ impl ReplacementPolicy for AccessLruPolicy {
         self.list.rfind(evictable)
     }
 
+    fn peek_victim(&self, evictable: &dyn Fn(u32) -> bool) -> Option<u32> {
+        // victim() is already non-mutating for this policy.
+        self.list.rfind(evictable)
+    }
+
+    fn on_demote(&mut self, slot: u32) {
+        self.list.move_to_back(slot);
+    }
+
     fn order(&self) -> Vec<u32> {
         self.list.iter_order()
     }
@@ -72,6 +81,23 @@ mod tests {
         // 0 is now MRU; 1 is LRU.
         assert_eq!(p.victim(&mut rng, &|_| true), Some(1));
         assert_eq!(p.order(), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn peek_matches_victim_and_demote_overrides_recency() {
+        let mut p = AccessLruPolicy::new();
+        let mut rng = Rng::new(0);
+        for s in 0..3 {
+            p.on_insert(s);
+        }
+        p.on_touch(0);
+        assert_eq!(p.peek_victim(&|_| true), Some(1));
+        p.on_demote(0); // hot page hard-demoted past the LRU tail
+        assert_eq!(p.peek_victim(&|_| true), Some(0));
+        assert_eq!(p.victim(&mut rng, &|_| true), Some(0));
+        // A later touch rescues the demoted slot.
+        p.on_touch(0);
+        assert_eq!(p.peek_victim(&|_| true), Some(1));
     }
 
     #[test]

@@ -164,6 +164,27 @@ pub trait ReplacementPolicy: std::fmt::Debug {
     /// [`on_remove`](Self::on_remove).
     fn victim(&mut self, rng: &mut Rng, evictable: &dyn Fn(u32) -> bool) -> Option<u32>;
 
+    /// Non-mutating preview of the next victim: the slot [`victim`](Self::victim)
+    /// would return, with no RNG draw and no internal state change. Sharded
+    /// shells use this to merge per-shard candidates into one global
+    /// eviction order (pick the shard whose preview is globally coldest)
+    /// without disturbing the shards that lose the comparison.
+    ///
+    /// Deterministic list-based policies (`FaultFifo`, `AccessLru`,
+    /// `SegmentedLru`) implement it; policies whose victim choice is
+    /// inherently stateful (`Clock`'s sweep rotates, `Random` consumes RNG
+    /// draws) keep the default `None` and the shell falls back to its own
+    /// deterministic shard rotation.
+    fn peek_victim(&self, _evictable: &dyn Fn(u32) -> bool) -> Option<u32> {
+        None
+    }
+
+    /// Demote `slot` hard: move it to the policy's coldest position so it
+    /// is the preferred next victim (used by hint-aware eviction when a
+    /// speculative entry's superstep expires untouched). Default no-op for
+    /// policies with no usable order (`Random`).
+    fn on_demote(&mut self, _slot: u32) {}
+
     /// Tracked slots, most-protected first (for `FaultFifo`/`AccessLru`
     /// this is exactly MRU→LRU; the reverse is the eviction order).
     fn order(&self) -> Vec<u32>;

@@ -104,6 +104,27 @@ impl ReplacementPolicy for SegmentedLruPolicy {
             .or_else(|| self.protected.rfind(evictable))
     }
 
+    fn peek_victim(&self, evictable: &dyn Fn(u32) -> bool) -> Option<u32> {
+        // victim() is already non-mutating for this policy.
+        self.probation
+            .rfind(evictable)
+            .or_else(|| self.protected.rfind(evictable))
+    }
+
+    fn on_demote(&mut self, slot: u32) {
+        // Hard demotion: strip protection and park at probation's cold
+        // end — the very next victim, but still rescuable by a touch.
+        match self.segment_of(slot) {
+            Segment::Probation => self.probation.move_to_back(slot),
+            Segment::Protected => {
+                self.protected.unlink(slot);
+                self.probation.push_back(slot);
+                self.set_segment(slot, Segment::Probation);
+            }
+            Segment::None => {}
+        }
+    }
+
     fn order(&self) -> Vec<u32> {
         // Most-protected first: protected MRU→LRU, then probation MRU→LRU.
         let mut out = self.protected.iter_order();
@@ -173,6 +194,37 @@ mod tests {
         p.on_touch(0); // 0 is now protected-MRU
         p.on_remove(p.victim(&mut rng, &|_| true).unwrap()); // drains nothing from probation (empty) → protected LRU = 1
         assert_eq!(p.order(), vec![0]);
+    }
+
+    #[test]
+    fn peek_previews_probation_then_protected() {
+        let mut p = SegmentedLruPolicy::new(6);
+        for s in 0..3 {
+            p.on_insert(s);
+        }
+        p.on_touch(1);
+        assert_eq!(p.peek_victim(&|_| true), Some(0));
+        assert_eq!(p.peek_victim(&|s| s == 1), Some(1), "falls through to protected");
+        assert_eq!(p.order(), vec![1, 2, 0], "peek left the order untouched");
+    }
+
+    #[test]
+    fn demote_strips_protection_and_parks_cold() {
+        let mut p = SegmentedLruPolicy::new(6);
+        let mut rng = Rng::new(0);
+        for s in 0..3 {
+            p.on_insert(s);
+        }
+        p.on_touch(2); // protected
+        p.on_demote(2); // back to probation's cold end: next victim
+        assert_eq!(p.victim(&mut rng, &|_| true), Some(2));
+        // A fresh touch re-earns protection.
+        p.on_touch(2);
+        assert_eq!(p.victim(&mut rng, &|_| true), Some(0));
+        // Demoting an already-probationary slot just parks it cold.
+        p.on_demote(1);
+        p.on_remove(0);
+        assert_eq!(p.victim(&mut rng, &|_| true), Some(1));
     }
 
     #[test]

@@ -453,6 +453,14 @@ pub struct SodaConfig {
     /// Independent QPs for the data plane (§IV-B: multiple QPs avoid
     /// locking).
     pub qp_count: usize,
+    /// Host-agent fault-service worker lanes: a batched fault window
+    /// partitions its coalesced miss spans across this many workers, each
+    /// with its own QP lane and eviction clock. `1` is the serial seed
+    /// path, bit-identical to the pre-sharding agent.
+    pub host_workers: usize,
+    /// Page-buffer shard count (hash shards over `PageKey`). `1` keeps the
+    /// unsharded seed layout, bit-identical.
+    pub buffer_shards: usize,
     /// Max pages per batched fault window: a span's misses are coalesced
     /// and posted with one doorbell, their round trips overlapped. `1`
     /// disables batching (the per-page path — Fig 11 `base`).
@@ -490,6 +498,8 @@ impl Default for SodaConfig {
             threads: 24,
             numa_aware: true,
             qp_count: 24,
+            host_workers: 1,
+            buffer_shards: 1,
             max_batch_pages: crate::host::HostAgent::DEFAULT_MAX_BATCH_PAGES,
             coalesce_fetch: true,
             host_timing: HostTiming::default(),
@@ -577,6 +587,20 @@ impl SodaConfig {
         if let Some(x) = v.get("qp_count") {
             cfg.qp_count = want_u64(x, "qp_count")? as usize;
         }
+        if let Some(x) = v.get("host_workers") {
+            let n = want_u64(x, "host_workers")? as usize;
+            if n == 0 {
+                return Err("host_workers must be >= 1 (1 is the serial path)".into());
+            }
+            cfg.host_workers = n;
+        }
+        if let Some(x) = v.get("buffer_shards") {
+            let n = want_u64(x, "buffer_shards")? as usize;
+            if n == 0 {
+                return Err("buffer_shards must be >= 1 (1 is the unsharded layout)".into());
+            }
+            cfg.buffer_shards = n;
+        }
         if let Some(x) = v.get("max_batch_pages") {
             let n = want_u64(x, "max_batch_pages")?;
             if n == 0 {
@@ -660,6 +684,8 @@ impl ToJson for SodaConfig {
             ("threads", self.threads.into()),
             ("numa_aware", self.numa_aware.into()),
             ("qp_count", self.qp_count.into()),
+            ("host_workers", self.host_workers.into()),
+            ("buffer_shards", self.buffer_shards.into()),
             ("max_batch_pages", self.max_batch_pages.into()),
             ("coalesce_fetch", self.coalesce_fetch.into()),
             (
@@ -830,6 +856,8 @@ mod tests {
             threads: 8,
             numa_aware: false,
             qp_count: 4,
+            host_workers: 4,
+            buffer_shards: 8,
             max_batch_pages: 4,
             coalesce_fetch: false,
             host_timing: HostTiming {
@@ -1033,6 +1061,9 @@ mod tests {
             &Json::parse(r#"{"prefetch": {"policy": "psychic"}}"#).unwrap()
         )
         .is_err());
+        // Worker/shard knobs: 0 is meaningless (1 = the serial layout).
+        assert!(SodaConfig::from_json(&Json::parse(r#"{"host_workers": 0}"#).unwrap()).is_err());
+        assert!(SodaConfig::from_json(&Json::parse(r#"{"buffer_shards": 0}"#).unwrap()).is_err());
         // Batching knobs: 0 pages is meaningless (1 = disabled).
         assert!(SodaConfig::from_json(&Json::parse(r#"{"max_batch_pages": 0}"#).unwrap()).is_err());
         assert!(SodaConfig::from_json(&Json::parse(r#"{"coalesce_fetch": "yes"}"#).unwrap()).is_err());

@@ -15,6 +15,10 @@ pub struct RunMetrics {
     pub label: String,
     /// End-to-end virtual runtime of the application phase.
     pub elapsed_ns: Ns,
+    /// Fault-service worker lanes the client ran with (1 = serial seed).
+    pub host_workers: usize,
+    /// Page-buffer shard count the client ran with (1 = unsharded).
+    pub buffer_shards: usize,
     pub host: HostStats,
     pub buffer: BufferStats,
     pub network: NetworkStats,
@@ -75,6 +79,8 @@ impl crate::util::json::ToJson for RunMetrics {
             ("label", self.label.as_str().into()),
             ("elapsed_ns", self.elapsed_ns.into()),
             ("elapsed_secs", self.elapsed_secs().into()),
+            ("host_workers", self.host_workers.into()),
+            ("buffer_shards", self.buffer_shards.into()),
             ("faults", self.host.faults.into()),
             ("zero_fills", self.host.zero_fills.into()),
             ("writebacks", self.host.writebacks.into()),
@@ -104,6 +110,8 @@ impl crate::util::json::ToJson for RunMetrics {
             ("mean_batch_factor", self.mean_batch_factor.into()),
             ("writeback_requeues", self.host.writeback_requeues.into()),
             ("qp_over_completions", self.host.qp_over_completions.into()),
+            ("miss_waiters", self.host.miss_waiters.into()),
+            ("hint_demotions", self.dpu_cache.hint_demotions.into()),
             ("fault_injected_drops", self.fault.injected_drops.into()),
             ("fault_injected_corruptions", self.fault.injected_corruptions.into()),
             ("fault_injected_dups", self.fault.injected_dups.into()),

@@ -142,6 +142,8 @@ impl SodaService {
             ccfg.seed,
         );
         agent.set_fetch_batch(self.cfg.max_batch_pages, self.cfg.coalesce_fetch);
+        agent.set_buffer_shards(self.cfg.buffer_shards);
+        agent.set_host_workers(self.cfg.host_workers);
         agent
     }
 
@@ -159,6 +161,8 @@ impl SodaService {
         RunMetrics {
             label: label.into(),
             elapsed_ns: elapsed,
+            host_workers: agent.host_workers(),
+            buffer_shards: agent.buffer_shards(),
             host: agent.stats(),
             buffer: agent.buffer_stats(),
             network: inner_stats,
@@ -228,6 +232,24 @@ mod tests {
         let svc = SodaService::attach(&cluster, cfg);
         let client = svc.client_with_buffer("p0", 64 << 10);
         assert_eq!(client.fetch_batch(), (4, false));
+    }
+
+    #[test]
+    fn clients_inherit_worker_and_shard_knobs() {
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let mut cfg = SodaConfig::default();
+        cfg.host_workers = 4;
+        cfg.buffer_shards = 8;
+        let svc = SodaService::attach(&cluster, cfg);
+        let client = svc.client_with_buffer("p0", 64 << 10);
+        assert_eq!(client.host_workers(), 4);
+        assert_eq!(client.buffer_shards(), 8);
+        let m = svc.collect("t", 0, &client);
+        assert_eq!((m.host_workers, m.buffer_shards), (4, 8));
+        // The defaults keep the serial seed layout.
+        let serial = SodaService::attach(&cluster, SodaConfig::default())
+            .client_with_buffer("p1", 64 << 10);
+        assert_eq!((serial.host_workers(), serial.buffer_shards()), (1, 1));
     }
 
     #[test]

@@ -589,6 +589,11 @@ impl DpuAgent {
             return None;
         }
         self.stats.hints_received += 1;
+        // Hint-aware eviction: open the message's superstep in the cache
+        // table — entries it stages are shielded from eviction until the
+        // next superstep's hint arrives, at which point the previous
+        // superstep's never-hit hint entries are hard-demoted.
+        self.table.begin_hint_superstep(msg.superstep);
         let ppe = self.table.pages_per_entry();
         // Bounded by the hint queue's capacity: expanding more entries
         // than the engine can possibly hold is wasted translation work.

@@ -95,6 +95,9 @@ struct Slot {
     fetched_bytes: u64,
     /// Did any lookup hit this entry since it was staged?
     touched: bool,
+    /// For `Hint`-origin entries: the superstep tag of the frontier hint
+    /// that staged them (see [`CacheTable::begin_hint_superstep`]).
+    hint_superstep: u32,
     /// Per-page stale bitmask, lazily allocated on the first single-page
     /// invalidation (empty ⇔ every resident page is valid). A set bit
     /// means a write-back dirtied that page: lookups of it miss while the
@@ -132,6 +135,10 @@ pub struct CacheStats {
     /// invariant the accounting guarantees at every instant:
     /// `insertions == prefetch_useful + prefetch_wasted + resident_untouched`.
     pub resident_untouched: u64,
+    /// Hint-origin entries hard-demoted because the superstep they were
+    /// staged for retired without them ever being hit (hint-aware
+    /// eviction; see [`CacheTable::begin_hint_superstep`]).
+    pub hint_demotions: u64,
 }
 
 impl CacheStats {
@@ -166,6 +173,12 @@ pub struct CacheTable {
     entry_bytes: u64,
     chunk_bytes: u64,
     stats: CacheStats,
+    /// Hint-aware eviction: the superstep tag whose untouched hint-origin
+    /// entries are currently protected from insert-time eviction (None
+    /// until the first tagged frontier hint arrives — i.e. always None
+    /// under non-hint prefetch policies, where every path below is
+    /// bit-identical to the unprotected table).
+    hint_superstep: Option<u32>,
 }
 
 impl CacheTable {
@@ -191,6 +204,7 @@ impl CacheTable {
             entry_bytes,
             chunk_bytes,
             stats: CacheStats::default(),
+            hint_superstep: None,
         }
         .with_slots(n_slots)
     }
@@ -206,6 +220,7 @@ impl CacheTable {
                 origin: PrefetchOrigin::Scan,
                 fetched_bytes: 0,
                 touched: false,
+                hint_superstep: 0,
                 stale: Vec::new(),
             });
         }
@@ -373,13 +388,39 @@ impl CacheTable {
                 .expect("free slot exists") as u32
         } else {
             let victim = {
-                let CacheTable { engine, slots, .. } = &mut *self;
-                engine.victim(rng, &|i: u32| {
+                let CacheTable { engine, slots, hint_superstep, .. } = &mut *self;
+                let protected = *hint_superstep;
+                // Hint-aware pass: untouched hint-origin entries staged for
+                // the in-flight superstep are off the victim list — the host
+                // said they *will* be read; displacing them before the
+                // demand arrives turns exact prefetch into pure waste. With
+                // no active hint tag (every non-hint policy) the predicate
+                // is the plain unpinned check, bit-identical to before.
+                let first = engine.victim(rng, &|i: u32| {
                     slots
                         .get(i as usize)
-                        .map(|s| s.valid && s.refcount == 0)
+                        .map(|s| {
+                            s.valid
+                                && s.refcount == 0
+                                && !(s.origin == PrefetchOrigin::Hint
+                                    && !s.touched
+                                    && protected == Some(s.hint_superstep))
+                        })
                         .unwrap_or(false)
-                })
+                });
+                if first.is_none() && protected.is_some() {
+                    // Protection is advisory: when everything unpinned is a
+                    // protected hint entry, retry without it rather than
+                    // dropping the insertion.
+                    engine.victim(rng, &|i: u32| {
+                        slots
+                            .get(i as usize)
+                            .map(|s| s.valid && s.refcount == 0)
+                            .unwrap_or(false)
+                    })
+                } else {
+                    first
+                }
             };
             match victim {
                 Some(i) => {
@@ -405,12 +446,41 @@ impl CacheTable {
         s.origin = origin;
         s.fetched_bytes = fetched_bytes;
         s.touched = false;
+        s.hint_superstep = self.hint_superstep.unwrap_or(0);
         s.stale = Vec::new();
         self.engine.on_insert(idx);
         self.map.insert(key, idx);
         self.stats.insertions += 1;
         self.stats.resident_untouched += 1;
         true
+    }
+
+    /// Open a new hint superstep: entries staged from this superstep's
+    /// frontier hints are protected from insert-time eviction until the
+    /// tag moves on (the host declared them next-superstep reads — see the
+    /// victim pass in [`Self::insert_tagged`]). When the tag changes, the
+    /// *previous* superstep's hint entries that were never hit lose the
+    /// shield and are hard-demoted to their policy's coldest position: the
+    /// superstep they were staged for is over, so they are the least
+    /// valuable resident bytes. Re-posting the same tag is a no-op.
+    pub fn begin_hint_superstep(&mut self, tag: u32) {
+        if let Some(old) = self.hint_superstep {
+            if old == tag {
+                return;
+            }
+            for idx in 0..self.slots.len() as u32 {
+                let s = &self.slots[idx as usize];
+                if s.valid
+                    && !s.touched
+                    && s.origin == PrefetchOrigin::Hint
+                    && s.hint_superstep == old
+                {
+                    self.engine.on_demote(idx);
+                    self.stats.hint_demotions += 1;
+                }
+            }
+        }
+        self.hint_superstep = Some(tag);
     }
 
     /// Invalidate one entry (coherence: the host wrote back a page whose
@@ -812,5 +882,102 @@ mod tests {
         assert!(t.insert(ek(2), entry_data(2), 0, &mut rng));
         assert!(!t.contains(ek(0)), "in-flight entry stayed LRU and evicts");
         assert!(t.contains(ek(1)));
+    }
+
+    // ---- hint-aware eviction -------------------------------------------
+
+    fn insert_hint(t: &mut CacheTable, e: u64, rng: &mut Rng) -> bool {
+        t.insert_tagged(ek(e), entry_data(e as u8), 4096, PrefetchOrigin::Hint, 0, rng)
+    }
+
+    #[test]
+    fn current_superstep_hint_entries_are_not_victims() {
+        let mut t = table_with(2, PolicyKind::AccessLru);
+        let mut rng = Rng::new(0);
+        t.begin_hint_superstep(1);
+        insert_hint(&mut t, 0, &mut rng); // LRU, but hint-protected
+        t.insert(ek(1), entry_data(1), 0, &mut rng);
+        assert!(t.insert(ek(2), entry_data(2), 0, &mut rng));
+        assert!(t.contains(ek(0)), "untouched hint entry shielded mid-superstep");
+        assert!(!t.contains(ek(1)), "victim search skipped to the scan entry");
+        assert_provenance_invariant(&t);
+    }
+
+    #[test]
+    fn touched_hint_entries_lose_the_shield() {
+        let mut t = table_with(2, PolicyKind::AccessLru);
+        let mut rng = Rng::new(0);
+        t.begin_hint_superstep(1);
+        insert_hint(&mut t, 0, &mut rng);
+        t.insert(ek(1), entry_data(1), 0, &mut rng);
+        // The hint was consumed: the entry competes on plain recency again,
+        // and as LRU it is the victim.
+        assert!(t.lookup_page(10, PageKey::new(1, 0)).is_some());
+        assert!(t.lookup_page(20, PageKey::new(1, 4)).is_some());
+        assert!(t.insert(ek(2), entry_data(2), 0, &mut rng));
+        assert!(!t.contains(ek(0)));
+        assert!(t.contains(ek(1)));
+    }
+
+    #[test]
+    fn retired_superstep_demotes_unhit_hint_entries_hard() {
+        let mut t = table_with(2, PolicyKind::AccessLru);
+        let mut rng = Rng::new(0);
+        t.insert(ek(1), entry_data(1), 0, &mut rng);
+        t.begin_hint_superstep(1);
+        insert_hint(&mut t, 0, &mut rng); // MRU by insertion order
+        // Next superstep's hint arrives: entry 0 was never hit, so it is
+        // demoted past the older scan entry straight to the cold end.
+        t.begin_hint_superstep(2);
+        assert_eq!(t.stats().hint_demotions, 1);
+        assert!(t.insert(ek(2), entry_data(2), 0, &mut rng));
+        assert!(!t.contains(ek(0)), "demoted hint entry evicts first");
+        assert!(t.contains(ek(1)), "older scan entry outlives it");
+        assert_provenance_invariant(&t);
+    }
+
+    #[test]
+    fn reposting_the_same_superstep_is_a_noop() {
+        let mut t = table_with(2, PolicyKind::AccessLru);
+        let mut rng = Rng::new(0);
+        t.begin_hint_superstep(7);
+        insert_hint(&mut t, 0, &mut rng);
+        t.begin_hint_superstep(7);
+        assert_eq!(t.stats().hint_demotions, 0);
+        t.begin_hint_superstep(8);
+        assert_eq!(t.stats().hint_demotions, 1);
+    }
+
+    /// A table full of protected hint entries must still admit new work:
+    /// the shield is advisory and falls back to the plain victim scan
+    /// instead of dropping the insertion.
+    #[test]
+    fn full_table_of_protected_hints_falls_back_instead_of_dropping() {
+        for policy in PolicyKind::ALL {
+            let mut t = table_with(2, policy);
+            let mut rng = Rng::new(5);
+            t.begin_hint_superstep(1);
+            insert_hint(&mut t, 0, &mut rng);
+            insert_hint(&mut t, 1, &mut rng);
+            assert!(insert_hint(&mut t, 2, &mut rng), "{policy:?}");
+            let s = t.stats();
+            assert_eq!(s.pinned_drops, 0, "{policy:?}");
+            assert_eq!(s.evictions, 1, "{policy:?}");
+            assert!(t.contains(ek(2)), "{policy:?}");
+            assert_provenance_invariant(&t);
+        }
+    }
+
+    /// Without an active superstep tag (any non-hint prefetch policy, and
+    /// every pre-hint instant of a hinted run) the victim predicate is the
+    /// plain unpinned check — hint-origin entries get no special treatment.
+    #[test]
+    fn no_active_superstep_means_no_protection() {
+        let mut t = table_with(2, PolicyKind::AccessLru);
+        let mut rng = Rng::new(0);
+        insert_hint(&mut t, 0, &mut rng);
+        t.insert(ek(1), entry_data(1), 0, &mut rng);
+        assert!(t.insert(ek(2), entry_data(2), 0, &mut rng));
+        assert!(!t.contains(ek(0)), "unshielded hint entry evicts as plain LRU");
     }
 }

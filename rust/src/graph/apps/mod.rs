@@ -46,23 +46,59 @@ impl App {
     /// Run the application on a FAM graph with default parameters
     /// (source 0, 20 PR iterations, radii seed from the app).
     pub fn run(&self, r: &mut GraphRunner, g: &FamGraph) {
-        match self {
-            App::Bfs => {
-                bfs(r, g, 0);
-            }
-            App::PageRank => {
-                pagerank(r, g, 20);
-            }
-            App::Radii => {
-                radii(r, g, 0xAD11);
-            }
-            App::Bc => {
-                bc(r, g, 0);
-            }
-            App::Components => {
-                cc(r, g);
+        self.run_digest(r, g);
+    }
+
+    /// Like [`Self::run`], additionally returning an FNV-1a digest of the
+    /// application's full output (levels and parents, ranks, radii,
+    /// scores, labels). The digest is configuration-invariant by design:
+    /// worker/shard sweeps (`abl-scaling`, the CI scaling guard) compare
+    /// it across runs to prove the parallel fault service computes the
+    /// same answer as the serial path.
+    pub fn run_digest(&self, r: &mut GraphRunner, g: &FamGraph) -> u64 {
+        fn fnv(h: &mut u64, bytes: &[u8]) {
+            for &b in bytes {
+                *h ^= u64::from(b);
+                *h = h.wrapping_mul(0x0000_0100_0000_01b3);
             }
         }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        match self {
+            App::Bfs => {
+                let out = bfs(r, g, 0);
+                for v in &out.levels {
+                    fnv(&mut h, &v.to_le_bytes());
+                }
+                for v in &out.parents {
+                    fnv(&mut h, &v.to_le_bytes());
+                }
+            }
+            App::PageRank => {
+                let out = pagerank(r, g, 20);
+                for v in &out.ranks {
+                    fnv(&mut h, &v.to_bits().to_le_bytes());
+                }
+            }
+            App::Radii => {
+                let out = radii(r, g, 0xAD11);
+                for v in &out.radii {
+                    fnv(&mut h, &v.to_le_bytes());
+                }
+            }
+            App::Bc => {
+                let out = bc(r, g, 0);
+                for v in &out.scores {
+                    fnv(&mut h, &v.to_bits().to_le_bytes());
+                }
+            }
+            App::Components => {
+                let out = cc(r, g);
+                for v in &out.labels {
+                    fnv(&mut h, &v.to_le_bytes());
+                }
+            }
+        }
+        h
     }
 }
 

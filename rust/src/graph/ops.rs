@@ -82,17 +82,34 @@ pub fn edge_map(
             r.hint_frontier_vertices(g, &verts);
             r.scratch.nbrs = verts;
         } else {
-            match frontier {
-                VertexSubset::Sparse(vs) => r.hint_frontier_vertices(g, vs),
-                _ => r.hint_frontier_vertices(g, &frontier.to_sparse()),
+            // Skip the entry hint when the previous superstep's lead hint
+            // already posted exactly this read set (the common sparse
+            // chain) — re-sending it would only burn hint-channel budget.
+            let owned;
+            let vs: &[VertexId] = match frontier {
+                VertexSubset::Sparse(list) => list,
+                _ => {
+                    owned = frontier.to_sparse();
+                    &owned
+                }
+            };
+            if !r.lead_hint_covers(vs) {
+                r.hint_frontier_vertices(g, vs);
             }
         }
     }
-    if dense {
+    let next = if dense {
         edge_map_dense(r, g, frontier, &mut update, &cond, opts.early_exit)
     } else {
         edge_map_sparse(r, g, frontier, &mut update, &cond)
-    }
+    };
+    // Cross-superstep hint lead time: this superstep's output frontier is
+    // the next superstep's input, so post its read set now, at the
+    // producing barrier (no-op for dense successors — see
+    // `lead_hint_frontier`). The consuming edge_map recognizes the set by
+    // digest and does not re-send it.
+    r.lead_hint_frontier(g, &next);
+    next
 }
 
 fn edge_map_sparse(
@@ -331,5 +348,73 @@ mod tests {
         let (mut r, _g) = setup(&csr);
         let total: u64 = vertex_reduce(&mut r, &VertexSubset::all(4), |v| v as u64);
         assert_eq!(total, 6);
+    }
+
+    fn hinted_setup(csr: &crate::graph::csr::CsrGraph) -> (GraphRunner, FamGraph) {
+        let mut cfg = ClusterConfig::tiny();
+        cfg.dpu.opts = crate::dpu::DpuOpts::FULL;
+        cfg.dpu.prefetch.policy = crate::dpu::PrefetchPolicyKind::GraphHint;
+        let cluster = Cluster::build(cfg);
+        let chunk = cluster.config().chunk_bytes;
+        let agent = HostAgent::new(
+            "p0",
+            Box::new(crate::backend::DpuStore::new(cluster.clone())),
+            256 * chunk,
+            chunk,
+            1.0,
+            4,
+            4,
+            2,
+            HostTiming::default(),
+        );
+        let mut r = GraphRunner::new(agent, 4, 0);
+        let (g, t) = FamGraph::build(&mut r.agent, 0, csr, BuildMode::FileBacked);
+        r.set_clock(t);
+        (r, g)
+    }
+
+    #[test]
+    fn lead_hint_replaces_the_entry_hint_on_sparse_chains() {
+        let csr = toys::path(32);
+        let run = |lead: bool| {
+            let (mut r, g) = hinted_setup(&csr);
+            r.lead_hints = lead;
+            assert!(r.wants_hints(), "graph-hint policy consumes hints");
+            let mut visited = vec![false; 32];
+            visited[0] = true;
+            let vc = std::cell::Cell::from_mut(visited.as_mut_slice()).as_slice_of_cells();
+            let mut frontier = VertexSubset::single(0);
+            let mut levels = Vec::new();
+            while !frontier.is_empty() {
+                levels.push(frontier.to_sparse());
+                frontier = edge_map(
+                    &mut r,
+                    &g,
+                    &frontier,
+                    |_, v| {
+                        if !vc[v as usize].get() {
+                            vc[v as usize].set(true);
+                            true
+                        } else {
+                            false
+                        }
+                    },
+                    |v| !vc[v as usize].get(),
+                    EdgeMapOpts {
+                        direction: Direction::ForceSparse,
+                        ..Default::default()
+                    },
+                );
+            }
+            (r.agent.stats().hints_sent, levels)
+        };
+        let (hints_lead, levels_lead) = run(true);
+        let (hints_entry, levels_entry) = run(false);
+        assert_eq!(levels_lead, levels_entry, "lead hints do not change outputs");
+        // Each superstep's read set is posted exactly once either way; with
+        // lead time it goes out one barrier earlier and the digest check
+        // suppresses the now-redundant entry hint (no doubled traffic).
+        assert_eq!(hints_lead, hints_entry, "same hint budget, earlier posts");
+        assert!(hints_lead > 0, "the chain must actually hint");
     }
 }

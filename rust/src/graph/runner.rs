@@ -10,6 +10,7 @@
 
 use super::csr::VertexId;
 use super::fam_graph::FamGraph;
+use super::subset::VertexSubset;
 use crate::host::HostAgent;
 use crate::sim::threads::ThreadSet;
 use crate::sim::Ns;
@@ -78,6 +79,15 @@ pub struct GraphRunner {
     /// boundaries (no-op unless the backend's prefetch policy consumes
     /// them; see [`Self::hint_frontier_vertices`]).
     pub frontier_hints: bool,
+    /// Cross-superstep hint lead time: post a just-computed output
+    /// frontier's read set at the *producing* superstep's barrier (a full
+    /// superstep of prefetch lead) instead of at the consuming superstep's
+    /// entry. See [`Self::lead_hint_frontier`].
+    pub lead_hints: bool,
+    /// FNV-1a digest of the outstanding lead-hinted read set (None when no
+    /// lead hint is pending); the consuming `edge_map` recognizes its read
+    /// set by digest and skips the redundant entry hint.
+    lead_digest: Option<u64>,
 }
 
 impl GraphRunner {
@@ -90,6 +100,8 @@ impl GraphRunner {
             injector: None,
             scratch: EdgeScratch::default(),
             frontier_hints: true,
+            lead_hints: true,
+            lead_digest: None,
         }
     }
 
@@ -123,6 +135,45 @@ impl GraphRunner {
             let now = self.clock;
             self.agent.prefetch_hint(now, &spans);
         }
+    }
+
+    /// FNV-1a over a sparse vertex list — a cheap identity for "is this
+    /// the read set the lead hint already posted?".
+    fn read_set_digest(verts: &[VertexId]) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &v in verts {
+            h ^= u64::from(v);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// Post the next superstep's read set at the *current* barrier when it
+    /// is exactly known. Direction-aware via `should_densify`: a frontier
+    /// that will run sparse push scans every out-edge of its vertices
+    /// regardless of `cond` (which gates updates, not reads), so its read
+    /// set is exact the moment the frontier exists — hinting it now buys
+    /// the DPU prefetcher a whole superstep of lead time instead of racing
+    /// the first grains. A frontier that will densify reads the
+    /// `cond`-eligible vertices' in-edges, unknowable until the consuming
+    /// superstep starts, so dense successors keep the entry-time hint.
+    pub fn lead_hint_frontier(&mut self, g: &FamGraph, next: &VertexSubset) {
+        self.lead_digest = None;
+        if !self.lead_hints || !self.wants_hints() || next.is_empty() {
+            return;
+        }
+        if next.should_densify(g.n) {
+            return;
+        }
+        let vs = next.to_sparse();
+        self.hint_frontier_vertices(g, &vs);
+        self.lead_digest = Some(Self::read_set_digest(&vs));
+    }
+
+    /// Did the outstanding lead hint post exactly this sparse read set?
+    /// Consumes the digest — a lead hint covers one superstep.
+    pub fn lead_hint_covers(&mut self, verts: &[VertexId]) -> bool {
+        self.lead_digest.take() == Some(Self::read_set_digest(verts))
     }
 
     pub fn now(&self) -> Ns {

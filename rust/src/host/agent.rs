@@ -27,14 +27,87 @@
 //! disables batching) and `SodaConfig::coalesce_fetch` toggles range
 //! coalescing — the knobs the extended Fig 11 breakdown and `abl-batch`
 //! sweep.
+//!
+//! ## Multi-worker fault service
+//!
+//! [`HostAgent::set_host_workers`] turns the serial fault handler into W
+//! concurrent worker lanes (`SodaConfig::host_workers`, the `abl-scaling`
+//! axis). A window's coalesced miss spans partition across lanes by the
+//! page buffer's shard hash, each lane posts its sub-batch on its own QP
+//! (the pool grows to `qp_count * W`, keeping the shared-contention
+//! condition invariant), and the window's post cost becomes the max over
+//! lanes instead of the serial sum. Eviction management and dirty
+//! writebacks retire on background lane clocks rather than the fault
+//! critical path; the [`HostAgent::flush`] barrier joins those lanes.
+//! Every store call still executes in the serial program order, so
+//! outputs, fault counts, final buffer state and bytes-on-wire are
+//! identical at any W — only (deterministic, virtual) completion times
+//! change, and `W == 1` is the seed's serial agent bit for bit.
 
-use super::buffer::{BufferStats, PageBuffer, PageKey, PageSpan};
+use super::buffer::{shard_index, BufferStats, PageBuffer, PageKey, PageSpan};
 use super::fam::{FamHandle, ObjectTable, Placement};
 use crate::backend::{FetchSource, RemoteStore};
 use crate::fabric::qp::QpPool;
 use crate::memnode::{MemError, RegionId};
 use crate::sim::Ns;
 use crate::util::fxhash::FxHashMap;
+
+/// Per-shard miss queues of one batched fault window.
+///
+/// Misses are recorded in global discovery order (the order the coalesced
+/// span list must preserve). Each distinct page gets one *leader* entry;
+/// a later touch of the same page inside the window does not issue a
+/// second fetch — it joins the leader's waiter list and is served by the
+/// leader's in-flight fetch at replay time. With W workers the leaders
+/// partition across worker lanes by the buffer's shard hash (see
+/// [`shard_index`]), so each lane posts only its own sub-batch.
+#[derive(Debug, Default)]
+struct MissQueues {
+    /// Distinct misses in discovery order — the span-list source.
+    leaders: Vec<PageKey>,
+    /// Waiters coalesced per leader (parallel to `leaders`).
+    waiters: Vec<u32>,
+    /// Fast-path flag: while the discovered keys stay ascending, dedup is
+    /// an O(1) tail comparison (byte spans and the graph paths produce
+    /// ascending keys); the linear scan only runs for out-of-order
+    /// `touch_pages` callers.
+    ascending: bool,
+}
+
+impl MissQueues {
+    fn begin(&mut self) {
+        self.leaders.clear();
+        self.waiters.clear();
+        self.ascending = true;
+    }
+
+    /// Record a discovered miss; returns `true` if this page became a
+    /// leader (new in-flight fetch) and `false` if it coalesced onto an
+    /// existing leader as a waiter.
+    fn note_miss(&mut self, key: PageKey) -> bool {
+        let dup = match self.leaders.last() {
+            None => None,
+            Some(&m) if m == key => Some(self.leaders.len() - 1),
+            Some(&m) if self.ascending && key > m => None,
+            _ => self.leaders.iter().position(|&m| m == key),
+        };
+        if let Some(leader) = dup {
+            self.waiters[leader] += 1;
+            return false;
+        }
+        if self.leaders.last().is_some_and(|&m| key < m) {
+            self.ascending = false;
+        }
+        self.leaders.push(key);
+        self.waiters.push(0);
+        true
+    }
+
+    /// Waiters coalesced across the whole window.
+    fn total_waiters(&self) -> u64 {
+        self.waiters.iter().map(|&w| u64::from(w)).sum()
+    }
+}
 
 /// Host-side CPU cost model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -87,6 +160,10 @@ pub struct HostStats {
     /// Duplicated completions absorbed by the QPs' saturating counters
     /// (snapshot at [`HostAgent::stats`]; fault injection only).
     pub qp_over_completions: u64,
+    /// Window misses that coalesced onto an already-in-flight fetch of the
+    /// same page (the waiter lists of the per-shard miss queues) instead
+    /// of issuing their own.
+    pub miss_waiters: u64,
 }
 
 impl HostStats {
@@ -126,15 +203,29 @@ pub struct HostAgent {
     fetch_scratch: Vec<u8>,
     /// Reused key list for the span walks of `read_bytes`/`write_bytes`.
     span_keys: Vec<PageKey>,
-    /// Reused miss list of the current window.
-    miss_keys: Vec<PageKey>,
-    /// Reused per-window consumed-slot marks (parallel to `miss_keys`).
+    /// Reused per-window miss queues (leader/waiter coalescing).
+    miss_queues: MissQueues,
+    /// Reused per-window consumed-slot marks (parallel to the leaders).
     miss_used: Vec<bool>,
     /// Dirty pages whose bounded writeback failed: the *only* copy of the
     /// data until a retry lands. Consulted on every fault so a parked page
     /// is restored locally, never re-fetched stale from the store. Always
     /// empty when fault injection is off.
     pending_writebacks: Vec<(PageKey, Box<[u8]>)>,
+    /// Concurrent host fault workers (W). 1 is the seed's serial agent,
+    /// bit for bit. At W > 1 a window's miss spans partition across W
+    /// worker lanes and eviction work retires on `lane_clocks` instead of
+    /// the fault critical path.
+    host_workers: usize,
+    /// QPs per worker lane. The pool holds `base_qp_count * host_workers`
+    /// queues so each lane posts on its own QP and the pool's
+    /// shared-contention condition stays invariant in W.
+    base_qp_count: usize,
+    /// Per-lane "busy until" clocks for offloaded eviction work (absolute
+    /// virtual time; only written at W > 1, joined by the `flush` barrier).
+    lane_clocks: Vec<Ns>,
+    /// Reused per-lane span counts of one window's post.
+    lane_spans: Vec<u64>,
 }
 
 impl HostAgent {
@@ -207,9 +298,13 @@ impl HostAgent {
             coalesce_fetch: true,
             fetch_scratch: Vec::new(),
             span_keys: Vec::new(),
-            miss_keys: Vec::new(),
+            miss_queues: MissQueues::default(),
             miss_used: Vec::new(),
             pending_writebacks: Vec::new(),
+            host_workers: 1,
+            base_qp_count: qp_count.max(1),
+            lane_clocks: vec![0],
+            lane_spans: Vec::new(),
         }
     }
 
@@ -230,6 +325,97 @@ impl HostAgent {
         (self.max_batch_pages, self.coalesce_fetch)
     }
 
+    /// Configure W concurrent host fault workers. Must be applied before
+    /// any traffic (the service sets it at client construction, like
+    /// [`PageBuffer::set_shards`]). Rebuilds the QP pool to
+    /// `qp_count * w` queues so each worker lane posts on its own QP; the
+    /// pool's shared-contention condition (`contenders > queues`) is
+    /// invariant in W, so the per-post cost model is unchanged. `w == 1`
+    /// keeps every path bit-identical to the serial agent.
+    pub fn set_host_workers(&mut self, workers: usize) {
+        let w = workers.max(1);
+        assert_eq!(
+            self.qp.total_posted(),
+            0,
+            "set_host_workers on an agent with traffic"
+        );
+        self.host_workers = w;
+        self.qp = QpPool::new(self.base_qp_count * w);
+        self.lane_clocks = vec![0; w];
+    }
+
+    /// Concurrent host fault workers (W).
+    pub fn host_workers(&self) -> usize {
+        self.host_workers
+    }
+
+    /// Shard the page buffer's residency table P ways (see
+    /// [`PageBuffer::set_shards`]; must be applied before traffic).
+    pub fn set_buffer_shards(&mut self, shards: usize) {
+        self.buffer.set_shards(shards);
+    }
+
+    /// Page-buffer shard count (P).
+    pub fn buffer_shards(&self) -> usize {
+        self.buffer.shards()
+    }
+
+    /// Worker lane serving `key`: the buffer's shard hash over W buckets,
+    /// so a page's lane assignment and shard assignment stay aligned.
+    fn lane_of(&self, key: PageKey) -> usize {
+        shard_index(key, self.host_workers)
+    }
+
+    /// Join the background eviction lanes into the caller's clock. The
+    /// `flush` barrier (and everything downstream of it) must not complete
+    /// before offloaded writebacks have retired.
+    fn join_lanes(&self, now: Ns) -> Ns {
+        self.lane_clocks.iter().fold(now, |t, &c| t.max(c))
+    }
+
+    /// QP post cost of a single-page fetch. The serial agent posts on the
+    /// faulting thread's QP (the seed path); with W workers the post goes
+    /// out on the page's lane QP. The modeled cost is identical either
+    /// way — only which queue's counters tick differs.
+    fn post_one_cost(&mut self, tid: usize, key: PageKey) -> Ns {
+        let w = self.host_workers;
+        if w <= 1 {
+            return self.qp.post_cost_ns(tid, self.threads, 1);
+        }
+        let lane = self.lane_of(key);
+        self.qp.post_cost_ns(tid * w + lane, self.threads * w, 1)
+    }
+
+    /// QP post cost of a window's coalesced span list. One worker: the
+    /// seed's single post of every span on the faulting thread's QP. W
+    /// workers: the spans partition across worker lanes by the shard hash
+    /// of each span's start (coalesced runs are shard-local, so a run maps
+    /// to one lane), each lane posts its sub-batch on its own QP, and the
+    /// window waits for the *slowest lane* — max over lanes instead of the
+    /// serial sum. Each active lane rings its own doorbell, so
+    /// `qp_doorbells` can exceed the serial count at W > 1; WQE totals and
+    /// bytes-on-wire are identical at any W.
+    fn post_spans_cost(&mut self, tid: usize, spans: &[PageSpan]) -> Ns {
+        let w = self.host_workers;
+        if w <= 1 {
+            return self.qp.post_cost_ns(tid, self.threads, spans.len() as u64);
+        }
+        let mut counts = std::mem::take(&mut self.lane_spans);
+        counts.clear();
+        counts.resize(w, 0);
+        for s in spans {
+            counts[self.lane_of(s.start)] += 1;
+        }
+        let mut worst = 0;
+        for (lane, &n) in counts.iter().enumerate() {
+            if n > 0 {
+                worst = worst.max(self.qp.post_cost_ns(tid * w + lane, self.threads * w, n));
+            }
+        }
+        self.lane_spans = counts;
+        worst
+    }
+
     /// Start recording the miss (fault) trace.
     pub fn enable_trace(&mut self) {
         self.trace = Some(Vec::new());
@@ -246,6 +432,12 @@ impl HostAgent {
 
     pub fn buffer_stats(&self) -> BufferStats {
         self.buffer.stats()
+    }
+
+    /// Direct access to the page buffer for state inspection (equivalence
+    /// tests fingerprint resident pages and dirty state through this).
+    pub fn buffer_mut(&mut self) -> &mut PageBuffer {
+        &mut self.buffer
     }
 
     pub fn stats(&self) -> HostStats {
@@ -353,6 +545,35 @@ impl HostAgent {
     fn evict_for_insert(&mut self, mut t: Ns) -> Ns {
         while self.buffer.over_threshold() || self.buffer.is_full() {
             let Some(ev) = self.buffer.evict_lru() else { break };
+            if self.host_workers > 1 {
+                // Offloaded: the page's background worker lane absorbs the
+                // management and writeback time; the faulting thread does
+                // not wait. The store calls still happen in program order
+                // (coherence in the simulation is order-based, not
+                // timestamp-based), so bytes-on-wire and final store state
+                // match the serial agent — only the clock charged differs.
+                let lane = self.lane_of(ev.key);
+                let lane_t = self.lane_clocks[lane].max(t) + self.timing.evict_mgmt_ns;
+                if ev.dirty {
+                    match self.store.try_writeback(lane_t, ev.key, &ev.data) {
+                        Ok(released) => {
+                            self.mark_materialized(ev.key);
+                            self.stats.writebacks += 1;
+                            self.lane_clocks[lane] = released;
+                        }
+                        Err(_) => {
+                            self.stats.writeback_requeues += 1;
+                            self.lane_clocks[lane] = lane_t;
+                            self.pending_writebacks.push((ev.key, ev.data));
+                            continue;
+                        }
+                    }
+                } else {
+                    self.lane_clocks[lane] = lane_t;
+                }
+                self.buffer.recycle(ev.data);
+                continue;
+            }
             t += self.timing.evict_mgmt_ns;
             if ev.dirty {
                 match self.store.try_writeback(t, ev.key, &ev.data) {
@@ -438,8 +659,9 @@ impl HostAgent {
             return done;
         }
         if self.is_materialized(key) {
-            // Post the request on this thread's QP and fetch.
-            t += self.qp.post_cost_ns(tid, self.threads, 1);
+            // Post the request on this thread's QP (the page's lane QP at
+            // W > 1) and fetch.
+            t += self.post_one_cost(tid, key);
             let frame = self.buffer.insert_with(key, write, |_| {});
             let (done, src) = self.store.fetch(t, key, self.numa_node, frame);
             self.stats.count(src);
@@ -509,38 +731,23 @@ impl HostAgent {
         write: bool,
         sink: &mut dyn FnMut(usize, &mut [u8]),
     ) -> Ns {
-        let mut miss = std::mem::take(&mut self.miss_keys);
-        miss.clear();
-        // Dedup: byte spans and the graph paths produce ascending keys, so
-        // while the miss list stays sorted a tail comparison is O(1); the
-        // linear scan only runs for out-of-order `touch_pages` callers.
-        let mut ascending = true;
+        let mut mq = std::mem::take(&mut self.miss_queues);
+        mq.begin();
         for &k in keys {
             if !self.buffer.is_resident(k)
                 && self.is_materialized(k)
                 && self.pending_index(k).is_none()
             {
-                let dup = match miss.last() {
-                    None => false,
-                    Some(&m) if m == k => true,
-                    Some(&m) if ascending && k > m => false,
-                    _ => miss.contains(&k),
-                };
-                if !dup {
-                    if miss.last().is_some_and(|&m| k < m) {
-                        ascending = false;
-                    }
-                    miss.push(k);
-                }
+                mq.note_miss(k);
             }
         }
-        let t_end = if miss.len() >= 2 {
-            self.window_batched(now, tid, base_idx, keys, write, &miss, sink)
+        self.stats.miss_waiters += mq.total_waiters();
+        let t_end = if mq.leaders.len() >= 2 {
+            self.window_batched(now, tid, base_idx, keys, write, &mq.leaders, sink)
         } else {
             self.window_sequential(now, tid, base_idx, keys, write, sink)
         };
-        miss.clear();
-        self.miss_keys = miss;
+        self.miss_queues = mq;
         t_end
     }
 
@@ -588,10 +795,11 @@ impl HostAgent {
         let chunk = self.chunk_bytes as usize;
         let spans = PageSpan::coalesce(miss, self.coalesce_fetch);
         // One trap covers the burst (the handler sees the whole faulting
-        // range), then the entire miss set posts with a single doorbell:
-        // one WQE per coalesced range request.
+        // range), then the miss set posts — one WQE per coalesced range
+        // request, on one QP (serial agent) or partitioned across the
+        // worker lanes' QPs (W > 1, window waits for the slowest lane).
         let mut t_wall = now + self.timing.fault_trap_ns;
-        t_wall += self.qp.post_cost_ns(tid, self.threads, spans.len() as u64);
+        t_wall += self.post_spans_cost(tid, &spans);
         let total = miss.len() * chunk;
         let mut scratch = std::mem::take(&mut self.fetch_scratch);
         if scratch.len() < total {
@@ -654,7 +862,7 @@ impl HostAgent {
                 // Resident at the pre-scan (or already consumed) but missing
                 // now — this very window evicted it. Fall back to the
                 // sequential single fetch, exactly like the per-page loop.
-                t_wall += self.qp.post_cost_ns(tid, self.threads, 1);
+                t_wall += self.post_one_cost(tid, key);
                 {
                     let frame = self.buffer.insert_with(key, write, |_| {});
                     let (done, src) = self.store.fetch(t_wall, key, self.numa_node, frame);
@@ -843,9 +1051,11 @@ impl HostAgent {
 
     /// Flush all dirty pages to the store (barrier / pre-pin sync). Parked
     /// writebacks go out first on the *infallible* path — a flush is a
-    /// durability barrier, so it may not leave requeued pages behind.
+    /// durability barrier, so it may not leave requeued pages behind. The
+    /// barrier also joins the background worker lanes: offloaded eviction
+    /// writebacks must retire before the flush completes.
     pub fn flush(&mut self, now: Ns) -> Ns {
-        let mut t = now;
+        let mut t = self.join_lanes(now);
         for (key, data) in std::mem::take(&mut self.pending_writebacks) {
             let released = self.store.writeback(t, key, &data);
             self.mark_materialized(key);
@@ -888,6 +1098,8 @@ impl std::fmt::Debug for HostAgent {
         f.debug_struct("HostAgent")
             .field("name", &self.name)
             .field("store", &self.store.name())
+            .field("host_workers", &self.host_workers)
+            .field("buffer_shards", &self.buffer.shards())
             .field("resident_pages", &self.buffer.resident_pages())
             .field("stats", &self.stats)
             .finish()
@@ -1291,5 +1503,109 @@ mod tests {
         let mut out = vec![0u8; (pages * chunk) as usize];
         a.read_bytes(t2, 0, h.region, 0, &mut out);
         assert_eq!(out, data, "batched dirty spans survive eviction");
+    }
+
+    /// Write-heavy two-pass sweep of 16 pages through a 4-page buffer:
+    /// every eviction is dirty, so the serial agent pays each writeback's
+    /// wire time on the fault critical path while the multi-worker agent
+    /// retires it on background lanes. Returns the data read back after a
+    /// flush + invalidate round trip and the final completion time.
+    fn scaling_workload(a: &mut HostAgent) -> (Vec<u8>, Ns) {
+        a.set_fetch_batch(8, true);
+        let chunk = a.chunk_bytes();
+        let pages = 16u64;
+        let (h, t0) = a.alloc(0, "x", pages * chunk, None, Placement::Default);
+        let mut t = t0;
+        for pass in 0..2u64 {
+            for p in 0..pages {
+                let data = vec![(pass * pages + p) as u8 + 1; chunk as usize];
+                t = a.write_bytes(t, 0, h.region, p * chunk, &data);
+            }
+        }
+        t = a.flush(t);
+        let t_end = t;
+        let t = a.invalidate_buffer(t);
+        let mut out = vec![0u8; (pages * chunk) as usize];
+        a.read_bytes(t, 0, h.region, 0, &mut out);
+        (out, t_end)
+    }
+
+    #[test]
+    fn multi_worker_matches_serial_observables_and_cuts_stall() {
+        let (mut serial, c1) = agent_with_buffer_pages(4);
+        let (mut wide, c2) = agent_with_buffer_pages(4);
+        wide.set_buffer_shards(4);
+        wide.set_host_workers(4);
+        let (out1, t1) = scaling_workload(&mut serial);
+        let (out4, t4) = scaling_workload(&mut wide);
+        assert_eq!(out1, out4, "data is identical at any W");
+        let s1 = serial.stats();
+        let s4 = wide.stats();
+        assert_eq!(s1.faults, s4.faults, "same fault count at any W");
+        assert_eq!(s1.zero_fills, s4.zero_fills);
+        assert_eq!(s1.writebacks, s4.writebacks);
+        assert_eq!(s1.sources, s4.sources);
+        assert_eq!(s1.qp_posted, s4.qp_posted, "same WQE total at any W");
+        assert_eq!(
+            c1.network_stats().on_demand_bytes(),
+            c2.network_stats().on_demand_bytes(),
+            "bytes-on-wire identical at any W"
+        );
+        assert_eq!(
+            c1.network_stats().writeback_bytes(),
+            c2.network_stats().writeback_bytes(),
+            "writeback bytes identical at any W"
+        );
+        assert!(
+            s4.stall_ns < s1.stall_ns,
+            "4 workers must stall less ({} vs {})",
+            s4.stall_ns,
+            s1.stall_ns
+        );
+        assert!(t4 < t1, "4 workers must finish sooner ({t4} vs {t1})");
+    }
+
+    #[test]
+    fn single_worker_single_shard_is_the_default() {
+        let (a, _c) = agent_with_buffer_pages(4);
+        assert_eq!(a.host_workers(), 1);
+        assert_eq!(a.buffer_shards(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "set_host_workers on an agent with traffic")]
+    fn worker_count_is_frozen_after_traffic() {
+        let (mut a, _c) = agent_with_buffer_pages(8);
+        let chunk = a.chunk_bytes();
+        let file = vec![1u8; chunk as usize];
+        let (h, t0) = a.alloc(0, "f", chunk, Some(file), Placement::Default);
+        let mut out = vec![0u8; chunk as usize];
+        a.read_bytes(t0, 0, h.region, 0, &mut out); // posts a WQE
+        a.set_host_workers(2);
+    }
+
+    #[test]
+    fn duplicate_window_misses_coalesce_as_waiters() {
+        let (mut a, cluster) = agent_with_buffer_pages(8);
+        a.set_fetch_batch(8, true);
+        let chunk = a.chunk_bytes();
+        let file = vec![5u8; (4 * chunk) as usize];
+        let (h, t0) = a.alloc(0, "f", 4 * chunk, Some(file), Placement::Default);
+        cluster.reset_stats();
+        let keys = [
+            PageKey::new(h.region, 0),
+            PageKey::new(h.region, 2),
+            PageKey::new(h.region, 0),
+            PageKey::new(h.region, 2),
+        ];
+        a.touch_pages(t0, 0, &keys, false);
+        let s = a.stats();
+        assert_eq!(s.faults, 2, "one fetch per distinct page");
+        assert_eq!(s.miss_waiters, 2, "duplicates joined the leaders' waiter lists");
+        assert_eq!(
+            cluster.network_stats().on_demand_bytes(),
+            2 * chunk,
+            "waiters generate no wire traffic"
+        );
     }
 }

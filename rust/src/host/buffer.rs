@@ -25,8 +25,33 @@
 //! implementation. [`EvictPolicy::AccessLru`] is the idealized policy (as
 //! if access bits were free); `Clock`, `SegmentedLru` and `Random` complete
 //! the ablation space.
+//!
+//! ## Sharding (lock-free hit path)
+//!
+//! The residency table is split into P shards keyed by a `PageKey` hash
+//! (see [`PageBuffer::set_shards`]): each shard owns its slice of the
+//! residency map, its own replacement engine and its own deterministic RNG,
+//! so concurrent host workers contend only on the shard their fault hashes
+//! to — and the hit path never enters a shard's slow path at all, because
+//! per-frame dirty/pin/generation state lives in a packed
+//! [`FrameState`](crate::host::frame_state::FrameState) atomic word
+//! (pin/unpin/mark-dirty are single atomic ops). The shard hash buckets
+//! *aligned 16-page runs*, not single pages, so the coalesced spans the
+//! batched fault engine produces stay shard-local instead of scattering one
+//! range request across P miss queues.
+//!
+//! Global eviction order is preserved across shards by a per-frame stamp
+//! (monotone event counter): victim selection peeks every shard's candidate
+//! ([`ReplacementPolicy::peek_victim`], non-mutating) and evicts the
+//! globally coldest stamp, which reproduces the exact single-shard
+//! `FaultFifo`/`AccessLru` order at any P. Policies with stateful victim
+//! choice (`Random`'s probes, `Clock`'s sweep) cannot be peeked; those fall
+//! back to a deterministic round-robin shard rotation — still reproducible,
+//! but a documented divergence from the P=1 stream. With one shard (the
+//! default) every path reduces bit-identically to the pre-shard shell.
 
 use crate::cache::ReplacementPolicy;
+use crate::host::frame_state::FrameState;
 use crate::memnode::RegionId;
 use crate::sim::rng::Rng;
 use crate::util::fxhash::FxHashMap;
@@ -112,7 +137,37 @@ impl PageSpan {
 struct Frame {
     key: PageKey,
     data: Box<[u8]>,
-    dirty: bool,
+    /// Packed atomic dirty bit / pin count / residency generation — the
+    /// lock-free hit-path word (see [`crate::host::frame_state`]).
+    state: FrameState,
+    /// Global eviction-order stamp: monotone event counter assigned at
+    /// insert (and refreshed on touch for recency policies), merged across
+    /// shards to reconstruct the exact single-shard victim order.
+    stamp: u64,
+}
+
+/// One residency shard: its slice of the page table plus a private
+/// replacement engine and RNG (stochastic policies stay deterministic
+/// per-shard).
+#[derive(Debug)]
+struct Shard {
+    map: FxHashMap<PageKey, u32>,
+    engine: Box<dyn ReplacementPolicy>,
+    rng: Rng,
+}
+
+/// Shard index of `key` among `shards` buckets. Hashes the *aligned
+/// 16-page run* (`page >> 4`), not the page, so contiguous coalesced spans
+/// land in one shard. The host agent reuses the same function to assign
+/// miss spans to worker lanes, keeping a page's lane and shard aligned.
+pub(crate) fn shard_index(key: PageKey, shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    let mut h = (key.region as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^= (key.page >> 4).wrapping_mul(0xD1B5_4A32_D192_ED03);
+    h ^= h >> 32;
+    h as usize % shards
 }
 
 /// A page evicted from the buffer; `dirty` means it must be written back.
@@ -143,20 +198,18 @@ impl BufferStats {
     }
 }
 
-/// Unified page buffer: frame storage shell over a pluggable replacement
-/// engine.
+/// Unified page buffer: frame storage shell over P residency shards, each
+/// with its own pluggable replacement engine.
 #[derive(Debug)]
 pub struct PageBuffer {
     chunk_bytes: u64,
     frames: Vec<Frame>,
-    map: FxHashMap<PageKey, u32>,
-    /// The pluggable replacement engine ordering the frame slots.
-    engine: Box<dyn ReplacementPolicy>,
-    /// Per-slot residency bit (`slot` currently holds a live page) — the
-    /// `evictable` predicate handed to the engine.
+    /// Residency shards (page table slices + per-shard engines). One shard
+    /// by default — bit-identical to the pre-shard unified table.
+    shards: Vec<Shard>,
+    /// Per-slot residency bit (`slot` currently holds a live page) — part
+    /// of the `evictable` predicate handed to the engines.
     resident_slots: Vec<bool>,
-    /// Deterministic RNG for stochastic policies (`Random`).
-    rng: Rng,
     /// Reusable storage from freed frames.
     spare: Vec<Box<[u8]>>,
     /// Frame slots vacated by eviction, reusable by the next insert.
@@ -167,6 +220,16 @@ pub struct PageBuffer {
     /// threshold load factor").
     load_threshold: f64,
     stats: BufferStats,
+    /// Selected policy kind (rebuilt per shard by [`Self::set_shards`]).
+    policy: EvictPolicy,
+    /// Base RNG seed, re-derived per shard.
+    seed: u64,
+    /// Monotone event counter feeding the per-frame eviction-order stamps.
+    tick: u64,
+    /// Total resident pages across shards (O(1) load-factor checks).
+    resident: usize,
+    /// Round-robin shard rotation for policies without `peek_victim`.
+    shard_cursor: usize,
 }
 
 impl PageBuffer {
@@ -207,23 +270,55 @@ impl PageBuffer {
         assert!(chunk_bytes > 0 && chunk_bytes.is_power_of_two());
         assert!((0.0..=1.0).contains(&load_threshold));
         let capacity_pages = (capacity_bytes / chunk_bytes).max(1) as usize;
-        PageBuffer {
+        let mut buf = PageBuffer {
             chunk_bytes,
             frames: Vec::with_capacity(capacity_pages.min(1 << 20)),
-            map: FxHashMap::default(),
-            engine: policy.build(capacity_pages),
+            shards: Vec::new(),
             resident_slots: Vec::new(),
-            rng: Rng::new(seed ^ capacity_pages as u64),
             spare: Vec::new(),
             free_slots: Vec::new(),
             capacity_pages,
             load_threshold,
             stats: BufferStats::default(),
-        }
+            policy,
+            seed,
+            tick: 0,
+            resident: 0,
+            shard_cursor: 0,
+        };
+        buf.set_shards(1);
+        buf
+    }
+
+    /// Re-partition the residency table into `shards` shards. Must be
+    /// called while the buffer is empty (the service applies it at client
+    /// construction, before any page lands). Shard 0 keeps the exact
+    /// single-shard RNG stream; further shards derive independent streams.
+    pub fn set_shards(&mut self, shards: usize) {
+        assert!(shards >= 1, "at least one shard");
+        assert_eq!(self.resident, 0, "set_shards on a non-empty buffer");
+        let base = self.seed ^ self.capacity_pages as u64;
+        self.shards = (0..shards)
+            .map(|i| Shard {
+                map: FxHashMap::default(),
+                engine: self.policy.build(self.capacity_pages),
+                rng: Rng::new(base ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            })
+            .collect();
+        self.shard_cursor = 0;
+    }
+
+    /// Number of residency shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, key: PageKey) -> usize {
+        shard_index(key, self.shards.len())
     }
 
     pub fn policy(&self) -> EvictPolicy {
-        self.engine.kind()
+        self.policy
     }
 
     pub fn chunk_bytes(&self) -> u64 {
@@ -235,11 +330,11 @@ impl PageBuffer {
     }
 
     pub fn resident_pages(&self) -> usize {
-        self.map.len()
+        self.resident
     }
 
     pub fn load_factor(&self) -> f64 {
-        self.map.len() as f64 / self.capacity_pages as f64
+        self.resident as f64 / self.capacity_pages as f64
     }
 
     pub fn stats(&self) -> BufferStats {
@@ -247,21 +342,30 @@ impl PageBuffer {
     }
 
     pub fn is_resident(&self, key: PageKey) -> bool {
-        self.map.contains_key(&key)
+        self.shards[self.shard_of(key)].map.contains_key(&key)
     }
 
-    /// Look up a page; on hit, the replacement engine is notified (e.g.
-    /// `AccessLru` refreshes recency; `FaultFifo` cannot see hits, so its
-    /// order is untouched) and the data is returned. `write` marks the
-    /// frame dirty. Counts hit/miss.
+    /// Look up a page; on hit, the shard's replacement engine is notified
+    /// (e.g. `AccessLru` refreshes recency; `FaultFifo` cannot see hits, so
+    /// its order is untouched) and the data is returned. `write` marks the
+    /// frame dirty (one atomic `fetch_or` on the frame's state word — no
+    /// shard-table mutation on the hit path). Counts hit/miss.
     pub fn access(&mut self, key: PageKey, write: bool) -> Option<&mut [u8]> {
-        match self.map.get(&key).copied() {
+        let si = self.shard_of(key);
+        match self.shards[si].map.get(&key).copied() {
             Some(idx) => {
                 self.stats.hits += 1;
-                self.engine.on_touch(idx);
+                self.shards[si].engine.on_touch(idx);
+                // Recency policies refresh the cross-shard stamp on touch
+                // so the global merge tracks true access order; FaultFifo
+                // keeps its fault-time stamp (hits are invisible to uffd).
+                if self.policy != EvictPolicy::FaultFifo {
+                    self.tick += 1;
+                    self.frames[idx as usize].stamp = self.tick;
+                }
                 let f = &mut self.frames[idx as usize];
                 if write {
-                    f.dirty = true;
+                    f.state.set_dirty();
                 }
                 Some(&mut f.data)
             }
@@ -275,54 +379,161 @@ impl PageBuffer {
     /// Non-counting residency probe returning the data if present (used by
     /// multi-page copies after an explicit fault).
     pub fn peek(&mut self, key: PageKey) -> Option<&mut [u8]> {
-        let idx = self.map.get(&key).copied()?;
+        let si = self.shard_of(key);
+        let idx = self.shards[si].map.get(&key).copied()?;
         Some(&mut self.frames[idx as usize].data)
+    }
+
+    /// Pin a resident page (fetch/fill in flight): the frame is excluded
+    /// from victim selection until unpinned. One atomic CAS on the frame's
+    /// state word. Returns `false` if the page is not resident.
+    pub fn pin(&mut self, key: PageKey) -> bool {
+        let si = self.shard_of(key);
+        match self.shards[si].map.get(&key).copied() {
+            Some(idx) => {
+                self.frames[idx as usize]
+                    .state
+                    .pin()
+                    .expect("pin count saturated");
+                self.shards[si].engine.on_pin(idx);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop a pin acquired by [`Self::pin`]. Returns `false` if the page is
+    /// not resident.
+    pub fn unpin(&mut self, key: PageKey) -> bool {
+        let si = self.shard_of(key);
+        match self.shards[si].map.get(&key).copied() {
+            Some(idx) => {
+                self.frames[idx as usize].state.unpin();
+                self.shards[si].engine.on_unpin(idx);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Residency generation of a resident page's frame (the writeback ABA
+    /// handshake token — see [`crate::host::frame_state`]).
+    pub fn generation(&self, key: PageKey) -> Option<u64> {
+        let si = self.shard_of(key);
+        let idx = self.shards[si].map.get(&key).copied()?;
+        Some(self.frames[idx as usize].state.generation())
     }
 
     /// True if inserting one more page should be preceded by eviction(s)
     /// under the proactive policy.
     pub fn over_threshold(&self) -> bool {
-        (self.map.len() + 1) as f64 > self.load_threshold * self.capacity_pages as f64
+        (self.resident + 1) as f64 > self.load_threshold * self.capacity_pages as f64
     }
 
     /// True if the buffer is completely full (demand eviction required).
     pub fn is_full(&self) -> bool {
-        self.map.len() >= self.capacity_pages
+        self.resident >= self.capacity_pages
     }
 
-    /// Evict the engine's victim, returning it for potential writeback.
-    /// Demand eviction must succeed, so if a stochastic engine's bounded
-    /// probes come up empty the shell falls back to the lowest resident
-    /// slot (the host buffer has no pins; some victim always exists).
+    /// Evict the globally coldest victim, returning it for potential
+    /// writeback. Demand eviction must succeed, so if a stochastic engine's
+    /// bounded probes come up empty the shell falls back to the lowest
+    /// resident unpinned slot (on the default path no page is ever pinned,
+    /// so some victim always exists).
+    ///
+    /// With one shard this is exactly the engine's own victim choice. With
+    /// P shards, peekable policies merge per-shard candidates by their
+    /// eviction-order stamp (exact single-shard `FaultFifo`/`AccessLru`
+    /// order); non-peekable ones (`Random`, `Clock`) rotate round-robin
+    /// across shards — deterministic, but a different stream than P=1.
     pub fn evict_victim(&mut self) -> Option<EvictedPage> {
-        let idx = {
-            let PageBuffer {
-                engine,
-                rng,
-                resident_slots,
-                ..
-            } = &mut *self;
-            engine
-                .victim(rng, &|slot| {
-                    resident_slots.get(slot as usize).copied().unwrap_or(false)
+        let (si, idx) = self.pick_victim()?;
+        Some(self.remove_frame(si, idx))
+    }
+
+    fn pick_victim(&mut self) -> Option<(usize, u32)> {
+        let PageBuffer {
+            shards,
+            frames,
+            resident_slots,
+            shard_cursor,
+            ..
+        } = &mut *self;
+        let evictable = |slot: u32| {
+            resident_slots.get(slot as usize).copied().unwrap_or(false)
+                && frames
+                    .get(slot as usize)
+                    .map(|f| f.state.is_evictable())
+                    .unwrap_or(false)
+        };
+        if shards.len() == 1 {
+            let shard = &mut shards[0];
+            return shard
+                .engine
+                .victim(&mut shard.rng, &evictable)
+                .or_else(|| {
+                    resident_slots
+                        .iter()
+                        .position(|&r| r)
+                        .filter(|&i| evictable(i as u32))
+                        .map(|i| i as u32)
                 })
-                .or_else(|| resident_slots.iter().position(|&r| r).map(|i| i as u32))
-        }?;
-        self.engine.on_remove(idx);
+                .map(|idx| (0, idx));
+        }
+        // Stamp-merged peek: every shard offers its would-be victim without
+        // mutating; the globally coldest stamp wins and only that shard's
+        // engine is disturbed (by the on_remove in remove_frame).
+        let mut best: Option<(usize, u32, u64)> = None;
+        for (si, shard) in shards.iter().enumerate() {
+            if let Some(slot) = shard.engine.peek_victim(&evictable) {
+                let stamp = frames[slot as usize].stamp;
+                if best.is_none_or(|(_, _, b)| stamp < b) {
+                    best = Some((si, slot, stamp));
+                }
+            }
+        }
+        if let Some((si, slot, _)) = best {
+            return Some((si, slot));
+        }
+        // Non-peekable policies: deterministic round-robin shard rotation.
+        let p = shards.len();
+        for i in 0..p {
+            let si = (*shard_cursor + i) % p;
+            let shard = &mut shards[si];
+            if shard.engine.is_empty() {
+                continue;
+            }
+            if let Some(slot) = shard.engine.victim(&mut shard.rng, &evictable) {
+                *shard_cursor = (si + 1) % p;
+                return Some((si, slot));
+            }
+        }
+        // Last-resort scan (mirrors the single-shard shell fallback).
+        let idx = resident_slots
+            .iter()
+            .position(|&r| r)
+            .filter(|&i| evictable(i as u32))? as u32;
+        let si = shard_index(frames[idx as usize].key, p);
+        Some((si, idx))
+    }
+
+    fn remove_frame(&mut self, si: usize, idx: u32) -> EvictedPage {
+        self.shards[si].engine.on_remove(idx);
         self.resident_slots[idx as usize] = false;
         let frame = &mut self.frames[idx as usize];
         let key = frame.key;
-        let dirty = frame.dirty;
+        let dirty = frame.state.is_dirty();
         // Donate a fresh empty box and steal the data.
         let data = std::mem::replace(&mut frame.data, Box::from(&[][..]));
-        self.map.remove(&key);
+        self.shards[si].map.remove(&key);
+        self.resident -= 1;
         self.free_slots.push(idx);
         if dirty {
             self.stats.evictions_dirty += 1;
         } else {
             self.stats.evictions_clean += 1;
         }
-        Some(EvictedPage { key, data, dirty })
+        EvictedPage { key, data, dirty }
     }
 
     /// Historical name for [`Self::evict_victim`] (the default policy's
@@ -339,9 +550,13 @@ impl PageBuffer {
         dirty: bool,
         fill: impl FnOnce(&mut [u8]),
     ) -> &mut [u8] {
-        assert!(!self.map.contains_key(&key), "page already resident: {key:?}");
+        let si = self.shard_of(key);
         assert!(
-            self.map.len() < self.capacity_pages,
+            !self.shards[si].map.contains_key(&key),
+            "page already resident: {key:?}"
+        );
+        assert!(
+            self.resident < self.capacity_pages,
             "buffer full; evict before insert"
         );
         let idx = if let Some(idx) = self.free_slots.pop() {
@@ -352,23 +567,29 @@ impl PageBuffer {
             let f = &mut self.frames[idx as usize];
             f.key = key;
             f.data = data;
-            f.dirty = dirty;
+            // Reoccupation bumps the residency generation (the writeback
+            // ABA guard) and installs the fresh dirty bit.
+            f.state.reinsert(dirty);
             idx
         } else {
             let idx = self.frames.len() as u32;
             self.frames.push(Frame {
                 key,
                 data: vec![0u8; self.chunk_bytes as usize].into_boxed_slice(),
-                dirty,
+                state: FrameState::new(dirty),
+                stamp: 0,
             });
             idx
         };
+        self.tick += 1;
+        self.frames[idx as usize].stamp = self.tick;
         if self.resident_slots.len() <= idx as usize {
             self.resident_slots.resize(idx as usize + 1, false);
         }
         self.resident_slots[idx as usize] = true;
-        self.engine.on_insert(idx);
-        self.map.insert(key, idx);
+        self.shards[si].engine.on_insert(idx);
+        self.shards[si].map.insert(key, idx);
+        self.resident += 1;
         let f = &mut self.frames[idx as usize];
         fill(&mut f.data);
         &mut f.data
@@ -383,35 +604,49 @@ impl PageBuffer {
     }
 
     /// Drain every resident dirty page (flush at deallocation / barrier).
+    /// Output is key-sorted, so the result is shard-count independent.
     pub fn drain_dirty(&mut self) -> Vec<EvictedPage> {
         let mut out = Vec::new();
-        let keys: Vec<PageKey> = self.map.keys().copied().collect();
-        for key in keys {
-            let idx = self.map[&key];
-            if self.frames[idx as usize].dirty {
-                self.engine.on_remove(idx);
-                self.resident_slots[idx as usize] = false;
-                self.map.remove(&key);
-                let frame = &mut self.frames[idx as usize];
-                let data = std::mem::replace(&mut frame.data, Box::from(&[][..]));
-                self.free_slots.push(idx);
-                self.stats.evictions_dirty += 1;
-                out.push(EvictedPage { key, data, dirty: true });
+        for si in 0..self.shards.len() {
+            let keys: Vec<PageKey> = self.shards[si].map.keys().copied().collect();
+            for key in keys {
+                let idx = self.shards[si].map[&key];
+                if self.frames[idx as usize].state.is_dirty() {
+                    out.push(self.remove_frame(si, idx));
+                }
             }
         }
         out.sort_by_key(|e| e.key);
         out
     }
 
-    /// Resident keys in the engine's protection order, most protected
-    /// first (for `FaultFifo`/`AccessLru` exactly MRU→LRU; testing and
-    /// debugging).
+    /// Resident keys in the engines' protection order, most protected
+    /// first (for `FaultFifo`/`AccessLru` at one shard exactly MRU→LRU;
+    /// with P shards, shard 0's order first, then shard 1's, …; testing
+    /// and debugging).
     pub fn lru_order(&self) -> Vec<PageKey> {
-        self.engine
-            .order()
-            .into_iter()
+        self.shards
+            .iter()
+            .flat_map(|s| s.engine.order())
             .map(|idx| self.frames[idx as usize].key)
             .collect()
+    }
+
+    /// Demote a resident page hard in its shard's engine (hint-aware
+    /// eviction: a speculative page whose superstep expired untouched
+    /// becomes the shard's preferred next victim).
+    pub fn demote(&mut self, key: PageKey) -> bool {
+        let si = self.shard_of(key);
+        match self.shards[si].map.get(&key).copied() {
+            Some(idx) => {
+                self.shards[si].engine.on_demote(idx);
+                // The stamp moves to the cold extreme so the cross-shard
+                // merge also prefers it.
+                self.frames[idx as usize].stamp = 0;
+                true
+            }
+            None => false,
+        }
     }
 }
 
@@ -664,6 +899,145 @@ mod tests {
             evictions(2),
             "different cluster seeds must give independent random-eviction trials"
         );
+    }
+
+    // ---- sharded residency table ---------------------------------------
+
+    /// Mixed insert/touch/evict workload driven identically at 1 and P
+    /// shards: for the peekable policies the eviction *stream* (not just
+    /// the final set) must be bit-identical — the stamp merge reconstructs
+    /// the exact global order.
+    #[test]
+    fn shard_merge_preserves_global_eviction_order() {
+        for policy in [EvictPolicy::FaultFifo, EvictPolicy::AccessLru] {
+            let run = |shards: usize| -> (Vec<PageKey>, Vec<PageKey>) {
+                let mut b = PageBuffer::with_policy(6 * 4096, 4096, 1.0, policy);
+                b.set_shards(shards);
+                let mut evicted = Vec::new();
+                for p in 0..48u64 {
+                    let key = k(p * 37 % 19); // scattered across shards
+                    if b.access(key, p % 5 == 0).is_none() {
+                        while b.is_full() {
+                            let ev = b.evict_victim().unwrap();
+                            evicted.push(ev.key);
+                            b.recycle(ev.data);
+                        }
+                        b.insert_with(key, false, |_| {});
+                    }
+                }
+                let mut resident: Vec<PageKey> = (0..19).map(k).filter(|&x| b.is_resident(x)).collect();
+                resident.sort();
+                (evicted, resident)
+            };
+            let (ev1, res1) = run(1);
+            for shards in [2usize, 3, 8] {
+                let (evp, resp) = run(shards);
+                assert_eq!(ev1, evp, "{policy:?} @ {shards} shards: eviction stream diverged");
+                assert_eq!(res1, resp, "{policy:?} @ {shards} shards: residency diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_coalesced_runs_stay_shard_local() {
+        let mut b = buf(64);
+        b.set_shards(8);
+        // A 16-page aligned run hashes to one shard: evicting in pure
+        // FaultFifo order must walk the run in insertion order even though
+        // other shards hold interleaved pages.
+        for p in 0..16u64 {
+            b.insert_with(k(p), false, |_| {});
+        }
+        for p in 0..16u64 {
+            let ev = b.evict_victim().unwrap();
+            assert_eq!(ev.key, k(p));
+            b.recycle(ev.data);
+        }
+    }
+
+    #[test]
+    fn shard_count_is_transparent_to_dirty_tracking() {
+        let mut b = buf(8);
+        b.set_shards(4);
+        for p in 0..6 {
+            b.insert_with(k(p), p % 2 == 0, |_| {});
+        }
+        b.access(k(1), true); // write hit dirties via the atomic word
+        let drained: Vec<u64> = b.drain_dirty().iter().map(|e| e.key.page).collect();
+        assert_eq!(drained, vec![0, 1, 2, 4]);
+        assert_eq!(b.resident_pages(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "set_shards on a non-empty buffer")]
+    fn set_shards_requires_empty_buffer() {
+        let mut b = buf(4);
+        b.insert_with(k(0), false, |_| {});
+        b.set_shards(2);
+    }
+
+    #[test]
+    fn random_policy_sharded_is_deterministic() {
+        let run = || -> Vec<u64> {
+            let mut b = PageBuffer::with_policy(8 * 4096, 4096, 1.0, EvictPolicy::Random);
+            b.set_shards(4);
+            let mut out = Vec::new();
+            for p in 0..64u64 {
+                if b.access(k(p % 24), false).is_none() {
+                    while b.is_full() {
+                        let ev = b.evict_victim().unwrap();
+                        out.push(ev.key.page);
+                        b.recycle(ev.data);
+                    }
+                    b.insert_with(k(p % 24), false, |_| {});
+                }
+            }
+            out
+        };
+        assert_eq!(run(), run(), "round-robin shard fallback must reproduce");
+    }
+
+    // ---- atomic frame state through the shell ---------------------------
+
+    #[test]
+    fn pinned_page_is_never_the_victim() {
+        let mut b = buf(2);
+        b.insert_with(k(0), false, |_| {});
+        b.insert_with(k(1), false, |_| {});
+        assert!(b.pin(k(0)));
+        let ev = b.evict_victim().unwrap(); // FIFO victim would be k(0)
+        assert_eq!(ev.key, k(1), "pin must divert eviction");
+        assert!(b.unpin(k(0)));
+        b.recycle(ev.data);
+        let ev = b.evict_victim().unwrap();
+        assert_eq!(ev.key, k(0), "unpin restores evictability");
+        assert!(!b.pin(k(9)), "pin of a non-resident page is refused");
+    }
+
+    #[test]
+    fn generation_advances_on_slot_reuse() {
+        let mut b = buf(1);
+        b.insert_with(k(0), false, |_| {});
+        let g0 = b.generation(k(0)).unwrap();
+        let ev = b.evict_lru().unwrap();
+        b.recycle(ev.data);
+        b.insert_with(k(1), false, |_| {});
+        let g1 = b.generation(k(1)).unwrap();
+        assert!(g1 > g0, "slot reuse must bump the residency generation");
+        assert_eq!(b.generation(k(0)), None);
+    }
+
+    #[test]
+    fn demote_overrides_protection() {
+        let mut b = buf_lru(3);
+        for p in 0..3 {
+            b.insert_with(k(p), false, |_| {});
+        }
+        b.access(k(0), false); // MRU
+        assert!(b.demote(k(0)));
+        let ev = b.evict_victim().unwrap();
+        assert_eq!(ev.key, k(0), "demotion must beat recency");
+        assert!(!b.demote(k(99)), "demote of a non-resident page is refused");
     }
 
     // ---- span coalescing -----------------------------------------------

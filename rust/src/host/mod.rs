@@ -1,9 +1,40 @@
 //! Host agent — SODA's compute-node component (§III).
+//!
+//! ## Shard / worker architecture
+//!
+//! The compute side scales along two orthogonal axes, both defaulting to 1
+//! (where every path is bit-identical to the original single-threaded
+//! shell):
+//!
+//! * **P buffer shards** ([`PageBuffer::set_shards`]): the residency table
+//!   splits into P shards keyed by a `PageKey` hash over aligned 16-page
+//!   runs (coalesced fault spans stay shard-local). Each shard owns its map
+//!   slice, its own [`ReplacementPolicy`](crate::cache::ReplacementPolicy)
+//!   engine and RNG; cross-shard eviction order is reconstructed exactly
+//!   for the deterministic policies by merging per-shard `peek_victim`
+//!   candidates on a per-frame stamp. The hit path never takes a shard's
+//!   slow path: dirty bit, pin count and residency generation live in one
+//!   packed `AtomicU64` per frame ([`frame_state::FrameState`] — bit 0
+//!   dirty, bits 1–15 pin count, bits 16–63 generation), so
+//!   pin/unpin/mark-dirty are single atomic ops and writeback completions
+//!   are generation-checked CASes (the ABA guard for reused frames).
+//! * **W host workers** ([`HostAgent::set_host_workers`]): a superstep's
+//!   fault windows partition their coalesced miss spans across W worker
+//!   lanes by shard (per-shard miss queues; duplicate misses of one page
+//!   coalesce onto the shard leader's in-flight fetch). Each lane posts on
+//!   its own QP lane, so a window's doorbell cost is the *max* over lanes
+//!   instead of the serial sum, and eviction management + writeback time
+//!   retires on background lane clocks instead of the fault critical path.
+//!   Virtual-time merging is deterministic — outputs, fault counts and
+//!   data-plane bytes are identical at any W, and `RunMetrics` stays
+//!   reproducible.
 
 pub mod agent;
 pub mod buffer;
 pub mod fam;
+pub mod frame_state;
 
 pub use agent::{HostAgent, HostStats, HostTiming};
 pub use buffer::{BufferStats, EvictPolicy, EvictedPage, PageBuffer, PageKey, PageSpan};
 pub use fam::{FamHandle, ObjectTable, Placement};
+pub use frame_state::{FrameState, PinOverflow, MAX_PINS};

@@ -112,6 +112,37 @@
 //! `soda config` output, on the CLI (`--max-batch-pages`, `--coalesce`),
 //! and swept by the extended `fig11` breakdown and `abl-batch`.
 //!
+//! ## Parallel host fault service & the sharded page buffer
+//!
+//! The compute side scales with cores through two orthogonal knobs, both
+//! pure latency knobs (outputs, fault counts and bytes-on-wire are
+//! invariant at any setting — `tests/scaling.rs` and the CI "Scaling
+//! guard" pin that):
+//!
+//! * **P buffer shards** ([`host::buffer::PageBuffer::set_shards`]) — the
+//!   residency table splits into P shards (hash of `(region, page >> 4)`),
+//!   each with its own replacement engine, over a shared frame store where
+//!   every frame carries a packed [`host::FrameState`] word (one
+//!   `AtomicU64`: dirty bit, 15-bit pin count, 48-bit residency generation
+//!   for ABA-safe writeback completion). Peekable policies
+//!   (fault-FIFO/access-LRU) merge per-shard victims by eviction-order
+//!   stamp, reproducing the unsharded eviction sequence exactly; P = 1 is
+//!   bit-identical to the pre-shard table.
+//! * **W host workers** ([`host::HostAgent::set_host_workers`]) — a fault
+//!   window's coalesced miss spans partition across W worker lanes by the
+//!   same shard hash (lane and shard assignments stay aligned), each lane
+//!   posting on its own QP slice of a `qp_count * W` pool; the window
+//!   completes at the slowest lane (max over lanes instead of the serial
+//!   sum) and dirty writebacks retire on lane clocks off the fault path,
+//!   joined back at `flush` barriers. Virtual-time merging keeps
+//!   `RunMetrics` deterministic and W = 1 bit-identical to the serial
+//!   seed agent.
+//!
+//! Knobs: `SodaConfig::{host_workers, buffer_shards}`, CLI
+//! `--host-workers` / `--buffer-shards`; the `abl-scaling` figure sweeps
+//! workers × {BFS, PageRank} (speedup at invariant traffic) and the CI
+//! guard re-emits it as `BENCH_scaling.json`.
+//!
 //! ## Fault injection & the reliable fabric layer
 //!
 //! Every data-plane message can be subjected to a seeded, bit-reproducible

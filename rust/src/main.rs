@@ -7,6 +7,7 @@
 //!          [--evict-policy P] [--dpu-cache-policy P]
 //!          [--prefetch-policy Q] [--prefetch-depth N] [--prefetch-scan N]
 //!          [--max-batch-pages N] [--coalesce on|off]
+//!          [--host-workers W] [--buffer-shards P]
 //!          [--config FILE] [--cluster-config FILE]
 //! soda config [--config FILE] [--evict-policy P] ...
 //! soda advisor [--hit-rate H]
@@ -112,6 +113,24 @@ fn soda_config_from_args(args: &Args) -> Result<SodaConfig> {
             "off" | "false" | "0" => false,
             _ => bail!("invalid --coalesce '{s}' (on|off)"),
         };
+    }
+    if let Some(s) = args.opt("host-workers") {
+        let n: usize = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --host-workers: {s}"))?;
+        if n == 0 {
+            bail!("--host-workers must be >= 1 (1 is the serial path)");
+        }
+        cfg.host_workers = n;
+    }
+    if let Some(s) = args.opt("buffer-shards") {
+        let n: usize = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --buffer-shards: {s}"))?;
+        if n == 0 {
+            bail!("--buffer-shards must be >= 1 (1 is the unsharded layout)");
+        }
+        cfg.buffer_shards = n;
     }
     // Fault-injection flags: any `--fault-*` flag enables the plan (the
     // config file's `fault` block, when present, is the base it edits).
@@ -221,6 +240,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     wb.prefetch = scfg.prefetch;
     wb.max_batch_pages = Some(scfg.max_batch_pages);
     wb.coalesce_fetch = Some(scfg.coalesce_fetch);
+    wb.host_workers = Some(scfg.host_workers);
+    wb.buffer_shards = Some(scfg.buffer_shards);
     wb.fault = scfg.fault;
     wb.fleet = scfg.fleet;
     if args.opt("config").is_some() {
@@ -294,11 +315,12 @@ fn usage() -> &'static str {
        figures [--all | <id>...] [--scale F] [--threads N] [--json DIR]\n\
            regenerate paper tables/figures (table1 table2 fig3..fig11)\n\
            plus ablations (abl-entry abl-prefetch abl-prefetch-depth abl-evict abl-qp\n\
-           abl-cache-policy abl-batch abl-faults abl-fleet)\n\
+           abl-cache-policy abl-batch abl-faults abl-fleet abl-scaling)\n\
        run <app> <graph> [--backend B] [--caching M] [--scale F] [--with-bg-bfs] [--json]\n\
            [--evict-policy P] [--dpu-cache-policy P] [--prefetch-policy Q]\n\
            [--prefetch-depth N] [--prefetch-scan N]\n\
-           [--max-batch-pages N] [--coalesce on|off] [--config FILE] [--cluster-config FILE]\n\
+           [--max-batch-pages N] [--coalesce on|off] [--host-workers W] [--buffer-shards P]\n\
+           [--config FILE] [--cluster-config FILE]\n\
            [--fault-drop-rate R] [--fault-corrupt-rate R] [--fault-dup-rate R]\n\
            [--fault-spike-rate R] [--fault-spike-ns T] [--fault-crash-start-ns T]\n\
            [--fault-crash-len-ns T] [--fault-crash-every-ns T] [--fault-seed S]\n\
@@ -307,6 +329,9 @@ fn usage() -> &'static str {
            (policies P: fault-fifo | access-lru | random | clock | slru;\n\
             prefetch Q: off | sequential | strided | graph-hint | adaptive[:base];\n\
             --max-batch-pages 1 disables the batched fault engine;\n\
+            --host-workers W>1 services a fault window's miss spans on W\n\
+            parallel QP lanes; --buffer-shards P hash-shards the page\n\
+            buffer (W=1/P=1 keep the serial seed path bit-identical);\n\
             any --fault-* flag arms seeded fault injection + the reliable\n\
             fabric layer — retries, checksums, memory-node failover;\n\
             --mem-nodes N>1 shards remote memory across a fleet of N nodes\n\

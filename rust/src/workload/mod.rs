@@ -70,6 +70,12 @@ pub struct Workbench {
     pub max_batch_pages: Option<u64>,
     /// Range-coalescing override (`SodaConfig::coalesce_fetch`).
     pub coalesce_fetch: Option<bool>,
+    /// Fault-service worker-lane override (`SodaConfig::host_workers`);
+    /// `None` keeps the base config's value (1 = the serial seed path).
+    pub host_workers: Option<usize>,
+    /// Page-buffer shard override (`SodaConfig::buffer_shards`); `None`
+    /// keeps the base config's value (1 = the unsharded layout).
+    pub buffer_shards: Option<usize>,
     /// Fault-injection override (`SodaConfig::fault`); `None` keeps the
     /// base config's plan — faults off unless a `--config` file says
     /// otherwise.
@@ -98,6 +104,8 @@ impl Workbench {
             prefetch: None,
             max_batch_pages: None,
             coalesce_fetch: None,
+            host_workers: None,
+            buffer_shards: None,
             fault: None,
             fleet: None,
             soda_config_base: None,
@@ -207,6 +215,12 @@ impl Workbench {
         if let Some(c) = self.coalesce_fetch {
             cfg.coalesce_fetch = c;
         }
+        if let Some(w) = self.host_workers {
+            cfg.host_workers = w;
+        }
+        if let Some(p) = self.buffer_shards {
+            cfg.buffer_shards = p;
+        }
         if let Some(f) = self.fault {
             cfg.fault = Some(f);
         }
@@ -266,11 +280,18 @@ impl Workbench {
 
     /// Run one experiment point.
     pub fn run(&mut self, spec: &ExperimentSpec) -> RunMetrics {
+        self.run_with_digest(spec).0
+    }
+
+    /// Like [`Self::run`], additionally returning the application's output
+    /// digest ([`App::run_digest`]) so sweeps over performance-only knobs
+    /// (worker lanes, buffer shards) can assert answer equivalence.
+    pub fn run_with_digest(&mut self, spec: &ExperimentSpec) -> (RunMetrics, u64) {
         let (svc, mut runner, g) = self.stage(spec);
         let t_start = runner.now();
-        spec.app.run(&mut runner, &g);
+        let digest = spec.app.run_digest(&mut runner, &g);
         let elapsed = runner.now() - t_start;
-        svc.collect(spec.label(), elapsed, &runner.agent)
+        (svc.collect(spec.label(), elapsed, &runner.agent), digest)
     }
 
     /// Run one experiment point with an explicit data-plane QP count
@@ -436,6 +457,24 @@ mod tests {
         let sc = wb.soda_config(&spec);
         assert_eq!(sc.max_batch_pages, 1);
         assert!(!sc.coalesce_fetch);
+    }
+
+    #[test]
+    fn worker_and_shard_knobs_layer_over_the_base_config() {
+        let mut wb = quick_bench();
+        let spec = ExperimentSpec {
+            app: App::Bfs,
+            graph: "friendster",
+            backend: BackendKind::MemServer,
+            caching: CachingMode::None,
+        };
+        let sc = wb.soda_config(&spec);
+        assert_eq!((sc.host_workers, sc.buffer_shards), (1, 1), "serial base default");
+        wb.host_workers = Some(4);
+        wb.buffer_shards = Some(8);
+        let sc = wb.soda_config(&spec);
+        assert_eq!(sc.host_workers, 4);
+        assert_eq!(sc.buffer_shards, 8);
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Scaling equivalence suite for the multi-worker host agent and the
+//! sharded page buffer: parallelism knobs (`W` fault-service worker lanes,
+//! `P` buffer shards) are *latency* knobs, never semantic ones. For any
+//! seeded (W, P) pair and any backend, a run must be observably equivalent
+//! to the serial W=1/P=1 agent — same application output, same fault
+//! count, same bytes on the wire, same final buffer contents including
+//! per-page dirty state — while never stalling longer than the serial
+//! path. On top:
+//!
+//! * the stamp-merged sharded buffer reproduces the unsharded eviction
+//!   *sequence* exactly for the peekable policies (fault-FIFO/access-LRU)
+//!   at any shard count;
+//! * every interleaving of a writeback lane and a frame-reuse lane over
+//!   the packed atomic `FrameState` word is linearizable against a
+//!   sequential model: pins never go negative, a pinned frame is never
+//!   evicted, dirtiness is never silently lost, and a stale-generation
+//!   writeback (the ABA case) never touches the frame's new occupant.
+
+use soda::backend::{DpuStore, MemServerStore, RemoteStore, SsdStore};
+use soda::coordinator::cluster::Cluster;
+use soda::coordinator::config::ClusterConfig;
+use soda::dpu::DpuOpts;
+use soda::graph::{gen, App, BuildMode, CsrGraph, FamGraph, GraphRunner};
+use soda::host::{EvictPolicy, FrameState, HostAgent, HostTiming, PageBuffer, PageKey};
+
+/// Small-but-real graph: enough pages that a 24-page buffer keeps the
+/// remote path (faults, evictions, dirty writebacks) busy in every app.
+fn scaling_graph() -> CsrGraph {
+    gen::rmat(256, 2048, 0.57, 0.19, 0.19, 7)
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Backend {
+    Mem,
+    Dpu,
+    Ssd,
+}
+
+fn store_for(backend: Backend, cluster: &Cluster) -> Box<dyn RemoteStore> {
+    match backend {
+        Backend::Mem => Box::new(MemServerStore::new(cluster.clone())),
+        Backend::Dpu => Box::new(DpuStore::new(cluster.clone())),
+        Backend::Ssd => Box::new(SsdStore::new(cluster.clone())),
+    }
+}
+
+fn fnv(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Everything a (W, P) configuration may be observed by.
+struct Observed {
+    digest: u64,
+    faults: u64,
+    stall_ns: u64,
+    net_bytes: u64,
+    on_demand_bytes: u64,
+    /// Sorted (key, content digest) of every resident page at the end.
+    resident: Vec<(PageKey, u64)>,
+    /// Sorted (key, content digest) of the dirty subset.
+    dirty: Vec<(PageKey, u64)>,
+}
+
+fn observe(backend: Backend, app: App, workers: usize, shards: usize, csr: &CsrGraph) -> Observed {
+    let mut cfg = ClusterConfig::tiny();
+    if backend == Backend::Dpu {
+        cfg.dpu.opts = DpuOpts::OPT;
+    }
+    let cluster = Cluster::build(cfg);
+    let chunk = cluster.config().chunk_bytes;
+    let mut agent = HostAgent::new(
+        "scaling",
+        store_for(backend, &cluster),
+        24 * chunk,
+        chunk,
+        0.9,
+        4,
+        4,
+        2,
+        HostTiming::default(),
+    );
+    // Exactly the service's construction order: both knobs land before any
+    // traffic (set_host_workers rebuilds the QP pool, set_buffer_shards
+    // repartitions the empty residency table).
+    agent.set_buffer_shards(shards);
+    agent.set_host_workers(workers);
+    let mut r = GraphRunner::new(agent, 4, 0);
+    let (g, t) = FamGraph::build(&mut r.agent, 0, csr, BuildMode::FileBacked);
+    r.set_clock(t);
+    let digest = app.run_digest(&mut r, &g);
+    let stats = r.agent.stats();
+    let net = cluster.network_stats();
+    let buf = r.agent.buffer_mut();
+    let mut keys: Vec<PageKey> = buf.lru_order();
+    keys.sort();
+    keys.dedup();
+    let resident = keys
+        .iter()
+        .map(|&k| (k, fnv(buf.peek(k).expect("tracked key not resident"))))
+        .collect();
+    let dirty = buf
+        .drain_dirty()
+        .into_iter()
+        .map(|e| (e.key, fnv(&e.data)))
+        .collect();
+    Observed {
+        digest,
+        faults: stats.faults,
+        stall_ns: stats.stall_ns,
+        net_bytes: net.network_bytes(),
+        on_demand_bytes: net.on_demand_bytes(),
+        resident,
+        dirty,
+    }
+}
+
+#[test]
+fn any_worker_and_shard_count_is_observably_equivalent_to_the_serial_agent() {
+    let csr = scaling_graph();
+    // Seeded LCG draws of (W, P): mismatched, equal and maximal pairs all
+    // have to hold, not just the W == P diagonal the figures sweep.
+    let mut state: u64 = 0x5EED_CAFE;
+    let mut rand = |m: usize| {
+        state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        (state >> 33) as usize % m + 1
+    };
+    let mut pairs = vec![(2usize, 2usize), (8, 8)];
+    for _ in 0..2 {
+        pairs.push((rand(8), rand(8)));
+    }
+    for backend in [Backend::Mem, Backend::Dpu, Backend::Ssd] {
+        for app in [App::Bfs, App::PageRank, App::Components] {
+            let base = observe(backend, app, 1, 1, &csr);
+            assert!(base.faults > 0, "{backend:?}/{}: workload never faulted", app.name());
+            for &(w, p) in &pairs {
+                let run = observe(backend, app, w, p, &csr);
+                let ctx = format!("{backend:?}/{} W={w} P={p}", app.name());
+                assert_eq!(run.digest, base.digest, "{ctx}: output diverged from serial");
+                assert_eq!(run.faults, base.faults, "{ctx}: fault count changed");
+                assert_eq!(
+                    (run.net_bytes, run.on_demand_bytes),
+                    (base.net_bytes, base.on_demand_bytes),
+                    "{ctx}: data-plane bytes changed"
+                );
+                assert_eq!(run.resident, base.resident, "{ctx}: final buffer contents changed");
+                assert_eq!(run.dirty, base.dirty, "{ctx}: final dirty state changed");
+                assert!(
+                    run.stall_ns <= base.stall_ns,
+                    "{ctx}: stalled longer than serial ({} vs {})",
+                    run.stall_ns,
+                    base.stall_ns
+                );
+            }
+        }
+    }
+}
+
+/// Observables of one standalone-buffer drive.
+#[derive(Debug, PartialEq, Eq)]
+struct Drive {
+    evictions: Vec<(PageKey, bool)>,
+    resident: Vec<PageKey>,
+    dirty: Vec<PageKey>,
+}
+
+/// Drive one deterministic access pattern (reuse + writes + demand
+/// evictions) through a standalone buffer and record every observable.
+fn drive(policy: EvictPolicy, shards: usize) -> Drive {
+    let mut buf = PageBuffer::with_policy(16 * 4096, 4096, 1.0, policy);
+    buf.set_shards(shards);
+    let mut evictions = Vec::new();
+    for i in 0..600u64 {
+        let page = (i * 7 + i / 5) % 48;
+        let write = i % 3 == 0;
+        let key = PageKey::new(1, page);
+        if buf.access(key, write).is_none() {
+            if buf.is_full() {
+                let ev = buf.evict_victim().expect("full buffer must yield a victim");
+                evictions.push((ev.key, ev.dirty));
+                buf.recycle(ev.data);
+            }
+            buf.insert_with(key, write, |d| d[..8].copy_from_slice(&page.to_le_bytes()));
+        }
+    }
+    let mut resident = buf.lru_order();
+    resident.sort();
+    resident.dedup();
+    let dirty = buf.drain_dirty().into_iter().map(|e| e.key).collect();
+    Drive { evictions, resident, dirty }
+}
+
+#[test]
+fn sharded_buffer_reproduces_the_unsharded_eviction_sequence() {
+    // The stamp merge makes per-shard peeks reconstruct the global policy
+    // order, so for the peekable policies the full eviction *sequence* —
+    // not just the final set — is shard-count invariant.
+    for policy in [EvictPolicy::FaultFifo, EvictPolicy::AccessLru] {
+        let baseline = drive(policy, 1);
+        for p in [2usize, 4, 8] {
+            let run = drive(policy, p);
+            assert_eq!(
+                run.evictions, baseline.evictions,
+                "{policy:?} P={p}: eviction sequence diverged from P=1"
+            );
+            assert_eq!(run.resident, baseline.resident, "{policy:?} P={p}: resident set diverged");
+            assert_eq!(run.dirty, baseline.dirty, "{policy:?} P={p}: dirty set diverged");
+        }
+    }
+}
+
+/// One lane's step against the shared frame word.
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Pin,
+    Unpin,
+    SetDirty,
+    /// Writeback start: snapshot the residency generation.
+    CaptureGen,
+    /// Writeback completion: generation-checked dirty clear.
+    ClearDirtyCaptured,
+    /// Evict-and-reuse, gated on evictability (the shell never picks a
+    /// pinned victim); on success bumps the generation.
+    TryEvictReinsert { dirty: bool },
+}
+
+fn interleavings(a: &[Op], b: &[Op]) -> Vec<Vec<Op>> {
+    fn go(a: &[Op], b: &[Op], cur: &mut Vec<Op>, out: &mut Vec<Vec<Op>>) {
+        if a.is_empty() && b.is_empty() {
+            out.push(cur.clone());
+            return;
+        }
+        if let Some((&h, rest)) = a.split_first() {
+            cur.push(h);
+            go(rest, b, cur, out);
+            cur.pop();
+        }
+        if let Some((&h, rest)) = b.split_first() {
+            cur.push(h);
+            go(a, rest, cur, out);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    go(a, b, &mut Vec::new(), &mut out);
+    out
+}
+
+#[test]
+fn every_interleaving_of_writeback_and_reuse_lanes_is_linearizable() {
+    // Lane A is the writeback path (snapshot generation → touch the page →
+    // complete with a generation-checked clear); lane B is a competing
+    // reader plus the evict-and-reuse path. Enumerating all C(8,4) = 70
+    // merges of the two programs and replaying each against a sequential
+    // model pins down the exact CAS semantics: no interleaving may lose a
+    // pin, evict under a pin, drop dirtiness, or let a stale writeback
+    // clear the reused frame (ABA).
+    let lane_a = [Op::CaptureGen, Op::Pin, Op::Unpin, Op::ClearDirtyCaptured];
+    for reuse_dirty in [true, false] {
+        let lane_b = [
+            Op::Pin,
+            Op::SetDirty,
+            Op::Unpin,
+            Op::TryEvictReinsert { dirty: reuse_dirty },
+        ];
+        for seq in interleavings(&lane_a, &lane_b) {
+            let s = FrameState::new(true);
+            // The sequential model.
+            let (mut pins, mut dirty, mut generation) = (0u16, true, 1u64);
+            let mut captured = None;
+            for op in &seq {
+                match *op {
+                    Op::Pin => {
+                        assert_eq!(s.pin(), Ok(pins + 1), "{seq:?}");
+                        pins += 1;
+                    }
+                    Op::Unpin => {
+                        assert_eq!(s.unpin(), pins - 1, "{seq:?}");
+                        pins -= 1;
+                    }
+                    Op::SetDirty => {
+                        s.set_dirty();
+                        dirty = true;
+                    }
+                    Op::CaptureGen => captured = Some(s.generation()),
+                    Op::ClearDirtyCaptured => {
+                        let snap = captured.expect("capture precedes clear in program order");
+                        let cleared = s.clear_dirty_if_generation(snap);
+                        if generation == snap {
+                            assert!(cleared, "{seq:?}: live-generation clear refused");
+                            dirty = false;
+                        } else {
+                            assert!(!cleared, "{seq:?}: stale writeback touched a reused frame");
+                        }
+                    }
+                    Op::TryEvictReinsert { dirty: d } => {
+                        if s.is_evictable() {
+                            assert_eq!(pins, 0, "{seq:?}: evictable while pinned");
+                            s.reinsert(d);
+                            generation += 1;
+                            dirty = d;
+                        } else {
+                            assert!(pins > 0, "{seq:?}: unpinned frame reported unevictable");
+                        }
+                    }
+                }
+                assert_eq!(s.pins(), pins, "{seq:?}");
+                assert_eq!(s.is_dirty(), dirty, "{seq:?}");
+                assert_eq!(s.generation(), generation, "{seq:?}");
+                assert_eq!(s.is_evictable(), pins == 0, "{seq:?}");
+            }
+        }
+    }
+}

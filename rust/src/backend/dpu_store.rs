@@ -15,7 +15,7 @@ use crate::dpu::Source;
 use crate::fabric::protocol::{
     HintMessage, HintSpan, MAX_HINT_SPAN_PAGES, RELIABILITY_HEADER_BYTES, RPC_BYTES,
 };
-use crate::fabric::reliable::{reliable_op, RetryExhausted, RETRY_BUDGET};
+use crate::fabric::reliable::{reliable_op, RetryExhausted};
 use crate::fabric::verbs;
 use crate::host::buffer::{PageKey, PageSpan};
 use crate::memnode::{MemError, RegionId};
@@ -171,8 +171,9 @@ impl RemoteStore for DpuStore {
         key: PageKey,
         numa_node: usize,
         out: &mut [u8],
-    ) -> Result<(Ns, FetchSource), RetryExhausted> {
-        self.reliable_fetch(now, key, numa_node, out, Some(RETRY_BUDGET))
+    ) -> Result<(Ns, FetchSource), crate::backend::FetchError> {
+        let budget = self.cluster.with(|i| i.faults.cfg.retry_budget);
+        Ok(self.reliable_fetch(now, key, numa_node, out, Some(budget))?)
     }
 
     /// Batched two-sided path: all span descriptors travel to the DPU as
@@ -331,7 +332,8 @@ impl RemoteStore for DpuStore {
     }
 
     fn try_writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Result<Ns, RetryExhausted> {
-        self.reliable_writeback(now, key, data, Some(RETRY_BUDGET))
+        let budget = self.cluster.with(|i| i.faults.cfg.retry_budget);
+        self.reliable_writeback(now, key, data, Some(budget))
     }
 
     fn pin_static(&mut self, now: Ns, region: RegionId) -> Option<Ns> {

@@ -22,9 +22,10 @@ use crate::host::buffer::{PageKey, PageSpan};
 use crate::memnode::{MemError, RegionId};
 use crate::sim::Ns;
 
-/// How long the breaker stays open before the next request re-probes the
-/// DPU path (virtual ns). Long enough to skip a typical fault burst,
-/// short against any crash window worth failing over for.
+/// Default for how long the breaker stays open before the next request
+/// re-probes the DPU path (virtual ns). Long enough to skip a typical
+/// fault burst, short against any crash window worth failing over for.
+/// Tunable per run via `FaultConfig::reprobe_ns` (`--fault-reprobe-ns`).
 pub const REPROBE_NS: Ns = 1_000_000;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,8 +66,11 @@ impl FailoverStore {
     }
 
     fn trip(&mut self, now: Ns) {
-        self.cluster.with(|i| i.faults.stats.failovers += 1);
-        self.state = Breaker::Open { until: now + REPROBE_NS };
+        let reprobe = self.cluster.with(|i| {
+            i.faults.stats.failovers += 1;
+            i.faults.cfg.reprobe_ns
+        });
+        self.state = Breaker::Open { until: now + reprobe };
     }
 
     fn note_primary_ok(&mut self) {
@@ -115,7 +119,10 @@ impl RemoteStore for FailoverStore {
                 self.note_primary_ok();
                 r
             }
-            Err(RetryExhausted) => {
+            // Exhausted budget trips the breaker; a structured refusal
+            // (never produced by the DPU path today) also routes to the
+            // direct path, which reads the same memory-node store.
+            Err(_) => {
                 self.trip(now);
                 self.fallback.fetch(now, key, numa_node, out)
             }

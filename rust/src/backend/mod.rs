@@ -28,6 +28,33 @@ use crate::host::buffer::{PageKey, PageSpan};
 use crate::memnode::{MemError, RegionId};
 use crate::sim::Ns;
 
+/// Why a bounded fetch failed — structured, never a panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FetchError {
+    /// The bounded retry budget ran out; the page was not served. The
+    /// caller's circuit breaker routes the request to a fallback path.
+    Exhausted,
+    /// The backend reported a structured refusal with node/region
+    /// context (e.g. a fleet region whose entire holder chain is gone).
+    /// Not recoverable by retrying the same path.
+    Unavailable(MemError),
+}
+
+impl From<RetryExhausted> for FetchError {
+    fn from(_: RetryExhausted) -> Self {
+        FetchError::Exhausted
+    }
+}
+
+impl std::fmt::Display for FetchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FetchError::Exhausted => write!(f, "retry budget exhausted"),
+            FetchError::Unavailable(e) => write!(f, "{e}"),
+        }
+    }
+}
+
 /// Where a fetched page was served from (metrics / figure accounting).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum FetchSource {
@@ -89,18 +116,20 @@ pub trait RemoteStore {
         -> (Ns, FetchSource);
 
     /// Fetch with a *bounded* retry budget under fault injection.
-    /// `Err(RetryExhausted)` means the budget ran out and the page was not
-    /// served — the caller (the failover circuit breaker) must route the
-    /// request elsewhere. Backends without a bounded path (direct stores,
-    /// SSD) never exhaust, so the default simply delegates to
-    /// [`Self::fetch`].
+    /// `Err(FetchError::Exhausted)` means the budget ran out and the page
+    /// was not served — the caller (the failover circuit breaker) must
+    /// route the request elsewhere. `Err(FetchError::Unavailable(_))`
+    /// carries a structured backend refusal (fleet region with no
+    /// surviving holder) that retrying the same path cannot fix.
+    /// Backends without a bounded path (direct stores, SSD) never fail,
+    /// so the default simply delegates to [`Self::fetch`].
     fn try_fetch(
         &mut self,
         now: Ns,
         key: PageKey,
         numa_node: usize,
         out: &mut [u8],
-    ) -> Result<(Ns, FetchSource), RetryExhausted> {
+    ) -> Result<(Ns, FetchSource), FetchError> {
         Ok(self.fetch(now, key, numa_node, out))
     }
 

@@ -50,7 +50,7 @@ impl Cluster {
             ssd: SsdDevice::new(cfg.ssd.clone()),
             faults: FaultPlan::from_config(cfg.fault),
             fleet: if cfg.fleet.enabled() {
-                Some(MemFleet::build(cfg.fleet, &cfg, cfg.fault))
+                Some(MemFleet::build(cfg.fleet, &cfg, cfg.fault, cfg.membership))
             } else {
                 None
             },
@@ -115,6 +115,26 @@ impl Cluster {
             .as_ref()
             .map(|f| f.node_stats())
             .unwrap_or_default()
+    }
+
+    /// Membership / reconcile ledger; all-zero without a fleet (or with a
+    /// static membership schedule). Like [`Self::fault_stats`], *not*
+    /// cleared by [`Self::reset_stats`]: scheduled events may fire during
+    /// graph staging and the ledger invariants span the whole run.
+    pub fn membership_stats(&self) -> crate::fleet::MembershipStats {
+        self.inner
+            .borrow()
+            .fleet
+            .as_ref()
+            .map(|f| f.membership_stats())
+            .unwrap_or_default()
+    }
+
+    /// The coordinator's latched fatal condition (a region that lost its
+    /// entire holder chain), if any — surfaced so the CLI can exit with a
+    /// clean structured error instead of reporting silently zeroed data.
+    pub fn membership_fatal(&self) -> Option<crate::memnode::MemError> {
+        self.inner.borrow().fleet.as_ref().and_then(|f| f.membership_fatal())
     }
 
     /// DPU statistics snapshot.

@@ -13,7 +13,7 @@
 use crate::cache::PolicyKind;
 use crate::dpu::{DpuConfig, DpuOpts, PrefetchConfig, PrefetchPolicyKind};
 use crate::fabric::FabricConfig;
-use crate::fleet::FleetConfig;
+use crate::fleet::{FleetConfig, MembershipConfig};
 use crate::host::agent::HostTiming;
 use crate::memnode::MemNodeConfig;
 use crate::sim::fault::FaultConfig;
@@ -94,7 +94,66 @@ fn apply_fault_json(f: &mut FaultConfig, v: &Json, prefix: &str) -> Result<(), S
     if let Some(x) = v.get("seed") {
         f.seed = want_u64(x, &format!("{prefix}.seed"))?;
     }
+    if let Some(x) = v.get("retry_budget") {
+        let n = want_u64(x, &format!("{prefix}.retry_budget"))?;
+        if n == 0 {
+            return Err(format!("{prefix}.retry_budget must be >= 1"));
+        }
+        f.retry_budget = n as u32;
+    }
+    if let Some(x) = v.get("reprobe_ns") {
+        let n = want_u64(x, &format!("{prefix}.reprobe_ns"))?;
+        if n == 0 {
+            return Err(format!("{prefix}.reprobe_ns must be >= 1"));
+        }
+        f.reprobe_ns = n;
+    }
     Ok(())
+}
+
+/// Apply a JSON membership block onto `m`. Shared by the cluster-side
+/// `ClusterConfig::apply_json` and the run-side `SodaConfig` override so
+/// both speak the same schema. Structural validation against the fleet
+/// size happens at fleet build time (the fleet may itself be overridden
+/// later in the same config).
+fn apply_membership_json(m: &mut MembershipConfig, v: &Json, prefix: &str) -> Result<(), String> {
+    if !matches!(v, Json::Obj(_)) {
+        return Err(format!("{prefix} must be an object (see `soda config`) or null"));
+    }
+    if let Some(x) = v.get("fail_threshold") {
+        let n = want_u64(x, &format!("{prefix}.fail_threshold"))?;
+        if n == 0 {
+            return Err(format!("{prefix}.fail_threshold must be >= 1"));
+        }
+        m.fail_threshold = n as u32;
+    }
+    if let Some(x) = v.get("kill_node") {
+        m.kill_node = want_u64(x, &format!("{prefix}.kill_node"))? as usize;
+    }
+    if let Some(x) = v.get("kill_at_ns") {
+        m.kill_at_ns = want_u64(x, &format!("{prefix}.kill_at_ns"))?;
+    }
+    if let Some(x) = v.get("drain_node") {
+        m.drain_node = want_u64(x, &format!("{prefix}.drain_node"))? as usize;
+    }
+    if let Some(x) = v.get("drain_at_ns") {
+        m.drain_at_ns = want_u64(x, &format!("{prefix}.drain_at_ns"))?;
+    }
+    if let Some(x) = v.get("join_at_ns") {
+        m.join_at_ns = want_u64(x, &format!("{prefix}.join_at_ns"))?;
+    }
+    Ok(())
+}
+
+fn membership_to_json(m: &MembershipConfig) -> Json {
+    Json::obj([
+        ("fail_threshold", (m.fail_threshold as u64).into()),
+        ("kill_node", m.kill_node.into()),
+        ("kill_at_ns", m.kill_at_ns.into()),
+        ("drain_node", m.drain_node.into()),
+        ("drain_at_ns", m.drain_at_ns.into()),
+        ("join_at_ns", m.join_at_ns.into()),
+    ])
 }
 
 /// Apply a JSON fleet block onto `f`. Shared by the cluster-side
@@ -135,6 +194,8 @@ fn fault_to_json(f: &FaultConfig) -> Json {
         ("crash_len_ns", f.crash_len_ns.into()),
         ("crash_every_ns", f.crash_every_ns.into()),
         ("seed", f.seed.into()),
+        ("retry_budget", (f.retry_budget as u64).into()),
+        ("reprobe_ns", f.reprobe_ns.into()),
     ])
 }
 
@@ -159,6 +220,9 @@ pub struct ClusterConfig {
     /// Memory-node fleet topology (`mem_nodes = 1` keeps the paper's
     /// single-memory-node wiring; `> 1` arms the sharded fleet).
     pub fleet: FleetConfig,
+    /// Fleet membership schedule (permanent kill / drain / join events);
+    /// all-zero event times = static membership, zero cost.
+    pub membership: MembershipConfig,
 }
 
 impl Default for ClusterConfig {
@@ -183,6 +247,7 @@ impl Default for ClusterConfig {
             seed: 0x50DA_2024,
             fault: FaultConfig::default(),
             fleet: FleetConfig::default(),
+            membership: MembershipConfig::default(),
         }
     }
 }
@@ -231,9 +296,11 @@ impl ClusterConfig {
     /// `cores`, `max_batch`, `cache_policy`, `prefetch.{depth,
     /// max_per_scan}`, plus a `fault` block (`drop_rate`, `corrupt_rate`,
     /// `dup_rate`, `spike_rate`, `spike_ns`, `crash_start_ns`,
-    /// `crash_len_ns`, `crash_every_ns`, `seed`), and a `fleet` block
-    /// (`mem_nodes`, `stripe_pages`, `replicas`). Call
-    /// [`Self::normalized`] afterwards.
+    /// `crash_len_ns`, `crash_every_ns`, `seed`, `retry_budget`,
+    /// `reprobe_ns`), a `fleet` block (`mem_nodes`, `stripe_pages`,
+    /// `replicas`), and a `membership` block (`fail_threshold`,
+    /// `kill_node`, `kill_at_ns`, `drain_node`, `drain_at_ns`,
+    /// `join_at_ns`). Call [`Self::normalized`] afterwards.
     pub fn apply_json(&mut self, v: &Json) -> Result<(), String> {
         if let Some(x) = v.get("chunk_bytes") {
             let bytes = want_u64(x, "chunk_bytes")?;
@@ -289,6 +356,9 @@ impl ClusterConfig {
         }
         if let Some(x) = v.get("fleet") {
             apply_fleet_json(&mut self.fleet, x, "fleet")?;
+        }
+        if let Some(x) = v.get("membership") {
+            apply_membership_json(&mut self.membership, x, "membership")?;
         }
         Ok(())
     }
@@ -486,6 +556,10 @@ pub struct SodaConfig {
     /// (`--mem-nodes`/`--stripe-pages`/`--replicas`); `None` keeps the
     /// cluster's `fleet` topology.
     pub fleet: Option<FleetConfig>,
+    /// Fleet membership-schedule override applied at attach time
+    /// (`--kill-node`/`--drain-node`/`--join-node`/
+    /// `--member-fail-threshold`); `None` keeps the cluster's schedule.
+    pub membership: Option<MembershipConfig>,
 }
 
 impl Default for SodaConfig {
@@ -508,6 +582,7 @@ impl Default for SodaConfig {
             prefetch: None,
             fault: None,
             fleet: None,
+            membership: None,
         }
     }
 }
@@ -670,6 +745,14 @@ impl SodaConfig {
                 cfg.fleet = Some(f);
             }
         }
+        match v.get("membership") {
+            None | Some(Json::Null) => {}
+            Some(x) => {
+                let mut m = cfg.membership.unwrap_or_default();
+                apply_membership_json(&mut m, x, "membership")?;
+                cfg.membership = Some(m);
+            }
+        }
         Ok(cfg)
     }
 }
@@ -733,6 +816,13 @@ impl ToJson for SodaConfig {
                 "fleet",
                 match &self.fleet {
                     Some(f) => fleet_to_json(f),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "membership",
+                match &self.membership {
+                    Some(m) => membership_to_json(m),
                     None => Json::Null,
                 },
             ),
@@ -883,11 +973,21 @@ mod tests {
                 crash_len_ns: 250_000,
                 crash_every_ns: 10_000_000,
                 seed: 77,
+                retry_budget: 6,
+                reprobe_ns: 2_000_000,
             }),
             fleet: Some(FleetConfig {
                 mem_nodes: 4,
                 stripe_pages: 8,
                 replicas: 1,
+            }),
+            membership: Some(MembershipConfig {
+                fail_threshold: 2,
+                kill_node: 3,
+                kill_at_ns: 50_000,
+                drain_node: 1,
+                drain_at_ns: 80_000,
+                join_at_ns: 90_000,
             }),
         };
         let text = cfg.to_json().to_string();
@@ -954,6 +1054,7 @@ mod tests {
         assert_eq!(cfg.prefetch, None);
         assert_eq!(cfg.fault, None);
         assert_eq!(cfg.fleet, None);
+        assert_eq!(cfg.membership, None);
     }
 
     #[test]
@@ -1021,6 +1122,65 @@ mod tests {
         assert_eq!(c.fleet.mem_nodes, 4);
         let bad = Json::parse(r#"{"fleet": {"replicas": 9}}"#).unwrap();
         assert!(c.apply_json(&bad).is_err());
+    }
+
+    #[test]
+    fn membership_block_parses_validates_and_round_trips() {
+        let v = Json::parse(
+            r#"{"membership": {"fail_threshold": 2, "kill_node": 1, "kill_at_ns": 50000}}"#,
+        )
+        .unwrap();
+        let cfg = SodaConfig::from_json(&v).unwrap();
+        let m = cfg.membership.expect("membership block must be set");
+        assert_eq!(m.fail_threshold, 2);
+        assert_eq!(m.kill_node, 1);
+        assert_eq!(m.kill_at_ns, 50_000);
+        assert_eq!(m.drain_at_ns, 0, "unset knobs keep their defaults");
+        assert!(m.enabled());
+        // Degenerate knobs and non-object blocks are rejected at parse time.
+        for bad in [
+            r#"{"membership": {"fail_threshold": 0}}"#,
+            r#"{"membership": {"kill_at_ns": -1}}"#,
+            r#"{"membership": true}"#,
+        ] {
+            assert!(
+                SodaConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "must reject {bad}"
+            );
+        }
+        // An explicit null keeps the cluster's schedule.
+        let v = Json::parse(r#"{"membership": null}"#).unwrap();
+        assert_eq!(SodaConfig::from_json(&v).unwrap().membership, None);
+        // The cluster-side override speaks the same schema.
+        let mut c = ClusterConfig::tiny();
+        assert!(!c.membership.enabled(), "membership must default off");
+        c.apply_json(
+            &Json::parse(r#"{"membership": {"drain_node": 2, "drain_at_ns": 70000}}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(c.membership.enabled());
+        assert_eq!(c.membership.drain_node, 2);
+    }
+
+    #[test]
+    fn fault_recovery_knobs_parse_and_round_trip() {
+        let v = Json::parse(r#"{"fault": {"retry_budget": 7, "reprobe_ns": 500000}}"#).unwrap();
+        let f = SodaConfig::from_json(&v).unwrap().fault.unwrap();
+        assert_eq!(f.retry_budget, 7);
+        assert_eq!(f.reprobe_ns, 500_000);
+        assert!(
+            !f.enabled(),
+            "recovery knobs tune the bounded paths; they must not arm injection"
+        );
+        for bad in [
+            r#"{"fault": {"retry_budget": 0}}"#,
+            r#"{"fault": {"reprobe_ns": 0}}"#,
+        ] {
+            assert!(
+                SodaConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "must reject {bad}"
+            );
+        }
     }
 
     #[test]

@@ -2,7 +2,7 @@
 
 use crate::dpu::{CacheStats, DpuStats};
 use crate::fabric::stats::NetworkStats;
-use crate::fleet::FleetNodeStats;
+use crate::fleet::{FleetNodeStats, MembershipStats};
 use crate::host::agent::HostStats;
 use crate::host::buffer::BufferStats;
 use crate::sim::fault::FaultStats;
@@ -35,6 +35,12 @@ pub struct RunMetrics {
     /// Per-memory-node traffic and failover counters; empty unless a
     /// fleet is armed (`--mem-nodes > 1`).
     pub fleet: Vec<FleetNodeStats>,
+    /// Membership / reconcile ledger (epochs, deaths, migrations,
+    /// repair); all-zero unless a membership schedule is armed.
+    pub membership: MembershipStats,
+    /// Structured fatal membership condition (a region that lost its
+    /// entire holder chain), stringified for the CLI / JSON consumers.
+    pub membership_error: Option<String>,
 }
 
 impl RunMetrics {
@@ -149,6 +155,26 @@ impl crate::util::json::ToJson for RunMetrics {
                         .collect(),
                 ),
             ),
+            ("membership_epoch", self.membership.epoch.into()),
+            ("membership_deaths_declared", self.membership.deaths_declared.into()),
+            ("membership_pages_migrated", self.membership.pages_migrated.into()),
+            ("membership_repair_bytes", self.membership.repair_bytes.into()),
+            ("membership_dual_write_bytes", self.membership.dual_write_bytes.into()),
+            ("membership_stale_epoch_rejects", self.membership.stale_epoch_rejects.into()),
+            ("membership_stale_epoch_retries", self.membership.stale_epoch_retries.into()),
+            ("membership_unavailable_regions", self.membership.unavailable_regions.into()),
+            ("membership_min_holders", self.membership.min_holders.into()),
+            (
+                "membership_post_cutover_drain_bytes",
+                self.membership.post_cutover_drain_bytes.into(),
+            ),
+            (
+                "membership_error",
+                match &self.membership_error {
+                    Some(e) => e.as_str().into(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 }
@@ -241,6 +267,28 @@ impl std::fmt::Display for RunMetrics {
                 )?;
             }
         }
+        if self.membership.active() {
+            writeln!(
+                f,
+                "  membership       : epoch {} ({} deaths declared, min holders {})",
+                self.membership.epoch,
+                self.membership.deaths_declared,
+                self.membership.min_holders,
+            )?;
+            writeln!(
+                f,
+                "  reconcile        : {} pages migrated, {:.2} MB repair, {:.2} MB dual-write, {} stale-epoch rejects / {} retried, {} unavailable",
+                self.membership.pages_migrated,
+                self.membership.repair_bytes as f64 / 1e6,
+                self.membership.dual_write_bytes as f64 / 1e6,
+                self.membership.stale_epoch_rejects,
+                self.membership.stale_epoch_retries,
+                self.membership.unavailable_regions,
+            )?;
+        }
+        if let Some(e) = &self.membership_error {
+            writeln!(f, "  MEMBERSHIP ERROR : {e}")?;
+        }
         Ok(())
     }
 }
@@ -291,6 +339,31 @@ mod tests {
         assert!(s.contains("elapsed"));
         assert!(s.contains("network"));
         assert!(!s.contains("fleet"), "fleet section hidden without nodes");
+    }
+
+    #[test]
+    fn membership_ledger_serializes_and_displays_when_active() {
+        let mut m = metric(10, 0);
+        // Inactive ledger: keys exist (schema stability) but no section.
+        let v = crate::util::json::Json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(v.get("membership_epoch").unwrap().as_u64(), Some(0));
+        assert!(matches!(v.get("membership_error"), Some(crate::util::json::Json::Null)));
+        assert!(!format!("{m}").contains("membership"), "inactive ledger stays silent");
+        m.membership.epoch = 2;
+        m.membership.deaths_declared = 1;
+        m.membership.repair_bytes = 4096;
+        m.membership_error = Some("region 7 unavailable: shard slot 1 lost its entire holder chain".into());
+        let v = crate::util::json::Json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(v.get("membership_epoch").unwrap().as_u64(), Some(2));
+        assert_eq!(v.get("membership_repair_bytes").unwrap().as_u64(), Some(4096));
+        assert_eq!(
+            v.get("membership_error").unwrap().as_str().map(|s| s.contains("unavailable")),
+            Some(true)
+        );
+        let s = format!("{m}");
+        assert!(s.contains("membership"));
+        assert!(s.contains("deaths declared"));
+        assert!(s.contains("MEMBERSHIP ERROR"));
     }
 
     #[test]

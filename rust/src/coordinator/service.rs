@@ -50,15 +50,20 @@ impl SodaService {
         }
         // Per-run fleet override: retopologize the memory side. A fault
         // override also rebuilds an armed fleet so the per-node plans
-        // derive from the run's seeds, not the cluster's stale ones.
+        // derive from the run's seeds, not the cluster's stale ones, and a
+        // membership override rebuilds it so the event schedule arms.
         let fleet_cfg = cfg.fleet.unwrap_or(cluster.config().fleet);
-        if cfg.fleet.is_some() || (cfg.fault.is_some() && fleet_cfg.enabled()) {
+        let memb_cfg = cfg.membership.unwrap_or(cluster.config().membership);
+        if cfg.fleet.is_some()
+            || ((cfg.fault.is_some() || cfg.membership.is_some()) && fleet_cfg.enabled())
+        {
             cluster.with(|inner| {
                 inner.fleet = if fleet_cfg.enabled() {
                     Some(crate::fleet::MemFleet::build(
                         fleet_cfg,
                         cluster.config(),
                         inner.faults.cfg,
+                        memb_cfg,
                     ))
                 } else {
                     None // an explicit --mem-nodes 1 disarms the fleet
@@ -172,6 +177,8 @@ impl SodaService {
             mean_batch_factor: self.cluster.with(|i| i.dpu.mean_batch_factor()),
             fault: self.cluster.fault_stats(),
             fleet: self.cluster.fleet_node_stats(),
+            membership: self.cluster.membership_stats(),
+            membership_error: self.cluster.membership_fatal().map(|e| e.to_string()),
         }
     }
 }

@@ -18,11 +18,13 @@
 //! * **duplicated completion** → suppressed by sequence-number dedup and
 //!   counted; the request still completes exactly once.
 //!
-//! Callers choose between a *bounded* retry budget (`Some(RETRY_BUDGET)`,
-//! the DPU path — exhaustion trips the backend circuit breaker and fails
-//! the request over to the direct memory-server path) and an *unbounded*
-//! one (`None`, the last-resort direct path — capped backoff plus finite
-//! crash windows guarantee termination).
+//! Callers choose between a *bounded* retry budget
+//! (`Some(FaultConfig::retry_budget)`, default [`RETRY_BUDGET`] — the DPU
+//! path, where exhaustion trips the backend circuit breaker and fails the
+//! request over to the direct memory-server path) and an *unbounded* one
+//! (`None`, the last-resort direct path — capped backoff plus finite
+//! crash windows guarantee termination; callers must not park unbounded
+//! on a *permanently dead* node, whose window never clears).
 //!
 //! With fault injection disabled the wrapper is provably zero-cost: it
 //! short-circuits to the plain closure without drawing from the RNG or
@@ -39,8 +41,9 @@ pub const TIMEOUT_NS: Ns = 20_000;
 pub const BACKOFF_BASE_NS: Ns = 8_000;
 /// Backoff ceiling — keeps crash-window retry loops polynomial.
 pub const BACKOFF_CAP_NS: Ns = 1_000_000;
-/// Bounded retry budget for the DPU path; exhausting it trips the
-/// backend circuit breaker.
+/// Default bounded retry budget for the DPU/fleet paths; exhausting it
+/// trips the backend circuit breaker (or moves a fleet lease). Tunable
+/// per run via `FaultConfig::retry_budget` (`--fault-retry-budget`).
 pub const RETRY_BUDGET: u32 = 4;
 
 /// A bounded retry budget ran out — the request was *not* served.

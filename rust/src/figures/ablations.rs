@@ -620,6 +620,190 @@ pub fn ablation_fleet(scale: f64, threads: usize) -> FigureReport {
     r
 }
 
+/// Membership probe for `abl-membership`: fixed small graph, deterministic
+/// verdicts. A permanent kill under R=1 and a join+drain under R=0 must
+/// both leave PageRank output bit-identical to a fault-free single-node
+/// run, with a declared death plus anti-entropy repair on the kill side
+/// and zero post-cutover traffic on the drained node.
+fn membership_probe() -> Json {
+    use crate::backend::{MemServerStore, RemoteStore};
+    use crate::coordinator::cluster::Cluster;
+    use crate::coordinator::config::ClusterConfig;
+    use crate::fleet::{FleetConfig, FleetStore, MembershipConfig};
+    use crate::graph::apps::pagerank;
+    use crate::graph::{gen, BuildMode, FamGraph, GraphRunner};
+    use crate::host::{HostAgent, HostTiming};
+
+    let csr = gen::rmat(512, 8192, 0.57, 0.19, 0.19, 7);
+    let run = |fleet: FleetConfig, membership: MembershipConfig| {
+        let mut cfg = ClusterConfig::tiny();
+        cfg.fleet = fleet;
+        cfg.membership = membership;
+        // Tighter reprobe cadence so death detection lands mid-run.
+        cfg.fault.reprobe_ns = 150_000;
+        let cluster = Cluster::build(cfg);
+        let chunk = cluster.config().chunk_bytes;
+        let store: Box<dyn RemoteStore> = if fleet.enabled() {
+            Box::new(FleetStore::new(cluster.clone()))
+        } else {
+            Box::new(MemServerStore::new(cluster.clone()))
+        };
+        // A buffer much smaller than the working set keeps remote reads
+        // flowing through every membership event of the run.
+        let agent = HostAgent::new(
+            "memb-probe",
+            store,
+            8 * chunk,
+            chunk,
+            0.9,
+            4,
+            4,
+            2,
+            HostTiming::default(),
+        );
+        let mut r = GraphRunner::new(agent, 4, 0);
+        let (g, t) = FamGraph::build(&mut r.agent, 0, &csr, BuildMode::FileBacked);
+        r.set_clock(t);
+        let out = pagerank(&mut r, &g, 10);
+        (format!("{:?} {}", out.ranks, out.last_delta), cluster.membership_stats())
+    };
+    let (clean, _) = run(FleetConfig::default(), MembershipConfig::default());
+    let (killed, ks) = run(
+        FleetConfig { mem_nodes: 3, stripe_pages: 1, replicas: 1 },
+        MembershipConfig {
+            kill_node: 1,
+            kill_at_ns: 400_000,
+            fail_threshold: 2,
+            ..MembershipConfig::default()
+        },
+    );
+    let (drained, ds) = run(
+        FleetConfig { mem_nodes: 3, stripe_pages: 1, replicas: 0 },
+        MembershipConfig {
+            join_at_ns: 200_000,
+            drain_node: 0,
+            drain_at_ns: 400_000,
+            ..MembershipConfig::default()
+        },
+    );
+    Json::obj([
+        ("kill_digest_identical", (clean == killed).into()),
+        ("drain_digest_identical", (clean == drained).into()),
+        ("deaths_declared", ks.deaths_declared.into()),
+        ("repair_bytes", ks.repair_bytes.into()),
+        ("kill_min_holders", ks.min_holders.into()),
+        ("kill_unavailable", ks.unavailable_regions.into()),
+        ("pages_migrated", ds.pages_migrated.into()),
+        ("post_cutover_drain_bytes", ds.post_cutover_drain_bytes.into()),
+        ("stale_epoch_rejects", ds.stale_epoch_rejects.into()),
+        ("stale_epoch_retries", ds.stale_epoch_retries.into()),
+    ])
+}
+
+/// Dynamic-membership sweep: scheduled kill / drain / join events against
+/// runtime and the membership ledger — the reconcile-loop story on top of
+/// the static fleet. Every cell runs the same PageRank workload on a
+/// 3-node striped fleet; events land mid-run in virtual time. The
+/// `static` cell doubles as the zero-cost guard (its ledger must stay
+/// all-zero) and the embedded probe pins bit-identical output through a
+/// permanent death and a join+drain.
+pub fn ablation_membership(scale: f64, threads: usize) -> FigureReport {
+    use crate::fleet::{FleetConfig, MembershipConfig};
+    let mut r = FigureReport::new(
+        "abl-membership",
+        "fleet membership: kill/drain/join reconciliation (pagerank/friendster)",
+    );
+    r.line(format!(
+        "{:<12}{:<6}{:>10}{:>7}{:>8}{:>10}{:>11}{:>9}{:>9}{:>9}",
+        "event", "repl", "run ms", "epoch", "deaths", "migr pgs", "repair KB", "dual KB", "rejects", "holders"
+    ));
+    let mut rows = Vec::new();
+    let cells: [(&str, usize, MembershipConfig); 5] = [
+        ("static", 1, MembershipConfig::default()),
+        (
+            "kill",
+            1,
+            MembershipConfig {
+                kill_node: 1,
+                kill_at_ns: 400_000,
+                fail_threshold: 2,
+                ..MembershipConfig::default()
+            },
+        ),
+        (
+            "drain",
+            0,
+            MembershipConfig { drain_node: 0, drain_at_ns: 400_000, ..MembershipConfig::default() },
+        ),
+        (
+            "join",
+            0,
+            MembershipConfig { join_at_ns: 200_000, ..MembershipConfig::default() },
+        ),
+        (
+            "drain+join",
+            0,
+            MembershipConfig {
+                join_at_ns: 200_000,
+                drain_node: 0,
+                drain_at_ns: 400_000,
+                ..MembershipConfig::default()
+            },
+        ),
+    ];
+    for (label, replicas, memb) in cells {
+        let mut wb = bench(scale, threads);
+        wb.fleet = Some(FleetConfig { mem_nodes: 3, stripe_pages: 1, replicas });
+        wb.membership = Some(memb);
+        let m = wb.run(&ExperimentSpec {
+            app: App::PageRank,
+            graph: "friendster",
+            backend: BackendKind::MemServer,
+            caching: CachingMode::None,
+        });
+        let ms = m.membership;
+        r.line(format!(
+            "{:<12}{:<6}{:>10.2}{:>7}{:>8}{:>10}{:>11.1}{:>9.1}{:>9}{:>9}",
+            label,
+            replicas,
+            m.elapsed_secs() * 1e3,
+            ms.epoch,
+            ms.deaths_declared,
+            ms.pages_migrated,
+            ms.repair_bytes as f64 / 1e3,
+            ms.dual_write_bytes as f64 / 1e3,
+            ms.stale_epoch_rejects,
+            ms.min_holders,
+        ));
+        rows.push(Json::obj([
+            ("event", label.into()),
+            ("replicas", replicas.into()),
+            ("elapsed_ns", m.elapsed_ns.into()),
+            ("net_bytes", m.network_bytes().into()),
+            ("epoch", ms.epoch.into()),
+            ("deaths_declared", ms.deaths_declared.into()),
+            ("pages_migrated", ms.pages_migrated.into()),
+            ("repair_bytes", ms.repair_bytes.into()),
+            ("dual_write_bytes", ms.dual_write_bytes.into()),
+            ("stale_epoch_rejects", ms.stale_epoch_rejects.into()),
+            ("stale_epoch_retries", ms.stale_epoch_retries.into()),
+            ("unavailable_regions", ms.unavailable_regions.into()),
+            ("min_holders", ms.min_holders.into()),
+            ("post_cutover_drain_bytes", ms.post_cutover_drain_bytes.into()),
+        ]));
+    }
+    r.line("-> a permanent death is detected from consecutive exhaustions and".to_string());
+    r.line("   repaired from surviving replicas; drains and joins migrate live".to_string());
+    r.line("   shards behind epoch-fenced cutovers — output never changes".to_string());
+    r.line("   (see the embedded probe + tests/chaos.rs membership tests).".to_string());
+    r.data = Json::obj([
+        ("rows", Json::Arr(rows)),
+        ("probe", membership_probe()),
+        ("scale", scale.into()),
+    ]);
+    r
+}
+
 /// Multi-worker host-agent sweep: fault-service worker lanes (with the
 /// page buffer sharded to match) against stall time and runtime, with the
 /// answer/traffic invariants checked in-figure — the compute-side scaling
@@ -817,6 +1001,70 @@ mod tests {
         );
         assert!(probe.get("failovers").unwrap().as_u64().unwrap() >= 1, "{probe:?}");
         assert!(probe.get("recoveries").unwrap().as_u64().unwrap() >= 1, "{probe:?}");
+    }
+
+    #[test]
+    fn membership_sweep_reconciles_and_probe_stays_bit_identical() {
+        let r = ablation_membership(S, 8);
+        let Some(Json::Arr(rows)) = r.data.get("rows") else {
+            panic!("no rows");
+        };
+        assert_eq!(rows.len(), 5);
+        let cell = |event: &str| -> &Json {
+            rows.iter()
+                .find(|x| x.get("event").unwrap().as_str() == Some(event))
+                .unwrap_or_else(|| panic!("missing cell {event}"))
+        };
+        let field = |c: &Json, f: &str| c.get(f).unwrap().as_u64().unwrap();
+        // Zero-cost guard: the static cell's membership ledger is all-zero.
+        let stat = cell("static");
+        for f in [
+            "epoch",
+            "deaths_declared",
+            "pages_migrated",
+            "repair_bytes",
+            "stale_epoch_rejects",
+            "unavailable_regions",
+        ] {
+            assert_eq!(field(stat, f), 0, "static fleet leaked membership work: {f}");
+        }
+        // A permanent kill is declared and repaired back to full R.
+        let kill = cell("kill");
+        assert_eq!(field(kill, "deaths_declared"), 1);
+        assert!(field(kill, "repair_bytes") > 0, "anti-entropy must copy bytes");
+        assert_eq!(field(kill, "min_holders"), 2, "repair must restore R=1");
+        assert_eq!(field(kill, "unavailable_regions"), 0);
+        // Drain and join migrate pages behind epoch fences, and every
+        // stale-epoch reject is transparently retried.
+        for ev in ["drain", "join", "drain+join"] {
+            let c = cell(ev);
+            assert!(field(c, "pages_migrated") > 0, "{ev} moved nothing");
+            assert!(field(c, "epoch") >= 1, "{ev} never cut over");
+            assert_eq!(
+                field(c, "stale_epoch_rejects"),
+                field(c, "stale_epoch_retries"),
+                "{ev} fence ledger unbalanced"
+            );
+        }
+        // A drained node serves nothing after its cutover.
+        assert_eq!(field(cell("drain"), "post_cutover_drain_bytes"), 0);
+        assert_eq!(field(cell("drain+join"), "post_cutover_drain_bytes"), 0);
+        // The embedded probe: output never changes through kill or drain+join.
+        let probe = r.data.get("probe").expect("membership probe");
+        assert_eq!(
+            probe.get("kill_digest_identical").unwrap().as_bool(),
+            Some(true),
+            "a permanent death must never change application output: {probe:?}"
+        );
+        assert_eq!(
+            probe.get("drain_digest_identical").unwrap().as_bool(),
+            Some(true),
+            "a live migration must never change application output: {probe:?}"
+        );
+        assert!(probe.get("deaths_declared").unwrap().as_u64().unwrap() >= 1, "{probe:?}");
+        assert!(probe.get("repair_bytes").unwrap().as_u64().unwrap() > 0, "{probe:?}");
+        assert!(probe.get("pages_migrated").unwrap().as_u64().unwrap() >= 1, "{probe:?}");
+        assert_eq!(probe.get("post_cutover_drain_bytes").unwrap().as_u64(), Some(0), "{probe:?}");
     }
 
     #[test]

@@ -23,6 +23,16 @@
 //! per-owner [`ShardPiece`]s (maximal runs that are contiguous in one
 //! node's local space), which is exactly the fan-out unit
 //! `FleetStore::fetch_batch` overlaps across nodes.
+//!
+//! **Membership (dynamic fleets).** Placement arithmetic maps pages to
+//! *logical shard slots*, which are fixed for the life of the fleet. The
+//! directory separately maps each slot to its current *physical holder
+//! chain* (primary first, then replicas) and stamps every remap with a
+//! monotonically increasing **epoch**. The membership coordinator edits
+//! chains (death repair, drain, join) and bumps the epoch once per
+//! cutover; hosts carrying a stale epoch are fenced with
+//! `MemError::StaleEpoch` and retry through the refreshed view. On a
+//! static fleet the chains never change and the epoch stays 0.
 
 use std::collections::HashMap;
 
@@ -60,6 +70,12 @@ pub struct RegionDirectory {
     stripe_pages: u64,
     next_id: RegionId,
     regions: HashMap<RegionId, FleetRegion>,
+    /// Membership epoch: bumped once per chain cutover (death repair,
+    /// drain, join). 0 on a static fleet.
+    epoch: u64,
+    /// Per logical shard slot: current physical holder chain, primary
+    /// first. `chains[slot][0]` serves slot `slot`'s reads.
+    chains: Vec<Vec<usize>>,
 }
 
 impl RegionDirectory {
@@ -70,11 +86,57 @@ impl RegionDirectory {
             stripe_pages,
             next_id: 1,
             regions: HashMap::new(),
+            epoch: 0,
+            chains: (0..nodes).map(|o| vec![o]).collect(),
         }
     }
 
     pub fn nodes(&self) -> usize {
         self.nodes
+    }
+
+    /// Current membership epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Advance the epoch (one cutover happened); returns the new value.
+    pub fn bump_epoch(&mut self) -> u64 {
+        self.epoch += 1;
+        self.epoch
+    }
+
+    /// Install the initial holder chains: slot `o` is held by the
+    /// replication ring `(o + j) % phys` for `j in 0..=replicas`.
+    pub fn init_chains(&mut self, replicas: usize, phys: usize) {
+        assert!(phys >= self.nodes, "physical fleet smaller than slot count");
+        self.chains = (0..self.nodes)
+            .map(|o| (0..=replicas).map(|j| (o + j) % phys).collect())
+            .collect();
+    }
+
+    /// Current holder chain of a logical slot (may be empty after the
+    /// last holder died).
+    pub fn chain(&self, slot: usize) -> &[usize] {
+        &self.chains[slot]
+    }
+
+    pub fn chains(&self) -> &[Vec<usize>] {
+        &self.chains
+    }
+
+    /// Mutable chain access for the membership coordinator. Callers own
+    /// the epoch bump: edit chains, then `bump_epoch` once per cutover.
+    pub fn chain_mut(&mut self, slot: usize) -> &mut Vec<usize> {
+        &mut self.chains[slot]
+    }
+
+    /// Region ids in a deterministic (sorted) order — migration and
+    /// repair sweeps must not depend on hash-map iteration order.
+    pub fn region_ids_sorted(&self) -> Vec<RegionId> {
+        let mut ids: Vec<RegionId> = self.regions.keys().copied().collect();
+        ids.sort_unstable();
+        ids
     }
 
     pub fn placement(&self) -> PlacementMode {
@@ -319,6 +381,36 @@ mod tests {
                 ShardPiece { owner: 2, local_start: 0, pages: 2, out_page_offset: 6 },
             ]
         );
+    }
+
+    #[test]
+    fn chains_start_as_replication_rings_and_epoch_tracks_edits() {
+        let mut d = RegionDirectory::new(3, 1);
+        assert_eq!(d.epoch(), 0);
+        d.init_chains(1, 3);
+        assert_eq!(d.chain(0), &[0, 1]);
+        assert_eq!(d.chain(2), &[2, 0]);
+        // Coordinator-style edit: node 1 dies; slot 0 repairs onto node 2,
+        // slot 1 survives on its replica.
+        d.chain_mut(0).retain(|&h| h != 1);
+        d.chain_mut(0).push(2);
+        d.chain_mut(1).retain(|&h| h != 1);
+        assert_eq!(d.bump_epoch(), 1);
+        assert_eq!(d.chain(0), &[0, 2]);
+        assert_eq!(d.chain(1), &[2]);
+        // A joined node can hold slots beyond the logical count.
+        d.chain_mut(2).insert(0, 3);
+        assert_eq!(d.bump_epoch(), 2);
+        assert_eq!(d.chain(2), &[3, 2, 0]);
+    }
+
+    #[test]
+    fn region_ids_sorted_is_deterministic() {
+        let mut d = RegionDirectory::new(2, 0);
+        let (g1, _) = d.alloc_ids(4);
+        let (g2, _) = d.alloc_ids(4);
+        let (g3, _) = d.alloc_ids(4);
+        assert_eq!(d.region_ids_sorted(), vec![g1, g2, g3]);
     }
 
     #[test]

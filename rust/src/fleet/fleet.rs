@@ -20,20 +20,35 @@
 //! replica fan-out), so whichever holder serves a later read returns the
 //! same bytes — fleet outputs are bit-identical to single-node runs by
 //! construction, which the multi-node chaos test pins.
+//!
+//! When a [`MembershipConfig`](crate::fleet::MembershipConfig) schedules
+//! events, the fleet also carries a [`FleetCoordinator`] reconcile loop,
+//! driven from every data-plane entry point (virtual time has no
+//! background threads): it finalizes due migration cutovers, turns
+//! consecutive lease exhaustions / failed probes into permanent-death
+//! declarations with anti-entropy repair, and starts planned drain /
+//! join copy windows. Every chain cutover bumps the directory epoch; the
+//! host-side view is fenced per request and refreshed on
+//! `MemError::StaleEpoch`. All repair / migration / dual-write bytes are
+//! charged on the same per-node links as demand traffic.
 
 use crate::fabric::protocol::{
     READ_REQUEST_BYTES, RELIABILITY_HEADER_BYTES, RPC_BYTES, WRITE_HEADER_BYTES,
 };
 use crate::fabric::qp::QueuePair;
-use crate::fabric::reliable::{backoff_ns, reliable_op, RetryExhausted, RETRY_BUDGET, TIMEOUT_NS};
+use crate::fabric::reliable::{backoff_ns, reliable_op, RetryExhausted, TIMEOUT_NS};
+use crate::fleet::membership::{
+    check_epoch, FleetCoordinator, MembershipConfig, MembershipStats, Migration, MigrationKind,
+};
 use crate::fleet::{FleetConfig, RegionDirectory};
 use crate::memnode::{MemError, MemoryNode, RegionId};
 use crate::sim::fault::{FaultConfig, FaultPlan, FaultStats};
 use crate::sim::link::{Link, LinkStats, TrafficClass};
 use crate::sim::Ns;
 
-/// A moved lease re-probes its primary at most this often (same cadence
-/// as the `FailoverStore` circuit breaker).
+/// Default re-probe cadence for a moved lease (same cadence as the
+/// `FailoverStore` circuit breaker); tunable via
+/// `FaultConfig::reprobe_ns` (`--fault-reprobe-ns`).
 pub const REPROBE_NS: Ns = 1_000_000;
 
 /// Per-node traffic / failover counters surfaced in `RunMetrics`.
@@ -199,30 +214,62 @@ pub struct MemFleet {
     pub cfg: FleetConfig,
     pub directory: RegionDirectory,
     pub nodes: Vec<FleetNode>,
+    /// Reconcile-loop control plane; `None` on a static fleet, which
+    /// keeps every membership hook a no-op.
+    pub coordinator: Option<FleetCoordinator>,
+    /// The host's view of the directory epoch; a cutover makes it stale
+    /// and the next request pays one refresh round trip.
+    host_epoch: u64,
     leases: Vec<Lease>,
     net_gbps: f64,
     numa: crate::fabric::numa::NumaModel,
+    /// Templates kept for mid-run joins.
+    fabric_cfg: crate::fabric::FabricConfig,
+    memcfg: crate::memnode::MemNodeConfig,
+    base_fault: FaultConfig,
 }
 
 impl MemFleet {
-    /// Build the fleet from the cluster's fabric/memnode templates and
-    /// its (possibly per-run overridden) base fault plan.
+    /// Build the fleet from the cluster's fabric/memnode templates, its
+    /// (possibly per-run overridden) base fault plan, and the membership
+    /// schedule.
     pub fn build(
         fleet: FleetConfig,
         cfg: &crate::coordinator::config::ClusterConfig,
         base_fault: FaultConfig,
+        membership: MembershipConfig,
     ) -> Self {
         fleet.validate().expect("fleet config validated upstream");
+        membership
+            .validate(fleet.mem_nodes)
+            .expect("membership config validated upstream");
         let n = fleet.mem_nodes;
-        let nodes: Vec<FleetNode> = (0..n)
+        let mut nodes: Vec<FleetNode> = (0..n)
             .map(|i| FleetNode::new(i, &cfg.fabric, cfg.memnode.clone(), &base_fault))
             .collect();
+        let coordinator = if membership.enabled() {
+            if membership.kill_at_ns > 0 {
+                // The permanent-kill plan entry: unlike crash windows it
+                // never clears, so only the coordinator can route around it.
+                nodes[membership.kill_node].faults.set_dead_from(membership.kill_at_ns);
+            }
+            Some(FleetCoordinator::new(membership, n))
+        } else {
+            None
+        };
+        let mut directory = RegionDirectory::new(n, fleet.stripe_pages);
+        directory.init_chains(fleet.replicas, n);
         MemFleet {
-            directory: RegionDirectory::new(n, fleet.stripe_pages),
+            directory,
             nodes,
+            coordinator,
+            host_epoch: 0,
             leases: vec![Lease::default(); n],
             net_gbps: cfg.fabric.net_gbps,
             numa: cfg.fabric.numa.clone(),
+            fabric_cfg: cfg.fabric.clone(),
+            memcfg: cfg.memnode.clone(),
+            base_fault,
             cfg: fleet,
         }
     }
@@ -231,16 +278,27 @@ impl MemFleet {
         self.net_gbps * self.numa.rdma_factor[numa_node % self.numa.nodes]
     }
 
-    /// Holder chain for an owner's shard: the primary plus the next R
-    /// ring nodes (all distinct because `replicas < mem_nodes`).
+    /// Holder chain for a logical slot: the directory's current physical
+    /// chain (a replication ring until membership edits it).
     pub fn holder_chain(&self, owner: usize) -> Vec<usize> {
-        let n = self.nodes.len();
-        (0..=self.cfg.replicas).map(|j| (owner + j) % n).collect()
+        self.directory.chain(owner).to_vec()
     }
 
     /// Which holder-chain slot currently holds the lease (0 = primary).
     pub fn lease_offset(&self, owner: usize) -> usize {
         self.leases[owner].offset
+    }
+
+    /// A request served by `h` succeeded / exhausted its budget — feed
+    /// the membership health score (no-op on a static fleet).
+    fn note_health(&mut self, h: usize, ok: bool) {
+        if let Some(coord) = self.coordinator.as_mut() {
+            if ok {
+                coord.note_ok(h);
+            } else {
+                coord.note_failure(h);
+            }
+        }
     }
 
     /// Try to move a displaced lease back to the primary (rate-limited).
@@ -253,103 +311,191 @@ impl MemFleet {
         if self.nodes[primary].probe(now) {
             self.nodes[primary].faults.stats.recoveries += 1;
             self.leases[owner].offset = 0;
+            self.note_health(primary, true);
         } else {
-            self.leases[owner].reprobe_at = now + REPROBE_NS;
+            let reprobe = self.nodes[primary].faults.cfg.reprobe_ns;
+            self.leases[owner].reprobe_at = now + reprobe;
+            self.note_health(primary, false);
         }
     }
 
-    /// Serve a read of `bytes` from owner `owner`'s current lease
+    /// Serve a read of `bytes` from logical slot `owner`'s current lease
     /// holder, failing over down the chain when a holder's crash window
-    /// outlasts the bounded retry budget.
+    /// outlasts the bounded retry budget. An empty chain (every holder
+    /// permanently dead) degrades gracefully with
+    /// [`MemError::RegionUnavailable`] instead of spinning forever.
     pub fn lease_read(
         &mut self,
         owner: usize,
+        region: RegionId,
         now: Ns,
         bytes: u64,
         numa_node: usize,
         class: TrafficClass,
-    ) -> Ns {
+    ) -> Result<Ns, MemError> {
         let gbps = self.gbps_at(numa_node);
         let chain = self.holder_chain(owner);
+        if chain.is_empty() {
+            let err = match self.coordinator.as_mut() {
+                Some(c) => c.note_unavailable(region, owner),
+                None => MemError::RegionUnavailable { region, node: owner },
+            };
+            return Err(err);
+        }
         if chain.len() == 1 {
+            let h = chain[0];
+            if self.nodes[h].faults.dead(now) {
+                // The sole holder is permanently gone: an unbounded park
+                // would never return. Degrade with a structured error.
+                self.note_health(h, false);
+                let err = match self.coordinator.as_mut() {
+                    Some(c) => c.note_unavailable(region, owner),
+                    None => MemError::RegionUnavailable { region, node: owner },
+                };
+                return Err(err);
+            }
             // No replica to fail over to: wait out faults unbounded,
             // exactly like the single-node memserver path.
-            return self.nodes[owner]
+            return Ok(self.nodes[h]
                 .read_wire(now, bytes, gbps, None, class)
-                .expect("unbounded retry always completes");
+                .expect("unbounded retry always completes"));
         }
         self.reprobe_primary(owner, &chain, now);
+        let budget = self.nodes[chain[0]].faults.cfg.retry_budget;
         let mut t = now;
-        let mut off = self.leases[owner].offset;
+        let mut off = self.leases[owner].offset % chain.len();
         for _ in 0..chain.len() {
             let h = chain[off];
-            match self.nodes[h].read_wire(t, bytes, gbps, Some(RETRY_BUDGET), class) {
+            match self.nodes[h].read_wire(t, bytes, gbps, Some(budget), class) {
                 Ok(done) => {
                     self.leases[owner].offset = off;
-                    return done;
+                    self.note_health(h, true);
+                    return Ok(done);
                 }
                 Err(RetryExhausted) => {
                     self.nodes[h].faults.stats.failovers += 1;
-                    t += exhausted_attempts_ns(RETRY_BUDGET);
+                    self.note_health(h, false);
+                    t += exhausted_attempts_ns(budget);
                     off = (off + 1) % chain.len();
                 }
             }
         }
-        // Every holder is inside a crash window: park on the holder the
-        // lease ended up at and wait it out (windows are finite).
+        // Every holder is inside a crash window. If one is *permanently*
+        // dead we must not park on it; prefer a holder that can come
+        // back, or fail structured when none can.
+        if self.nodes[chain[off]].faults.dead(t) {
+            match chain.iter().position(|&h| !self.nodes[h].faults.dead(t)) {
+                Some(pos) => off = pos,
+                None => {
+                    let err = match self.coordinator.as_mut() {
+                        Some(c) => c.note_unavailable(region, owner),
+                        None => MemError::RegionUnavailable { region, node: owner },
+                    };
+                    return Err(err);
+                }
+            }
+        }
+        // Park on a survivable holder and wait the window out (finite).
         self.leases[owner].offset = off;
-        self.nodes[chain[off]]
+        Ok(self.nodes[chain[off]]
             .read_wire(t, bytes, gbps, None, class)
-            .expect("unbounded retry always completes")
+            .expect("unbounded retry always completes"))
     }
 
     /// Writeback release through the lease holder, plus an overlapped
     /// coherence fan-out to every other holder. Returns the release
     /// completion (the fan-out does not gate the host).
-    pub fn lease_write(&mut self, owner: usize, now: Ns, bytes: u64, numa_node: usize) -> Ns {
+    pub fn lease_write(
+        &mut self,
+        owner: usize,
+        region: RegionId,
+        now: Ns,
+        bytes: u64,
+        numa_node: usize,
+    ) -> Result<Ns, MemError> {
         let gbps = self.gbps_at(numa_node);
         let chain = self.holder_chain(owner);
+        if chain.is_empty() {
+            let err = match self.coordinator.as_mut() {
+                Some(c) => c.note_unavailable(region, owner),
+                None => MemError::RegionUnavailable { region, node: owner },
+            };
+            return Err(err);
+        }
         let (release, served) = if chain.len() == 1 {
-            let done = self.nodes[owner]
+            let h = chain[0];
+            if self.nodes[h].faults.dead(now) {
+                self.note_health(h, false);
+                let err = match self.coordinator.as_mut() {
+                    Some(c) => c.note_unavailable(region, owner),
+                    None => MemError::RegionUnavailable { region, node: owner },
+                };
+                return Err(err);
+            }
+            let done = self.nodes[h]
                 .write_wire(now, bytes, gbps, None, TrafficClass::Writeback)
                 .expect("unbounded retry always completes");
-            (done, owner)
+            (done, h)
         } else {
             self.reprobe_primary(owner, &chain, now);
+            let budget = self.nodes[chain[0]].faults.cfg.retry_budget;
             let mut t = now;
-            let mut off = self.leases[owner].offset;
+            let mut off = self.leases[owner].offset % chain.len();
             let mut served = None;
             for _ in 0..chain.len() {
                 let h = chain[off];
-                match self.nodes[h].write_wire(t, bytes, gbps, Some(RETRY_BUDGET), TrafficClass::Writeback)
+                match self.nodes[h].write_wire(t, bytes, gbps, Some(budget), TrafficClass::Writeback)
                 {
                     Ok(done) => {
                         self.leases[owner].offset = off;
+                        self.note_health(h, true);
                         served = Some((done, h));
                         break;
                     }
                     Err(RetryExhausted) => {
                         self.nodes[h].faults.stats.failovers += 1;
-                        t += exhausted_attempts_ns(RETRY_BUDGET);
+                        self.note_health(h, false);
+                        t += exhausted_attempts_ns(budget);
                         off = (off + 1) % chain.len();
                     }
                 }
             }
-            served.unwrap_or_else(|| {
-                self.leases[owner].offset = off;
-                let h = chain[off];
-                let done = self.nodes[h]
-                    .write_wire(t, bytes, gbps, None, TrafficClass::Writeback)
-                    .expect("unbounded retry always completes");
-                (done, h)
-            })
+            match served {
+                Some(s) => s,
+                None => {
+                    if self.nodes[chain[off]].faults.dead(t) {
+                        match chain.iter().position(|&h| !self.nodes[h].faults.dead(t)) {
+                            Some(pos) => off = pos,
+                            None => {
+                                let err = match self.coordinator.as_mut() {
+                                    Some(c) => c.note_unavailable(region, owner),
+                                    None => MemError::RegionUnavailable { region, node: owner },
+                                };
+                                return Err(err);
+                            }
+                        }
+                    }
+                    // Park on a survivable holder (windows are finite).
+                    self.leases[owner].offset = off;
+                    let h = chain[off];
+                    let done = self.nodes[h]
+                        .write_wire(t, bytes, gbps, None, TrafficClass::Writeback)
+                        .expect("unbounded retry always completes");
+                    (done, h)
+                }
+            }
         };
         for &h in chain.iter().filter(|&&h| h != served) {
+            if self.nodes[h].faults.dead(now) {
+                // An undeclared-dead replica would park the fan-out
+                // forever; skip it — once declared, repair re-replicates.
+                continue;
+            }
             // Replica coherence traffic; charged on the replica's own
             // link, overlapped at `now`, waits out crashes unbounded.
             let _ = self.nodes[h].write_wire(now, bytes, gbps, None, TrafficClass::Writeback);
         }
-        release
+        Ok(release)
     }
 
     /// Allocate a fleet region: carve the page range into per-owner
@@ -363,10 +509,11 @@ impl MemFleet {
         chunk_bytes: u64,
         init: Option<Vec<u8>>,
     ) -> Result<(RegionId, Ns), MemError> {
+        self.membership_tick(now);
         let padded = bytes.div_ceil(chunk_bytes).max(1) * chunk_bytes;
         let total_pages = padded / chunk_bytes;
-        let n = self.nodes.len();
-        let mut shards: Vec<Vec<u8>> = (0..n)
+        let slots = self.directory.nodes();
+        let mut shards: Vec<Vec<u8>> = (0..slots)
             .map(|o| {
                 Vec::with_capacity((self.directory.local_pages(total_pages, o) * chunk_bytes) as usize)
             })
@@ -392,9 +539,19 @@ impl MemFleet {
         }
         let (region, shard_ids) = self.directory.alloc_ids(total_pages);
         let mut reserved: Vec<(usize, RegionId)> = Vec::new();
-        for owner in 0..n {
+        for owner in 0..slots {
             let sid = shard_ids[owner];
-            for h in self.holder_chain(owner) {
+            // Holders plus any in-flight migration targets: a region born
+            // inside a copy window must exist on the target at cutover.
+            let mut holders = self.holder_chain(owner);
+            if let Some(coord) = self.coordinator.as_ref() {
+                for t in coord.targets_for(owner) {
+                    if !holders.contains(&t) {
+                        holders.push(t);
+                    }
+                }
+            }
+            for h in holders {
                 if let Err(e) = self.nodes[h].mem.store.reserve_with_data(sid, shards[owner].clone())
                 {
                     for &(rn, rid) in &reserved {
@@ -407,7 +564,10 @@ impl MemFleet {
             }
         }
         let mut done = now;
-        for i in 0..n {
+        for i in 0..self.nodes.len() {
+            if self.node_out_of_service(i) {
+                continue;
+            }
             // RPC handling plus region setup on the node CPU.
             let svc = self.nodes[i].mem.cfg.rpc_service_ns * 2;
             done = done.max(self.nodes[i].rpc(now, svc));
@@ -417,24 +577,43 @@ impl MemFleet {
 
     /// Free a fleet region on every holder; overlapped control RPCs.
     pub fn free(&mut self, now: Ns, region: RegionId) -> Result<Ns, MemError> {
+        self.membership_tick(now);
         let r = self.directory.remove(region)?;
-        let n = self.nodes.len();
-        for owner in 0..n {
+        let slots = self.directory.nodes();
+        for owner in 0..slots {
             let sid = r.shard_ids[owner];
-            for h in self.holder_chain(owner) {
+            let mut holders = self.directory.chain(owner).to_vec();
+            if let Some(coord) = self.coordinator.as_ref() {
+                for t in coord.targets_for(owner) {
+                    if !holders.contains(&t) {
+                        holders.push(t);
+                    }
+                }
+            }
+            for h in holders {
                 let _ = self.nodes[h].mem.store.free(sid);
             }
         }
         let mut done = now;
-        for i in 0..n {
+        for i in 0..self.nodes.len() {
+            if self.node_out_of_service(i) {
+                continue;
+            }
             let svc = self.nodes[i].mem.cfg.rpc_service_ns;
             done = done.max(self.nodes[i].rpc(now, svc));
         }
         Ok(done)
     }
 
-    /// Demand-fetch one page: map, copy the bytes from the owner's shard
-    /// (all holders are coherent), charge the wire on the lease path.
+    /// A node the control plane no longer talks to (declared dead or
+    /// drained past its cutover).
+    fn node_out_of_service(&self, node: usize) -> bool {
+        self.coordinator.as_ref().is_some_and(|c| c.is_retired(node))
+    }
+
+    /// Demand-fetch one page: map, copy the bytes from the slot's
+    /// current primary shard (all holders are coherent), charge the wire
+    /// on the lease path.
     pub fn fetch_page(
         &mut self,
         now: Ns,
@@ -444,15 +623,27 @@ impl MemFleet {
         numa_node: usize,
         out: &mut [u8],
     ) -> Result<Ns, MemError> {
+        self.membership_tick(now);
+        let now = self.fence(now);
         let (owner, local) = self.directory.locate(region, page)?;
+        let chain = self.directory.chain(owner);
+        if chain.is_empty() {
+            let err = match self.coordinator.as_mut() {
+                Some(c) => c.note_unavailable(region, owner),
+                None => MemError::RegionUnavailable { region, node: owner },
+            };
+            return Err(err);
+        }
+        let primary = chain[0];
         let sid = self.directory.get(region)?.shard_ids[owner];
-        self.nodes[owner].mem.store.read(sid, local * chunk_bytes, out)?;
-        let post = self.nodes[owner].qp.post_batch(1);
-        Ok(self.lease_read(owner, now + post, out.len() as u64, numa_node, TrafficClass::OnDemand))
+        self.nodes[primary].mem.store.read(sid, local * chunk_bytes, out)?;
+        let post = self.nodes[primary].qp.post_batch(1);
+        self.lease_read(owner, region, now + post, out.len() as u64, numa_node, TrafficClass::OnDemand)
     }
 
-    /// Write one page through to every holder's store, charging the
-    /// release on the lease path and the fan-out overlapped.
+    /// Write one page through to every holder's store (plus any in-flight
+    /// migration target: the dual-write window), charging the release on
+    /// the lease path and the fan-out overlapped.
     pub fn writeback_page(
         &mut self,
         now: Ns,
@@ -462,13 +653,59 @@ impl MemFleet {
         numa_node: usize,
         data: &[u8],
     ) -> Result<Ns, MemError> {
+        self.membership_tick(now);
+        let now = self.fence(now);
         let (owner, local) = self.directory.locate(region, page)?;
         let sid = self.directory.get(region)?.shard_ids[owner];
         for h in self.holder_chain(owner) {
             self.nodes[h].mem.store.write(sid, local * chunk_bytes, data)?;
         }
-        let post = self.nodes[owner].qp.post_batch(1);
-        Ok(self.lease_write(owner, now + post, data.len() as u64, numa_node))
+        self.dual_write(owner, now, sid, local * chunk_bytes, data, numa_node);
+        let chain = self.directory.chain(owner);
+        if chain.is_empty() {
+            let err = match self.coordinator.as_mut() {
+                Some(c) => c.note_unavailable(region, owner),
+                None => MemError::RegionUnavailable { region, node: owner },
+            };
+            return Err(err);
+        }
+        let primary = chain[0];
+        let post = self.nodes[primary].qp.post_batch(1);
+        self.lease_write(owner, region, now + post, data.len() as u64, numa_node)
+    }
+
+    /// Mirror a writeback to every in-flight migration target of `slot`
+    /// so the copied image stays coherent through the window. Charged on
+    /// the target's link, overlapped (it does not gate the host).
+    fn dual_write(
+        &mut self,
+        slot: usize,
+        now: Ns,
+        sid: RegionId,
+        offset: u64,
+        data: &[u8],
+        numa_node: usize,
+    ) {
+        let Some(coord) = self.coordinator.as_ref() else { return };
+        let targets = coord.targets_for(slot);
+        if targets.is_empty() {
+            return;
+        }
+        let gbps = self.net_gbps * self.numa.rdma_factor[numa_node % self.numa.nodes];
+        for t in targets {
+            if self.nodes[t].mem.store.write(sid, offset, data).is_ok() {
+                let _ = self.nodes[t].write_wire(
+                    now,
+                    data.len() as u64,
+                    gbps,
+                    None,
+                    TrafficClass::Writeback,
+                );
+                if let Some(c) = self.coordinator.as_mut() {
+                    c.stats.dual_write_bytes += data.len() as u64;
+                }
+            }
+        }
     }
 
     /// Per-node counters for `RunMetrics` (QP counters are deltas since
@@ -532,6 +769,304 @@ impl MemFleet {
             nd.doorbells_base = nd.qp.doorbells();
         }
     }
+
+    // ------------------------------------------------------------------
+    // Membership reconcile loop (virtual time has no background threads:
+    // every data-plane entry point drives one pass).
+    // ------------------------------------------------------------------
+
+    /// One reconcile pass at virtual time `now`. A static fleet (no
+    /// coordinator) returns immediately — the membership layer is
+    /// provably zero-cost when disabled.
+    pub fn membership_tick(&mut self, now: Ns) {
+        let Some(mut coord) = self.coordinator.take() else { return };
+        self.finalize_migrations(&mut coord, now);
+        self.detect_and_repair(&mut coord, now);
+        self.maybe_join(&mut coord, now);
+        self.maybe_drain(&mut coord, now);
+        self.coordinator = Some(coord);
+    }
+
+    /// Epoch fence for a host request issued at `now`. A host view that
+    /// predates the latest cutover is rejected (the structured
+    /// `MemError::StaleEpoch` path), charged one control round trip to
+    /// refresh the directory, and transparently retried: the returned
+    /// time is when the refreshed request proceeds. Rejects and retries
+    /// are both counted, and the ledger pins `rejects == retries`.
+    pub fn fence(&mut self, now: Ns) -> Ns {
+        if self.coordinator.is_none() {
+            return now;
+        }
+        let cur = self.directory.epoch();
+        if check_epoch(self.host_epoch, cur).is_ok() {
+            return now;
+        }
+        let coord = self.coordinator.as_mut().expect("checked above");
+        coord.stats.stale_epoch_rejects += 1;
+        let refresh = (0..self.nodes.len()).find(|&i| !coord.is_retired(i));
+        let t = match refresh {
+            Some(i) => {
+                let svc = self.nodes[i].mem.cfg.rpc_service_ns;
+                self.nodes[i].rpc(now, svc)
+            }
+            None => now,
+        };
+        self.host_epoch = cur;
+        coord.stats.stale_epoch_retries += 1;
+        t
+    }
+
+    /// Cut over every migration whose copy window has closed: edit the
+    /// holder chain, reset the slot lease, free the vacated holder's
+    /// shards, and bump the epoch once for the whole batch.
+    fn finalize_migrations(&mut self, coord: &mut FleetCoordinator, now: Ns) {
+        if coord.migrations.is_empty() {
+            return;
+        }
+        let due: Vec<Migration> =
+            coord.migrations.iter().copied().filter(|m| now >= m.ready_at).collect();
+        if due.is_empty() {
+            return;
+        }
+        coord.migrations.retain(|m| now < m.ready_at);
+        let keep = self.cfg.replicas + 1;
+        let mut vacated: Vec<(usize, usize)> = Vec::new();
+        for m in &due {
+            let chain = self.directory.chain_mut(m.slot);
+            match m.kind {
+                MigrationKind::Replace => {
+                    match chain.iter().position(|&h| h == m.from) {
+                        Some(pos) => chain[pos] = m.to,
+                        None if !chain.contains(&m.to) => chain.push(m.to),
+                        None => {}
+                    }
+                    vacated.push((m.from, m.slot));
+                }
+                MigrationKind::Promote => {
+                    chain.retain(|&h| h != m.to);
+                    chain.insert(0, m.to);
+                    while chain.len() > keep {
+                        let dropped = chain.pop().expect("len checked");
+                        vacated.push((dropped, m.slot));
+                    }
+                }
+            }
+            self.leases[m.slot] = Lease::default();
+        }
+        for (node, slot) in vacated {
+            for rid in self.directory.region_ids_sorted() {
+                if let Ok(r) = self.directory.get(rid) {
+                    let sid = r.shard_ids[slot];
+                    let _ = self.nodes[node].mem.store.free(sid);
+                }
+            }
+            // A draining node that just left its last chain is out of
+            // service; latch its byte counter so post-cutover traffic
+            // (which must stay zero) is observable.
+            if node == coord.cfg.drain_node
+                && coord.cfg.drain_at_ns > 0
+                && !coord.is_retired(node)
+                && self.directory.chains().iter().all(|c| !c.contains(&node))
+            {
+                coord.retire(node);
+                let base = self.nodes[node].tx.stats().total_bytes()
+                    + self.nodes[node].rx.stats().total_bytes();
+                coord.drain_baseline = Some((node, base));
+            }
+        }
+        self.directory.bump_epoch();
+    }
+
+    /// Health sweep and permanent-failure repair: probe suspect nodes
+    /// (rate-limited), declare nodes past the consecutive-failure
+    /// threshold dead, drop them from every chain, and re-replicate each
+    /// deficient slot from a surviving holder until the replication
+    /// factor is restored (anti-entropy, charged on the real links).
+    fn detect_and_repair(&mut self, coord: &mut FleetCoordinator, now: Ns) {
+        let reprobe = self.base_fault.reprobe_ns;
+        if !coord.suspects().is_empty() && coord.sweep_due(now, reprobe) {
+            for s in coord.suspects() {
+                if self.nodes[s].probe(now) {
+                    coord.note_ok(s);
+                } else {
+                    coord.note_failure(s);
+                }
+            }
+        }
+        let condemned = coord.condemned();
+        if condemned.is_empty() {
+            return;
+        }
+        for &node in &condemned {
+            coord.declare_dead(node);
+            for slot in 0..self.directory.nodes() {
+                let chain = self.directory.chain_mut(slot);
+                let before = chain.len();
+                chain.retain(|&h| h != node);
+                if chain.len() != before {
+                    self.leases[slot] = Lease::default();
+                }
+            }
+            // A migration to or from a dead node can never finish.
+            coord.migrations.retain(|m| m.from != node && m.to != node);
+        }
+        let want = self.cfg.replicas + 1;
+        for slot in 0..self.directory.nodes() {
+            loop {
+                let chain = self.directory.chain(slot).to_vec();
+                if chain.is_empty() || chain.len() >= want {
+                    break;
+                }
+                let Some(tgt) = coord.pick_target(self.directory.chains(), &chain) else {
+                    break;
+                };
+                let (bytes, _) = self.copy_slot(slot, chain[0], tgt, now);
+                coord.stats.repair_bytes += bytes;
+                self.directory.chain_mut(slot).push(tgt);
+            }
+        }
+        self.directory.bump_epoch();
+    }
+
+    /// Start the planned drain: schedule a Replace migration for every
+    /// slot the drained node holds, copying the live image now and
+    /// dual-writing until the cutover.
+    fn maybe_drain(&mut self, coord: &mut FleetCoordinator, now: Ns) {
+        if !coord.drain_pending(now) {
+            return;
+        }
+        coord.begin_drain();
+        let node = coord.cfg.drain_node;
+        if coord.is_dead(node) || coord.is_retired(node) {
+            return;
+        }
+        for slot in 0..self.directory.nodes() {
+            let chain = self.directory.chain(slot).to_vec();
+            if !chain.contains(&node) {
+                continue;
+            }
+            let Some(tgt) = coord.pick_target(self.directory.chains(), &chain) else {
+                continue; // nowhere to move — the drain stalls on this slot
+            };
+            let (_, ready_at) = self.copy_slot(slot, node, tgt, now);
+            coord.stats.pages_migrated += self.slot_pages(slot);
+            coord.migrations.push(Migration {
+                slot,
+                from: node,
+                to: tgt,
+                ready_at,
+                kind: MigrationKind::Replace,
+            });
+        }
+    }
+
+    /// Bring a new physical node into the fleet and rebalance: hand it a
+    /// fair share of primaries via Promote migrations.
+    fn maybe_join(&mut self, coord: &mut FleetCoordinator, now: Ns) {
+        if !coord.join_pending(now) {
+            return;
+        }
+        let new_id = self.nodes.len();
+        self.nodes.push(FleetNode::new(
+            new_id,
+            &self.fabric_cfg,
+            self.memcfg.clone(),
+            &self.base_fault,
+        ));
+        coord.note_join();
+        let slots = self.directory.nodes();
+        let live = (0..self.nodes.len()).filter(|&i| !coord.is_retired(i)).count().max(1);
+        let want = (slots / live).max(1);
+        let mut moved = 0usize;
+        for slot in 0..slots {
+            if moved >= want {
+                break;
+            }
+            let chain = self.directory.chain(slot).to_vec();
+            if chain.is_empty() || chain.contains(&new_id) {
+                continue;
+            }
+            let (_, ready_at) = self.copy_slot(slot, chain[0], new_id, now);
+            coord.stats.pages_migrated += self.slot_pages(slot);
+            coord.migrations.push(Migration {
+                slot,
+                from: chain[0],
+                to: new_id,
+                ready_at,
+                kind: MigrationKind::Promote,
+            });
+            moved += 1;
+        }
+    }
+
+    /// Pages logical slot `slot` holds across all live regions.
+    fn slot_pages(&self, slot: usize) -> u64 {
+        self.directory
+            .region_ids_sorted()
+            .iter()
+            .filter_map(|&rid| self.directory.get(rid).ok())
+            .map(|r| self.directory.local_pages(r.total_pages, slot))
+            .sum()
+    }
+
+    /// Copy every region's shard image of `slot` from `src` onto `tgt`,
+    /// serially: read leg charged on `src`'s link, write leg on `tgt`'s,
+    /// both as background (anti-entropy / migration) traffic. Returns
+    /// the bytes copied and the wire completion time.
+    fn copy_slot(&mut self, slot: usize, src: usize, tgt: usize, now: Ns) -> (u64, Ns) {
+        let gbps = self.net_gbps;
+        let mut bytes = 0u64;
+        let mut done = now;
+        for rid in self.directory.region_ids_sorted() {
+            let Ok(r) = self.directory.get(rid) else { continue };
+            let sid = r.shard_ids[slot];
+            let Some(size) = self.nodes[src].mem.store.region_size(sid) else { continue };
+            let data =
+                self.nodes[src].mem.store.slice(sid, 0, size).expect("sized slice in range").to_vec();
+            if self.nodes[tgt].mem.store.reserve_with_data(sid, data.clone()).is_err() {
+                // Already held (a prior migration target): overwrite to
+                // the coherent image instead.
+                if self.nodes[tgt].mem.store.write(sid, 0, &data).is_err() {
+                    continue;
+                }
+            }
+            if size > 0 {
+                let t_read = self.nodes[src]
+                    .read_wire(done, size, gbps, None, TrafficClass::Background)
+                    .expect("unbounded retry always completes");
+                done = self.nodes[tgt]
+                    .write_wire(t_read, size, gbps, None, TrafficClass::Background)
+                    .expect("unbounded retry always completes");
+            }
+            bytes += size;
+        }
+        (bytes, done)
+    }
+
+    /// Snapshot the membership ledger (all-zero on a static fleet). The
+    /// epoch, minimum chain length, and post-cutover drain traffic are
+    /// computed at collection time; the rest accumulates in the
+    /// coordinator and, like the fault ledger, survives `reset_stats`.
+    pub fn membership_stats(&self) -> MembershipStats {
+        let Some(coord) = self.coordinator.as_ref() else {
+            return MembershipStats::default();
+        };
+        let mut s = coord.stats;
+        s.epoch = self.directory.epoch();
+        s.min_holders =
+            self.directory.chains().iter().map(|c| c.len() as u64).min().unwrap_or(0);
+        if let Some((node, base)) = coord.drain_baseline {
+            let total = self.nodes[node].tx.stats().total_bytes()
+                + self.nodes[node].rx.stats().total_bytes();
+            s.post_cutover_drain_bytes = total.saturating_sub(base);
+        }
+        s
+    }
+
+    /// First structured unavailability error, for service → CLI surfacing.
+    pub fn membership_fatal(&self) -> Option<MemError> {
+        self.coordinator.as_ref().and_then(|c| c.fatal)
+    }
 }
 
 #[cfg(test)]
@@ -540,11 +1075,22 @@ mod tests {
     use crate::coordinator::config::ClusterConfig;
 
     fn fleet(nodes: usize, stripe: u64, replicas: usize, fault: FaultConfig) -> MemFleet {
+        fleet_with(nodes, stripe, replicas, fault, MembershipConfig::default())
+    }
+
+    fn fleet_with(
+        nodes: usize,
+        stripe: u64,
+        replicas: usize,
+        fault: FaultConfig,
+        membership: MembershipConfig,
+    ) -> MemFleet {
         let cfg = ClusterConfig::tiny();
         MemFleet::build(
             FleetConfig { mem_nodes: nodes, stripe_pages: stripe, replicas },
             &cfg,
             fault,
+            membership,
         )
     }
 
@@ -639,13 +1185,13 @@ mod tests {
         let pieces = f4.directory.split_span(r4, 0, pages).unwrap();
         let mut done4 = 0;
         for p in &pieces {
-            let d = f4.lease_read(p.owner, 0, p.pages * c, 2, TrafficClass::OnDemand);
+            let d = f4.lease_read(p.owner, r4, 0, p.pages * c, 2, TrafficClass::OnDemand).unwrap();
             done4 = done4.max(d);
         }
         // ...vs the same pages serialized on one node.
         let mut f1 = fleet(1, 0, 0, FaultConfig::default());
         let (r1, _) = f1.alloc(0, pages * c, c, None).unwrap();
-        let done1 = f1.lease_read(0, 0, pages * c, 2, TrafficClass::OnDemand);
+        let done1 = f1.lease_read(0, r1, 0, pages * c, 2, TrafficClass::OnDemand).unwrap();
         assert!(
             done4 < done1,
             "striped fan-out ({done4} ns) should beat one node ({done1} ns)"
@@ -677,5 +1223,170 @@ mod tests {
             assert_eq!(s.net_bytes, 0, "traffic cleared on node {}", s.node);
             assert_eq!(s.posted, 0, "qp deltas cleared on node {}", s.node);
         }
+    }
+
+    #[test]
+    fn static_fleet_has_no_coordinator_and_zero_membership_ledger() {
+        let c = chunk();
+        let mut f = fleet(3, 1, 1, FaultConfig::default());
+        assert!(f.coordinator.is_none());
+        let (region, _) = f.alloc(0, 6 * c, c, None).unwrap();
+        let mut out = vec![0u8; c as usize];
+        for p in 0..6 {
+            f.fetch_page(0, region, p, c, 2, &mut out).unwrap();
+        }
+        assert_eq!(f.membership_stats(), MembershipStats::default());
+        assert_eq!(f.membership_fatal(), None);
+        assert_eq!(f.directory.epoch(), 0, "static chains never cut over");
+    }
+
+    #[test]
+    fn permanent_kill_declares_death_and_repairs_replication() {
+        let c = chunk();
+        let memb = MembershipConfig {
+            kill_node: 1,
+            kill_at_ns: 10_000,
+            fail_threshold: 2,
+            ..Default::default()
+        };
+        let mut f = fleet_with(3, 1, 1, FaultConfig::default(), memb);
+        let pages = 9u64;
+        let data: Vec<u8> = (0..pages * c).map(|i| (i % 241) as u8).collect();
+        let (region, _) = f.alloc(0, pages * c, c, Some(data.clone())).unwrap();
+        let mut out = vec![0u8; c as usize];
+        let mut t = 20_000;
+        for round in 0..6 {
+            for p in 0..pages {
+                f.fetch_page(t, region, p, c, 2, &mut out).unwrap();
+                assert_eq!(
+                    &out[..],
+                    &data[(p * c) as usize..((p + 1) * c) as usize],
+                    "round {round} page {p} bit-identical through the death"
+                );
+                t += 5_000;
+            }
+        }
+        let s = f.membership_stats();
+        assert_eq!(s.deaths_declared, 1, "node 1 declared permanently dead");
+        assert!(s.repair_bytes > 0, "anti-entropy copied real bytes");
+        assert!(s.epoch >= 1, "the cutover bumped the epoch");
+        assert_eq!(s.min_holders, 2, "repair restored the replication factor");
+        assert_eq!(s.unavailable_regions, 0);
+        assert_eq!(s.stale_epoch_rejects, s.stale_epoch_retries, "every reject retried");
+        for slot in 0..3 {
+            assert!(!f.directory.chain(slot).contains(&1), "dead node left every chain");
+        }
+        // The ledger still balances across the whole fleet.
+        let fs = f.fault_stats_sum();
+        assert_eq!(fs.timeouts, fs.injected_drops + fs.crash_rejections);
+        assert_eq!(fs.timeouts + fs.detected_corruptions, fs.retries + fs.exhaustions);
+    }
+
+    #[test]
+    fn drain_migrates_slots_and_silences_the_node_after_cutover() {
+        let c = chunk();
+        let memb =
+            MembershipConfig { drain_node: 0, drain_at_ns: 10_000, ..Default::default() };
+        let mut f = fleet_with(3, 1, 0, FaultConfig::default(), memb);
+        let pages = 6u64;
+        let data: Vec<u8> = (0..pages * c).map(|i| (i % 239) as u8).collect();
+        let (region, _) = f.alloc(0, pages * c, c, Some(data.clone())).unwrap();
+        let mut out = vec![0u8; c as usize];
+        let mut t = 20_000;
+        for _ in 0..8 {
+            for p in 0..pages {
+                f.fetch_page(t, region, p, c, 2, &mut out).unwrap();
+                assert_eq!(
+                    &out[..],
+                    &data[(p * c) as usize..((p + 1) * c) as usize],
+                    "reads bit-identical through the drain"
+                );
+                t += 50_000;
+            }
+        }
+        let s = f.membership_stats();
+        assert!(s.pages_migrated > 0, "the drained node's slots moved");
+        assert!(s.epoch >= 1);
+        assert_eq!(s.post_cutover_drain_bytes, 0, "a drained node serves nothing");
+        assert_eq!(s.deaths_declared, 0, "a planned drain is not a death");
+        for slot in 0..3 {
+            assert!(!f.directory.chain(slot).contains(&0), "node 0 left every chain");
+        }
+        // Writebacks still land coherently on the new holders.
+        let new = vec![0x5Au8; c as usize];
+        f.writeback_page(t, region, 0, c, 2, &new).unwrap();
+        let (owner, local) = f.directory.locate(region, 0).unwrap();
+        let sid = f.directory.get(region).unwrap().shard_ids[owner];
+        for h in f.holder_chain(owner) {
+            assert_eq!(f.nodes[h].mem.store.slice(sid, local * c, c).unwrap(), &new[..]);
+        }
+    }
+
+    #[test]
+    fn join_adds_a_node_and_rebalances_primaries_onto_it() {
+        let c = chunk();
+        let memb = MembershipConfig { join_at_ns: 10_000, ..Default::default() };
+        let mut f = fleet_with(2, 1, 0, FaultConfig::default(), memb);
+        let pages = 8u64;
+        let data: Vec<u8> = (0..pages * c).map(|i| (i % 251) as u8).collect();
+        let (region, _) = f.alloc(0, pages * c, c, Some(data.clone())).unwrap();
+        let mut out = vec![0u8; c as usize];
+        let mut t = 20_000;
+        for _ in 0..6 {
+            for p in 0..pages {
+                f.fetch_page(t, region, p, c, 2, &mut out).unwrap();
+                assert_eq!(
+                    &out[..],
+                    &data[(p * c) as usize..((p + 1) * c) as usize],
+                    "reads bit-identical through the join"
+                );
+                t += 100_000;
+            }
+        }
+        assert_eq!(f.nodes.len(), 3, "the joined node is physical");
+        let s = f.membership_stats();
+        assert!(s.pages_migrated > 0, "rebalance moved primaries");
+        assert!(s.epoch >= 1);
+        assert!(
+            f.directory.chains().iter().any(|ch| ch.contains(&2)),
+            "the joined node serves at least one slot"
+        );
+    }
+
+    #[test]
+    fn losing_the_whole_chain_degrades_with_a_structured_error() {
+        let c = chunk();
+        let memb = MembershipConfig {
+            kill_node: 1,
+            kill_at_ns: 5_000,
+            fail_threshold: 1,
+            ..Default::default()
+        };
+        let mut f = fleet_with(2, 1, 0, FaultConfig::default(), memb);
+        let pages = 4u64;
+        let (region, _) = f.alloc(0, pages * c, c, None).unwrap();
+        let mut out = vec![0u8; c as usize];
+        // Page 1 lives on node 1 (stripe 1, R=0): after the kill its
+        // whole chain is gone and no replica can repair it.
+        let mut err = None;
+        let mut t = 10_000;
+        for _ in 0..4 {
+            match f.fetch_page(t, region, 1, c, 2, &mut out) {
+                Ok(_) => t += 10_000,
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        assert!(
+            matches!(err, Some(MemError::RegionUnavailable { .. })),
+            "structured degradation, not an infinite park: {err:?}"
+        );
+        assert_eq!(f.membership_fatal(), err, "first fatal latched for the service");
+        let s = f.membership_stats();
+        assert!(s.unavailable_regions >= 1);
+        // The surviving slot still serves.
+        f.fetch_page(t + 10_000, region, 0, c, 2, &mut out).unwrap();
     }
 }

@@ -1,0 +1,438 @@
+//! Fleet membership control plane: the reconcile-loop coordinator.
+//!
+//! The static fleet (PR 7) masks *transient* crash windows with lease
+//! failover, but a permanently dead node, a planned drain, or a capacity
+//! join either wedges a run or is impossible. This module supplies the
+//! control-plane state machine for the dynamic half, in the
+//! control-plane / reconcile-loop split MIND (arXiv:2107.00164) argues
+//! for: placement arithmetic stays pure and logical, while the
+//! [`FleetCoordinator`] owns *physical* membership — per-node health
+//! scores, declared deaths, live migrations — and every chain cutover is
+//! fenced by the directory **epoch**.
+//!
+//! The coordinator is deliberately just data + decisions: it never
+//! touches stores or links itself. `MemFleet` drives it from data-plane
+//! entry points (there are no background threads in virtual time) and
+//! performs the actual byte copies and wire charges, so all repair and
+//! migration traffic lands on the same simulated links as demand
+//! traffic.
+//!
+//! Three behaviors, all observable through [`MembershipStats`]:
+//!
+//! * **Permanent-failure repair** — retry-budget exhaustions and failed
+//!   probes feed a per-node health score; crossing
+//!   [`MembershipConfig::fail_threshold`] *consecutive* failures (any
+//!   success resets the score, so finite crash windows never accumulate)
+//!   declares the node dead, drops it from every holder chain, and
+//!   re-replicates its slots from surviving replicas until the
+//!   replication factor is restored.
+//! * **Planned drain / join** — live shard migration: copy the slot
+//!   image to the target, dual-write during the copy window, then an
+//!   epoch-fenced cutover. In-flight requests with a stale epoch are
+//!   rejected with `MemError::StaleEpoch` and transparently retried
+//!   through the refreshed directory.
+//! * **Graceful degradation** — a slot whose holder chain empties makes
+//!   reads fail with structured `MemError::RegionUnavailable` instead of
+//!   spinning the retry budget forever.
+
+use crate::memnode::{MemError, RegionId};
+use crate::sim::Ns;
+
+/// Membership schedule and policy knobs. All-zero event times (the
+/// `Default`) mean a static fleet: no coordinator is built and the
+/// membership layer is provably zero-cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MembershipConfig {
+    /// Consecutive health failures (budget exhaustions / failed probes)
+    /// before a node is declared permanently dead.
+    pub fail_threshold: u32,
+    /// Node killed permanently at `kill_at_ns` (`--kill-node id@t`).
+    pub kill_node: usize,
+    /// Virtual time of the permanent kill; 0 = no kill.
+    pub kill_at_ns: Ns,
+    /// Node drained (live-migrated out) at `drain_at_ns`
+    /// (`--drain-node id@t`).
+    pub drain_node: usize,
+    /// Virtual time the drain starts; 0 = no drain.
+    pub drain_at_ns: Ns,
+    /// Virtual time a new node joins the fleet (`--join-node @t`);
+    /// 0 = no join.
+    pub join_at_ns: Ns,
+}
+
+impl Default for MembershipConfig {
+    fn default() -> Self {
+        MembershipConfig {
+            fail_threshold: 3,
+            kill_node: 0,
+            kill_at_ns: 0,
+            drain_node: 0,
+            drain_at_ns: 0,
+            join_at_ns: 0,
+        }
+    }
+}
+
+impl MembershipConfig {
+    /// True when any membership event is scheduled. A disabled config
+    /// builds no coordinator: the fleet data plane short-circuits every
+    /// membership hook.
+    pub fn enabled(&self) -> bool {
+        self.kill_at_ns > 0 || self.drain_at_ns > 0 || self.join_at_ns > 0
+    }
+
+    /// Sanity-check against the fleet it will govern.
+    pub fn validate(&self, mem_nodes: usize) -> Result<(), String> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        if mem_nodes < 2 {
+            return Err("membership events need a fleet (mem-nodes >= 2)".into());
+        }
+        if self.fail_threshold == 0 {
+            return Err("member-fail-threshold must be >= 1".into());
+        }
+        if self.kill_at_ns > 0 && self.kill_node >= mem_nodes {
+            return Err(format!(
+                "kill-node {} out of range (fleet has {} nodes)",
+                self.kill_node, mem_nodes
+            ));
+        }
+        if self.drain_at_ns > 0 && self.drain_node >= mem_nodes {
+            return Err(format!(
+                "drain-node {} out of range (fleet has {} nodes)",
+                self.drain_node, mem_nodes
+            ));
+        }
+        if self.kill_at_ns > 0 && self.drain_at_ns > 0 && self.kill_node == self.drain_node {
+            return Err("cannot kill and drain the same node".into());
+        }
+        Ok(())
+    }
+}
+
+/// Membership ledger, merged into `RunMetrics`. Like the fault ledger it
+/// persists across `reset_stats` (staging vs run scope), so balance
+/// equations hold over a whole session.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MembershipStats {
+    /// Current directory epoch (0 on a static fleet).
+    pub epoch: u64,
+    /// Nodes declared permanently dead by the health score.
+    pub deaths_declared: u64,
+    /// Pages moved by planned migrations (drain + join cutovers).
+    pub pages_migrated: u64,
+    /// Anti-entropy bytes copied to restore the replication factor after
+    /// a death (charged on the real links).
+    pub repair_bytes: u64,
+    /// Extra writeback bytes mirrored to migration targets during copy
+    /// windows.
+    pub dual_write_bytes: u64,
+    /// Requests rejected for carrying a stale directory epoch.
+    pub stale_epoch_rejects: u64,
+    /// Stale-epoch rejects that were transparently retried through the
+    /// refreshed directory (the ledger balances: rejects == retries).
+    pub stale_epoch_retries: u64,
+    /// Reads refused because a region's slot lost its entire holder
+    /// chain (graceful degradation instead of infinite retry).
+    pub unavailable_regions: u64,
+    /// Smallest holder-chain length across slots at collection time —
+    /// `replicas + 1` means repair fully restored R.
+    pub min_holders: u64,
+    /// Wire bytes seen by the drained node *after* its cutover
+    /// (must be 0: a drained node serves nothing).
+    pub post_cutover_drain_bytes: u64,
+}
+
+impl MembershipStats {
+    /// Anything to report? (Gates the human-readable metrics section.)
+    pub fn active(&self) -> bool {
+        self.epoch > 0
+            || self.deaths_declared > 0
+            || self.pages_migrated > 0
+            || self.repair_bytes > 0
+            || self.stale_epoch_rejects > 0
+            || self.unavailable_regions > 0
+    }
+}
+
+/// Epoch fencing: a request built against directory epoch `have` is only
+/// valid while the fleet is still at `have`. This is *the* structured
+/// rejection path for in-flight requests that raced a cutover.
+pub fn check_epoch(have: u64, want: u64) -> Result<(), MemError> {
+    if have == want {
+        Ok(())
+    } else {
+        Err(MemError::StaleEpoch { have, want })
+    }
+}
+
+/// What a finished copy window does at cutover.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MigrationKind {
+    /// Replace `from` with `to` at `from`'s chain position (drain).
+    Replace,
+    /// Make `to` the new primary, truncating the chain to R+1 (join
+    /// rebalance); `from` is the primary being demoted.
+    Promote,
+}
+
+/// One in-flight slot migration: bytes were copied starting at the
+/// schedule time, `ready_at` is the copy's wire completion, and until
+/// the cutover the slot dual-writes to `to`.
+#[derive(Clone, Copy, Debug)]
+pub struct Migration {
+    pub slot: usize,
+    pub from: usize,
+    pub to: usize,
+    pub ready_at: Ns,
+    pub kind: MigrationKind,
+}
+
+/// Reconcile-loop state. Built only when [`MembershipConfig::enabled`];
+/// a `None` coordinator keeps the static fleet's exact code paths.
+#[derive(Clone, Debug)]
+pub struct FleetCoordinator {
+    pub cfg: MembershipConfig,
+    pub stats: MembershipStats,
+    /// Consecutive failure score per physical node (reset on success).
+    health: Vec<u32>,
+    /// Declared permanently dead.
+    dead: Vec<bool>,
+    /// Out of service for placement (dead, or drained past cutover).
+    retired: Vec<bool>,
+    /// In-flight copy windows, finalized when `now >= ready_at`.
+    pub migrations: Vec<Migration>,
+    /// Earliest next active health sweep of suspect nodes.
+    next_sweep_at: Ns,
+    drain_started: bool,
+    join_done: bool,
+    /// Drained node's absolute link-byte counter at cutover; traffic
+    /// beyond it is post-cutover traffic (must stay 0).
+    pub drain_baseline: Option<(usize, u64)>,
+    /// First structured unavailability error, for service → CLI surfacing.
+    pub fatal: Option<MemError>,
+}
+
+impl FleetCoordinator {
+    pub fn new(cfg: MembershipConfig, phys_nodes: usize) -> Self {
+        FleetCoordinator {
+            cfg,
+            stats: MembershipStats::default(),
+            health: vec![0; phys_nodes],
+            dead: vec![false; phys_nodes],
+            retired: vec![false; phys_nodes],
+            migrations: Vec::new(),
+            next_sweep_at: 0,
+            drain_started: false,
+            join_done: false,
+            drain_baseline: None,
+            fatal: None,
+        }
+    }
+
+    /// A new node joined: extend the per-node books.
+    pub fn note_join(&mut self) {
+        self.health.push(0);
+        self.dead.push(false);
+        self.retired.push(false);
+        self.join_done = true;
+    }
+
+    pub fn join_pending(&self, now: Ns) -> bool {
+        self.cfg.join_at_ns > 0 && !self.join_done && now >= self.cfg.join_at_ns
+    }
+
+    pub fn drain_pending(&self, now: Ns) -> bool {
+        self.cfg.drain_at_ns > 0 && !self.drain_started && now >= self.cfg.drain_at_ns
+    }
+
+    pub fn begin_drain(&mut self) {
+        self.drain_started = true;
+    }
+
+    /// Mark a drained node fully out (no chain references it any more).
+    pub fn retire(&mut self, node: usize) {
+        self.retired[node] = true;
+    }
+
+    pub fn is_dead(&self, node: usize) -> bool {
+        self.dead[node]
+    }
+
+    pub fn is_retired(&self, node: usize) -> bool {
+        self.retired[node]
+    }
+
+    /// A request served by `node` succeeded: health resets (crash
+    /// windows are transient — only *consecutive* failures accumulate).
+    pub fn note_ok(&mut self, node: usize) {
+        self.health[node] = 0;
+    }
+
+    /// A bounded retry budget exhausted against `node` (or a probe
+    /// failed): one step toward a death declaration.
+    pub fn note_failure(&mut self, node: usize) {
+        if !self.dead[node] {
+            self.health[node] = self.health[node].saturating_add(1);
+        }
+    }
+
+    /// Nodes with failure evidence worth an active probe.
+    pub fn suspects(&self) -> Vec<usize> {
+        (0..self.health.len())
+            .filter(|&n| !self.dead[n] && self.health[n] > 0)
+            .collect()
+    }
+
+    /// Rate-limit the active sweep to one pass per `reprobe_ns`.
+    pub fn sweep_due(&mut self, now: Ns, reprobe_ns: Ns) -> bool {
+        if now < self.next_sweep_at {
+            return false;
+        }
+        self.next_sweep_at = now + reprobe_ns.max(1);
+        true
+    }
+
+    /// Nodes whose health score crossed the death threshold.
+    pub fn condemned(&self) -> Vec<usize> {
+        (0..self.health.len())
+            .filter(|&n| !self.dead[n] && self.health[n] >= self.cfg.fail_threshold)
+            .collect()
+    }
+
+    pub fn declare_dead(&mut self, node: usize) {
+        self.dead[node] = true;
+        self.retired[node] = true;
+        self.stats.deaths_declared += 1;
+    }
+
+    /// Record a structured unavailability (kept for service → CLI).
+    pub fn note_unavailable(&mut self, region: RegionId, slot: usize) -> MemError {
+        let err = MemError::RegionUnavailable { region, node: slot };
+        self.stats.unavailable_regions += 1;
+        if self.fatal.is_none() {
+            self.fatal = Some(err);
+        }
+        err
+    }
+
+    /// Pick the healthiest placement target: not retired, not already in
+    /// `exclude`, fewest current slot holdings, ties to the lowest id —
+    /// fully deterministic.
+    pub fn pick_target(&self, chains: &[Vec<usize>], exclude: &[usize]) -> Option<usize> {
+        let mut holdings = vec![0usize; self.health.len()];
+        for c in chains {
+            for &h in c {
+                if h < holdings.len() {
+                    holdings[h] += 1;
+                }
+            }
+        }
+        // Pending migration targets count as holders-to-be.
+        for m in &self.migrations {
+            if m.to < holdings.len() {
+                holdings[m.to] += 1;
+            }
+        }
+        (0..self.health.len())
+            .filter(|&n| !self.retired[n] && !exclude.contains(&n))
+            .min_by_key(|&n| (holdings[n], n))
+    }
+
+    /// Active migrations touching `slot` (dual-write targets).
+    pub fn targets_for(&self, slot: usize) -> Vec<usize> {
+        self.migrations.iter().filter(|m| m.slot == slot).map(|m| m.to).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_config_is_default_and_validates() {
+        let cfg = MembershipConfig::default();
+        assert!(!cfg.enabled());
+        assert!(cfg.validate(1).is_ok(), "disabled config never constrains");
+        let armed = MembershipConfig { kill_at_ns: 5, ..Default::default() };
+        assert!(armed.enabled());
+        assert!(armed.validate(1).is_err(), "events need a real fleet");
+        assert!(armed.validate(4).is_ok());
+        let oob = MembershipConfig { kill_node: 4, kill_at_ns: 5, ..Default::default() };
+        assert!(oob.validate(4).is_err());
+        let clash = MembershipConfig {
+            kill_node: 1,
+            kill_at_ns: 5,
+            drain_node: 1,
+            drain_at_ns: 9,
+            ..Default::default()
+        };
+        assert!(clash.validate(4).is_err());
+    }
+
+    #[test]
+    fn epoch_check_is_the_structured_fence() {
+        assert!(check_epoch(3, 3).is_ok());
+        assert_eq!(
+            check_epoch(1, 2),
+            Err(MemError::StaleEpoch { have: 1, want: 2 })
+        );
+        let msg = check_epoch(1, 2).unwrap_err().to_string();
+        assert!(msg.contains("stale") && msg.contains('1') && msg.contains('2'), "{msg}");
+    }
+
+    #[test]
+    fn health_score_needs_consecutive_failures() {
+        let cfg = MembershipConfig { fail_threshold: 3, kill_at_ns: 1, ..Default::default() };
+        let mut c = FleetCoordinator::new(cfg, 3);
+        c.note_failure(0);
+        c.note_failure(0);
+        assert!(c.condemned().is_empty());
+        c.note_ok(0); // a success wipes the evidence
+        c.note_failure(0);
+        c.note_failure(0);
+        assert!(c.condemned().is_empty(), "non-consecutive failures never condemn");
+        c.note_failure(0);
+        assert_eq!(c.condemned(), vec![0]);
+        c.declare_dead(0);
+        assert!(c.condemned().is_empty());
+        assert_eq!(c.stats.deaths_declared, 1);
+        assert_eq!(c.suspects(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn pick_target_balances_and_breaks_ties_deterministically() {
+        let cfg = MembershipConfig { kill_at_ns: 1, ..Default::default() };
+        let mut c = FleetCoordinator::new(cfg, 4);
+        let chains = vec![vec![0, 1], vec![1, 2], vec![2, 0]];
+        // Node 3 holds nothing -> chosen; exclusion respected.
+        assert_eq!(c.pick_target(&chains, &[]), Some(3));
+        assert_eq!(c.pick_target(&chains, &[3]), Some(0), "tie 0/1/2 breaks to lowest id");
+        c.retire(3);
+        assert_eq!(c.pick_target(&chains, &[]), Some(0));
+        assert_eq!(c.pick_target(&chains, &[0, 1, 2]), None);
+    }
+
+    #[test]
+    fn sweep_is_rate_limited() {
+        let cfg = MembershipConfig { kill_at_ns: 1, ..Default::default() };
+        let mut c = FleetCoordinator::new(cfg, 2);
+        assert!(c.sweep_due(0, 1_000));
+        assert!(!c.sweep_due(999, 1_000));
+        assert!(c.sweep_due(1_000, 1_000));
+    }
+
+    #[test]
+    fn unavailable_reads_are_recorded_once_as_fatal() {
+        let cfg = MembershipConfig { kill_at_ns: 1, ..Default::default() };
+        let mut c = FleetCoordinator::new(cfg, 2);
+        let e = c.note_unavailable(7, 1);
+        assert_eq!(e, MemError::RegionUnavailable { region: 7, node: 1 });
+        let _ = c.note_unavailable(8, 0);
+        assert_eq!(c.stats.unavailable_regions, 2);
+        assert_eq!(c.fatal, Some(MemError::RegionUnavailable { region: 7, node: 1 }));
+        let msg = e.to_string();
+        assert!(msg.contains("region 7") && msg.contains("slot 1"), "{msg}");
+    }
+}

@@ -32,21 +32,39 @@
 //!   holder so replicas stay coherent — which is what makes faulted fleet
 //!   runs bit-identical to fault-free single-node runs (the multi-node
 //!   chaos property test in `tests/chaos.rs`).
+//! * **Dynamic membership** (the membership / epoch / reconcile layer):
+//!   [`membership::FleetCoordinator`] is a reconcile loop driven from
+//!   every data-plane entry point. Consecutive retry-budget exhaustions
+//!   and failed probes accumulate into a per-node health score; crossing
+//!   [`MembershipConfig::fail_threshold`] declares the node *permanently
+//!   dead*, drops it from every holder chain, and anti-entropy-repairs
+//!   the lost replicas from survivors. Planned `--drain-node` /
+//!   `--join-node` events live-migrate shards (copy + dual-write window
+//!   + cutover). Every chain cutover bumps the directory **epoch**;
+//!   in-flight host requests carrying a stale epoch are fenced with
+//!   `MemError::StaleEpoch` and transparently retried, and a slot that
+//!   loses its entire chain degrades with `MemError::RegionUnavailable`
+//!   instead of retrying forever. The ledger is [`MembershipStats`].
 //!
 //! Armed by `ClusterConfig::fleet` / `SodaConfig::fleet` / the CLI
-//! (`--mem-nodes`, `--stripe-pages`, `--replicas`); per-node traffic and
-//! failover counters surface as [`FleetNodeStats`] in `RunMetrics`, and
-//! the `abl-fleet` figure sweeps nodes × placement × crash windows.
+//! (`--mem-nodes`, `--stripe-pages`, `--replicas`, plus the membership
+//! schedule `--kill-node` / `--drain-node` / `--join-node`); per-node
+//! traffic and failover counters surface as [`FleetNodeStats`] in
+//! `RunMetrics`, the membership ledger as `membership_*` keys, and the
+//! `abl-fleet` / `abl-membership` figures sweep the fault and membership
+//! spaces.
 //!
 //! [`fleet::REPROBE_NS`]: crate::fleet::REPROBE_NS
 
 pub mod directory;
 #[allow(clippy::module_inception)]
 pub mod fleet;
+pub mod membership;
 pub mod store;
 
 pub use directory::{FleetRegion, RegionDirectory, ShardPiece};
 pub use fleet::{FleetNode, FleetNodeStats, MemFleet, REPROBE_NS};
+pub use membership::{FleetCoordinator, MembershipConfig, MembershipStats};
 pub use store::FleetStore;
 
 /// Fleet topology knobs. `mem_nodes = 1` (the default) means no fleet:

@@ -20,7 +20,7 @@
 //! batching contract still holds: data-plane bytes equal the per-page
 //! fetch loop exactly, only completion times improve.
 
-use crate::backend::{FetchSource, RemoteStore};
+use crate::backend::{FetchError, FetchSource, RemoteStore};
 use crate::coordinator::cluster::Cluster;
 use crate::host::buffer::{PageKey, PageSpan};
 use crate::memnode::{MemError, RegionId};
@@ -91,10 +91,34 @@ impl RemoteStore for FleetStore {
         let chunk = self.chunk_bytes;
         self.cluster.with(|inner| {
             let fleet = inner.fleet.as_mut().expect("FleetStore requires an armed fleet");
-            let done = fleet
-                .fetch_page(now, key.region, key.page, chunk, numa_node, out)
-                .expect("fetched page in range");
-            (done, FetchSource::MemNode)
+            match fleet.fetch_page(now, key.region, key.page, chunk, numa_node, out) {
+                Ok(done) => (done, FetchSource::MemNode),
+                Err(_) => {
+                    // Graceful degradation: the structured error is
+                    // latched in the coordinator (`membership_fatal`) and
+                    // surfaced through the service after the run; the
+                    // page reads as zeros instead of parking forever.
+                    out.fill(0);
+                    (now, FetchSource::MemNode)
+                }
+            }
+        })
+    }
+
+    fn try_fetch(
+        &mut self,
+        now: Ns,
+        key: PageKey,
+        numa_node: usize,
+        out: &mut [u8],
+    ) -> Result<(Ns, FetchSource), FetchError> {
+        let chunk = self.chunk_bytes;
+        self.cluster.with(|inner| {
+            let fleet = inner.fleet.as_mut().expect("FleetStore requires an armed fleet");
+            match fleet.fetch_page(now, key.region, key.page, chunk, numa_node, out) {
+                Ok(done) => Ok((done, FetchSource::MemNode)),
+                Err(e) => Err(FetchError::Unavailable(e)),
+            }
         })
     }
 
@@ -112,6 +136,10 @@ impl RemoteStore for FleetStore {
         debug_assert_eq!(out.len(), total as usize * chunk);
         self.cluster.with(|inner| {
             let fleet = inner.fleet.as_mut().expect("FleetStore requires an armed fleet");
+            // One reconcile pass + epoch fence for the whole batch (the
+            // batch is a single host request).
+            fleet.membership_tick(now);
+            let now = fleet.fence(now);
             // Split every span into owner-local runs.
             let mut pieces: Vec<BatchPiece> = Vec::new();
             let mut base = 0u64;
@@ -131,28 +159,38 @@ impl RemoteStore for FleetStore {
                 }
                 base += s.pages;
             }
-            // Payload bytes come from the owning shard (holders are
-            // coherent; data never depends on the failover path).
+            // Payload bytes come from the slot's current primary holder
+            // (holders are coherent; data never depends on the failover
+            // path). A chain with no survivors degrades to zeros — the
+            // structured error is recorded on the wire pass below.
             for p in &pieces {
                 let sid = fleet.directory.get(p.region).expect("batched region").shard_ids[p.owner];
                 let a = p.out_page as usize * chunk;
                 let b = a + p.pages as usize * chunk;
-                fleet.nodes[p.owner]
-                    .mem
-                    .store
-                    .read(sid, p.local_start * chunk_bytes, &mut out[a..b])
-                    .expect("shard read in range");
+                match fleet.directory.chain(p.owner).first().copied() {
+                    Some(primary) => fleet.nodes[primary]
+                        .mem
+                        .store
+                        .read(sid, p.local_start * chunk_bytes, &mut out[a..b])
+                        .expect("shard read in range"),
+                    None => out[a..b].fill(0),
+                }
             }
-            // Serial host-side posting, one doorbell per owner group;
-            // group k's wire work starts after groups 0..k are posted.
+            // Serial host-side posting, one doorbell per serving-node
+            // group; group k's wire work starts after groups 0..k are
+            // posted. Slots with no surviving holder post nothing.
             let n = fleet.nodes.len();
+            let serving = |fleet: &crate::fleet::MemFleet, slot: usize| {
+                fleet.directory.chain(slot).first().copied()
+            };
             let mut order: Vec<usize> = Vec::new();
             let mut counts: Vec<u64> = vec![0; n];
             for p in &pieces {
-                if counts[p.owner] == 0 {
-                    order.push(p.owner);
+                let Some(node) = serving(fleet, p.owner) else { continue };
+                if counts[node] == 0 {
+                    order.push(node);
                 }
-                counts[p.owner] += 1;
+                counts[node] += 1;
             }
             let mut start_at: Vec<Ns> = vec![now; n];
             let mut t_post = now;
@@ -163,13 +201,20 @@ impl RemoteStore for FleetStore {
             // Fan the pieces out: per-node FIFO, cross-node overlap.
             let mut res = vec![(now, FetchSource::MemNode); total as usize];
             for p in &pieces {
-                let done = fleet.lease_read(
+                let at = serving(fleet, p.owner).map_or(now, |node| start_at[node]);
+                let done = match fleet.lease_read(
                     p.owner,
-                    start_at[p.owner],
+                    p.region,
+                    at,
                     p.pages * chunk_bytes,
                     numa_node,
                     TrafficClass::OnDemand,
-                );
+                ) {
+                    Ok(d) => d,
+                    // Degraded piece: zero payload, error latched for
+                    // the service; the batch itself never panics.
+                    Err(_) => now,
+                };
                 for i in 0..p.pages {
                     res[(p.out_page + i) as usize] = (done, FetchSource::MemNode);
                 }
@@ -181,13 +226,14 @@ impl RemoteStore for FleetStore {
     fn writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Ns {
         let chunk = self.chunk_bytes;
         self.cluster.with(|inner| {
-            inner
-                .fleet
-                .as_mut()
-                .expect("FleetStore requires an armed fleet")
-                // NIC-attached NUMA node, matching the memserver path.
-                .writeback_page(now, key.region, key.page, chunk, 2, data)
-                .expect("written page in range")
+            let fleet = inner.fleet.as_mut().expect("FleetStore requires an armed fleet");
+            // NIC-attached NUMA node, matching the memserver path.
+            match fleet.writeback_page(now, key.region, key.page, chunk, 2, data) {
+                Ok(t) => t,
+                // The slot has no surviving holder: the write is dropped
+                // and the structured error latched for the service.
+                Err(_) => now,
+            }
         })
     }
 }

@@ -205,6 +205,24 @@
 //! The DPU offload path is bypassed while a fleet is armed (DPU offload
 //! over the fleet is future work).
 //!
+//! **Dynamic membership** ([`fleet::membership`]): a
+//! [`fleet::MembershipConfig`] schedule (`--kill-node id@t`,
+//! `--drain-node id@t`, `--join-node @t`, `--member-fail-threshold N`)
+//! adds a [`fleet::FleetCoordinator`] reconcile loop driven from the
+//! data-plane entry points. Consecutive retry-budget exhaustions /
+//! failed probes declare a node permanently dead and re-replicate its
+//! slots from survivors (anti-entropy on the real links); drains and
+//! joins live-migrate shards with a dual-write copy window and an
+//! **epoch-fenced** cutover (stale requests get structured
+//! `MemError::StaleEpoch` and transparently retry); losing a slot's
+//! whole holder chain degrades gracefully with
+//! `MemError::RegionUnavailable`, surfaced service → CLI. The
+//! membership ledger lands in `RunMetrics` as `membership_*` keys, the
+//! `abl-membership` figure sweeps kill/drain/join, and the membership
+//! half of `tests/chaos.rs` (CI "Membership guard") pins bit-identical
+//! outputs, `rejects == retries`, restored replication after repair,
+//! and a provably zero-cost disabled config.
+//!
 //! Quickstart:
 //! ```no_run
 //! use soda::prelude::*;

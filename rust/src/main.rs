@@ -144,6 +144,8 @@ fn soda_config_from_args(args: &Args) -> Result<SodaConfig> {
         "fault-crash-len-ns",
         "fault-crash-every-ns",
         "fault-seed",
+        "fault-retry-budget",
+        "fault-reprobe-ns",
     ];
     if fault_flags.iter().any(|f| args.opt(f).is_some()) {
         let mut fc = cfg.fault.unwrap_or_default();
@@ -156,10 +158,18 @@ fn soda_config_from_args(args: &Args) -> Result<SodaConfig> {
         fc.crash_len_ns = args.opt_u64("fault-crash-len-ns", fc.crash_len_ns);
         fc.crash_every_ns = args.opt_u64("fault-crash-every-ns", fc.crash_every_ns);
         fc.seed = args.opt_u64("fault-seed", fc.seed);
+        fc.retry_budget = args.opt_u64("fault-retry-budget", fc.retry_budget as u64) as u32;
+        fc.reprobe_ns = args.opt_u64("fault-reprobe-ns", fc.reprobe_ns);
         for r in [fc.drop_rate, fc.corrupt_rate, fc.dup_rate, fc.spike_rate] {
             if !(0.0..=1.0).contains(&r) {
                 bail!("fault rates must be within [0, 1] (got {r})");
             }
+        }
+        if fc.retry_budget == 0 {
+            bail!("--fault-retry-budget must be >= 1");
+        }
+        if fc.reprobe_ns == 0 {
+            bail!("--fault-reprobe-ns must be >= 1");
         }
         cfg.fault = Some(fc);
     }
@@ -174,7 +184,68 @@ fn soda_config_from_args(args: &Args) -> Result<SodaConfig> {
         fl.validate().map_err(|e| anyhow::anyhow!(e))?;
         cfg.fleet = Some(fl);
     }
+    // Membership flags: a kill/drain/join schedule over the fleet (the
+    // config file's `membership` block, when present, is the base).
+    let member_flags = ["kill-node", "drain-node", "join-node", "member-fail-threshold"];
+    if member_flags.iter().any(|f| args.opt(f).is_some()) {
+        let mut mc = cfg.membership.unwrap_or_default();
+        if let Some(s) = args.opt("kill-node") {
+            let (node, at) = parse_node_event(s, "--kill-node", true)?;
+            mc.kill_node = node;
+            mc.kill_at_ns = at;
+        }
+        if let Some(s) = args.opt("drain-node") {
+            let (node, at) = parse_node_event(s, "--drain-node", true)?;
+            mc.drain_node = node;
+            mc.drain_at_ns = at;
+        }
+        if let Some(s) = args.opt("join-node") {
+            let (_, at) = parse_node_event(s, "--join-node", false)?;
+            mc.join_at_ns = at;
+        }
+        if let Some(s) = args.opt("member-fail-threshold") {
+            let n: u32 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid --member-fail-threshold: {s}"))?;
+            if n == 0 {
+                bail!("--member-fail-threshold must be >= 1");
+            }
+            mc.fail_threshold = n;
+        }
+        // Validate against the fleet when the flags pin one down; the run
+        // command re-validates against the *effective* fleet (which a
+        // --cluster-config file may still change).
+        if let Some(fl) = cfg.fleet {
+            mc.validate(fl.mem_nodes).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        cfg.membership = Some(mc);
+    }
     Ok(cfg)
+}
+
+/// Parse a membership event spec: `id@t_ns` (kill/drain target a node)
+/// or `@t_ns` (join needs no id — the new node gets the next one).
+fn parse_node_event(s: &str, flag: &str, wants_node: bool) -> Result<(usize, u64)> {
+    let Some((node_s, at_s)) = s.split_once('@') else {
+        bail!("invalid {flag} '{s}' (expected {})", if wants_node { "id@t_ns" } else { "@t_ns" });
+    };
+    let node = if wants_node {
+        node_s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid {flag} node id '{node_s}'"))?
+    } else {
+        if !node_s.is_empty() {
+            bail!("{flag} takes no node id (the join picks the next id): use @t_ns");
+        }
+        0
+    };
+    let at: u64 = at_s
+        .parse()
+        .map_err(|_| anyhow::anyhow!("invalid {flag} time '{at_s}' (virtual ns)"))?;
+    if at == 0 {
+        bail!("{flag} time must be > 0 (0 disables the event)");
+    }
+    Ok((node, at))
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
@@ -244,6 +315,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     wb.buffer_shards = Some(scfg.buffer_shards);
     wb.fault = scfg.fault;
     wb.fleet = scfg.fleet;
+    wb.membership = scfg.membership;
     if args.opt("config").is_some() {
         // A --config file is a full SodaConfig: honor every field
         // (qp_count, numa_aware, buffer_fraction, host_timing, …), not
@@ -257,6 +329,16 @@ fn cmd_run(args: &Args) -> Result<()> {
             .map_err(|e| anyhow::anyhow!("--cluster-config: {e}"))?;
         wb.cluster_config = wb.cluster_config.clone().normalized();
     }
+    // Membership schedules need the effective fleet (flags beat the
+    // cluster-config file): fail here with a clean error instead of
+    // panicking inside the fleet builder.
+    let eff_fleet = wb.fleet.unwrap_or(wb.cluster_config.fleet);
+    let eff_memb = wb.membership.unwrap_or(wb.cluster_config.membership);
+    if eff_memb.enabled() {
+        eff_memb
+            .validate(eff_fleet.mem_nodes)
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
     let spec = ExperimentSpec { app, graph, backend, caching };
     let m = if args.flag("with-bg-bfs") {
         let (m, replayed) = wb.run_with_background_bfs(&spec);
@@ -269,6 +351,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("{}", m.to_json().to_string());
     } else {
         println!("{m}");
+    }
+    // A region that lost its entire holder chain degraded to zero-filled
+    // reads; the run's outputs are suspect. Exit non-zero with the
+    // structured error rather than reporting success.
+    if let Some(e) = &m.membership_error {
+        bail!("membership failure: {e}");
     }
     Ok(())
 }
@@ -315,7 +403,7 @@ fn usage() -> &'static str {
        figures [--all | <id>...] [--scale F] [--threads N] [--json DIR]\n\
            regenerate paper tables/figures (table1 table2 fig3..fig11)\n\
            plus ablations (abl-entry abl-prefetch abl-prefetch-depth abl-evict abl-qp\n\
-           abl-cache-policy abl-batch abl-faults abl-fleet abl-scaling)\n\
+           abl-cache-policy abl-batch abl-faults abl-fleet abl-membership abl-scaling)\n\
        run <app> <graph> [--backend B] [--caching M] [--scale F] [--with-bg-bfs] [--json]\n\
            [--evict-policy P] [--dpu-cache-policy P] [--prefetch-policy Q]\n\
            [--prefetch-depth N] [--prefetch-scan N]\n\
@@ -324,7 +412,10 @@ fn usage() -> &'static str {
            [--fault-drop-rate R] [--fault-corrupt-rate R] [--fault-dup-rate R]\n\
            [--fault-spike-rate R] [--fault-spike-ns T] [--fault-crash-start-ns T]\n\
            [--fault-crash-len-ns T] [--fault-crash-every-ns T] [--fault-seed S]\n\
+           [--fault-retry-budget N] [--fault-reprobe-ns T]\n\
            [--mem-nodes N] [--stripe-pages S] [--replicas R]\n\
+           [--kill-node id@t_ns] [--drain-node id@t_ns] [--join-node @t_ns]\n\
+           [--member-fail-threshold N]\n\
            run one application on one graph and print metrics\n\
            (policies P: fault-fifo | access-lru | random | clock | slru;\n\
             prefetch Q: off | sequential | strided | graph-hint | adaptive[:base];\n\
@@ -337,7 +428,14 @@ fn usage() -> &'static str {
             --mem-nodes N>1 shards remote memory across a fleet of N nodes\n\
             behind a region directory — --stripe-pages 0 = contiguous\n\
             extents, S>0 = round-robin stripes; --replicas R mirrors each\n\
-            range onto R ring replicas with lease-based failover)\n\
+            range onto R ring replicas with lease-based failover;\n\
+            --kill-node permanently kills a node at t — the reconcile\n\
+            coordinator declares it dead after --member-fail-threshold\n\
+            consecutive failures and re-replicates its shards;\n\
+            --drain-node live-migrates a node's shards out before\n\
+            retiring it; --join-node adds a node at t and rebalances;\n\
+            every cutover bumps the directory epoch — stale requests\n\
+            are fenced and transparently retried)\n\
        config [--config FILE] [--evict-policy P] [--dpu-cache-policy P] ...\n\
            print the effective SodaConfig as JSON (the --config schema)\n\
        advisor [--hit-rate H]\n\

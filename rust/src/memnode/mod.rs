@@ -18,12 +18,21 @@ use std::collections::HashMap;
 pub type RegionId = u16;
 
 /// Error type for region operations.
-#[derive(Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MemError {
     OutOfCapacity { requested: u64, available: u64 },
     NoSuchRegion(RegionId),
     OutOfBounds { region: RegionId, offset: u64, len: u64, size: u64 },
     DuplicateRegion(RegionId),
+    /// The request carried a directory epoch older than the fleet's
+    /// current one (a membership cutover happened in flight). The caller
+    /// refreshes its directory view and retries — never reads a moved page.
+    StaleEpoch { have: u64, want: u64 },
+    /// Every node in the region's holder chain is gone (permanent deaths
+    /// past the replication factor). `node` is the logical shard slot that
+    /// lost its last holder. Structured graceful degradation: surfaced
+    /// through the service to the CLI instead of retrying forever.
+    RegionUnavailable { region: RegionId, node: usize },
 }
 
 impl std::fmt::Display for MemError {
@@ -38,6 +47,13 @@ impl std::fmt::Display for MemError {
                 "region {region}: access [{offset}, {offset}+{len}) out of bounds (size {size})"
             ),
             MemError::DuplicateRegion(r) => write!(f, "region {r} already exists"),
+            MemError::StaleEpoch { have, want } => {
+                write!(f, "stale directory epoch {have} (fleet is at {want}); refresh and retry")
+            }
+            MemError::RegionUnavailable { region, node } => write!(
+                f,
+                "region {region} unavailable: shard slot {node} lost its entire holder chain"
+            ),
         }
     }
 }

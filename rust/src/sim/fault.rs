@@ -42,6 +42,15 @@ pub struct FaultConfig {
     pub crash_every_ns: Ns,
     /// Seed for the fault stream (independent of the workload seed).
     pub seed: u64,
+    /// Bounded retry budget for budgeted paths (DPU path, fleet lease
+    /// attempts). Tunable via `--fault-retry-budget`; the default matches
+    /// the historical `RETRY_BUDGET` const bit-for-bit. Does **not** arm
+    /// the plan: it only parameterizes recovery, it injects nothing.
+    pub retry_budget: u32,
+    /// Minimum spacing between breaker / lease re-probes of a failed
+    /// primary. Tunable via `--fault-reprobe-ns`; the default matches the
+    /// historical `REPROBE_NS` consts bit-for-bit. Not an arming knob.
+    pub reprobe_ns: Ns,
 }
 
 impl Default for FaultConfig {
@@ -56,6 +65,8 @@ impl Default for FaultConfig {
             crash_len_ns: 0,
             crash_every_ns: 0,
             seed: 0xFA17,
+            retry_budget: crate::fabric::reliable::RETRY_BUDGET,
+            reprobe_ns: crate::backend::failover::REPROBE_NS,
         }
     }
 }
@@ -155,6 +166,12 @@ pub struct FaultPlan {
     pub stats: FaultStats,
     rng: Rng,
     next_seq: u64,
+    /// Permanent-kill entry: from this virtual time on the node is dead
+    /// for good — unlike a crash window, it never clears. 0 = never.
+    /// Set by the fleet membership layer (`MembershipConfig::kill_at_ns`),
+    /// not by user fault config: a permanently dead node must only exist
+    /// where a coordinator can detect and repair around it.
+    dead_from_ns: Ns,
 }
 
 impl FaultPlan {
@@ -164,6 +181,7 @@ impl FaultPlan {
             cfg,
             stats: FaultStats::default(),
             next_seq: 0,
+            dead_from_ns: 0,
         }
     }
 
@@ -173,7 +191,20 @@ impl FaultPlan {
     }
 
     pub fn enabled(&self) -> bool {
-        self.cfg.enabled()
+        self.cfg.enabled() || self.dead_from_ns > 0
+    }
+
+    /// Schedule a permanent kill: the node rejects every message from
+    /// `t` on and never restarts.
+    pub fn set_dead_from(&mut self, t: Ns) {
+        self.dead_from_ns = t;
+    }
+
+    /// Is the node permanently dead at `now`? Unlike [`Self::crashed`]
+    /// windows this never clears — unbounded retry loops must check it
+    /// before parking, or they would spin forever.
+    pub fn dead(&self, now: Ns) -> bool {
+        self.dead_from_ns > 0 && now >= self.dead_from_ns
     }
 
     /// Next per-request sequence number (dedup + replay identity).
@@ -182,8 +213,12 @@ impl FaultPlan {
         self.next_seq
     }
 
-    /// Is the memory node inside a crash window at `now`?
+    /// Is the memory node inside a crash window (or permanently dead)
+    /// at `now`?
     pub fn crashed(&self, now: Ns) -> bool {
+        if self.dead(now) {
+            return true;
+        }
         if self.cfg.crash_len_ns == 0 || now < self.cfg.crash_start_ns {
             return false;
         }
@@ -197,8 +232,12 @@ impl FaultPlan {
     }
 
     /// Earliest time at or after `now` outside any crash window — what a
-    /// retry loop waits for once it has diagnosed a dead memory node.
+    /// retry loop waits for once it has diagnosed a crashed memory node.
+    /// A permanently dead node never clears: `Ns::MAX`.
     pub fn crash_clears_at(&self, now: Ns) -> Ns {
+        if self.dead(now) {
+            return Ns::MAX;
+        }
         if !self.crashed(now) {
             return now;
         }
@@ -340,6 +379,37 @@ mod tests {
         assert!(plan.crashed(2_050));
         assert!(plan.crashed(9_001_050));
         assert_eq!(plan.crash_clears_at(2_050), 2_100);
+    }
+
+    #[test]
+    fn recovery_knob_defaults_match_historical_consts_and_do_not_arm() {
+        let cfg = FaultConfig::default();
+        assert_eq!(cfg.retry_budget, crate::fabric::reliable::RETRY_BUDGET);
+        assert_eq!(cfg.reprobe_ns, crate::backend::failover::REPROBE_NS);
+        assert!(!cfg.enabled(), "recovery knobs must not arm the plan");
+        let tuned = FaultConfig {
+            retry_budget: 9,
+            reprobe_ns: 5,
+            ..FaultConfig::default()
+        };
+        assert!(!tuned.enabled());
+    }
+
+    #[test]
+    fn permanent_kill_never_clears() {
+        let mut plan = FaultPlan::from_config(FaultConfig {
+            seed: 1,
+            ..FaultConfig::default()
+        });
+        assert!(!plan.enabled());
+        plan.set_dead_from(1_000);
+        assert!(plan.enabled(), "a scheduled kill arms the plan");
+        assert!(!plan.dead(999) && !plan.crashed(999));
+        assert!(plan.dead(1_000) && plan.crashed(1_000));
+        assert!(plan.crashed(u64::MAX), "death is permanent");
+        assert_eq!(plan.crash_clears_at(2_000), Ns::MAX);
+        assert_eq!(plan.draw(1_500), Delivery::Dropped);
+        assert_eq!(plan.stats.crash_rejections, 1);
     }
 
     #[test]

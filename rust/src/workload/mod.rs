@@ -84,6 +84,10 @@ pub struct Workbench {
     /// base config's topology — single memory node unless a `--config`
     /// file says otherwise.
     pub fleet: Option<crate::fleet::FleetConfig>,
+    /// Membership-schedule override (`SodaConfig::membership`); `None`
+    /// keeps the base config's schedule — static membership unless a
+    /// `--config` file says otherwise.
+    pub membership: Option<crate::fleet::MembershipConfig>,
     /// Full [`SodaConfig`] base for runs (e.g. a `--config` file): every
     /// field (qp_count, numa_aware, buffer_fraction, host_timing, …) is
     /// honored, with the explicit `threads`/policy/prefetch fields above
@@ -108,6 +112,7 @@ impl Workbench {
             buffer_shards: None,
             fault: None,
             fleet: None,
+            membership: None,
             soda_config_base: None,
         }
     }
@@ -226,6 +231,9 @@ impl Workbench {
         }
         if let Some(fl) = self.fleet {
             cfg.fleet = Some(fl);
+        }
+        if let Some(m) = self.membership {
+            cfg.membership = Some(m);
         }
         cfg.with_backend(spec.backend).with_caching(spec.caching)
     }

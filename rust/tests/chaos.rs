@@ -14,15 +14,20 @@
 //! * the same holds **multi-node**: under any seeded per-node crash plan
 //!   with R ≥ 1 replicas, a sharded fleet run stays bit-identical to the
 //!   fault-free single-node run, the aggregate failover ledger balances,
-//!   and traffic reaches every node.
+//!   and traffic reaches every node;
+//! * the same holds under **dynamic membership**: a node permanently
+//!   killed mid-run (R ≥ 1), or drained/joined with live shard
+//!   migration, never changes an output bit — the coordinator declares
+//!   the death, re-replicates from survivors, fences stale epochs, and
+//!   the membership ledger balances (rejects == retries, R restored).
 //!
-//! CI runs this as the "Chaos guard" step.
+//! CI runs this as the "Chaos guard" + "Membership guard" steps.
 
 use soda::backend::{DpuStore, FailoverStore, RemoteStore};
 use soda::coordinator::cluster::Cluster;
 use soda::coordinator::config::ClusterConfig;
 use soda::dpu::DpuOpts;
-use soda::fleet::{FleetConfig, FleetNodeStats, FleetStore};
+use soda::fleet::{FleetConfig, FleetNodeStats, FleetStore, MembershipConfig, MembershipStats};
 use soda::graph::apps::{bc, bfs, cc, pagerank, radii};
 use soda::graph::{gen, BuildMode, CsrGraph, FamGraph, GraphRunner};
 use soda::host::{HostAgent, HostTiming};
@@ -165,11 +170,13 @@ fn run_all(fault: FaultConfig, csr: &CsrGraph) -> Vec<AppRun> {
 fn fleet_runner_with(
     fault: FaultConfig,
     fleet: FleetConfig,
+    membership: MembershipConfig,
     csr: &CsrGraph,
 ) -> (GraphRunner, FamGraph, Cluster) {
     let mut cfg = ClusterConfig::tiny();
     cfg.fault = fault;
     cfg.fleet = fleet;
+    cfg.membership = membership;
     let cluster = Cluster::build(cfg);
     let chunk = cluster.config().chunk_bytes;
     let store: Box<dyn RemoteStore> = Box::new(FleetStore::new(cluster.clone()));
@@ -191,12 +198,14 @@ fn fleet_runner_with(
 }
 
 /// Fleet twin of [`run_all`]: all five apps, each on a fresh fleet
-/// cluster, recording the same digests plus the per-node fleet counters.
+/// cluster, recording the same digests plus the per-node fleet counters
+/// and the membership ledger.
 fn run_all_fleet(
     fault: FaultConfig,
     fleet: FleetConfig,
+    membership: MembershipConfig,
     csr: &CsrGraph,
-) -> Vec<(AppRun, Vec<FleetNodeStats>)> {
+) -> Vec<(AppRun, Vec<FleetNodeStats>, MembershipStats)> {
     let mut runs = Vec::new();
     let mut record = |digest: String, cluster: &Cluster, r: &GraphRunner| {
         runs.push((
@@ -207,10 +216,11 @@ fn run_all_fleet(
                 elapsed_ns: r.now(),
             },
             cluster.fleet_node_stats(),
+            cluster.membership_stats(),
         ));
     };
     {
-        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, csr);
+        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, membership, csr);
         let out = bfs(&mut r, &g, 0);
         record(
             format!("bfs {:?} {:?} {}", out.levels, out.parents, out.rounds),
@@ -219,7 +229,7 @@ fn run_all_fleet(
         );
     }
     {
-        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, csr);
+        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, membership, csr);
         let out = pagerank(&mut r, &g, 10);
         record(
             format!("pagerank {:?} {}", out.ranks, out.last_delta),
@@ -228,7 +238,7 @@ fn run_all_fleet(
         );
     }
     {
-        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, csr);
+        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, membership, csr);
         let out = cc(&mut r, &g);
         record(
             format!("cc {:?} {}", out.labels, out.components),
@@ -237,7 +247,7 @@ fn run_all_fleet(
         );
     }
     {
-        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, csr);
+        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, membership, csr);
         let out = bc(&mut r, &g, 0);
         record(
             format!("bc {:?} {:?} {:?}", out.scores, out.levels, out.sigma),
@@ -246,7 +256,7 @@ fn run_all_fleet(
         );
     }
     {
-        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, csr);
+        let (mut r, g, cluster) = fleet_runner_with(fault, fleet, membership, csr);
         let out = radii(&mut r, &g, 0xAD11);
         record(
             format!("radii {:?} {:?}", out.radii, out.sources),
@@ -378,7 +388,10 @@ fn fleet_chaos_stays_bit_identical_to_single_node_fault_free() {
 
     // Fault-free fleet: same answers, and striping genuinely spreads the
     // traffic across every node.
-    for (c, (f, nodes)) in clean.iter().zip(&run_all_fleet(FaultConfig::default(), fleet, &csr)) {
+    for (c, (f, nodes, _)) in clean
+        .iter()
+        .zip(&run_all_fleet(FaultConfig::default(), fleet, MembershipConfig::default(), &csr))
+    {
         let app = f.digest.split(' ').next().unwrap_or("?");
         assert_eq!(c.digest, f.digest, "fleet (clean): {app} diverged from single-node");
         assert_eq!(f.fault.injected(), 0, "fleet (clean) {app}: nothing injected");
@@ -394,10 +407,10 @@ fn fleet_chaos_stays_bit_identical_to_single_node_fault_free() {
     // budget actually move leases.
     let mut recoveries = 0;
     for seed in [3u64, 0xFEE7] {
-        let chaos = run_all_fleet(chaos_cfg(seed), fleet, &csr);
+        let chaos = run_all_fleet(chaos_cfg(seed), fleet, MembershipConfig::default(), &csr);
         let mut injected = 0;
         let mut failovers = 0;
-        for (c, (f, nodes)) in clean.iter().zip(&chaos) {
+        for (c, (f, nodes, _)) in clean.iter().zip(&chaos) {
             let app = f.digest.split(' ').next().unwrap_or("?");
             assert_eq!(
                 c.digest, f.digest,
@@ -421,4 +434,148 @@ fn fleet_chaos_stays_bit_identical_to_single_node_fault_free() {
         recoveries > 0,
         "a re-probe after the crash windows clear must hand some lease back to its primary"
     );
+}
+
+/// Tentpole property (a): a node killed *permanently* mid-run at R = 1
+/// never changes an output bit. The coordinator's health score declares
+/// the death, every holder chain drops the corpse, and anti-entropy
+/// repair restores the replication factor on the survivors — all charged
+/// on the real links, all epoch-fenced, with a balanced ledger.
+#[test]
+fn permanent_node_kill_stays_bit_identical_and_restores_replication() {
+    let csr = chaos_graph();
+    let clean = run_all(FaultConfig::default(), &csr);
+    let fleet = FleetConfig {
+        mem_nodes: 3,
+        stripe_pages: 1,
+        replicas: 1,
+    };
+    let membership = MembershipConfig {
+        fail_threshold: 2,
+        kill_node: 1,
+        kill_at_ns: 400_000,
+        ..MembershipConfig::default()
+    };
+    // Faster probe sweeps (the recovery knobs are non-arming: no fault
+    // is injected beyond the scheduled kill itself).
+    let fault = FaultConfig {
+        reprobe_ns: 150_000,
+        ..FaultConfig::default()
+    };
+    for (c, (f, _nodes, m)) in clean
+        .iter()
+        .zip(&run_all_fleet(fault, fleet, membership, &csr))
+    {
+        let app = f.digest.split(' ').next().unwrap_or("?");
+        assert_eq!(
+            c.digest, f.digest,
+            "{app}: permanent kill diverged from the fault-free single-node run"
+        );
+        assert_ledger_balances(&f.fault, &format!("kill {app}"));
+        assert_eq!(m.deaths_declared, 1, "{app}: node 1 declared dead exactly once");
+        assert!(m.epoch >= 1, "{app}: the death cutover must bump the epoch");
+        assert!(m.repair_bytes > 0, "{app}: repair must copy real bytes");
+        assert_eq!(
+            m.min_holders, 2,
+            "{app}: anti-entropy must restore R=1 on the two survivors"
+        );
+        assert_eq!(
+            m.stale_epoch_rejects, m.stale_epoch_retries,
+            "{app}: every fenced request must be transparently retried"
+        );
+        assert_eq!(m.unavailable_regions, 0, "{app}: R=1 never loses a whole chain");
+    }
+}
+
+/// Tentpole property (b): planned drain + join with live shard migration
+/// (copy window, dual-write, epoch-fenced cutover) keeps PageRank
+/// bit-identical, and the drained node serves zero bytes after cutover.
+#[test]
+fn drain_and_join_keep_pagerank_identical_and_silence_the_drained_node() {
+    let csr = chaos_graph();
+    let (mut r, g, _c) = runner_with(FaultConfig::default(), &csr);
+    let clean = pagerank(&mut r, &g, 10);
+    let fleet = FleetConfig {
+        mem_nodes: 3,
+        stripe_pages: 1,
+        replicas: 0,
+    };
+    let membership = MembershipConfig {
+        join_at_ns: 200_000,
+        drain_node: 0,
+        drain_at_ns: 400_000,
+        ..MembershipConfig::default()
+    };
+    let (mut r, g, cluster) =
+        fleet_runner_with(FaultConfig::default(), fleet, membership, &csr);
+    let out = pagerank(&mut r, &g, 10);
+    assert_eq!(
+        format!("{:?} {}", clean.ranks, clean.last_delta),
+        format!("{:?} {}", out.ranks, out.last_delta),
+        "live migration must never change a PageRank bit"
+    );
+    let m = cluster.membership_stats();
+    assert!(m.pages_migrated > 0, "drain + join must move real shards");
+    assert_eq!(
+        m.post_cutover_drain_bytes, 0,
+        "the drained node must see zero wire bytes after its cutover"
+    );
+    assert_eq!(m.deaths_declared, 0, "planned events are not failures");
+    assert!(m.epoch >= 2, "join and drain cutovers each bump the epoch");
+    assert_eq!(
+        m.stale_epoch_rejects, m.stale_epoch_retries,
+        "every fenced request must be transparently retried"
+    );
+    assert!(cluster.membership_fatal().is_none());
+    assert_ledger_balances(&cluster.fault_stats(), "drain+join");
+}
+
+/// A membership config with no scheduled events builds no coordinator:
+/// virtual time, traffic, and outputs are bit-identical whatever the
+/// threshold knob says, and the ledger stays all-zero.
+#[test]
+fn static_membership_is_zero_cost_whatever_the_threshold() {
+    let csr = chaos_graph();
+    let fleet = FleetConfig {
+        mem_nodes: 3,
+        stripe_pages: 1,
+        replicas: 1,
+    };
+    let a = run_all_fleet(FaultConfig::default(), fleet, MembershipConfig::default(), &csr);
+    let b = run_all_fleet(
+        FaultConfig::default(),
+        fleet,
+        MembershipConfig {
+            fail_threshold: 9,
+            ..MembershipConfig::default()
+        },
+        &csr,
+    );
+    for ((x, _, mx), (y, _, my)) in a.iter().zip(&b) {
+        let app = x.digest.split(' ').next().unwrap_or("?");
+        assert_eq!(x.digest, y.digest, "{app}: outputs must match");
+        assert_eq!(x.elapsed_ns, y.elapsed_ns, "{app}: timing must match");
+        assert_eq!(x.net_bytes, y.net_bytes, "{app}: traffic must match");
+        assert_eq!(*mx, MembershipStats::default(), "{app}: ledger stays zero");
+        assert_eq!(*my, MembershipStats::default(), "{app}: ledger stays zero");
+    }
+}
+
+/// Satellite: the structured errors the CLI prints for membership
+/// failures — no panics, no unwraps, readable context.
+#[test]
+fn membership_errors_print_clean_structured_messages() {
+    use soda::backend::FetchError;
+    use soda::memnode::MemError;
+    let e = MemError::RegionUnavailable { region: 7, node: 2 };
+    assert_eq!(
+        e.to_string(),
+        "region 7 unavailable: shard slot 2 lost its entire holder chain"
+    );
+    let e = MemError::StaleEpoch { have: 1, want: 3 };
+    assert!(e.to_string().contains("stale directory epoch 1"), "got: {e}");
+    assert!(e.to_string().contains("refresh and retry"), "got: {e}");
+    let e = FetchError::Unavailable(MemError::RegionUnavailable { region: 1, node: 0 });
+    assert!(e.to_string().contains("unavailable"), "got: {e}");
+    assert_eq!(FetchError::Exhausted.to_string(), "retry budget exhausted");
 }

@@ -13,7 +13,8 @@ use super::{FetchSource, RemoteStore};
 use crate::coordinator::cluster::{Cluster, ClusterInner};
 use crate::dpu::Source;
 use crate::fabric::protocol::{
-    HintMessage, HintSpan, MAX_HINT_SPAN_PAGES, RELIABILITY_HEADER_BYTES, RPC_BYTES,
+    HintMessage, HintSpan, PushdownRequest, MAX_HINT_SPAN_PAGES, RELIABILITY_HEADER_BYTES,
+    RPC_BYTES,
 };
 use crate::fabric::reliable::{reliable_op, RetryExhausted};
 use crate::fabric::verbs;
@@ -326,6 +327,35 @@ impl RemoteStore for DpuStore {
         })
     }
 
+    fn supports_pushdown(&self) -> bool {
+        true
+    }
+
+    /// Ship a kernel descriptor over the host→DPU channel (one SEND on the
+    /// pushdown class carrying the packed [`PushdownRequest`]) and let
+    /// [`crate::dpu::DpuAgent::handle_pushdown`] execute it next to the
+    /// data. The descriptor's wire bytes are charged before the handler
+    /// runs, matching the hint channel; a decline still paid for the
+    /// descriptor — that cost is real on hardware too.
+    fn pushdown(
+        &mut self,
+        now: Ns,
+        req: &PushdownRequest,
+        numa_node: usize,
+    ) -> Option<(Ns, Vec<u8>)> {
+        self.cluster.with(|inner| {
+            let arrive =
+                verbs::pushdown_request(&mut inner.fabric, now, numa_node, req.wire_bytes());
+            inner.dpu.handle_pushdown(
+                &mut inner.fabric,
+                &inner.memnode.store,
+                arrive,
+                req,
+                numa_node,
+            )
+        })
+    }
+
     fn writeback(&mut self, now: Ns, key: PageKey, data: &[u8]) -> Ns {
         self.reliable_writeback(now, key, data, None)
             .expect("unbounded retry always completes")
@@ -537,6 +567,36 @@ mod tests {
         let spans = [PageSpan { start: PageKey::new(region, 0), pages: 2 }];
         assert!(s.prefetch_hint(t0, &spans, 2).is_none());
         assert_eq!(cluster.dpu_stats().hints_received, 0);
+    }
+
+    #[test]
+    fn pushdown_ships_descriptor_and_returns_reduced_results() {
+        use crate::fabric::protocol::{PushdownOp, PushdownTarget};
+        let cluster = cluster_with(DpuOpts::FULL);
+        let mut s = DpuStore::new(cluster.clone());
+        // An "edges" region of 16 u32 values, all = 1.
+        let edges: Vec<u8> = (0..16u32).flat_map(|_| 1u32.to_le_bytes()).collect();
+        let (region, t0) = s.alloc(0, edges.len() as u64, Some(edges));
+        cluster.reset_stats();
+        let req = PushdownRequest {
+            region_id: region,
+            op: PushdownOp::FirstInSet,
+            flags: 0,
+            targets: vec![PushdownTarget { v: 0, edge_start: 0, edge_count: 16 }],
+            // Frontier = {1}: the very first scanned edge matches.
+            operand: vec![0b10],
+        };
+        let (done, results) = s.pushdown(t0, &req, 2).expect("DPU accepts");
+        assert!(done > t0);
+        assert_eq!(u32::from_le_bytes(results[..4].try_into().unwrap()), 1);
+        let st = cluster.network_stats();
+        // Descriptor down + 4-byte result up, all on the pushdown class.
+        assert_eq!(st.pcie_h2d.pushdown_bytes, req.wire_bytes());
+        assert_eq!(st.pcie_d2h.pushdown_bytes, 4);
+        assert_eq!(st.on_demand_bytes(), 0, "no page ever crossed on demand");
+        assert_eq!(cluster.dpu_stats().pushdowns, 1);
+        // Early exit: only one edge scanned.
+        assert_eq!(cluster.dpu_stats().pushdown_edges, 1);
     }
 
     #[test]

@@ -188,6 +188,29 @@ pub trait RemoteStore {
         None
     }
 
+    /// Can this backend execute pushdown kernel descriptors at all? `false`
+    /// (the default) lets the graph runtime skip building descriptors for
+    /// backends with no compute near the data (SSD, direct memory server).
+    fn supports_pushdown(&self) -> bool {
+        false
+    }
+
+    /// Ship an operator-pushdown kernel descriptor to the backend's
+    /// near-data compute and return `(results-available time, result
+    /// payload)` — `result_wire_bytes()` of reduced per-target values.
+    /// `None` means the backend declined (no DPU, unknown region,
+    /// malformed descriptor); the caller must fall back to the paging
+    /// path, which is always correct because pushdown is an optimization,
+    /// never the only copy of the logic.
+    fn pushdown(
+        &mut self,
+        _now: Ns,
+        _req: &crate::fabric::protocol::PushdownRequest,
+        _numa_node: usize,
+    ) -> Option<(Ns, Vec<u8>)> {
+        None
+    }
+
     /// Write back a dirty page. Returns the time the *host* is released
     /// (offloaded stores release at hand-off; direct stores block until the
     /// data is durable — §III's synchronous-eviction contrast).

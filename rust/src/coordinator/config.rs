@@ -15,6 +15,7 @@ use crate::dpu::{DpuConfig, DpuOpts, PrefetchConfig, PrefetchPolicyKind};
 use crate::fabric::FabricConfig;
 use crate::fleet::{FleetConfig, MembershipConfig};
 use crate::host::agent::HostTiming;
+use crate::host::PushdownMode;
 use crate::memnode::MemNodeConfig;
 use crate::sim::fault::FaultConfig;
 use crate::ssd::SsdConfig;
@@ -512,6 +513,11 @@ impl CachingMode {
 pub struct SodaConfig {
     pub backend: BackendKind,
     pub caching: CachingMode,
+    /// Operator-pushdown routing: ship dense graph supersteps to the DPU
+    /// as kernel descriptors (`on`), never (`off`, the seed-identical
+    /// default), or only when the residency probe predicts a traffic win
+    /// (`auto`). Ignored by backends without near-data compute.
+    pub pushdown: PushdownMode,
     /// Host page-buffer size as a fraction of the FAM footprint (§V: 1/3).
     pub buffer_fraction: f64,
     /// Proactive-eviction load-factor threshold.
@@ -567,6 +573,7 @@ impl Default for SodaConfig {
         SodaConfig {
             backend: BackendKind::DPU_FULL,
             caching: CachingMode::Dynamic,
+            pushdown: PushdownMode::Off,
             buffer_fraction: 1.0 / 3.0,
             evict_threshold: 0.92,
             threads: 24,
@@ -636,6 +643,11 @@ impl SodaConfig {
             let s = want_str(x, "caching")?;
             cfg.caching =
                 CachingMode::parse(s).ok_or_else(|| format!("unknown caching mode '{s}'"))?;
+        }
+        if let Some(x) = v.get("pushdown") {
+            let s = want_str(x, "pushdown")?;
+            cfg.pushdown =
+                PushdownMode::parse(s).ok_or_else(|| format!("unknown pushdown mode '{s}'"))?;
         }
         if let Some(x) = v.get("buffer_fraction") {
             let f = want_f64(x, "buffer_fraction")?;
@@ -762,6 +774,7 @@ impl ToJson for SodaConfig {
         Json::obj([
             ("backend", self.backend.label().into()),
             ("caching", self.caching.name().into()),
+            ("pushdown", self.pushdown.name().into()),
             ("buffer_fraction", self.buffer_fraction.into()),
             ("evict_threshold", self.evict_threshold.into()),
             ("threads", self.threads.into()),
@@ -941,6 +954,7 @@ mod tests {
                 dynamic_cache: true,
             }),
             caching: CachingMode::Dynamic,
+            pushdown: PushdownMode::Auto,
             buffer_fraction: 0.5,
             evict_threshold: 0.75,
             threads: 8,
@@ -1050,6 +1064,7 @@ mod tests {
         assert_eq!(cfg.threads, 4);
         assert_eq!(cfg.evict_policy, PolicyKind::Clock);
         assert_eq!(cfg.backend, SodaConfig::default().backend);
+        assert_eq!(cfg.pushdown, PushdownMode::Off, "pushdown defaults off");
         assert_eq!(cfg.dpu_cache_policy, None);
         assert_eq!(cfg.prefetch, None);
         assert_eq!(cfg.fault, None);
@@ -1198,6 +1213,24 @@ mod tests {
         assert_eq!(c.fault.seed, 3);
         let bad = Json::parse(r#"{"fault": {"dup_rate": 2}}"#).unwrap();
         assert!(c.apply_json(&bad).is_err());
+    }
+
+    #[test]
+    fn pushdown_mode_parses_and_round_trips() {
+        for (s, m) in [
+            ("off", PushdownMode::Off),
+            ("on", PushdownMode::On),
+            ("auto", PushdownMode::Auto),
+        ] {
+            assert_eq!(PushdownMode::parse(s), Some(m));
+            assert_eq!(m.name(), s);
+            let v = Json::parse(&format!(r#"{{"pushdown": "{s}"}}"#)).unwrap();
+            assert_eq!(SodaConfig::from_json(&v).unwrap().pushdown, m);
+        }
+        assert!(
+            SodaConfig::from_json(&Json::parse(r#"{"pushdown": "maybe"}"#).unwrap()).is_err(),
+            "unknown pushdown modes must error"
+        );
     }
 
     #[test]

@@ -100,6 +100,29 @@ impl crate::util::json::ToJson for RunMetrics {
             ("writeback_bytes", self.network.writeback_bytes().into()),
             ("background_fraction", self.network.background_fraction().into()),
             ("pcie_bytes", self.network.pcie_bytes().into()),
+            ("total_wire_bytes", self.network.total_wire_bytes().into()),
+            // Per-traffic-class bytes-on-wire breakdown (network classes
+            // plus the PCIe aggregate) — the abl-pushdown figure's raw
+            // ledger.
+            (
+                "bytes_on_wire",
+                Json::obj([
+                    ("demand", self.network.on_demand_bytes().into()),
+                    ("prefetch", self.network.background_bytes().into()),
+                    ("writeback", self.network.writeback_bytes().into()),
+                    ("control", self.network.control_bytes().into()),
+                    ("pushdown", self.network.pushdown_bytes().into()),
+                    ("pcie", self.network.pcie_bytes().into()),
+                    ("pcie_pushdown", self.network.pcie_pushdown_bytes().into()),
+                ]),
+            ),
+            ("pushdowns", self.host.pushdowns.into()),
+            ("pushdown_fallbacks", self.host.pushdown_fallbacks.into()),
+            ("dpu_pushdowns", self.dpu.pushdowns.into()),
+            ("dpu_pushdowns_declined", self.dpu.pushdowns_declined.into()),
+            ("dpu_pushdown_targets", self.dpu.pushdown_targets.into()),
+            ("dpu_pushdown_edges", self.dpu.pushdown_edges.into()),
+            ("dpu_pushdown_fetch_bytes", self.dpu.pushdown_fetch_bytes.into()),
             ("dpu_reads", self.dpu.reads.into()),
             ("dpu_dynamic_hits", self.dpu.dynamic_hits.into()),
             ("dpu_static_serves", self.dpu.static_serves.into()),
@@ -227,6 +250,18 @@ impl std::fmt::Display for RunMetrics {
             self.dpu.hint_entries,
             self.dpu_cache.hint_useful,
         )?;
+        if self.host.pushdowns > 0 || self.host.pushdown_fallbacks > 0 {
+            writeln!(
+                f,
+                "  pushdown         : {} kernels / {} fallbacks, {} targets over {} edges, {:.2} MB span fetches, {:.2} MB on wire",
+                self.host.pushdowns,
+                self.host.pushdown_fallbacks,
+                self.dpu.pushdown_targets,
+                self.dpu.pushdown_edges,
+                self.dpu.pushdown_fetch_bytes as f64 / 1e6,
+                (self.network.pushdown_bytes() + self.network.pcie_pushdown_bytes()) as f64 / 1e6,
+            )?;
+        }
         if self.fault.injected() > 0 || self.fault.failovers > 0 {
             writeln!(
                 f,
@@ -331,6 +366,43 @@ mod tests {
         let v = crate::util::json::Json::parse(&j).unwrap();
         assert_eq!(v.get("elapsed_ns").unwrap().as_u64(), Some(123));
         assert_eq!(v.get("network_bytes").unwrap().as_u64(), Some(456));
+    }
+
+    #[test]
+    fn bytes_on_wire_breakdown_serializes_per_class() {
+        let mut m = metric(10, 0);
+        m.network.rx.on_demand_bytes = 100;
+        m.network.rx.background_bytes = 200;
+        m.network.tx.writeback_bytes = 300;
+        m.network.tx.control_bytes = 40;
+        m.network.rx.pushdown_bytes = 50;
+        m.network.pcie_d2h.pushdown_bytes = 8;
+        m.host.pushdowns = 2;
+        m.host.pushdown_fallbacks = 1;
+        m.dpu.pushdown_edges = 77;
+        let v = crate::util::json::Json::parse(&m.to_json().to_string()).unwrap();
+        let b = v.get("bytes_on_wire").expect("breakdown object");
+        assert_eq!(b.get("demand").unwrap().as_u64(), Some(100));
+        assert_eq!(b.get("prefetch").unwrap().as_u64(), Some(200));
+        assert_eq!(b.get("writeback").unwrap().as_u64(), Some(300));
+        assert_eq!(b.get("control").unwrap().as_u64(), Some(40));
+        assert_eq!(b.get("pushdown").unwrap().as_u64(), Some(50));
+        assert_eq!(b.get("pcie").unwrap().as_u64(), Some(8));
+        assert_eq!(b.get("pcie_pushdown").unwrap().as_u64(), Some(8));
+        // Control is accounting-only; data-plane total sums the rest.
+        assert_eq!(
+            v.get("total_wire_bytes").unwrap().as_u64(),
+            Some(100 + 200 + 300 + 50 + 8)
+        );
+        assert_eq!(v.get("pushdowns").unwrap().as_u64(), Some(2));
+        assert_eq!(v.get("pushdown_fallbacks").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("dpu_pushdown_edges").unwrap().as_u64(), Some(77));
+        let s = format!("{m}");
+        assert!(s.contains("pushdown"), "pushdown section shows when used");
+        assert!(
+            !format!("{}", metric(1, 0)).contains("pushdown"),
+            "pushdown section hidden on paging-only runs"
+        );
     }
 
     #[test]

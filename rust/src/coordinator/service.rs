@@ -149,6 +149,7 @@ impl SodaService {
         agent.set_fetch_batch(self.cfg.max_batch_pages, self.cfg.coalesce_fetch);
         agent.set_buffer_shards(self.cfg.buffer_shards);
         agent.set_host_workers(self.cfg.host_workers);
+        agent.set_pushdown(self.cfg.pushdown);
         agent
     }
 
@@ -257,6 +258,28 @@ mod tests {
         let serial = SodaService::attach(&cluster, SodaConfig::default())
             .client_with_buffer("p1", 64 << 10);
         assert_eq!((serial.host_workers(), serial.buffer_shards()), (1, 1));
+    }
+
+    #[test]
+    fn clients_inherit_pushdown_mode() {
+        use crate::host::PushdownMode;
+        let cluster = Cluster::build(ClusterConfig::tiny());
+        let mut cfg = SodaConfig::default().with_backend(BackendKind::DPU_FULL);
+        cfg.pushdown = PushdownMode::On;
+        let svc = SodaService::attach(&cluster, cfg);
+        let client = svc.client_with_buffer("p0", 64 << 10);
+        assert_eq!(client.pushdown_mode(), PushdownMode::On);
+        assert!(client.supports_pushdown(), "DPU backend executes kernels");
+        // Default stays off (seed-identical paths), and a backend without
+        // near-data compute never advertises support even when forced on.
+        let off = SodaService::attach(&cluster, SodaConfig::default())
+            .client_with_buffer("p1", 64 << 10);
+        assert_eq!(off.pushdown_mode(), PushdownMode::Off);
+        assert!(!off.supports_pushdown());
+        let mut mem_cfg = SodaConfig::default().with_backend(BackendKind::MemServer);
+        mem_cfg.pushdown = PushdownMode::On;
+        let mem = SodaService::attach(&cluster, mem_cfg).client_with_buffer("p2", 64 << 10);
+        assert!(!mem.supports_pushdown(), "memserver has no near-data compute");
     }
 
     #[test]

@@ -20,8 +20,9 @@ use super::pipeline::{ForwardMode, Forwarder};
 use super::prefetch::{PrefetchConfig, Prefetcher};
 use super::recent_list::RecentList;
 use super::static_cache::{StaticCache, StaticCacheError};
+use super::kernel;
 use crate::fabric::numa::IntraOp;
-use crate::fabric::protocol::HintMessage;
+use crate::fabric::protocol::{HintMessage, PushdownRequest};
 use crate::fabric::{verbs, Fabric};
 use crate::host::buffer::{PageKey, PageSpan};
 use crate::memnode::{RegionId, RegionStore};
@@ -83,6 +84,9 @@ pub struct DpuTiming {
     pub writeback_ns: Ns,
     /// Issue one prefetch entry (recent-list scan share + WQE).
     pub prefetch_issue_ns: Ns,
+    /// Per-edge cost of a pushdown kernel on a background core (load the
+    /// edge word + one reduction step on a Cortex-A72).
+    pub kernel_edge_ns: Ns,
 }
 
 impl Default for DpuTiming {
@@ -95,6 +99,7 @@ impl Default for DpuTiming {
             doorbell_ns: 600,
             writeback_ns: 500,
             prefetch_issue_ns: 400,
+            kernel_edge_ns: 6,
         }
     }
 }
@@ -184,6 +189,17 @@ pub struct DpuStats {
     /// their pages (the siblings keep serving; the re-stage heals the
     /// dirty page with fresh bytes).
     pub rehints: u64,
+    /// Pushdown kernel descriptors executed to completion.
+    pub pushdowns: u64,
+    /// Pushdown descriptors declined (unknown region / malformed kernel).
+    pub pushdowns_declined: u64,
+    /// Reduction targets across executed pushdowns.
+    pub pushdown_targets: u64,
+    /// Edges scanned by pushdown kernels (compute-time basis).
+    pub pushdown_edges: u64,
+    /// Bytes the DPU fetched from the memory node on kernels' behalf
+    /// (byte-exact, coalesced, cache-filtered).
+    pub pushdown_fetch_bytes: u64,
 }
 
 /// The DPU agent.
@@ -617,6 +633,111 @@ impl DpuAgent {
         let t = self.fwd.background(arrive, self.cfg.timing.prefetch_issue_ns);
         self.run_prefetch_worker(fabric, mem, t);
         Some(t)
+    }
+
+    /// Execute an operator-pushdown kernel descriptor that arrived on the
+    /// host→DPU channel at `arrive` — the §III offload thesis taken one
+    /// step further: ship the reduction to the data instead of the data to
+    /// the reduction. Returns the time the reduced results land on the
+    /// host plus the result payload, or `None` when the DPU declines
+    /// (unknown region or malformed descriptor, see [`kernel::execute`]);
+    /// the host then falls back to the paging path.
+    ///
+    /// Timing model: stage-1 cores charge rx + one cache probe per page
+    /// the targets' spans overlap; adjacency bytes not already resident in
+    /// DPU DRAM (static pin or staged dynamic entry) are fetched
+    /// *byte-exact* from the memory node on the pushdown class, coalesced
+    /// across targets; the kernel itself runs on the background
+    /// (completion-stage) cores at `kernel_edge_ns` per scanned edge; the
+    /// response SEND carries only `result_wire_bytes()` — the adjacency
+    /// pages never cross PCIe.
+    pub fn handle_pushdown(
+        &mut self,
+        fabric: &mut Fabric,
+        mem: &RegionStore,
+        arrive: Ns,
+        req: &PushdownRequest,
+        numa_node: usize,
+    ) -> Option<(Ns, Vec<u8>)> {
+        if !self.region_pages.contains_key(&req.region_id) {
+            self.stats.pushdowns_declined += 1;
+            return None;
+        }
+        let Some(run) = kernel::execute(req, mem) else {
+            self.stats.pushdowns_declined += 1;
+            return None;
+        };
+        let t = self.cfg.timing;
+        let chunk = self.cfg.chunk_bytes;
+        // Coalesce the targets' edge spans into byte ranges (sorted
+        // defensively — coalescing shapes traffic, not semantics).
+        let mut ranges: Vec<(u64, u64)> = req
+            .targets
+            .iter()
+            .filter(|tg| tg.edge_count > 0)
+            .map(|tg| (tg.edge_start * 4, (tg.edge_start + tg.edge_count as u64) * 4))
+            .collect();
+        ranges.sort_unstable();
+        let mut merged: Vec<(u64, u64)> = Vec::new();
+        for (lo, hi) in ranges {
+            match merged.last_mut() {
+                Some((_, mhi)) if lo <= *mhi => *mhi = (*mhi).max(hi),
+                _ => merged.push((lo, hi)),
+            }
+        }
+        // Stage 1: receive + one dynamic-cache probe per overlapped page.
+        let probes: u64 = merged.iter().map(|&(lo, hi)| hi.div_ceil(chunk) - lo / chunk).sum();
+        let t_ready = self.fwd.service(arrive, t.rx_ns + t.lookup_ns * probes);
+        // Every byte run not already resident in DPU DRAM must be fetched.
+        let local = self.static_cache.is_cached(req.region_id);
+        let nic = fabric.cfg.numa.nic_node;
+        let mut fetch_runs: Vec<(u64, u64)> = Vec::new();
+        if !local {
+            for &(lo, hi) in &merged {
+                for p in lo / chunk..hi.div_ceil(chunk) {
+                    if self.cfg.opts.dynamic_cache
+                        && self.table.lookup_page(t_ready, PageKey::new(req.region_id, p)).is_some()
+                    {
+                        continue;
+                    }
+                    let flo = lo.max(p * chunk);
+                    let fhi = hi.min((p + 1) * chunk);
+                    match fetch_runs.last_mut() {
+                        Some((_, rhi)) if *rhi == flo => *rhi = fhi,
+                        _ => fetch_runs.push((flo, fhi)),
+                    }
+                }
+            }
+        }
+        let doorbell = Aggregator::amortize(t.doorbell_ns, fetch_runs.len().max(1) as u64);
+        let mut t_data = t_ready;
+        for &(lo, hi) in &fetch_runs {
+            let bytes = hi - lo;
+            let staged = {
+                let fab = &mut *fabric;
+                self.fwd.forward(
+                    t_ready,
+                    doorbell,
+                    |initiated| fab.net_read(initiated, bytes, nic, TrafficClass::Pushdown),
+                    t.stage2_ns,
+                )
+            };
+            self.stats.pushdown_fetch_bytes += bytes;
+            t_data = t_data.max(staged);
+        }
+        // The reduction itself runs on the background cores.
+        let t_done = self.fwd.background(t_data, t.kernel_edge_ns * run.edges_scanned);
+        let done = verbs::dpu_response(
+            fabric,
+            t_done,
+            numa_node,
+            req.result_wire_bytes(),
+            TrafficClass::Pushdown,
+        );
+        self.stats.pushdowns += 1;
+        self.stats.pushdown_targets += req.targets.len() as u64;
+        self.stats.pushdown_edges += run.edges_scanned;
+        Some((done, run.results))
     }
 
     /// Fetch a whole cache entry from the memory node in the background and
@@ -1205,5 +1326,86 @@ mod tests {
         a.pin_static(&mut f, &store, 0, 1).unwrap();
         a.unregister_region(1);
         assert!(!a.is_static(1));
+    }
+
+    use crate::fabric::protocol::{PushdownOp, PushdownTarget};
+
+    /// Region 2 = a little edges array: 64 edges, values cycling 0..8.
+    fn add_edges_region(a: &mut DpuAgent, store: &mut RegionStore) {
+        let bytes: Vec<u8> = (0..64u32).flat_map(|i| (i % 8).to_le_bytes()).collect();
+        let len = bytes.len() as u64;
+        store.reserve_with_data(2, bytes).unwrap();
+        a.register_region(2, len);
+    }
+
+    fn sum_req() -> PushdownRequest {
+        let contrib: Vec<u8> = (0..8).flat_map(|i| (i as f64).to_le_bytes()).collect();
+        PushdownRequest {
+            region_id: 2,
+            op: PushdownOp::SumF64,
+            flags: 0,
+            // Two targets whose spans touch [0, 16) and [16, 48) — adjacent,
+            // so the fetch coalesces into one 48-byte run.
+            targets: vec![
+                PushdownTarget { v: 0, edge_start: 0, edge_count: 4 },
+                PushdownTarget { v: 1, edge_start: 4, edge_count: 8 },
+            ],
+            operand: contrib,
+        }
+    }
+
+    #[test]
+    fn pushdown_fetches_byte_exact_and_ships_only_results() {
+        let (mut a, mut f, mut store) = setup(DpuOpts::FULL);
+        add_edges_region(&mut a, &mut store);
+        let req = sum_req();
+        let (done, results) = a.handle_pushdown(&mut f, &store, 0, &req, 2).unwrap();
+        assert!(done > 0);
+        // Edges 0..4 = {0,1,2,3} → Σ contrib = 6; edges 4..12 =
+        // {4,5,6,7,0,1,2,3} → Σ = 28.
+        let r0 = f64::from_le_bytes(results[0..8].try_into().unwrap());
+        let r1 = f64::from_le_bytes(results[8..16].try_into().unwrap());
+        assert_eq!((r0, r1), (6.0, 28.0));
+        let s = f.network_stats();
+        // Byte-exact coalesced fetch: 12 edges × 4 B, nothing on-demand.
+        assert_eq!(s.rx.pushdown_bytes, 48);
+        assert_eq!(s.on_demand_bytes(), 0);
+        // The response carries results only, on the pushdown class.
+        assert_eq!(f.pcie_d2h.stats().pushdown_bytes, req.result_wire_bytes());
+        let st = a.stats();
+        assert_eq!((st.pushdowns, st.pushdown_targets, st.pushdown_edges), (1, 2, 12));
+        assert_eq!(st.pushdown_fetch_bytes, 48);
+    }
+
+    #[test]
+    fn pushdown_declines_unknown_region_and_malformed_kernel() {
+        let (mut a, mut f, mut store) = setup(DpuOpts::FULL);
+        add_edges_region(&mut a, &mut store);
+        let mut req = sum_req();
+        req.region_id = 9;
+        assert!(a.handle_pushdown(&mut f, &store, 0, &req, 2).is_none());
+        // Span past the region end → kernel declines.
+        let mut req = sum_req();
+        req.targets[1].edge_count = 1000;
+        assert!(a.handle_pushdown(&mut f, &store, 0, &req, 2).is_none());
+        assert_eq!(a.stats().pushdowns_declined, 2);
+        assert_eq!(a.stats().pushdowns, 0);
+        assert_eq!(f.network_stats().pushdown_bytes(), 0, "declines move no data");
+    }
+
+    #[test]
+    fn pushdown_on_static_pinned_region_touches_no_network() {
+        let (mut a, mut f, mut store) = setup(DpuOpts::OPT);
+        add_edges_region(&mut a, &mut store);
+        a.pin_static(&mut f, &store, 0, 2).unwrap();
+        let pinned = f.network_stats();
+        let req = sum_req();
+        let (_, results) = a.handle_pushdown(&mut f, &store, 1_000_000, &req, 2).unwrap();
+        assert_eq!(results.len(), 16);
+        let d = f.network_stats().diff(&pinned);
+        assert_eq!(d.rx.pushdown_bytes, 0, "spans served from DPU DRAM");
+        assert_eq!(a.stats().pushdown_fetch_bytes, 0);
+        // Results still cross PCIe on the pushdown class.
+        assert_eq!(d.pcie_d2h.pushdown_bytes, req.result_wire_bytes());
     }
 }

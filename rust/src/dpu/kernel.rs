@@ -1,0 +1,291 @@
+//! Pushdown kernel execution on the DPU's background cores.
+//!
+//! A [`PushdownRequest`] is a compact *kernel descriptor*: an op code, a
+//! list of reduction targets (vertex + adjacency span in the edges region),
+//! and an opaque operand payload whose meaning is per-op. The DPU runs the
+//! reduction next to the data — against spans it already caches or fetches
+//! byte-exact from the memory node — and ships back only one reduced value
+//! per target. Page-granularity traffic becomes result-granularity traffic,
+//! which is the in-network-compute argument of MIND (arXiv:2107.00164) and
+//! the SmartNIC in-network memory-access line (arXiv:2507.04001).
+//!
+//! Operand layouts (all little-endian):
+//!
+//! * [`PushdownOp::SumF64`] — `n × 8` bytes of f64 contributions indexed by
+//!   vertex id. Per target: sum `contrib[u]` over in-neighbors `u` in
+//!   adjacency order; 8-byte f64 result. Adjacency order matters — f64
+//!   addition is not associative, and the host paging path accumulates in
+//!   exactly this order, so the digests stay bit-identical.
+//! * [`PushdownOp::FirstInSet`] — `ceil(n/8)` bytes of frontier bitmap
+//!   (vertex `u` lives at byte `u >> 3`, mask `1 << (u & 7)`). Per target:
+//!   the first in-neighbor whose bit is set, else `u32::MAX`; 4-byte
+//!   result. The scan early-exits like the host's BFS loop.
+//! * [`PushdownOp::MinLabel`] — `n × 4` bytes of u32 labels with the
+//!   frontier encoded in the top bit: `label | MINLABEL_NOT_FRONTIER` for
+//!   vertices *outside* the frontier. Targets must arrive in strictly
+//!   ascending vertex order; the kernel chains updates through a mutable
+//!   copy exactly like the host's in-place dense sweep, so label values
+//!   lowered by earlier targets are visible to later ones. 4-byte result:
+//!   the target's final label.
+//!
+//! Malformed descriptors (out-of-range vertex, span past the region end,
+//! unsorted `MinLabel` targets, wrong operand size) make [`execute`] return
+//! `None`; the agent then declines the request and the host falls back to
+//! the paging path, so a bad descriptor can never corrupt a run — only
+//! slow it down.
+
+use crate::fabric::protocol::{PushdownOp, PushdownRequest};
+use crate::memnode::RegionStore;
+
+/// Top bit of a `MinLabel` operand word: set when the vertex is *not* in
+/// the frontier. Label values (vertex ids) are < 2^31, so the bit is free.
+pub const MINLABEL_NOT_FRONTIER: u32 = 1 << 31;
+
+/// Outcome of running one kernel descriptor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelRun {
+    /// Concatenated per-target results, `op.result_bytes()` each, in
+    /// request order.
+    pub results: Vec<u8>,
+    /// Edges actually scanned (FirstInSet early-exits), for compute-time
+    /// charging.
+    pub edges_scanned: u64,
+}
+
+#[inline]
+fn frontier_bit(bitmap: &[u8], u: u32) -> Option<bool> {
+    let byte = (u >> 3) as usize;
+    if byte >= bitmap.len() {
+        return None;
+    }
+    Some(bitmap[byte] & (1 << (u & 7)) != 0)
+}
+
+#[inline]
+fn edge_at(span: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes(span[i * 4..i * 4 + 4].try_into().unwrap())
+}
+
+/// Run `req` functionally against the edges region in `mem`. Returns `None`
+/// when the descriptor is malformed in any way (the agent declines).
+pub fn execute(req: &PushdownRequest, mem: &RegionStore) -> Option<KernelRun> {
+    let mut results = Vec::with_capacity((req.result_wire_bytes()) as usize);
+    let mut edges_scanned = 0u64;
+    match req.op {
+        PushdownOp::SumF64 => {
+            if req.operand.len() % 8 != 0 {
+                return None;
+            }
+            let n = req.operand.len() / 8;
+            let contrib: Vec<f64> = (0..n)
+                .map(|i| f64::from_le_bytes(req.operand[i * 8..i * 8 + 8].try_into().unwrap()))
+                .collect();
+            for t in &req.targets {
+                let span =
+                    mem.slice(req.region_id, t.edge_start * 4, t.edge_count as u64 * 4).ok()?;
+                let mut acc = 0.0f64;
+                for i in 0..t.edge_count as usize {
+                    let u = edge_at(span, i) as usize;
+                    if u >= n {
+                        return None;
+                    }
+                    acc += contrib[u];
+                }
+                edges_scanned += t.edge_count as u64;
+                results.extend_from_slice(&acc.to_le_bytes());
+            }
+        }
+        PushdownOp::FirstInSet => {
+            for t in &req.targets {
+                let span =
+                    mem.slice(req.region_id, t.edge_start * 4, t.edge_count as u64 * 4).ok()?;
+                let mut found = u32::MAX;
+                for i in 0..t.edge_count as usize {
+                    let u = edge_at(span, i);
+                    edges_scanned += 1;
+                    if frontier_bit(&req.operand, u)? {
+                        found = u;
+                        break;
+                    }
+                }
+                results.extend_from_slice(&found.to_le_bytes());
+            }
+        }
+        PushdownOp::MinLabel => {
+            if req.operand.len() % 4 != 0 {
+                return None;
+            }
+            let mut lab: Vec<u32> = (0..req.operand.len() / 4)
+                .map(|i| u32::from_le_bytes(req.operand[i * 4..i * 4 + 4].try_into().unwrap()))
+                .collect();
+            // Chaining replays the host's ascending in-place sweep; an
+            // out-of-order batch would compute different (wrong) labels.
+            if req.targets.windows(2).any(|w| w[0].v >= w[1].v) {
+                return None;
+            }
+            for t in &req.targets {
+                let v = t.v as usize;
+                if v >= lab.len() {
+                    return None;
+                }
+                let span =
+                    mem.slice(req.region_id, t.edge_start * 4, t.edge_count as u64 * 4).ok()?;
+                let mut cur = lab[v] & !MINLABEL_NOT_FRONTIER;
+                for i in 0..t.edge_count as usize {
+                    let u = edge_at(span, i) as usize;
+                    if u >= lab.len() {
+                        return None;
+                    }
+                    if lab[u] & MINLABEL_NOT_FRONTIER == 0 {
+                        cur = cur.min(lab[u]);
+                    }
+                }
+                edges_scanned += t.edge_count as u64;
+                results.extend_from_slice(&cur.to_le_bytes());
+                lab[v] = (lab[v] & MINLABEL_NOT_FRONTIER) | cur;
+            }
+        }
+    }
+    Some(KernelRun { results, edges_scanned })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::protocol::PushdownTarget;
+
+    /// Edges region 7 holding the little CSR 0→{1,2}, 1→{0}, 2→{0,1}.
+    fn edges_store() -> RegionStore {
+        let mut mem = RegionStore::new(1 << 20);
+        let edges: Vec<u32> = vec![1, 2, 0, 0, 1];
+        let bytes: Vec<u8> = edges.iter().flat_map(|e| e.to_le_bytes()).collect();
+        mem.reserve_with_data(7, bytes).unwrap();
+        mem
+    }
+
+    fn targets_all() -> Vec<PushdownTarget> {
+        vec![
+            PushdownTarget { v: 0, edge_start: 0, edge_count: 2 },
+            PushdownTarget { v: 1, edge_start: 2, edge_count: 1 },
+            PushdownTarget { v: 2, edge_start: 3, edge_count: 2 },
+        ]
+    }
+
+    #[test]
+    fn sum_f64_accumulates_in_adjacency_order() {
+        let mem = edges_store();
+        let contrib = [0.5f64, 0.25, 0.125];
+        let operand: Vec<u8> = contrib.iter().flat_map(|c| c.to_le_bytes()).collect();
+        let req = PushdownRequest {
+            region_id: 7,
+            op: PushdownOp::SumF64,
+            flags: 0,
+            targets: targets_all(),
+            operand,
+        };
+        let run = execute(&req, &mem).unwrap();
+        assert_eq!(run.edges_scanned, 5);
+        let got: Vec<f64> = (0..3)
+            .map(|i| f64::from_le_bytes(run.results[i * 8..i * 8 + 8].try_into().unwrap()))
+            .collect();
+        assert_eq!(got, vec![0.25 + 0.125, 0.5, 0.5 + 0.25]);
+    }
+
+    #[test]
+    fn first_in_set_early_exits_and_reports_misses() {
+        let mem = edges_store();
+        // Frontier = {2} only.
+        let req = PushdownRequest {
+            region_id: 7,
+            op: PushdownOp::FirstInSet,
+            flags: 0,
+            targets: targets_all(),
+            operand: vec![0b100],
+        };
+        let run = execute(&req, &mem).unwrap();
+        let got: Vec<u32> = (0..3)
+            .map(|i| u32::from_le_bytes(run.results[i * 4..i * 4 + 4].try_into().unwrap()))
+            .collect();
+        // v0 sees {1,2}: scans 1 (miss), 2 (hit → stop). v1 sees {0}: miss.
+        // v2 sees {0,1}: both miss.
+        assert_eq!(got, vec![2, u32::MAX, u32::MAX]);
+        assert_eq!(run.edges_scanned, 2 + 1 + 2);
+    }
+
+    #[test]
+    fn min_label_chains_through_earlier_targets() {
+        let mem = edges_store();
+        // All vertices in the frontier, labels = own id. The ascending sweep
+        // chains: v0 keeps 0; v1 sees u=0 → 0; v2 sees u=0,u=1 where lab[1]
+        // is ALREADY 0 from the chained update → 0.
+        let labels = [0u32, 1, 2];
+        let operand: Vec<u8> = labels.iter().flat_map(|l| l.to_le_bytes()).collect();
+        let req = PushdownRequest {
+            region_id: 7,
+            op: PushdownOp::MinLabel,
+            flags: 0,
+            targets: targets_all(),
+            operand,
+        };
+        let run = execute(&req, &mem).unwrap();
+        let got: Vec<u32> = (0..3)
+            .map(|i| u32::from_le_bytes(run.results[i * 4..i * 4 + 4].try_into().unwrap()))
+            .collect();
+        assert_eq!(got, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn min_label_ignores_non_frontier_neighbors() {
+        let mem = edges_store();
+        // Vertex 0 excluded from the frontier via the top bit: v1 (only
+        // in-neighbor 0) must keep its own label.
+        let operand: Vec<u8> = [0u32 | MINLABEL_NOT_FRONTIER, 1, 2]
+            .iter()
+            .flat_map(|l| l.to_le_bytes())
+            .collect();
+        let req = PushdownRequest {
+            region_id: 7,
+            op: PushdownOp::MinLabel,
+            flags: 0,
+            targets: vec![PushdownTarget { v: 1, edge_start: 2, edge_count: 1 }],
+            operand,
+        };
+        let run = execute(&req, &mem).unwrap();
+        assert_eq!(u32::from_le_bytes(run.results[..4].try_into().unwrap()), 1);
+    }
+
+    #[test]
+    fn malformed_descriptors_decline() {
+        let mem = edges_store();
+        // Span past the region end.
+        let req = PushdownRequest {
+            region_id: 7,
+            op: PushdownOp::FirstInSet,
+            flags: 0,
+            targets: vec![PushdownTarget { v: 0, edge_start: 4, edge_count: 9 }],
+            operand: vec![0xFF],
+        };
+        assert!(execute(&req, &mem).is_none());
+        // Unsorted MinLabel targets.
+        let req = PushdownRequest {
+            region_id: 7,
+            op: PushdownOp::MinLabel,
+            flags: 0,
+            targets: vec![
+                PushdownTarget { v: 2, edge_start: 3, edge_count: 2 },
+                PushdownTarget { v: 0, edge_start: 0, edge_count: 2 },
+            ],
+            operand: vec![0; 12],
+        };
+        assert!(execute(&req, &mem).is_none());
+        // Operand too small for SumF64 neighbor indexing.
+        let req = PushdownRequest {
+            region_id: 7,
+            op: PushdownOp::SumF64,
+            flags: 0,
+            targets: targets_all(),
+            operand: vec![0; 8],
+        };
+        assert!(execute(&req, &mem).is_none());
+    }
+}

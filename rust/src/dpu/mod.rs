@@ -2,18 +2,22 @@
 //!
 //! Everything that runs on the BlueField SoC in the paper lives here:
 //! request handling, task aggregation, the asynchronous forwarding
-//! pipeline, and the two caching strategies with their supporting data
-//! structures (recent list, cache table, static cache, prefetcher).
+//! pipeline, the two caching strategies with their supporting data
+//! structures (recent list, cache table, static cache, prefetcher), and
+//! the operator-pushdown kernels the background cores run next to the
+//! data ([`kernel`]).
 
 pub mod agent;
 pub mod aggregate;
 pub mod cache_table;
+pub mod kernel;
 pub mod pipeline;
 pub mod prefetch;
 pub mod recent_list;
 pub mod static_cache;
 
 pub use agent::{DpuAgent, DpuConfig, DpuOpts, DpuStats, DpuTiming, ReadOutcome, Source};
+pub use kernel::{KernelRun, MINLABEL_NOT_FRONTIER};
 pub use aggregate::Aggregator;
 pub use cache_table::{CacheStats, CacheTable, EntryKey, PageInvalidate, PrefetchOrigin};
 pub use pipeline::{ForwardMode, Forwarder};

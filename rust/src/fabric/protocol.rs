@@ -34,6 +34,14 @@ pub const HINT_HEADER_BYTES: u64 = 8;
 pub const HINT_SPAN_BYTES: u64 = 8;
 /// Maximum pages one hint span can encode (16-bit wire field).
 pub const MAX_HINT_SPAN_PAGES: u64 = u16::MAX as u64;
+/// Wire size of a pushdown-kernel header: 16 (region) + 8 (op) + 8 (flags)
+/// + 32 (target count) + 32 (operand bytes) bits = 12 bytes.
+pub const PUSHDOWN_HEADER_BYTES: u64 = 12;
+/// Wire size of one pushdown target descriptor: 32 (vertex) + 48 (edge
+/// start) + 32 (edge count) bits = 14 bytes.
+pub const PUSHDOWN_TARGET_BYTES: u64 = 14;
+/// Maximum encodable edge-start index (48 bits).
+pub const MAX_PUSHDOWN_EDGE_START: u64 = (1 << 48) - 1;
 
 /// Maximum encodable region id (16 bits).
 pub const MAX_REGION_ID: u16 = u16::MAX;
@@ -53,6 +61,9 @@ pub enum RequestKind {
     /// Prefetch hint (frontier adjacency spans) — consumed off the critical
     /// path by the DPU prefetch worker, never acknowledged.
     Hint = 3,
+    /// Operator-pushdown kernel descriptor: the DPU's background cores run
+    /// the reduction next to the data and SEND back only per-vertex results.
+    Pushdown = 4,
 }
 
 impl RequestKind {
@@ -61,6 +72,7 @@ impl RequestKind {
             1 => Some(RequestKind::Read),
             2 => Some(RequestKind::Write),
             3 => Some(RequestKind::Hint),
+            4 => Some(RequestKind::Pushdown),
             _ => None,
         }
     }
@@ -222,6 +234,137 @@ impl HintMessage {
     }
 }
 
+/// The reduction a pushdown kernel runs over each target's adjacency span.
+/// The operand payload's meaning is per-op (see `dpu::kernel`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum PushdownOp {
+    /// Σ operand\[u\] over in-neighbors u, in adjacency order (f64 operand
+    /// array indexed by vertex; 8-byte result per target). PageRank's
+    /// contribution sum.
+    SumF64 = 1,
+    /// First in-neighbor u (adjacency order) whose operand bit is set
+    /// (frontier bitmap operand; 4-byte result per target, `u32::MAX` when
+    /// none). BFS parent selection with early exit.
+    FirstInSet = 2,
+    /// Running label minimum with intra-batch chaining: targets are
+    /// processed in ascending order against a mutable copy of the operand
+    /// (u32 label array; 4-byte result per target). CC's label propagation.
+    MinLabel = 3,
+}
+
+impl PushdownOp {
+    pub fn from_u8(v: u8) -> Option<PushdownOp> {
+        match v {
+            1 => Some(PushdownOp::SumF64),
+            2 => Some(PushdownOp::FirstInSet),
+            3 => Some(PushdownOp::MinLabel),
+            _ => None,
+        }
+    }
+
+    /// Wire bytes of one per-target result value.
+    pub fn result_bytes(self) -> u64 {
+        match self {
+            PushdownOp::SumF64 => 8,
+            PushdownOp::FirstInSet | PushdownOp::MinLabel => 4,
+        }
+    }
+}
+
+/// One reduction target inside a pushdown request: the destination vertex
+/// and its adjacency span as an element range in the edges region (48-bit
+/// start so a graph's whole edge array stays addressable, 32-bit count).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PushdownTarget {
+    pub v: u32,
+    pub edge_start: u64,
+    pub edge_count: u32,
+}
+
+/// A pushdown-kernel descriptor on the host→DPU channel: op code, the
+/// target list, and an opaque per-op operand payload (contribution array /
+/// frontier bitmap / label array). Carried as a two-sided SEND with
+/// [`RequestKind::Pushdown`] immediate data; the DPU replies with
+/// `result_bytes() · targets` of reduced values, or declines (host falls
+/// back to the paging path).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PushdownRequest {
+    pub region_id: u16,
+    pub op: PushdownOp,
+    /// Reserved (0 on the wire today).
+    pub flags: u8,
+    pub targets: Vec<PushdownTarget>,
+    pub operand: Vec<u8>,
+}
+
+impl PushdownRequest {
+    /// Total request wire bytes: header + per-target descriptors + operand.
+    pub fn wire_bytes(&self) -> u64 {
+        PUSHDOWN_HEADER_BYTES
+            + self.targets.len() as u64 * PUSHDOWN_TARGET_BYTES
+            + self.operand.len() as u64
+    }
+
+    /// Response wire bytes: one result value per target.
+    pub fn result_wire_bytes(&self) -> u64 {
+        self.targets.len() as u64 * self.op.result_bytes()
+    }
+
+    /// Pack into the exact wire layout (little-endian fields, edge starts
+    /// truncated to their 48-bit width).
+    pub fn pack(&self) -> Vec<u8> {
+        assert!(self.targets.len() <= u32::MAX as usize, "target count exceeds 32-bit wire field");
+        assert!(self.operand.len() <= u32::MAX as usize, "operand exceeds 32-bit wire field");
+        let mut b = Vec::with_capacity(self.wire_bytes() as usize);
+        b.extend_from_slice(&self.region_id.to_le_bytes());
+        b.push(self.op as u8);
+        b.push(self.flags);
+        b.extend_from_slice(&(self.targets.len() as u32).to_le_bytes());
+        b.extend_from_slice(&(self.operand.len() as u32).to_le_bytes());
+        for t in &self.targets {
+            assert!(
+                t.edge_start <= MAX_PUSHDOWN_EDGE_START,
+                "edge start exceeds 48-bit wire field"
+            );
+            b.extend_from_slice(&t.v.to_le_bytes());
+            b.extend_from_slice(&t.edge_start.to_le_bytes()[..6]);
+            b.extend_from_slice(&t.edge_count.to_le_bytes());
+        }
+        b.extend_from_slice(&self.operand);
+        b
+    }
+
+    pub fn unpack(b: &[u8]) -> Option<PushdownRequest> {
+        if b.len() < PUSHDOWN_HEADER_BYTES as usize {
+            return None;
+        }
+        let region_id = u16::from_le_bytes([b[0], b[1]]);
+        let op = PushdownOp::from_u8(b[2])?;
+        let flags = b[3];
+        let count = u32::from_le_bytes(b[4..8].try_into().unwrap()) as usize;
+        let operand_len = u32::from_le_bytes(b[8..12].try_into().unwrap()) as usize;
+        if b.len() as u64
+            != PUSHDOWN_HEADER_BYTES + count as u64 * PUSHDOWN_TARGET_BYTES + operand_len as u64
+        {
+            return None;
+        }
+        let mut targets = Vec::with_capacity(count);
+        for i in 0..count {
+            let off = (PUSHDOWN_HEADER_BYTES + i as u64 * PUSHDOWN_TARGET_BYTES) as usize;
+            let mut start = [0u8; 8];
+            start[..6].copy_from_slice(&b[off + 4..off + 10]);
+            targets.push(PushdownTarget {
+                v: u32::from_le_bytes(b[off..off + 4].try_into().unwrap()),
+                edge_start: u64::from_le_bytes(start),
+                edge_count: u32::from_le_bytes(b[off + 10..off + 14].try_into().unwrap()),
+            });
+        }
+        let operand = b[b.len() - operand_len..].to_vec();
+        Some(PushdownRequest { region_id, op, flags, targets, operand })
+    }
+}
+
 const fn crc32_table() -> [u32; 256] {
     let mut table = [0u32; 256];
     let mut i = 0;
@@ -357,9 +500,58 @@ mod tests {
         assert_eq!(RequestKind::from_imm(1), Some(RequestKind::Read));
         assert_eq!(RequestKind::from_imm(2), Some(RequestKind::Write));
         assert_eq!(RequestKind::from_imm(3), Some(RequestKind::Hint));
+        assert_eq!(RequestKind::from_imm(4), Some(RequestKind::Pushdown));
         assert_eq!(RequestKind::from_imm(99), None);
         assert_eq!(RequestKind::Read.to_imm(), 1);
         assert_eq!(RequestKind::Hint.to_imm(), 3);
+        assert_eq!(RequestKind::Pushdown.to_imm(), 4);
+    }
+
+    #[test]
+    fn pushdown_request_roundtrip_and_wire_size() {
+        let r = PushdownRequest {
+            region_id: 3,
+            op: PushdownOp::SumF64,
+            flags: 0,
+            targets: vec![
+                PushdownTarget { v: 0, edge_start: 0, edge_count: 4 },
+                PushdownTarget { v: 7, edge_start: 0x1234_5678_9ABC, edge_count: u32::MAX },
+            ],
+            operand: vec![1, 2, 3, 4, 5],
+        };
+        assert_eq!(r.wire_bytes(), 12 + 2 * 14 + 5);
+        assert_eq!(r.result_wire_bytes(), 2 * 8);
+        let packed = r.pack();
+        assert_eq!(packed.len() as u64, r.wire_bytes());
+        assert_eq!(PushdownRequest::unpack(&packed), Some(r));
+        // Truncated and malformed buffers are rejected.
+        assert_eq!(PushdownRequest::unpack(&packed[..packed.len() - 1]), None);
+        assert_eq!(PushdownRequest::unpack(&[0u8; 3]), None);
+    }
+
+    #[test]
+    fn pushdown_result_widths_per_op() {
+        assert_eq!(PushdownOp::SumF64.result_bytes(), 8);
+        assert_eq!(PushdownOp::FirstInSet.result_bytes(), 4);
+        assert_eq!(PushdownOp::MinLabel.result_bytes(), 4);
+        for op in [PushdownOp::SumF64, PushdownOp::FirstInSet, PushdownOp::MinLabel] {
+            assert_eq!(PushdownOp::from_u8(op as u8), Some(op));
+        }
+        assert_eq!(PushdownOp::from_u8(0), None);
+        assert_eq!(PushdownOp::from_u8(9), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "48-bit")]
+    fn pushdown_edge_start_over_48_bits_panics() {
+        PushdownRequest {
+            region_id: 0,
+            op: PushdownOp::MinLabel,
+            flags: 0,
+            targets: vec![PushdownTarget { v: 0, edge_start: 1 << 48, edge_count: 1 }],
+            operand: vec![],
+        }
+        .pack();
     }
 
     #[test]

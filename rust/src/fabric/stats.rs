@@ -43,6 +43,29 @@ impl NetworkStats {
         self.tx.writeback_bytes + self.rx.writeback_bytes
     }
 
+    /// Control-plane (RPC / WQE descriptor) network bytes.
+    pub fn control_bytes(&self) -> u64 {
+        self.tx.control_bytes + self.rx.control_bytes
+    }
+
+    /// Operator-pushdown network bytes (the DPU's byte-exact adjacency
+    /// fetches made on a kernel's behalf).
+    pub fn pushdown_bytes(&self) -> u64 {
+        self.tx.pushdown_bytes + self.rx.pushdown_bytes
+    }
+
+    /// Pushdown bytes over the PCIe switch (descriptors down, results up).
+    pub fn pcie_pushdown_bytes(&self) -> u64 {
+        self.pcie_h2d.pushdown_bytes + self.pcie_d2h.pushdown_bytes
+    }
+
+    /// Every data-plane byte that crossed any wire (network + PCIe) — the
+    /// quantity operator pushdown must strictly shrink versus the paging
+    /// path on dense supersteps.
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.network_bytes() + self.pcie_bytes()
+    }
+
     /// Fraction of data-plane network traffic that is background — Fig 9's
     /// key observation (76–93 % under dynamic caching).
     pub fn background_fraction(&self) -> f64 {
@@ -65,10 +88,12 @@ impl NetworkStats {
                 background_bytes: a.background_bytes - b.background_bytes,
                 writeback_bytes: a.writeback_bytes - b.writeback_bytes,
                 control_bytes: a.control_bytes - b.control_bytes,
+                pushdown_bytes: a.pushdown_bytes - b.pushdown_bytes,
                 on_demand_ops: a.on_demand_ops - b.on_demand_ops,
                 background_ops: a.background_ops - b.background_ops,
                 writeback_ops: a.writeback_ops - b.writeback_ops,
                 control_ops: a.control_ops - b.control_ops,
+                pushdown_ops: a.pushdown_ops - b.pushdown_ops,
                 busy_ns: a.busy_ns - b.busy_ns,
             }
         }

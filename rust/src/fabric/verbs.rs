@@ -80,6 +80,14 @@ pub fn hint_message(fabric: &mut Fabric, now: Ns, numa_node: usize, spans: u64) 
     )
 }
 
+/// Pushdown-kernel descriptor host → DPU: one SEND carrying the packed
+/// [`super::protocol::PushdownRequest`] (`bytes` from its `wire_bytes()`).
+/// Travels on the pushdown class — it substitutes for data-plane page
+/// traffic, so the figures must count it against the paging path.
+pub fn pushdown_request(fabric: &mut Fabric, now: Ns, numa_node: usize, bytes: u64) -> Ns {
+    fabric.intra(now, IntraOp::HostToDpuSend, numa_node, bytes, TrafficClass::Pushdown)
+}
+
 /// Two-sided write request host → DPU: header + dirty data inline.
 pub fn two_sided_write_request(
     fabric: &mut Fabric,
@@ -162,6 +170,18 @@ mod tests {
         assert!(t < 3_000, "a 40-byte hint should be ~latency-bound, got {t}");
         assert_eq!(f.pcie_h2d.stats().background_bytes, 8 + 4 * 8);
         assert_eq!(f.pcie_h2d.stats().on_demand_bytes, 0, "hints stay off the demand class");
+    }
+
+    #[test]
+    fn pushdown_request_and_response_stay_on_the_pushdown_class() {
+        let mut f = Fabric::new(FabricConfig::default());
+        pushdown_request(&mut f, 0, 2, 1000);
+        dpu_response(&mut f, 0, 2, 80, TrafficClass::Pushdown);
+        assert_eq!(f.pcie_h2d.stats().pushdown_bytes, 1000);
+        assert_eq!(f.pcie_d2h.stats().pushdown_bytes, 80);
+        assert_eq!(f.pcie_h2d.stats().on_demand_bytes, 0);
+        // Pushdown is data plane: the figures' byte totals must see it.
+        assert_eq!(f.pcie_h2d.stats().data_bytes(), 1000);
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub mod evaluation;
 pub use ablations::{
     ablation_batch_size, ablation_cache_policy, ablation_entry_size, ablation_evict_policy,
     ablation_faults, ablation_fleet, ablation_membership, ablation_prefetch_depth,
-    ablation_prefetch_policy, ablation_qp_count, ablation_scaling,
+    ablation_prefetch_policy, ablation_pushdown, ablation_qp_count, ablation_scaling,
 };
 pub use characterization::{fig3, fig4, fig5, table1, table2};
 pub use evaluation::{fig10, fig11, fig6, fig7, fig8, fig9};
@@ -84,6 +84,7 @@ pub fn run_figure(id: &str, scale: f64, threads: usize) -> Option<FigureReport> 
         "abl-fleet" => Some(ablation_fleet(scale, threads)),
         "abl-membership" => Some(ablation_membership(scale, threads)),
         "abl-scaling" => Some(ablation_scaling(scale, threads)),
+        "abl-pushdown" => Some(ablation_pushdown(scale, threads)),
         _ => None,
     }
 }

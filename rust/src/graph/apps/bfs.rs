@@ -5,9 +5,10 @@
 //! in-memory reference used by the test suite (levels are traversal-order
 //! independent, so correctness compares levels).
 
+use crate::fabric::protocol::PushdownOp;
 use crate::graph::csr::{CsrGraph, VertexId};
 use crate::graph::fam_graph::FamGraph;
-use crate::graph::ops::{edge_map, EdgeMapOpts};
+use crate::graph::ops::{edge_map_pushdown, frontier_bitmap, EdgeMapOpts, PushdownSpec};
 use crate::graph::runner::GraphRunner;
 use crate::graph::subset::VertexSubset;
 use std::collections::VecDeque;
@@ -34,14 +35,20 @@ pub fn bfs(r: &mut GraphRunner, g: &FamGraph, src: VertexId) -> BfsResult {
         // Cell views let `update` (writer) and `cond` (reader) share state,
         // mirroring Ligra's CAS-based updateAtomic.
         let levels_c = std::cell::Cell::from_mut(levels.as_mut_slice()).as_slice_of_cells();
-        frontier = edge_map(
+        let parents_c = std::cell::Cell::from_mut(parents.as_mut_slice()).as_slice_of_cells();
+        // The dense sweep adopts the *first* in-frontier in-neighbor (in
+        // adjacency order, early-exiting) as parent — exactly the
+        // `FirstInSet` kernel, so dense supersteps can ship a frontier
+        // bitmap to the DPU and get one parent id back per unreached
+        // vertex instead of paging their adjacency in.
+        frontier = edge_map_pushdown(
             r,
             g,
             &frontier,
             |u, v| {
                 if levels_c[v as usize].get() < 0 {
                     levels_c[v as usize].set(round);
-                    parents[v as usize] = u as i64;
+                    parents_c[v as usize].set(u as i64);
                     true
                 } else {
                     false
@@ -51,6 +58,22 @@ pub fn bfs(r: &mut GraphRunner, g: &FamGraph, src: VertexId) -> BfsResult {
             EdgeMapOpts {
                 early_exit: true,
                 ..Default::default()
+            },
+            || {
+                Some(PushdownSpec {
+                    op: PushdownOp::FirstInSet,
+                    operand: frontier_bitmap(&frontier, n),
+                })
+            },
+            |v, bytes| {
+                let p = u32::from_le_bytes(bytes.try_into().unwrap());
+                if p != u32::MAX {
+                    levels_c[v as usize].set(round);
+                    parents_c[v as usize].set(p as i64);
+                    true
+                } else {
+                    false
+                }
             },
         );
     }

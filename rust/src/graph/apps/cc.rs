@@ -6,9 +6,11 @@
 //! changes. At the fixpoint each vertex carries the minimum vertex id of
 //! its component (deterministic regardless of schedule).
 
+use crate::dpu::MINLABEL_NOT_FRONTIER;
+use crate::fabric::protocol::PushdownOp;
 use crate::graph::csr::{CsrGraph, VertexId};
 use crate::graph::fam_graph::FamGraph;
-use crate::graph::ops::{edge_map, EdgeMapOpts};
+use crate::graph::ops::{edge_map_pushdown, EdgeMapOpts, PushdownSpec};
 use crate::graph::runner::GraphRunner;
 use crate::graph::subset::VertexSubset;
 
@@ -28,13 +30,17 @@ pub fn cc(r: &mut GraphRunner, g: &FamGraph) -> CcResult {
     let mut rounds = 0;
     while !frontier.is_empty() {
         rounds += 1;
-        frontier = edge_map(
+        // Labels behind cells: the paging `update` and the pushdown
+        // `apply` both write them, and the `MinLabel` spec reads them.
+        let labels_c = std::cell::Cell::from_mut(labels.as_mut_slice()).as_slice_of_cells();
+        frontier = edge_map_pushdown(
             r,
             g,
             &frontier,
             |u, v| {
-                if labels[u as usize] < labels[v as usize] {
-                    labels[v as usize] = labels[u as usize];
+                let (lu, lv) = (labels_c[u as usize].get(), labels_c[v as usize].get());
+                if lu < lv {
+                    labels_c[v as usize].set(lu);
                     true
                 } else {
                     false
@@ -42,6 +48,33 @@ pub fn cc(r: &mut GraphRunner, g: &FamGraph) -> CcResult {
             },
             |_| true,
             EdgeMapOpts::default(),
+            || {
+                // Operand: the live label array with frontier membership
+                // frozen into bit 31 (labels are vertex ids < 2^31, so the
+                // bit is free). The kernel chains min-propagation through
+                // its copy in ascending target order — the exact replay of
+                // the host dense sweep's in-place updates.
+                let fd = frontier.to_dense(n);
+                let mut operand = Vec::with_capacity(n * 4);
+                for u in 0..n as VertexId {
+                    let w = labels_c[u as usize].get()
+                        | if fd.contains(u) { 0 } else { MINLABEL_NOT_FRONTIER };
+                    operand.extend_from_slice(&w.to_le_bytes());
+                }
+                Some(PushdownSpec {
+                    op: PushdownOp::MinLabel,
+                    operand,
+                })
+            },
+            |v, bytes| {
+                let new = u32::from_le_bytes(bytes.try_into().unwrap());
+                if new != labels_c[v as usize].get() {
+                    labels_c[v as usize].set(new);
+                    true
+                } else {
+                    false
+                }
+            },
         );
     }
     let mut uniq: Vec<VertexId> = labels.clone();

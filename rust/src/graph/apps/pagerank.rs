@@ -8,9 +8,11 @@
 //! sequential scan that gives dynamic caching its 93 % hit rate on
 //! friendster, Fig 10).
 
+use crate::fabric::protocol::{PushdownOp, PushdownRequest};
 use crate::graph::csr::CsrGraph;
 use crate::graph::fam_graph::FamGraph;
 use crate::graph::runner::GraphRunner;
+use crate::host::PushdownMode;
 
 pub const DAMPING: f64 = 0.85;
 
@@ -36,6 +38,11 @@ pub fn pagerank(r: &mut GraphRunner, g: &FamGraph, iters: u32) -> PrResult {
     let mut deg_pages: Vec<crate::host::PageKey> = Vec::new();
     let mut last_delta = 0.0;
     for _ in 0..iters {
+        // Degree-page hints (second hint stream): the contrib sweep reads
+        // every vertex's offset pair, so when the vertex region is
+        // dynamically cached its pages are exactly predictable — post them
+        // before the sweep starts faulting.
+        r.hint_degree_pages(g, &all);
         // Vertex-data sweep: contrib = rank / degree (offset reads on FAM).
         let cm = r.compute;
         r.parallel_chunks(&all, cm.grain_dense, |agent, tid, v, now| {
@@ -57,6 +64,22 @@ pub fn pagerank(r: &mut GraphRunner, g: &FamGraph, iters: u32) -> PrResult {
         // batch, so a hub's scattered offset-page misses overlap on the
         // wire instead of paying one round trip each.
         sums.fill(0.0);
+        if pushdown_sums(r, g, &all, &contrib, &mut sums) {
+            // The whole pull sweep ran as a `SumF64` kernel on the DPU:
+            // per-vertex contribution sums came back over the wire instead
+            // of the edge stream (and the degree-page touches, which are
+            // traffic modeling only, never happened). Skip straight to the
+            // rank update.
+            let base = (1.0 - DAMPING) / n as f64;
+            last_delta = 0.0;
+            for v in 0..n {
+                let next = base + DAMPING * sums[v];
+                last_delta += (next - ranks[v]).abs();
+                ranks[v] = next;
+            }
+            r.advance((n as u64) * 2);
+            continue;
+        }
         // The pull sweep reads every vertex's adjacency in order — hint the
         // full edge stream (collapses to a handful of merged spans) so a
         // graph-hint prefetcher warms the iteration without speculation.
@@ -102,6 +125,58 @@ pub fn pagerank(r: &mut GraphRunner, g: &FamGraph, iters: u32) -> PrResult {
         iterations: iters,
         last_delta,
     }
+}
+
+/// Run the pull sweep as a `SumF64` pushdown: ship the contribution array
+/// plus every vertex's adjacency-span descriptor; the DPU accumulates in
+/// adjacency order (bit-identical to the host loop — f64 addition is
+/// order-sensitive) and returns one 8-byte sum per vertex. `false` means
+/// the paging sweep must run instead: pushdown off, a backend without
+/// near-data compute, [`PushdownMode::Auto`] predicting a loss on a
+/// mostly-resident edge stream, or the DPU declining the descriptor.
+fn pushdown_sums(
+    r: &mut GraphRunner,
+    g: &FamGraph,
+    all: &[u32],
+    contrib: &[f64],
+    sums: &mut [f64],
+) -> bool {
+    if !r.agent.supports_pushdown() {
+        return false;
+    }
+    if r.agent.pushdown_mode() == PushdownMode::Auto {
+        let chunk = r.agent.chunk_bytes();
+        let spans = g.frontier_edge_spans(all, chunk, usize::MAX);
+        if r.agent.resident_fraction(&spans) > 0.5 {
+            r.agent.note_pushdown_fallback();
+            return false;
+        }
+    }
+    let mut operand = Vec::with_capacity(contrib.len() * 8);
+    for &c in contrib {
+        operand.extend_from_slice(&c.to_le_bytes());
+    }
+    let req = PushdownRequest {
+        region_id: g.edges.region,
+        op: PushdownOp::SumF64,
+        flags: 0,
+        targets: g.pushdown_targets(all),
+        operand,
+    };
+    let now = r.now();
+    let Some((done, results)) = r.agent.pushdown(now, &req) else {
+        return false;
+    };
+    r.set_clock(done);
+    // Unpack the reduced values on the modeled threads (targets are `all`
+    // in ascending order, so target i is vertex i).
+    let cm = r.compute;
+    r.parallel_chunks(all, cm.grain_dense, |_, _, v, now| {
+        let i = v as usize * 8;
+        sums[v as usize] = f64::from_le_bytes(results[i..i + 8].try_into().unwrap());
+        now + cm.per_vertex_ns
+    });
+    true
 }
 
 /// In-memory reference PageRank (same accumulation order).

@@ -167,6 +167,35 @@ impl FamGraph {
         false
     }
 
+    /// `offsets[v]` and `offsets[v+1]` from the host-DRAM shadow — zero
+    /// FAM traffic. Used by the hint translator and the pushdown
+    /// descriptor builder, which both need span geometry without touching
+    /// the paging path.
+    pub fn host_offset_pair(&self, v: VertexId) -> (u64, u64) {
+        (self.host_offsets[v as usize], self.host_offsets[v as usize + 1])
+    }
+
+    /// Build the pushdown target list for `verts` (adjacency spans as edge
+    /// element ranges) from the offsets shadow — zero FAM traffic, like
+    /// the hint translator. Targets keep the caller's vertex order, which
+    /// the `MinLabel` kernel requires to be ascending.
+    pub fn pushdown_targets(
+        &self,
+        verts: &[VertexId],
+    ) -> Vec<crate::fabric::protocol::PushdownTarget> {
+        verts
+            .iter()
+            .map(|&v| {
+                let (s, e) = self.host_offset_pair(v);
+                crate::fabric::protocol::PushdownTarget {
+                    v,
+                    edge_start: s,
+                    edge_count: (e - s) as u32,
+                }
+            })
+            .collect()
+    }
+
     /// Total FAM footprint (sizes the page buffer at 1/3, §V).
     pub fn footprint_bytes(&self) -> u64 {
         self.offsets.bytes + self.edges.bytes

@@ -19,6 +19,8 @@ use super::csr::VertexId;
 use super::fam_graph::FamGraph;
 use super::runner::GraphRunner;
 use super::subset::VertexSubset;
+use crate::fabric::protocol::{PushdownOp, PushdownRequest};
+use crate::host::PushdownMode;
 use crate::sim::Ns;
 
 /// Dense/sparse selection for one edge_map call.
@@ -108,6 +110,109 @@ pub fn edge_map(
     // producing barrier (no-op for dense successors — see
     // `lead_hint_frontier`). The consuming edge_map recognizes the set by
     // digest and does not re-send it.
+    r.lead_hint_frontier(g, &next);
+    next
+}
+
+/// How a dense superstep expresses itself as a pushdown kernel: the op
+/// code plus its operand payload (contribution array / frontier bitmap /
+/// label array — see `dpu::kernel` for the layouts).
+pub struct PushdownSpec {
+    pub op: PushdownOp,
+    pub operand: Vec<u8>,
+}
+
+/// Pack a frontier as the kernel bitmap operand (vertex `u` at byte
+/// `u >> 3`, mask `1 << (u & 7)`).
+pub fn frontier_bitmap(frontier: &VertexSubset, n: usize) -> Vec<u8> {
+    let fd = frontier.to_dense(n);
+    let mut bm = vec![0u8; n.div_ceil(8)];
+    for u in 0..n as VertexId {
+        if fd.contains(u) {
+            bm[(u >> 3) as usize] |= 1 << (u & 7);
+        }
+    }
+    bm
+}
+
+/// Pushdown-eligible [`edge_map`]: when the superstep will run dense and
+/// the operator is expressible as a kernel (`spec` returns one), ship a
+/// descriptor to the backend's near-data compute and apply the reduced
+/// per-vertex results instead of paging the adjacency in. Every other
+/// case — sparse direction, pushdown off, no spec, `Auto` predicting a
+/// loss, or the backend declining — falls back to the paging [`edge_map`]
+/// with the *same* closures, so outputs are bit-identical by construction.
+///
+/// `apply(v, result) -> activated` consumes one `result_bytes()`-wide
+/// value per eligible vertex, in ascending vertex order — exactly the
+/// order the kernel (and the host dense sweep it replays) processed them.
+pub fn edge_map_pushdown(
+    r: &mut GraphRunner,
+    g: &FamGraph,
+    frontier: &VertexSubset,
+    update: impl FnMut(VertexId, VertexId) -> bool,
+    cond: impl Fn(VertexId) -> bool,
+    opts: EdgeMapOpts,
+    spec: impl FnOnce() -> Option<PushdownSpec>,
+    mut apply: impl FnMut(VertexId, &[u8]) -> bool,
+) -> VertexSubset {
+    let dense = match opts.direction {
+        Direction::ForceSparse => false,
+        Direction::ForceDense => true,
+        Direction::Auto => frontier.should_densify(g.n),
+    };
+    if !dense || !r.agent.supports_pushdown() {
+        return edge_map(r, g, frontier, update, cond, opts);
+    }
+    // Eligible targets in ascending order — the kernel replays the dense
+    // sweep's in-place chaining, so order is semantics, not style.
+    let eligible: Vec<VertexId> = (0..g.n as VertexId).filter(|&v| cond(v)).collect();
+    if eligible.is_empty() {
+        return edge_map(r, g, frontier, update, cond, opts);
+    }
+    // Auto: predict whether pushdown pays before building the descriptor.
+    // Spans mostly resident host-side would page almost nothing, so a
+    // kernel would *add* wire bytes; ship only when the superstep still
+    // has real demand traffic ahead of it.
+    if r.agent.pushdown_mode() == PushdownMode::Auto {
+        let chunk = r.agent.chunk_bytes();
+        let spans = g.frontier_edge_spans(&eligible, chunk, usize::MAX);
+        if r.agent.resident_fraction(&spans) > 0.5 {
+            r.agent.note_pushdown_fallback();
+            return edge_map(r, g, frontier, update, cond, opts);
+        }
+    }
+    let Some(spec) = spec() else {
+        return edge_map(r, g, frontier, update, cond, opts);
+    };
+    let req = PushdownRequest {
+        region_id: g.edges.region,
+        op: spec.op,
+        flags: 0,
+        targets: g.pushdown_targets(&eligible),
+        operand: spec.operand,
+    };
+    let now = r.now();
+    let Some((done, results)) = r.agent.pushdown(now, &req) else {
+        return edge_map(r, g, frontier, update, cond, opts);
+    };
+    r.set_clock(done);
+    // Apply the reduced values on the modeled threads (ascending order —
+    // `run_dynamic` hands items out in order). No adjacency was paged, so
+    // there is no entry hint to post; the produced frontier still gets its
+    // lead hint for a sparse successor on the paging path.
+    let w = spec.op.result_bytes() as usize;
+    let cm = r.compute;
+    let mut next = Vec::new();
+    let idx: Vec<usize> = (0..eligible.len()).collect();
+    r.parallel_chunks(&idx, cm.grain_dense, |_, _, i, now| {
+        let v = eligible[i];
+        if apply(v, &results[i * w..(i + 1) * w]) {
+            next.push(v);
+        }
+        now + cm.per_vertex_ns
+    });
+    let next = VertexSubset::from_vertices(next);
     r.lead_hint_frontier(g, &next);
     next
 }

@@ -137,6 +137,25 @@ impl GraphRunner {
         }
     }
 
+    /// Second hint stream: only the *offsets* pages of `verts`, for sweeps
+    /// that read vertex metadata (degrees) without touching adjacency —
+    /// PageRank's contrib sweep and its scattered per-neighbor degree
+    /// lookups. Separate from [`Self::hint_frontier_vertices`] because the
+    /// read set is offsets-only; posted only when the vertex region is
+    /// dynamically cached (a static pin never faults, so hinting it would
+    /// be pure hint-channel noise).
+    pub fn hint_degree_pages(&mut self, g: &FamGraph, verts: &[VertexId]) {
+        if verts.is_empty() || !self.wants_hints() || self.agent.is_static(g.offsets.region) {
+            return;
+        }
+        let chunk = self.agent.chunk_bytes();
+        let spans = g.frontier_offset_spans(verts, chunk, MAX_HINT_SPANS);
+        if !spans.is_empty() {
+            let now = self.clock;
+            self.agent.prefetch_hint(now, &spans);
+        }
+    }
+
     /// FNV-1a over a sparse vertex list — a cheap identity for "is this
     /// the read set the lead hint already posted?".
     fn read_set_digest(verts: &[VertexId]) -> u64 {

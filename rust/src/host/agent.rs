@@ -135,6 +135,42 @@ impl Default for HostTiming {
     }
 }
 
+/// Operator-pushdown routing policy of a host agent.
+///
+/// * `Off` — never build kernel descriptors; every superstep pages (the
+///   seed behavior, and the default).
+/// * `On` — always attempt pushdown when the operator is expressible; the
+///   DPU may still decline, falling back to paging.
+/// * `Auto` — attempt pushdown only when it is expected to pay: the spans
+///   are mostly non-resident host-side and the descriptor + operand +
+///   results are smaller than the paging path's page estimate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PushdownMode {
+    #[default]
+    Off,
+    On,
+    Auto,
+}
+
+impl PushdownMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PushdownMode::Off => "off",
+            PushdownMode::On => "on",
+            PushdownMode::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PushdownMode> {
+        match s {
+            "off" => Some(PushdownMode::Off),
+            "on" => Some(PushdownMode::On),
+            "auto" => Some(PushdownMode::Auto),
+            _ => None,
+        }
+    }
+}
+
 /// Host agent statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct HostStats {
@@ -164,6 +200,12 @@ pub struct HostStats {
     /// same page (the waiter lists of the per-shard miss queues) instead
     /// of issuing their own.
     pub miss_waiters: u64,
+    /// Pushdown kernel descriptors executed by the backend's near-data
+    /// compute (a superstep served at result granularity, not pages).
+    pub pushdowns: u64,
+    /// Pushdown attempts the backend declined — the superstep fell back to
+    /// the paging path (always correct, just byte-heavier).
+    pub pushdown_fallbacks: u64,
 }
 
 impl HostStats {
@@ -226,6 +268,9 @@ pub struct HostAgent {
     lane_clocks: Vec<Ns>,
     /// Reused per-lane span counts of one window's post.
     lane_spans: Vec<u64>,
+    /// Operator-pushdown routing policy ([`PushdownMode::Off`] keeps the
+    /// seed's pure paging path bit for bit).
+    pushdown: PushdownMode,
 }
 
 impl HostAgent {
@@ -305,6 +350,7 @@ impl HostAgent {
             base_qp_count: qp_count.max(1),
             lane_clocks: vec![0],
             lane_spans: Vec::new(),
+            pushdown: PushdownMode::Off,
         }
     }
 
@@ -1046,6 +1092,74 @@ impl HostAgent {
             true
         } else {
             false
+        }
+    }
+
+    /// Set the operator-pushdown routing policy (applied by the service at
+    /// client construction; safe to flip between supersteps).
+    pub fn set_pushdown(&mut self, mode: PushdownMode) {
+        self.pushdown = mode;
+    }
+
+    /// Current pushdown routing policy.
+    pub fn pushdown_mode(&self) -> PushdownMode {
+        self.pushdown
+    }
+
+    /// Is pushdown worth even *building* a descriptor for? True only when
+    /// the policy allows it and the backend has near-data compute.
+    pub fn supports_pushdown(&self) -> bool {
+        self.pushdown != PushdownMode::Off && self.store.supports_pushdown()
+    }
+
+    /// Fraction of the spans' pages currently resident in the local page
+    /// buffer — the [`PushdownMode::Auto`] probe: spans mostly resident
+    /// host-side generate little demand traffic, so shipping a kernel for
+    /// them would *add* bytes, not save them.
+    pub fn resident_fraction(&self, spans: &[PageSpan]) -> f64 {
+        let mut total = 0u64;
+        let mut resident = 0u64;
+        for s in spans {
+            for i in 0..s.pages {
+                total += 1;
+                if self.buffer.is_resident(s.key_at(i)) {
+                    resident += 1;
+                }
+            }
+        }
+        if total == 0 {
+            return 0.0;
+        }
+        resident as f64 / total as f64
+    }
+
+    /// Record a host-side pushdown decline (the [`PushdownMode::Auto`]
+    /// probe predicting a loss before any descriptor was built) so the
+    /// ledger's fallback count covers both decision sites.
+    pub fn note_pushdown_fallback(&mut self) {
+        self.stats.pushdown_fallbacks += 1;
+    }
+
+    /// Ship a pushdown kernel descriptor to the backend and block until the
+    /// reduced results land (`Some(done, results)`), or learn that the
+    /// backend declined (`None`) — the caller must then run the same
+    /// superstep over the paging path. On-critical-path, unlike hints: the
+    /// superstep cannot proceed without the results.
+    pub fn pushdown(
+        &mut self,
+        now: Ns,
+        req: &crate::fabric::protocol::PushdownRequest,
+    ) -> Option<(Ns, Vec<u8>)> {
+        let numa = self.numa_node;
+        match self.store.pushdown(now, req, numa) {
+            Some(r) => {
+                self.stats.pushdowns += 1;
+                Some(r)
+            }
+            None => {
+                self.stats.pushdown_fallbacks += 1;
+                None
+            }
         }
     }
 

@@ -34,7 +34,7 @@ pub mod buffer;
 pub mod fam;
 pub mod frame_state;
 
-pub use agent::{HostAgent, HostStats, HostTiming};
+pub use agent::{HostAgent, HostStats, HostTiming, PushdownMode};
 pub use buffer::{BufferStats, EvictPolicy, EvictedPage, PageBuffer, PageKey, PageSpan};
 pub use fam::{FamHandle, ObjectTable, Placement};
 pub use frame_state::{FrameState, PinOverflow, MAX_PINS};

@@ -223,6 +223,51 @@
 //! outputs, `rejects == retries`, restored replication after repair,
 //! and a provably zero-cost disabled config.
 //!
+//! ## Operator pushdown (near-data compute)
+//!
+//! `--pushdown on|auto` inverts the data plane for dense graph
+//! supersteps: instead of faulting the frontier's adjacency pages across
+//! the fabric, the host ships one compact **kernel descriptor** and gets
+//! back only the reduced per-vertex values:
+//!
+//! ```text
+//! GraphRunner        ── edge_map_pushdown (graph/ops): when the superstep
+//!      │                runs dense and the operator is kernel-expressible
+//!      │                (PushdownSpec), collect the cond-eligible targets
+//!      │                in ascending order; FamGraph::pushdown_targets
+//!      │                packs (vertex, edge_start, edge_count) from the
+//!      │                host-resident offsets shadow — zero FAM traffic
+//! HostAgent          ── pushdown() ships the PushdownRequest; Auto mode
+//!  (host/agent)         first probes resident_fraction of the frontier's
+//!      │                edge spans (> 0.5 resident → paging would be
+//!      │                cheaper, fall back and count it)
+//! pushdown channel   ── one SEND on TrafficClass::Pushdown carrying the
+//!  (fabric/protocol)    packed descriptor (RequestKind::Pushdown: op,
+//!      │                targets, operand bitmap/labels/contribs), one
+//!      │                response leg with result_wire_bytes() of output
+//! DpuAgent           ── handle_pushdown executes the kernel (dpu/kernel:
+//!  (dpu/agent)          SumF64 | FirstInSet | MinLabel) on the background
+//!      │                cores against cached-or-fetched adjacency spans
+//!      │                (byte-exact coalesced fetches, Pushdown class);
+//!      │                malformed descriptors decline → host falls back
+//! memory node        ── only the *missing* adjacency spans move, DPU-side;
+//!                       reduced values (4–8 B/vertex) cross the host link
+//! ```
+//!
+//! The operators cover the paper's dense supersteps: PageRank
+//! contribution sums (`SumF64`), BFS parent adoption (`FirstInSet`) and
+//! CC label propagation (`MinLabel`, replaying the host's ascending
+//! in-place sweep). Every fallback path — sparse direction, `off`, no
+//! spec, Auto predicting a loss, backend declining — reuses the same
+//! closures on the paging [`graph::ops::edge_map`], so outputs are
+//! bit-identical by construction (`tests/pushdown.rs` pins all five apps
+//! × backends × seeds). Knobs: `SodaConfig::pushdown`, CLI `--pushdown
+//! on|off|auto` (default `off` keeps the seed paths untouched). The
+//! per-class `bytes_on_wire` breakdown in `RunMetrics` JSON
+//! (demand/prefetch/writeback/control/pushdown) plus the `abl-pushdown`
+//! figure quantify the win, and the CI "Pushdown guard" asserts strictly
+//! fewer total wire bytes at identical digests for PageRank + BFS.
+//!
 //! Quickstart:
 //! ```no_run
 //! use soda::prelude::*;

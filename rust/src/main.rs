@@ -8,6 +8,7 @@
 //!          [--prefetch-policy Q] [--prefetch-depth N] [--prefetch-scan N]
 //!          [--max-batch-pages N] [--coalesce on|off]
 //!          [--host-workers W] [--buffer-shards P]
+//!          [--pushdown on|off|auto]
 //!          [--config FILE] [--cluster-config FILE]
 //! soda config [--config FILE] [--evict-policy P] ...
 //! soda advisor [--hit-rate H]
@@ -113,6 +114,10 @@ fn soda_config_from_args(args: &Args) -> Result<SodaConfig> {
             "off" | "false" | "0" => false,
             _ => bail!("invalid --coalesce '{s}' (on|off)"),
         };
+    }
+    if let Some(s) = args.opt("pushdown") {
+        cfg.pushdown = soda::host::PushdownMode::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("invalid --pushdown '{s}' (on|off|auto)"))?;
     }
     if let Some(s) = args.opt("host-workers") {
         let n: usize = s
@@ -316,6 +321,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     wb.fault = scfg.fault;
     wb.fleet = scfg.fleet;
     wb.membership = scfg.membership;
+    wb.pushdown = Some(scfg.pushdown);
     if args.opt("config").is_some() {
         // A --config file is a full SodaConfig: honor every field
         // (qp_count, numa_aware, buffer_fraction, host_timing, …), not
@@ -403,12 +409,13 @@ fn usage() -> &'static str {
        figures [--all | <id>...] [--scale F] [--threads N] [--json DIR]\n\
            regenerate paper tables/figures (table1 table2 fig3..fig11)\n\
            plus ablations (abl-entry abl-prefetch abl-prefetch-depth abl-evict abl-qp\n\
-           abl-cache-policy abl-batch abl-faults abl-fleet abl-membership abl-scaling)\n\
+           abl-cache-policy abl-batch abl-faults abl-fleet abl-membership abl-scaling\n\
+           abl-pushdown)\n\
        run <app> <graph> [--backend B] [--caching M] [--scale F] [--with-bg-bfs] [--json]\n\
            [--evict-policy P] [--dpu-cache-policy P] [--prefetch-policy Q]\n\
            [--prefetch-depth N] [--prefetch-scan N]\n\
            [--max-batch-pages N] [--coalesce on|off] [--host-workers W] [--buffer-shards P]\n\
-           [--config FILE] [--cluster-config FILE]\n\
+           [--pushdown on|off|auto] [--config FILE] [--cluster-config FILE]\n\
            [--fault-drop-rate R] [--fault-corrupt-rate R] [--fault-dup-rate R]\n\
            [--fault-spike-rate R] [--fault-spike-ns T] [--fault-crash-start-ns T]\n\
            [--fault-crash-len-ns T] [--fault-crash-every-ns T] [--fault-seed S]\n\
@@ -423,6 +430,10 @@ fn usage() -> &'static str {
             --host-workers W>1 services a fault window's miss spans on W\n\
             parallel QP lanes; --buffer-shards P hash-shards the page\n\
             buffer (W=1/P=1 keep the serial seed path bit-identical);\n\
+            --pushdown on ships dense graph supersteps to the DPU as\n\
+            kernel descriptors (sum/min/filter) and pages nothing, auto\n\
+            pushes down only when the residency probe predicts a traffic\n\
+            win, off (default) keeps the pure paging path;\n\
             any --fault-* flag arms seeded fault injection + the reliable\n\
             fabric layer — retries, checksums, memory-node failover;\n\
             --mem-nodes N>1 shards remote memory across a fleet of N nodes\n\

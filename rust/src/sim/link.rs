@@ -25,6 +25,11 @@ pub enum TrafficClass {
     Writeback,
     /// RPC control-plane messages (QP setup, region metadata).
     Control,
+    /// Operator-pushdown traffic: kernel descriptors, the DPU's byte-exact
+    /// adjacency fetches on the kernel's behalf, and the reduced results.
+    /// Data-plane — it substitutes for page fetches, so the traffic figures
+    /// must count it against the paging path.
+    Pushdown,
 }
 
 /// Byte/op counters per traffic class, the simulated `port_xmit_data`.
@@ -34,27 +39,38 @@ pub struct LinkStats {
     pub background_bytes: u64,
     pub writeback_bytes: u64,
     pub control_bytes: u64,
+    pub pushdown_bytes: u64,
     pub on_demand_ops: u64,
     pub background_ops: u64,
     pub writeback_ops: u64,
     pub control_ops: u64,
+    pub pushdown_ops: u64,
     /// Total wire-busy time, for utilization reporting.
     pub busy_ns: Ns,
 }
 
 impl LinkStats {
     pub fn total_bytes(&self) -> u64 {
-        self.on_demand_bytes + self.background_bytes + self.writeback_bytes + self.control_bytes
+        self.on_demand_bytes
+            + self.background_bytes
+            + self.writeback_bytes
+            + self.control_bytes
+            + self.pushdown_bytes
     }
 
     pub fn total_ops(&self) -> u64 {
-        self.on_demand_ops + self.background_ops + self.writeback_ops + self.control_ops
+        self.on_demand_ops
+            + self.background_ops
+            + self.writeback_ops
+            + self.control_ops
+            + self.pushdown_ops
     }
 
     /// Data-plane bytes (everything except control RPCs) — what the paper's
-    /// network-traffic figures count.
+    /// network-traffic figures count. Pushdown traffic is data plane: it
+    /// carries the same payloads the paging path would, just reduced.
     pub fn data_bytes(&self) -> u64 {
-        self.on_demand_bytes + self.background_bytes + self.writeback_bytes
+        self.on_demand_bytes + self.background_bytes + self.writeback_bytes + self.pushdown_bytes
     }
 
     fn record(&mut self, class: TrafficClass, bytes: u64) {
@@ -75,6 +91,10 @@ impl LinkStats {
                 self.control_bytes += bytes;
                 self.control_ops += 1;
             }
+            TrafficClass::Pushdown => {
+                self.pushdown_bytes += bytes;
+                self.pushdown_ops += 1;
+            }
         }
     }
 
@@ -83,10 +103,12 @@ impl LinkStats {
         self.background_bytes += other.background_bytes;
         self.writeback_bytes += other.writeback_bytes;
         self.control_bytes += other.control_bytes;
+        self.pushdown_bytes += other.pushdown_bytes;
         self.on_demand_ops += other.on_demand_ops;
         self.background_ops += other.background_ops;
         self.writeback_ops += other.writeback_ops;
         self.control_ops += other.control_ops;
+        self.pushdown_ops += other.pushdown_ops;
         self.busy_ns += other.busy_ns;
     }
 }
@@ -207,14 +229,16 @@ mod tests {
         l.transfer(0, 200, TrafficClass::Background);
         l.transfer(0, 300, TrafficClass::Writeback);
         l.transfer(0, 50, TrafficClass::Control);
+        l.transfer(0, 25, TrafficClass::Pushdown);
         let s = l.stats();
         assert_eq!(s.on_demand_bytes, 100);
         assert_eq!(s.background_bytes, 200);
         assert_eq!(s.writeback_bytes, 300);
         assert_eq!(s.control_bytes, 50);
-        assert_eq!(s.total_bytes(), 650);
-        assert_eq!(s.data_bytes(), 600);
-        assert_eq!(s.total_ops(), 4);
+        assert_eq!(s.pushdown_bytes, 25);
+        assert_eq!(s.total_bytes(), 675);
+        assert_eq!(s.data_bytes(), 625);
+        assert_eq!(s.total_ops(), 5);
     }
 
     #[test]

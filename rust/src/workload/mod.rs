@@ -88,6 +88,10 @@ pub struct Workbench {
     /// keeps the base config's schedule — static membership unless a
     /// `--config` file says otherwise.
     pub membership: Option<crate::fleet::MembershipConfig>,
+    /// Operator-pushdown override (`SodaConfig::pushdown`, `--pushdown`);
+    /// `None` keeps the base config's mode — off unless a `--config` file
+    /// says otherwise.
+    pub pushdown: Option<crate::host::PushdownMode>,
     /// Full [`SodaConfig`] base for runs (e.g. a `--config` file): every
     /// field (qp_count, numa_aware, buffer_fraction, host_timing, …) is
     /// honored, with the explicit `threads`/policy/prefetch fields above
@@ -113,6 +117,7 @@ impl Workbench {
             fault: None,
             fleet: None,
             membership: None,
+            pushdown: None,
             soda_config_base: None,
         }
     }
@@ -169,6 +174,7 @@ impl Workbench {
             doorbell_ns: 250,
             writeback_ns: 120,
             prefetch_issue_ns: 120,
+            kernel_edge_ns: 2,
         };
         cfg.normalized()
     }
@@ -234,6 +240,9 @@ impl Workbench {
         }
         if let Some(m) = self.membership {
             cfg.membership = Some(m);
+        }
+        if let Some(p) = self.pushdown {
+            cfg.pushdown = p;
         }
         cfg.with_backend(spec.backend).with_caching(spec.caching)
     }
@@ -483,6 +492,25 @@ mod tests {
         let sc = wb.soda_config(&spec);
         assert_eq!(sc.host_workers, 4);
         assert_eq!(sc.buffer_shards, 8);
+    }
+
+    #[test]
+    fn pushdown_override_layers_over_the_base_config() {
+        use crate::host::PushdownMode;
+        let mut wb = quick_bench();
+        let spec = ExperimentSpec {
+            app: App::Bfs,
+            graph: "friendster",
+            backend: BackendKind::DPU_FULL,
+            caching: CachingMode::Dynamic,
+        };
+        assert_eq!(
+            wb.soda_config(&spec).pushdown,
+            PushdownMode::Off,
+            "pushdown defaults off"
+        );
+        wb.pushdown = Some(PushdownMode::Auto);
+        assert_eq!(wb.soda_config(&spec).pushdown, PushdownMode::Auto);
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Operator-pushdown equivalence suite: shipping a dense superstep to the
+//! DPU as a kernel descriptor is a *traffic* optimization, never a
+//! semantic one. For every app, backend and graph seed, a pushdown run
+//! must produce the same output digest as the paging path; on backends
+//! without near-data compute the `on`/`auto` modes must be *observably*
+//! identical to `off` (same faults, same bytes, same final buffer state),
+//! because `supports_pushdown` short-circuits before any descriptor is
+//! built. On the DPU backend the apps with kernel-expressible dense
+//! supersteps (PageRank / BFS / CC) must move strictly fewer total wire
+//! bytes, and every configuration must be run-to-run deterministic. A
+//! malformed descriptor is declined by the DPU and counted as a host
+//! fallback — it can slow a run down but never corrupt it.
+
+use soda::backend::{DpuStore, MemServerStore, RemoteStore, SsdStore};
+use soda::coordinator::cluster::Cluster;
+use soda::coordinator::config::ClusterConfig;
+use soda::dpu::DpuOpts;
+use soda::fabric::protocol::{PushdownOp, PushdownRequest, PushdownTarget};
+use soda::graph::{gen, App, BuildMode, CsrGraph, FamGraph, GraphRunner};
+use soda::host::{HostAgent, HostTiming, PageKey, PushdownMode};
+
+/// Small-but-real graph whose edge data (~64 KB symmetrized) exceeds the
+/// 8-page host buffer below, so the paging path re-faults adjacency pages
+/// on every dense superstep — the disaggregated-memory premise (working
+/// set >> local buffer) that pushdown's byte win rests on. Dense middle
+/// supersteps occur in BFS/CC, and CC's first superstep is always dense.
+fn pushdown_graph(seed: u64) -> CsrGraph {
+    gen::rmat(512, 8192, 0.57, 0.19, 0.19, seed)
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Backend {
+    Mem,
+    Dpu,
+    Ssd,
+}
+
+fn store_for(backend: Backend, cluster: &Cluster) -> Box<dyn RemoteStore> {
+    match backend {
+        Backend::Mem => Box::new(MemServerStore::new(cluster.clone())),
+        Backend::Dpu => Box::new(DpuStore::new(cluster.clone())),
+        Backend::Ssd => Box::new(SsdStore::new(cluster.clone())),
+    }
+}
+
+fn fnv(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Everything a (backend, app, mode) configuration may be observed by.
+#[derive(Debug, PartialEq, Eq)]
+struct Observed {
+    digest: u64,
+    faults: u64,
+    pushdowns: u64,
+    pushdown_fallbacks: u64,
+    dpu_pushdowns: u64,
+    dpu_declined: u64,
+    net_bytes: u64,
+    total_wire_bytes: u64,
+    pushdown_bytes: u64,
+    /// Sorted (key, content digest) of every resident page at the end.
+    resident: Vec<(PageKey, u64)>,
+    /// Sorted (key, content digest) of the dirty subset.
+    dirty: Vec<(PageKey, u64)>,
+}
+
+fn observe(backend: Backend, app: App, mode: PushdownMode, csr: &CsrGraph) -> Observed {
+    let mut cfg = ClusterConfig::tiny();
+    if backend == Backend::Dpu {
+        cfg.dpu.opts = DpuOpts::OPT;
+    }
+    let cluster = Cluster::build(cfg);
+    let chunk = cluster.config().chunk_bytes;
+    let mut agent = HostAgent::new(
+        "pushdown",
+        store_for(backend, &cluster),
+        8 * chunk,
+        chunk,
+        0.9,
+        4,
+        4,
+        2,
+        HostTiming::default(),
+    );
+    agent.set_pushdown(mode);
+    let mut r = GraphRunner::new(agent, 4, 0);
+    let (g, t) = FamGraph::build(&mut r.agent, 0, csr, BuildMode::FileBacked);
+    r.set_clock(t);
+    let digest = app.run_digest(&mut r, &g);
+    let stats = r.agent.stats();
+    let net = cluster.network_stats();
+    let dpu = cluster.dpu_stats();
+    let buf = r.agent.buffer_mut();
+    let mut keys: Vec<PageKey> = buf.lru_order();
+    keys.sort();
+    keys.dedup();
+    let resident = keys
+        .iter()
+        .map(|&k| (k, fnv(buf.peek(k).expect("tracked key not resident"))))
+        .collect();
+    let dirty = buf
+        .drain_dirty()
+        .into_iter()
+        .map(|e| (e.key, fnv(&e.data)))
+        .collect();
+    Observed {
+        digest,
+        faults: stats.faults,
+        pushdowns: stats.pushdowns,
+        pushdown_fallbacks: stats.pushdown_fallbacks,
+        dpu_pushdowns: dpu.pushdowns,
+        dpu_declined: dpu.pushdowns_declined,
+        net_bytes: net.network_bytes(),
+        total_wire_bytes: net.total_wire_bytes(),
+        pushdown_bytes: net.pushdown_bytes() + net.pcie_pushdown_bytes(),
+        resident,
+        dirty,
+    }
+}
+
+#[test]
+fn pushdown_is_digest_invariant_across_apps_backends_and_seeds() {
+    for seed in [7u64, 21] {
+        let csr = pushdown_graph(seed);
+        for backend in [Backend::Mem, Backend::Dpu, Backend::Ssd] {
+            for app in App::ALL {
+                let base = observe(backend, app, PushdownMode::Off, &csr);
+                assert!(
+                    base.faults > 0,
+                    "{backend:?}/{}/s{seed}: workload never faulted",
+                    app.name()
+                );
+                assert_eq!(base.pushdowns, 0, "off must never ship a kernel");
+                assert_eq!(base.pushdown_bytes, 0, "off must move no pushdown bytes");
+                for mode in [PushdownMode::On, PushdownMode::Auto] {
+                    let run = observe(backend, app, mode, &csr);
+                    let ctx = format!("{backend:?}/{}/s{seed}/{}", app.name(), mode.name());
+                    // The standing invariant: the output never changes.
+                    assert_eq!(run.digest, base.digest, "{ctx}: output diverged from paging");
+                    if backend != Backend::Dpu {
+                        // No near-data compute: supports_pushdown is false,
+                        // so on/auto must be *observably* identical to off —
+                        // the whole-app fallback path.
+                        assert_eq!(run, base, "{ctx}: fallback path diverged from off");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pushdown_moves_strictly_fewer_wire_bytes_on_dense_apps() {
+    let csr = pushdown_graph(7);
+    for app in [App::PageRank, App::Bfs, App::Components] {
+        let off = observe(Backend::Dpu, app, PushdownMode::Off, &csr);
+        let on = observe(Backend::Dpu, app, PushdownMode::On, &csr);
+        let name = app.name();
+        assert_eq!(on.digest, off.digest, "{name}: pushdown changed the output");
+        assert!(on.pushdowns > 0, "{name}: no dense superstep ever pushed down");
+        assert_eq!(on.pushdowns, on.dpu_pushdowns, "{name}: host/DPU kernel ledgers disagree");
+        assert_eq!(on.dpu_declined, 0, "{name}: well-formed descriptors were declined");
+        assert!(
+            on.total_wire_bytes < off.total_wire_bytes,
+            "{name}: pushdown must move strictly fewer bytes ({} vs {})",
+            on.total_wire_bytes,
+            off.total_wire_bytes
+        );
+        // With a cold buffer the residency probe predicts a win, so auto
+        // takes the pushdown path too and never exceeds the paging bytes.
+        let auto = observe(Backend::Dpu, app, PushdownMode::Auto, &csr);
+        assert_eq!(auto.digest, off.digest, "{name}: auto changed the output");
+        assert!(auto.pushdowns > 0, "{name}: auto never pushed down");
+        assert!(
+            auto.total_wire_bytes <= off.total_wire_bytes,
+            "{name}: auto exceeded the paging bytes"
+        );
+    }
+}
+
+#[test]
+fn every_pushdown_configuration_is_run_to_run_deterministic() {
+    let csr = pushdown_graph(7);
+    for app in [App::PageRank, App::Bfs, App::Components] {
+        for mode in [PushdownMode::Off, PushdownMode::On, PushdownMode::Auto] {
+            let a = observe(Backend::Dpu, app, mode, &csr);
+            let b = observe(Backend::Dpu, app, mode, &csr);
+            assert_eq!(a, b, "{}/{}: run-to-run nondeterminism", app.name(), mode.name());
+        }
+    }
+}
+
+#[test]
+fn malformed_descriptors_are_declined_and_counted_as_fallbacks() {
+    let csr = pushdown_graph(7);
+    let mut cfg = ClusterConfig::tiny();
+    cfg.dpu.opts = DpuOpts::OPT;
+    let cluster = Cluster::build(cfg);
+    let chunk = cluster.config().chunk_bytes;
+    let mut agent = HostAgent::new(
+        "decline",
+        Box::new(DpuStore::new(cluster.clone())),
+        24 * chunk,
+        chunk,
+        0.9,
+        4,
+        4,
+        2,
+        HostTiming::default(),
+    );
+    agent.set_pushdown(PushdownMode::On);
+    let (g, t) = FamGraph::build(&mut agent, 0, &csr, BuildMode::FileBacked);
+    let n = csr.n() as u32;
+    // MinLabel targets must arrive in strictly ascending vertex order —
+    // these don't, so the kernel refuses and the DPU declines the request.
+    let (s1, e1) = g.host_offset_pair(1);
+    let (s0, e0) = g.host_offset_pair(0);
+    let bad = PushdownRequest {
+        region_id: g.edges.region,
+        op: PushdownOp::MinLabel,
+        flags: 0,
+        targets: vec![
+            PushdownTarget { v: 1, edge_start: s1, edge_count: (e1 - s1) as u32 },
+            PushdownTarget { v: 0, edge_start: s0, edge_count: (e0 - s0) as u32 },
+        ],
+        operand: vec![0u8; n as usize * 4],
+    };
+    assert!(agent.pushdown(t, &bad).is_none(), "unsorted MinLabel targets must decline");
+    // Wrong operand size for SumF64: one byte short of a whole f64 array,
+    // so it can't be a valid contribution table for any vertex count.
+    let short = PushdownRequest {
+        region_id: g.edges.region,
+        op: PushdownOp::SumF64,
+        flags: 0,
+        targets: vec![PushdownTarget { v: 0, edge_start: s0, edge_count: (e0 - s0) as u32 }],
+        operand: vec![0u8; 7],
+    };
+    assert!(agent.pushdown(t, &short).is_none(), "short SumF64 operand must decline");
+    let stats = agent.stats();
+    assert_eq!(stats.pushdowns, 0, "declined kernels must not count as pushdowns");
+    assert_eq!(stats.pushdown_fallbacks, 2, "every decline is a counted fallback");
+    let dpu = cluster.dpu_stats();
+    assert_eq!(dpu.pushdowns_declined, 2, "the DPU ledger records both declines");
+    assert_eq!(dpu.pushdowns, 0);
+}
